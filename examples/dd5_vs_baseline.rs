@@ -1,0 +1,52 @@
+//! Architecture study: sweep all three suites over baseline / DD5 / DD6
+//! and print per-suite geomean area / CPD / ADP ratios — a compact version
+//! of the paper's Figs. 6 and 7.
+//!
+//!     cargo run --release --example dd5_vs_baseline
+
+use double_duty::arch::ArchVariant;
+use double_duty::bench_suites::{all_suites, BenchParams, Suite};
+use double_duty::coordinator::{default_workers, run_jobs, Job};
+use double_duty::flow::FlowOpts;
+use double_duty::util::stats::geomean;
+
+fn main() {
+    let params = BenchParams::default();
+    let benches = all_suites(&params);
+    let opts = FlowOpts { seeds: vec![1], place_effort: 0.25, ..Default::default() };
+
+    let run = |variant: ArchVariant| {
+        let jobs = benches
+            .iter()
+            .map(|b| Job { bench: b.clone(), variant, opts: opts.clone() })
+            .collect();
+        run_jobs(jobs, default_workers())
+    };
+    let base = run(ArchVariant::Baseline);
+    let dd5 = run(ArchVariant::Dd5);
+    let dd6 = run(ArchVariant::Dd6);
+
+    println!("{:<8} {:<6} {:>10} {:>10} {:>10}", "suite", "arch", "area", "cpd", "adp");
+    for suite in [Suite::Vtr, Suite::Koios, Suite::Kratos] {
+        for (name, rs) in [("dd5", &dd5), ("dd6", &dd6)] {
+            let ratio = |f: &dyn Fn(&double_duty::flow::FlowResult,
+                                    &double_duty::flow::FlowResult) -> f64| {
+                let v: Vec<f64> = benches
+                    .iter()
+                    .zip(rs.iter().zip(&base))
+                    .filter(|(b, _)| b.suite == suite)
+                    .map(|(_, (r, b))| f(r, b))
+                    .collect();
+                geomean(&v)
+            };
+            println!(
+                "{:<8} {:<6} {:>10.3} {:>10.3} {:>10.3}",
+                suite.name(),
+                name,
+                ratio(&|r, b| r.alm_area_mwta / b.alm_area_mwta),
+                ratio(&|r, b| r.cpd_ns / b.cpd_ns),
+                ratio(&|r, b| r.adp / b.adp),
+            );
+        }
+    }
+}

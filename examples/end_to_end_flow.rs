@@ -1,0 +1,84 @@
+//! End-to-end driver: proves all three layers compose on a real workload.
+//!
+//! Runs the complete stack — Rust CAD flow (L3) with the placer's batched
+//! cost model evaluated through the AOT-compiled JAX/Pallas kernel (L2/L1)
+//! via PJRT — over a mixed workload (one circuit per suite, baseline vs
+//! DD5), cross-checking the kernel cost against the Rust incremental cost
+//! and reporting the paper's headline metrics. Recorded in EXPERIMENTS.md.
+//!
+//!     make artifacts && cargo run --release --example end_to_end_flow
+
+use std::time::Instant;
+
+use double_duty::arch::{Arch, ArchVariant};
+use double_duty::bench_suites::{koios_suite, kratos_suite, vtr_suite, BenchParams};
+use double_duty::flow::{run_flow, FlowOpts};
+use double_duty::pack::{pack, PackOpts};
+use double_duty::place::cost::NetModel;
+use double_duty::place::kernel_accel::KernelCost;
+use double_duty::place::{place, PlaceOpts};
+use double_duty::techmap::{map_circuit, MapOpts};
+
+fn main() {
+    let params = BenchParams::default();
+    let picks = vec![
+        kratos_suite(&params)[2].clone(), // gemmt
+        koios_suite(&params)[0].clone(),  // dla-like
+        vtr_suite(&params)[0].clone(),    // sha-like
+    ];
+
+    // 1) Kernel-in-the-loop placement on the first circuit, with an
+    //    explicit Rust-vs-PJRT consistency check.
+    println!("== L1/L2/L3 composition check (PJRT kernel in the placer) ==");
+    let circ = picks[0].generate();
+    let nl = map_circuit(&circ, &MapOpts::default());
+    let arch = Arch::coffe(ArchVariant::Baseline);
+    let packing = pack(&nl, &arch, &PackOpts::default());
+    let t0 = Instant::now();
+    let pl = place(&nl, &packing, &arch,
+                   &PlaceOpts { effort: 0.3, use_kernel: true, ..Default::default() });
+    let place_ms = t0.elapsed().as_millis();
+    let mut model = NetModel::build(&nl, &packing);
+    model.set_weights(&[], false);
+    let rust_cost = model.full_cost(&pl.lb_loc, &pl.io_loc);
+    match KernelCost::try_new(model.num_nets()) {
+        Ok(mut k) => {
+            let t1 = Instant::now();
+            let eval = k.evaluate(&model, &pl.lb_loc, &pl.io_loc, &pl.device).unwrap();
+            let kernel_us = t1.elapsed().as_micros();
+            let err = (eval.whpwl - rust_cost).abs() / rust_cost.max(1.0);
+            println!("  rust wHPWL   : {rust_cost:.2}");
+            println!("  kernel wHPWL : {:.2}  (rel err {:.2e}, {} us/eval)",
+                     eval.whpwl, err, kernel_us);
+            println!("  congestion   : peak {:.3}, overflow {:.3}",
+                     eval.congestion.iter().cloned().fold(0.0f32, f32::max),
+                     eval.overflow);
+            assert!(err < 1e-3, "kernel/rust cost mismatch");
+        }
+        Err(e) => {
+            println!("  (PJRT kernel unavailable: {e}; run `make artifacts`)");
+        }
+    }
+    println!("  placement    : {} LBs in {} ms", packing.lbs.len(), place_ms);
+    println!();
+
+    // 2) Full flow on one circuit per suite, baseline vs DD5 — the
+    //    paper's headline comparison end to end.
+    println!("== full flow: baseline vs DD5, one circuit per suite ==");
+    println!("{:<16} {:>9} {:>9} {:>7} {:>9} {:>8} {:>8}",
+             "circuit", "base ALM", "dd5 ALM", "conc", "area r", "cpd r", "adp r");
+    let opts = FlowOpts { seeds: vec![1], place_effort: 0.3, ..Default::default() };
+    for b in &picks {
+        let circ = b.generate();
+        let base = run_flow(&circ, &Arch::coffe(ArchVariant::Baseline), &opts);
+        let dd5 = run_flow(&circ, &Arch::coffe(ArchVariant::Dd5), &opts);
+        assert!(base.routed_ok && dd5.routed_ok, "{} failed routing", b.name);
+        println!("{:<16} {:>9} {:>9} {:>7} {:>9.3} {:>8.3} {:>8.3}",
+                 b.name, base.alms, dd5.alms, dd5.concurrent_luts,
+                 dd5.alm_area_mwta / base.alm_area_mwta,
+                 dd5.cpd_ns / base.cpd_ns,
+                 dd5.adp / base.adp);
+    }
+    println!();
+    println!("end_to_end_flow OK: three layers composed (pallas kernel -> HLO -> PJRT -> placer).");
+}

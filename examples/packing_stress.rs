@@ -1,0 +1,16 @@
+//! The paper's Fig. 9 packing stress test as a runnable example: 500
+//! adders + an increasing number of 5-LUTs, packed with unrelated
+//! clustering, baseline vs DD5.
+//!
+//!     cargo run --release --example packing_stress
+
+use double_duty::report;
+
+fn main() {
+    let (table, rows) = report::fig9();
+    table.print();
+    let max_conc = rows.iter().map(|r| r.3).max().unwrap_or(0);
+    println!();
+    println!("saturation: {} concurrent 5-LUTs ({}% of the 500-LUT theoretical max; paper: 375 = 75%)",
+             max_conc, max_conc * 100 / 500);
+}

@@ -1,0 +1,31 @@
+//! Quickstart: run the full CAD flow (synthesize -> map -> pack -> place ->
+//! route -> STA) on one Kratos-like circuit for both the baseline and the
+//! Double-Duty DD5 architecture, and print the comparison.
+//!
+//!     cargo run --release --example quickstart
+
+use double_duty::arch::ArchVariant;
+use double_duty::bench_suites::{kratos_suite, BenchParams};
+use double_duty::flow::{run_benchmark, FlowOpts};
+
+fn main() {
+    let params = BenchParams::default();
+    let bench = &kratos_suite(&params)[2]; // gemmt-FU-mini
+    let opts = FlowOpts { seeds: vec![1], ..Default::default() };
+
+    println!("== Double-Duty quickstart: {} ==", bench.name);
+    let base = run_benchmark(bench, ArchVariant::Baseline, &opts);
+    let dd5 = run_benchmark(bench, ArchVariant::Dd5, &opts);
+
+    println!("{:<18} {:>12} {:>12}", "metric", "baseline", "dd5");
+    println!("{:<18} {:>12} {:>12}", "ALMs", base.alms, dd5.alms);
+    println!("{:<18} {:>12} {:>12}", "LBs", base.lbs, dd5.lbs);
+    println!("{:<18} {:>12} {:>12}", "concurrent LUTs", base.concurrent_luts, dd5.concurrent_luts);
+    println!("{:<18} {:>12.0} {:>12.0}", "ALM area (MWTA)", base.alm_area_mwta, dd5.alm_area_mwta);
+    println!("{:<18} {:>12.2} {:>12.2}", "CPD (ns)", base.cpd_ns, dd5.cpd_ns);
+    println!("{:<18} {:>12.0} {:>12.0}", "ADP", base.adp, dd5.adp);
+    println!();
+    println!("area ratio dd5/baseline: {:.3}", dd5.alm_area_mwta / base.alm_area_mwta);
+    println!("adp  ratio dd5/baseline: {:.3}", dd5.adp / base.adp);
+    assert!(dd5.alms <= base.alms, "DD5 should never need more ALMs");
+}

@@ -1,0 +1,76 @@
+"""AOT-lower the L2 placement cost model to HLO text artifacts.
+
+Emits HLO *text* (NOT ``lowered.compile()`` / proto ``.serialize()``): jax
+>= 0.5 writes HloModuleProto with 64-bit instruction ids which the xla
+crate's xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+One artifact per net-count bucket:  artifacts/cost_n{N}.hlo.txt.
+``make artifacts`` runs this once; the rust runtime only reads the files.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels.hpwl import GRID, NET_BLOCK
+from .model import BUCKETS, placement_cost
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_bucket(n: int) -> str:
+    spec = jax.ShapeDtypeStruct((n,), jnp.float32)
+    cap = jax.ShapeDtypeStruct((1,), jnp.float32)
+    lowered = jax.jit(placement_cost).lower(spec, spec, spec, spec, spec,
+                                            spec, cap)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts",
+                        help="artifact output directory")
+    parser.add_argument("--out", default=None,
+                        help="(compat) single-file marker path; ignored "
+                             "except for its directory")
+    args = parser.parse_args()
+
+    out_dir = args.out_dir
+    if args.out is not None:
+        out_dir = os.path.dirname(args.out) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {"grid": GRID, "net_block": NET_BLOCK, "buckets": []}
+    for n in BUCKETS:
+        text = lower_bucket(n)
+        name = f"cost_n{n}.hlo.txt"
+        path = os.path.join(out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["buckets"].append({"nets": n, "file": name})
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    # Compat marker for Makefile dependency tracking.
+    marker = args.out or os.path.join(out_dir, "model.hlo.txt")
+    with open(marker, "w") as f:
+        f.write(open(os.path.join(out_dir,
+                                  f"cost_n{BUCKETS[0]}.hlo.txt")).read())
+    print(f"wrote {marker} (marker)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the placement-cost Pallas kernel.
+
+Computes the same weighted HPWL and RUDY congestion map as
+``hpwl.placement_cost_pallas`` with no Pallas, no blocking — the
+correctness reference for pytest / hypothesis sweeps.
+"""
+
+import jax.numpy as jnp
+
+from .hpwl import GRID
+
+
+def placement_cost_ref(xmin, xmax, ymin, ymax, w, valid):
+    """Reference (whpwl f32[1], cong f32[GRID, GRID])."""
+    w = w * valid
+    span = (xmax - xmin) + (ymax - ymin)
+    whpwl = jnp.sum(w * span)[None]
+
+    dx = xmax - xmin + 1.0
+    dy = ymax - ymin + 1.0
+    dens = w * (dx + dy) / (dx * dy)
+
+    cells = jnp.arange(GRID, dtype=jnp.float32)
+    ox = jnp.clip(jnp.minimum(xmax[:, None] + 1.0, cells[None, :] + 1.0)
+                  - jnp.maximum(xmin[:, None], cells[None, :]), 0.0, 1.0)
+    oy = jnp.clip(jnp.minimum(ymax[:, None] + 1.0, cells[None, :] + 1.0)
+                  - jnp.maximum(ymin[:, None], cells[None, :]), 0.0, 1.0)
+    cong = jnp.einsum("b,by,bx->yx", dens, oy, ox)
+    return whpwl, cong

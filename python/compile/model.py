@@ -1,0 +1,39 @@
+"""L2: the placer's batched cost model as a JAX computation.
+
+Wraps the L1 Pallas kernel (``kernels.hpwl``) with the pieces the rust
+placer consumes per evaluation:
+
+  * weighted HPWL total (f32[1]),
+  * RUDY congestion map (f32[GRID, GRID]),
+  * congestion overflow penalty (f32[1]) — total demand above a per-bin
+    capacity, the placer's routability pressure term.
+
+The rust coordinator (rust/src/place/kernel_accel.rs) feeds net bounding
+boxes padded to a size bucket and reads the three outputs back.  This
+module is build-time only; ``aot.py`` lowers it to HLO text per bucket and
+the rust PJRT runtime executes the artifact — python is never on the
+request path.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.hpwl import GRID, placement_cost_pallas
+
+# Padded net-count buckets; rust picks the smallest bucket >= live net count.
+BUCKETS = (1024, 4096, 16384)
+
+
+def placement_cost(xmin, xmax, ymin, ymax, w, valid, capacity):
+    """Full placement cost model.
+
+    Args:
+      xmin..ymax: f32[N] inclusive net bounding boxes in bin coordinates.
+      w:          f32[N] per-net criticality weights.
+      valid:      f32[N] 1.0 for live nets, 0.0 for padding.
+      capacity:   f32[1] per-bin routing capacity for the overflow penalty.
+
+    Returns (whpwl f32[1], cong f32[GRID, GRID], overflow f32[1]).
+    """
+    whpwl, cong = placement_cost_pallas(xmin, xmax, ymin, ymax, w, valid)
+    overflow = jnp.sum(jnp.maximum(cong - capacity, 0.0))[None]
+    return whpwl, cong, overflow

@@ -1,0 +1,16 @@
+//! Bench harness regenerating the paper's Fig. 5 (CAD validation).
+//! Run: cargo bench --bench fig5_cad   (DDUTY_FULL=1 for full effort)
+use std::time::Instant;
+use double_duty::report::{self, ExpOpts};
+
+fn main() {
+    let opts = if std::env::var("DDUTY_FULL").is_ok() {
+        ExpOpts::default()
+    } else {
+        ExpOpts::quick()
+    };
+    let t0 = Instant::now();
+    report::fig5(&opts).0.print();
+    println!();
+    println!("[fig5_cad] regenerated in {:.1} s", t0.elapsed().as_secs_f64());
+}

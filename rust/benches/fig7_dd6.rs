@@ -1,0 +1,16 @@
+//! Bench harness regenerating the paper's Fig. 7 (DD5 vs DD6).
+//! Run: cargo bench --bench fig7_dd6   (DDUTY_FULL=1 for full effort)
+use std::time::Instant;
+use double_duty::report::{self, ExpOpts};
+
+fn main() {
+    let opts = if std::env::var("DDUTY_FULL").is_ok() {
+        ExpOpts::default()
+    } else {
+        ExpOpts::quick()
+    };
+    let t0 = Instant::now();
+    report::fig7(&opts).print();
+    println!();
+    println!("[fig7_dd6] regenerated in {:.1} s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,16 @@
+//! Bench harness regenerating the paper's Fig. 8 (channel utilization histogram).
+//! Run: cargo bench --bench fig8_congestion   (DDUTY_FULL=1 for full effort)
+use std::time::Instant;
+use double_duty::report::{self, ExpOpts};
+
+fn main() {
+    let opts = if std::env::var("DDUTY_FULL").is_ok() {
+        ExpOpts::default()
+    } else {
+        ExpOpts::quick()
+    };
+    let t0 = Instant::now();
+    report::fig8(&opts).0.print();
+    println!();
+    println!("[fig8_congestion] regenerated in {:.1} s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,16 @@
+//! Bench harness regenerating the paper's Fig. 9 (packing stress test).
+//! Run: cargo bench --bench fig9_packing   (DDUTY_FULL=1 for full effort)
+use std::time::Instant;
+use double_duty::report::{self, ExpOpts};
+
+fn main() {
+    let opts = if std::env::var("DDUTY_FULL").is_ok() {
+        ExpOpts::default()
+    } else {
+        ExpOpts::quick()
+    };
+    let t0 = Instant::now();
+    let _ = &opts; report::fig9().0.print();
+    println!();
+    println!("[fig9_packing] regenerated in {:.1} s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,79 @@
+//! Hot-path microbenchmarks for the perf pass (EXPERIMENTS.md §Perf):
+//! placer move evaluation, router A*, packer, mapper, and the PJRT kernel
+//! evaluation latency. No criterion offline — simple timed loops with
+//! enough iterations for stable medians.
+use std::time::Instant;
+
+use double_duty::arch::{Arch, ArchVariant};
+use double_duty::bench_suites::{kratos_suite, BenchParams};
+use double_duty::pack::{pack, PackOpts};
+use double_duty::place::cost::NetModel;
+use double_duty::place::{place, PlaceOpts};
+use double_duty::route::{route, RouteOpts};
+use double_duty::techmap::{map_circuit, MapOpts};
+
+fn timed<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+    // Warmup.
+    f();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    if per > 0.1 {
+        println!("{name:<28} {:>10.1} ms/iter", per * 1e3);
+    } else {
+        println!("{name:<28} {:>10.1} us/iter", per * 1e6);
+    }
+}
+
+fn main() {
+    let params = BenchParams::default();
+    let bench = &kratos_suite(&params)[2];
+    let circ = bench.generate();
+    let arch = Arch::coffe(ArchVariant::Dd5);
+
+    timed("synth+map gemmt", 5, || {
+        let c = bench.generate();
+        let _ = map_circuit(&c, &MapOpts::default());
+    });
+
+    let nl = map_circuit(&circ, &MapOpts::default());
+    timed("pack gemmt", 10, || {
+        let _ = pack(&nl, &arch, &PackOpts::default());
+    });
+
+    let packing = pack(&nl, &arch, &PackOpts::default());
+    timed("place gemmt (effort 0.3)", 3, || {
+        let _ = place(&nl, &packing, &arch,
+                      &PlaceOpts { effort: 0.3, ..Default::default() });
+    });
+
+    let pl = place(&nl, &packing, &arch, &PlaceOpts { effort: 0.3, ..Default::default() });
+    let mut model = NetModel::build(&nl, &packing);
+    model.set_weights(&[], false);
+    timed("route gemmt", 3, || {
+        let _ = route(&model, &pl, &arch, &RouteOpts::default());
+    });
+
+    timed("full_cost (rust)", 200, || {
+        let _ = model.full_cost(&pl.lb_loc, &pl.io_loc);
+    });
+    let moved = [(0usize, double_duty::arch::device::Loc::new(2, 2))];
+    timed("move_delta (rust)", 20_000, || {
+        let _ = model.move_delta(&pl.lb_loc, &pl.io_loc, &moved);
+    });
+
+    match double_duty::place::kernel_accel::KernelCost::try_new(model.num_nets()) {
+        Ok(mut k) => {
+            timed("full_cost+congestion (PJRT)", 50, || {
+                let _ = k.evaluate(&model, &pl.lb_loc, &pl.io_loc, &pl.device).unwrap();
+            });
+        }
+        Err(e) => println!("PJRT kernel unavailable: {e}"),
+    }
+
+    timed("sta gemmt", 50, || {
+        let _ = double_duty::timing::sta(&nl, &packing, &arch, |_, _, _| 150.0);
+    });
+}

@@ -1,0 +1,16 @@
+//! Bench harness regenerating the paper's Table II (path delays).
+//! Run: cargo bench --bench table2_paths   (DDUTY_FULL=1 for full effort)
+use std::time::Instant;
+use double_duty::report::{self, ExpOpts};
+
+fn main() {
+    let opts = if std::env::var("DDUTY_FULL").is_ok() {
+        ExpOpts::default()
+    } else {
+        ExpOpts::quick()
+    };
+    let t0 = Instant::now();
+    let _ = &opts; report::table2().print();
+    println!();
+    println!("[table2_paths] regenerated in {:.1} s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,16 @@
+//! Bench harness regenerating the paper's Table IV (end-to-end stress test).
+//! Run: cargo bench --bench table4_stress   (DDUTY_FULL=1 for full effort)
+use std::time::Instant;
+use double_duty::report::{self, ExpOpts};
+
+fn main() {
+    let opts = if std::env::var("DDUTY_FULL").is_ok() {
+        ExpOpts::default()
+    } else {
+        ExpOpts::quick()
+    };
+    let t0 = Instant::now();
+    report::table4(&opts).print();
+    println!();
+    println!("[table4_stress] regenerated in {:.1} s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,116 @@
+//! Timing parameters (picoseconds) for the STA and the placer's delay
+//! estimator.  The named paths mirror Table II of the paper; the remaining
+//! parameters come from the Stratix-10-like VTR capture the paper builds on.
+
+use super::ArchVariant;
+
+/// All component delays in picoseconds.
+#[derive(Clone, Copy, Debug)]
+pub struct Delays {
+    /// LB input pin -> ALM general input (A–H) through the local crossbar.
+    /// Table II path (1): 72.61 ps baseline.
+    pub lb_in_to_alm_in: f64,
+    /// LB input pin -> ALM Z input through the AddMux crossbar (DD only).
+    /// Table II: 77.05 ps.
+    pub lb_in_to_z: f64,
+    /// ALM general input -> adder operand, through the feeding LUT (and,
+    /// on DD variants, the AddMux). Table II path (2): 133.4 ps baseline,
+    /// 202.2 ps Double-Duty.
+    pub alm_in_to_adder: f64,
+    /// ALM Z input -> adder operand via the AddMux only (DD): 68.77 ps.
+    pub z_to_adder: f64,
+    /// ALM input -> 5-LUT output (logic mode).
+    pub lut5: f64,
+    /// ALM input -> 6-LUT output.
+    pub lut6: f64,
+    /// Adder operand -> sum output.
+    pub adder_sum: f64,
+    /// Carry propagation per adder bit along the chain.
+    pub carry_hop: f64,
+    /// Carry hop across an LB boundary (chain continuation).
+    pub carry_lb_hop: f64,
+    /// LUT/adder output -> LB output pin (output mux + driver).
+    pub alm_out_to_lb_out: f64,
+    /// Extra output-mux delay on every ALM output in DD6 (the source of
+    /// the ~8% frequency penalty the paper measures).
+    pub dd6_outmux_extra: f64,
+    /// One routing wire segment (length `segment_len` tiles), incl. switch.
+    pub wire_segment: f64,
+    /// Connection block: channel wire -> LB input pin mux.
+    pub conn_block: f64,
+    /// LB-to-LB direct link (adjacent blocks, bypassing general routing).
+    pub direct_link: f64,
+    /// FF clock-to-q and setup.
+    pub ff_clk_q: f64,
+    pub ff_setup: f64,
+    /// I/O pad delay.
+    pub io: f64,
+}
+
+impl Delays {
+    /// Paper-published values (Table II) plus Stratix-10-like VTR-capture
+    /// estimates for the paths the paper does not tabulate.
+    pub fn paper(v: ArchVariant) -> Self {
+        let dd = !matches!(v, ArchVariant::Baseline);
+        Delays {
+            lb_in_to_alm_in: 72.61,
+            lb_in_to_z: if dd { 77.05 } else { f64::INFINITY },
+            alm_in_to_adder: if dd { 202.2 } else { 133.4 },
+            z_to_adder: if dd { 68.77 } else { f64::INFINITY },
+            lut5: 260.0,
+            lut6: 290.0,
+            adder_sum: 85.0,
+            carry_hop: 16.0,
+            carry_lb_hop: 45.0,
+            alm_out_to_lb_out: 60.0,
+            dd6_outmux_extra: if matches!(v, ArchVariant::Dd6) { 25.0 } else { 0.0 },
+            wire_segment: 180.0,
+            conn_block: 95.0,
+            direct_link: 75.0,
+            ff_clk_q: 90.0,
+            ff_setup: 60.0,
+            io: 500.0,
+        }
+    }
+
+    /// Delay of an adder operand arriving at an ALM, by entry path.
+    /// `via_z` selects the Z bypass (DD only); `through_lut` means the
+    /// operand passes through (or is computed in) the feeding LUT.
+    pub fn adder_operand_entry(&self, via_z: bool) -> f64 {
+        if via_z {
+            self.lb_in_to_z + self.z_to_adder
+        } else {
+            self.lb_in_to_alm_in + self.alm_in_to_adder
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_values() {
+        let b = Delays::paper(ArchVariant::Baseline);
+        assert!((b.lb_in_to_alm_in - 72.61).abs() < 1e-9);
+        assert!((b.alm_in_to_adder - 133.4).abs() < 1e-9);
+        let d = Delays::paper(ArchVariant::Dd5);
+        assert!((d.lb_in_to_z - 77.05).abs() < 1e-9);
+        assert!((d.z_to_adder - 68.77).abs() < 1e-9);
+        // Paper: Z path is ~48% faster than the baseline LUT path.
+        let cut = 1.0 - d.z_to_adder / b.alm_in_to_adder;
+        assert!((cut - 0.484).abs() < 0.01, "cut {cut}");
+    }
+
+    #[test]
+    fn z_entry_beats_lut_entry_on_dd5() {
+        let d = Delays::paper(ArchVariant::Dd5);
+        assert!(d.adder_operand_entry(true) < d.adder_operand_entry(false));
+    }
+
+    #[test]
+    fn dd6_pays_output_mux() {
+        assert_eq!(Delays::paper(ArchVariant::Dd5).dd6_outmux_extra, 0.0);
+        assert!(Delays::paper(ArchVariant::Dd6).dd6_outmux_extra > 0.0);
+    }
+}

@@ -1,0 +1,164 @@
+//! Grid device model: a W x H array of logic-block tiles ringed by I/O.
+//!
+//! Mirrors VPR's auto-sized square device: given a packed design, the
+//! smallest grid that fits its LB and I/O demand (plus a utilization
+//! margin) is chosen.  Carry chains that span LBs must occupy vertically
+//! adjacent tiles, so chain macros constrain legal placements.
+
+/// A physical location: `(x, y)` tile coordinates. I/O lives on the
+/// perimeter ring (x or y == 0 or max); logic tiles fill the interior.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Loc {
+    pub x: u16,
+    pub y: u16,
+}
+
+impl Loc {
+    pub fn new(x: u16, y: u16) -> Self {
+        Loc { x, y }
+    }
+
+    /// Manhattan distance between two locations.
+    pub fn dist(self, other: Loc) -> u32 {
+        (self.x.abs_diff(other.x) as u32) + (self.y.abs_diff(other.y) as u32)
+    }
+}
+
+/// The FPGA device grid.
+#[derive(Clone, Debug)]
+pub struct Device {
+    /// Interior logic columns (x in 1..=lb_cols).
+    pub lb_cols: u16,
+    /// Interior logic rows (y in 1..=lb_rows).
+    pub lb_rows: u16,
+    /// I/O pad capacity per perimeter tile.
+    pub io_per_tile: u16,
+}
+
+impl Device {
+    pub fn new(lb_cols: u16, lb_rows: u16) -> Self {
+        Device { lb_cols, lb_rows, io_per_tile: 8 }
+    }
+
+    /// Smallest square device fitting `lbs` logic blocks and `ios` pads,
+    /// with a packing margin (VPR defaults to ~around 1.0 for fixed-size
+    /// runs; we leave a small slack so placement has freedom).
+    pub fn auto_size(lbs: usize, ios: usize, margin: f64) -> Self {
+        let mut n = 2u16;
+        loop {
+            let d = Device::new(n, n);
+            if d.lb_capacity() as f64 >= lbs as f64 * margin
+                && d.io_capacity() >= ios
+            {
+                return d;
+            }
+            n += 1;
+            assert!(n < 2000, "device would exceed 2000x2000");
+        }
+    }
+
+    pub fn lb_capacity(&self) -> usize {
+        self.lb_cols as usize * self.lb_rows as usize
+    }
+
+    pub fn io_capacity(&self) -> usize {
+        // Perimeter ring around the (cols+2) x (rows+2) grid, corners excluded.
+        2 * (self.lb_cols as usize + self.lb_rows as usize) * self.io_per_tile as usize
+    }
+
+    /// Full grid width including I/O ring.
+    pub fn width(&self) -> u16 {
+        self.lb_cols + 2
+    }
+
+    pub fn height(&self) -> u16 {
+        self.lb_rows + 2
+    }
+
+    /// Is `loc` an interior logic tile?
+    pub fn is_lb(&self, loc: Loc) -> bool {
+        (1..=self.lb_cols).contains(&loc.x) && (1..=self.lb_rows).contains(&loc.y)
+    }
+
+    /// Is `loc` on the I/O perimeter?
+    pub fn is_io(&self, loc: Loc) -> bool {
+        let on_x_edge = loc.x == 0 || loc.x == self.lb_cols + 1;
+        let on_y_edge = loc.y == 0 || loc.y == self.lb_rows + 1;
+        (on_x_edge || on_y_edge) && loc.x <= self.lb_cols + 1 && loc.y <= self.lb_rows + 1
+    }
+
+    /// All interior logic tile locations, row-major.
+    pub fn lb_locs(&self) -> Vec<Loc> {
+        let mut v = Vec::with_capacity(self.lb_capacity());
+        for y in 1..=self.lb_rows {
+            for x in 1..=self.lb_cols {
+                v.push(Loc::new(x, y));
+            }
+        }
+        v
+    }
+
+    /// All perimeter I/O tile locations (corners excluded).
+    pub fn io_locs(&self) -> Vec<Loc> {
+        let mut v = Vec::new();
+        for x in 1..=self.lb_cols {
+            v.push(Loc::new(x, 0));
+            v.push(Loc::new(x, self.lb_rows + 1));
+        }
+        for y in 1..=self.lb_rows {
+            v.push(Loc::new(0, y));
+            v.push(Loc::new(self.lb_cols + 1, y));
+        }
+        v
+    }
+
+    /// Can a vertical chain macro of `len` LBs start at `loc`?
+    pub fn chain_fits(&self, loc: Loc, len: u16) -> bool {
+        self.is_lb(loc) && loc.y + len - 1 <= self.lb_rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn auto_size_fits() {
+        let d = Device::auto_size(100, 40, 1.1);
+        assert!(d.lb_capacity() >= 110);
+        assert!(d.io_capacity() >= 40);
+    }
+
+    #[test]
+    fn loc_classification() {
+        let d = Device::new(4, 4);
+        assert!(d.is_lb(Loc::new(1, 1)));
+        assert!(d.is_lb(Loc::new(4, 4)));
+        assert!(!d.is_lb(Loc::new(0, 1)));
+        assert!(!d.is_lb(Loc::new(5, 1)));
+        assert!(d.is_io(Loc::new(0, 2)));
+        assert!(d.is_io(Loc::new(2, 5)));
+        assert!(!d.is_io(Loc::new(2, 2)));
+    }
+
+    #[test]
+    fn loc_lists_consistent() {
+        let d = Device::new(3, 5);
+        assert_eq!(d.lb_locs().len(), 15);
+        assert!(d.lb_locs().iter().all(|&l| d.is_lb(l)));
+        assert!(d.io_locs().iter().all(|&l| d.is_io(l)));
+        assert_eq!(d.io_locs().len(), 2 * (3 + 5));
+    }
+
+    #[test]
+    fn chain_fit() {
+        let d = Device::new(4, 4);
+        assert!(d.chain_fits(Loc::new(2, 1), 4));
+        assert!(!d.chain_fits(Loc::new(2, 2), 4));
+    }
+
+    #[test]
+    fn manhattan() {
+        assert_eq!(Loc::new(1, 1).dist(Loc::new(4, 3)), 5);
+    }
+}

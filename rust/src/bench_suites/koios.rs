@@ -1,0 +1,211 @@
+//! Koios-like ML-accelerator benchmark generators: runtime-valued
+//! datapaths (soft multipliers with both operands unknown), reductions,
+//! and a healthy share of control/steering logic — the ~22% adder share
+//! profile of Table III.
+
+use crate::synth::multiplier::{soft_mul, AdderAlgo};
+use crate::synth::{reduce_rows, Circuit};
+use crate::techmap::aig::Lit;
+use crate::util::Rng;
+
+use super::BenchParams;
+
+/// MAC array: grid of soft multipliers + accumulate tree (DLA-style).
+pub fn mac_array(p: &BenchParams) -> Circuit {
+    let mut c = super::new_circuit("mac_array", p);
+    let n = 2 + p.scale;
+    let mut prods = Vec::new();
+    for i in 0..n {
+        let a = c.pi_bus(&format!("a{i}"), p.width);
+        let b = c.pi_bus(&format!("b{i}"), p.width);
+        prods.push(soft_mul(&mut c, &a, &b, p.algo));
+    }
+    let acc = reduce_rows(&mut c, prods, p.algo);
+    c.po_bus("acc", &acc);
+    c
+}
+
+/// LSTM-ish gate stack: elementwise products + sigmoidal LUT gates.
+pub fn gate_stack(p: &BenchParams) -> Circuit {
+    let mut c = super::new_circuit("gate_stack", p);
+    let n = 2 + p.scale;
+    for i in 0..n {
+        let x = c.pi_bus(&format!("x{i}"), p.width);
+        let h = c.pi_bus(&format!("h{i}"), p.width);
+        let g = c.pi_bus(&format!("g{i}"), p.width);
+        let xh = soft_mul(&mut c, &x, &h, p.algo);
+        // Gate: per-bit mux network keyed on g (control-heavy LUT logic).
+        let gated: Vec<Lit> = xh
+            .iter()
+            .enumerate()
+            .map(|(bi, &b)| {
+                let sel = g[bi % p.width];
+                let alt = g[(bi + 1) % p.width];
+                let m = c.aig.mux(sel, b, alt);
+                c.aig.xor(m, g[(bi + 2) % p.width])
+            })
+            .collect();
+        let s = c.ripple_add(&gated, &xh);
+        c.po_bus(&format!("y{i}"), &s);
+    }
+    c
+}
+
+/// Attention-like: query-key dot products + steering mux tree.
+pub fn attention(p: &BenchParams) -> Circuit {
+    let mut c = super::new_circuit("attention", p);
+    let heads = 1 + p.scale;
+    let dk = 3;
+    for h in 0..heads {
+        let q: Vec<Vec<Lit>> = (0..dk).map(|i| c.pi_bus(&format!("q{h}_{i}"), p.width)).collect();
+        let k: Vec<Vec<Lit>> = (0..dk).map(|i| c.pi_bus(&format!("k{h}_{i}"), p.width)).collect();
+        let prods: Vec<Vec<Lit>> = (0..dk)
+            .map(|i| soft_mul(&mut c, &q[i], &k[i], p.algo))
+            .collect();
+        let score = reduce_rows(&mut c, prods, p.algo);
+        // Steering: one-hot select of v rows by score top bits (LUT heavy).
+        let v: Vec<Vec<Lit>> = (0..4).map(|i| c.pi_bus(&format!("v{h}_{i}"), p.width)).collect();
+        let s0 = score[score.len() - 1];
+        let s1 = score[score.len() - 2];
+        let out: Vec<Lit> = (0..p.width)
+            .map(|bi| {
+                let m0 = c.aig.mux(s0, v[0][bi], v[1][bi]);
+                let m1 = c.aig.mux(s0, v[2][bi], v[3][bi]);
+                c.aig.mux(s1, m0, m1)
+            })
+            .collect();
+        c.po_bus(&format!("o{h}"), &out);
+        c.po_bus(&format!("score{h}"), &score);
+    }
+    c
+}
+
+/// Systolic-array cell column (TPU-like): chained MACs with registers.
+pub fn systolic(p: &BenchParams) -> Circuit {
+    let mut c = super::new_circuit("systolic", p);
+    let n = 2 + p.scale;
+    let a = c.pi_bus("a", p.width);
+    let mut acc: Vec<Lit> = c.pi_bus("psum_in", p.width + 4);
+    for i in 0..n {
+        let w = c.pi_bus(&format!("w{i}"), p.width);
+        let prod = soft_mul(&mut c, &a, &w, p.algo);
+        let sum = c.ripple_add(&acc, &prod);
+        // Register stage.
+        acc = sum
+            .iter()
+            .take(p.width + 4)
+            .map(|&b| {
+                let q = c.ff();
+                c.set_ff_d(q, b);
+                q
+            })
+            .collect();
+    }
+    c.po_bus("psum_out", &acc);
+    c
+}
+
+/// Softmax-ish: max-reduce comparators + subtract + LUT lookup stage.
+pub fn softmax(p: &BenchParams) -> Circuit {
+    let mut c = super::new_circuit("softmax", p);
+    let n = 3 + p.scale;
+    let xs: Vec<Vec<Lit>> = (0..n).map(|i| c.pi_bus(&format!("x{i}"), p.width)).collect();
+    // Max tree (pure LUT logic).
+    let mut cur: Vec<Vec<Lit>> = xs.clone();
+    while cur.len() > 1 {
+        let mut next = Vec::new();
+        for pair in cur.chunks(2) {
+            if pair.len() == 1 {
+                next.push(pair[0].clone());
+                continue;
+            }
+            let (a, b) = (&pair[0], &pair[1]);
+            let mut gt = Lit::FALSE;
+            let mut eq = Lit::TRUE;
+            for i in (0..p.width).rev() {
+                let bit_gt = c.aig.and(a[i], b[i].compl());
+                let t = c.aig.and(eq, bit_gt);
+                gt = c.aig.or(gt, t);
+                let x = c.aig.xor(a[i], b[i]);
+                eq = c.aig.and(eq, x.compl());
+            }
+            next.push((0..p.width).map(|i| c.aig.mux(gt, a[i], b[i])).collect());
+        }
+        cur = next;
+    }
+    let mx = cur.pop().unwrap();
+    // x - max via x + ~max + 1 on hard chains, then a nonlinear LUT stage.
+    for (i, x) in xs.iter().enumerate() {
+        let neg: Vec<Lit> = mx.iter().map(|&b| b.compl()).collect();
+        let diff = c.ripple_add(x, &neg);
+        let nb: Vec<Lit> = diff
+            .iter()
+            .take(p.width)
+            .enumerate()
+            .map(|(bi, &b)| {
+                let rot = diff[(bi + 1) % p.width];
+                c.aig.xor(b, rot)
+            })
+            .collect();
+        c.po_bus(&format!("e{i}"), &nb);
+    }
+    c
+}
+
+/// Convolution layer with runtime weights (unknown x unknown).
+pub fn conv_layer(p: &BenchParams) -> Circuit {
+    let mut c = super::new_circuit("conv_layer", p);
+    let n = 2 + p.scale;
+    let w: Vec<Vec<Lit>> = (0..3).map(|i| c.pi_bus(&format!("w{i}"), p.width)).collect();
+    let xs: Vec<Vec<Lit>> = (0..n + 2).map(|i| c.pi_bus(&format!("x{i}"), p.width)).collect();
+    for o in 0..n {
+        let prods: Vec<Vec<Lit>> = (0..3)
+            .map(|k| soft_mul(&mut c, &xs[o + k], &w[k], p.algo))
+            .collect();
+        let y = reduce_rows(&mut c, prods, p.algo);
+        c.po_bus(&format!("y{o}"), &y);
+    }
+    c
+}
+
+/// Wide accumulation reduction (gradient-sum style): mostly hard adders.
+pub fn reduction(p: &BenchParams) -> Circuit {
+    let mut c = super::new_circuit("reduction", p);
+    let n = 6 + 2 * p.scale;
+    let rows: Vec<Vec<Lit>> = (0..n).map(|i| c.pi_bus(&format!("x{i}"), p.width)).collect();
+    let s = reduce_rows(&mut c, rows, AdderAlgo::BinaryTree);
+    c.po_bus("sum", &s);
+    c
+}
+
+/// Normalization-ish: mean (adders) + per-element scale via LUT shifts.
+pub fn norm(p: &BenchParams) -> Circuit {
+    let mut c = super::new_circuit("norm", p);
+    let n = 4 + p.scale;
+    let xs: Vec<Vec<Lit>> = (0..n).map(|i| c.pi_bus(&format!("x{i}"), p.width)).collect();
+    let mean = reduce_rows(&mut c, xs.clone(), p.algo);
+    for (i, x) in xs.iter().enumerate() {
+        // Barrel-shift x by mean's low bits (pure mux/LUT logic).
+        let s0 = mean[0];
+        let s1 = mean[1];
+        let sh1: Vec<Lit> = (0..p.width)
+            .map(|bi| {
+                let from = if bi == 0 { Lit::FALSE } else { x[bi - 1] };
+                c.aig.mux(s0, from, x[bi])
+            })
+            .collect();
+        let sh2: Vec<Lit> = (0..p.width)
+            .map(|bi| {
+                let from = if bi < 2 { Lit::FALSE } else { sh1[bi - 2] };
+                c.aig.mux(s1, from, sh1[bi])
+            })
+            .collect();
+        c.po_bus(&format!("y{i}"), &sh2);
+    }
+    c
+}
+
+#[allow(unused)]
+fn _rng_guard(p: &BenchParams) -> Rng {
+    Rng::new(p.seed)
+}

@@ -1,0 +1,186 @@
+//! Kratos-like unrolled-DNN benchmark generators.
+//!
+//! Kratos circuits are fully-unrolled DNN layers: every weight is a
+//! compile-time constant, so each multiply becomes shifted partial-product
+//! rows (selector-bit elision drops zero rows), and sparsity simply removes
+//! multiplies.  This makes the circuits adder-chain dominated — exactly the
+//! profile Double-Duty targets.
+
+use crate::synth::multiplier::unrolled_mul;
+use crate::synth::{reduce_rows, Circuit};
+use crate::techmap::aig::Lit;
+use crate::util::Rng;
+
+use super::BenchParams;
+
+/// Random non-zero `w`-bit weight, or 0 with probability `sparsity`.
+fn weight(rng: &mut Rng, p: &BenchParams) -> u64 {
+    if rng.chance(p.sparsity) {
+        0
+    } else {
+        1 + rng.below((1 << p.width) - 1) as u64
+    }
+}
+
+/// Multiply-accumulate a set of (input bus, weight) pairs into one output.
+fn mac(c: &mut Circuit, taps: &[(Vec<Lit>, u64)], p: &BenchParams) -> Vec<Lit> {
+    let rows: Vec<Vec<Lit>> = taps
+        .iter()
+        .filter(|(_, w)| *w != 0)
+        .map(|(x, w)| unrolled_mul(c, x, *w, p.width, p.algo))
+        .collect();
+    if rows.is_empty() {
+        return vec![Lit::FALSE];
+    }
+    reduce_rows(c, rows, p.algo)
+}
+
+/// 1-D convolution layer: `ch` channels, kernel size 3, `n` output taps.
+pub fn conv1d(p: &BenchParams) -> Circuit {
+    let mut c = super::new_circuit("conv1d", p);
+    let mut rng = Rng::new(p.seed);
+    let n = 6 * p.scale;
+    let ch = 2;
+    let ksize = 3;
+    let inputs: Vec<Vec<Lit>> = (0..n + ksize - 1)
+        .map(|i| c.pi_bus(&format!("x{i}"), p.width))
+        .collect();
+    for o in 0..n {
+        for chan in 0..ch {
+            let taps: Vec<(Vec<Lit>, u64)> = (0..ksize)
+                .map(|k| (inputs[o + k].clone(), weight(&mut rng, p)))
+                .collect();
+            let y = mac(&mut c, &taps, p);
+            c.po_bus(&format!("y{o}_{chan}"), &y);
+        }
+    }
+    c
+}
+
+/// 2-D convolution: 3x3 kernel over a small feature map, 2 filters.
+pub fn conv2d(p: &BenchParams) -> Circuit {
+    let mut c = super::new_circuit("conv2d", p);
+    let mut rng = Rng::new(p.seed ^ 0xc2d);
+    let side = 3 + p.scale;
+    let filters = 2;
+    let img: Vec<Vec<Vec<Lit>>> = (0..side + 2)
+        .map(|r| {
+            (0..side + 2)
+                .map(|cc| c.pi_bus(&format!("px{r}_{cc}"), p.width))
+                .collect()
+        })
+        .collect();
+    for f in 0..filters {
+        let kernel: Vec<u64> = (0..9).map(|_| weight(&mut rng, p)).collect();
+        for r in 0..side {
+            for col in 0..side {
+                let taps: Vec<(Vec<Lit>, u64)> = (0..9)
+                    .map(|k| (img[r + k / 3][col + k % 3].clone(), kernel[k]))
+                    .collect();
+                let y = mac(&mut c, &taps, p);
+                c.po_bus(&format!("f{f}_y{r}_{col}"), &y);
+            }
+        }
+    }
+    c
+}
+
+/// GEMM with transposed (constant) weight matrix: y = W x.
+pub fn gemmt(p: &BenchParams) -> Circuit {
+    let mut c = super::new_circuit("gemmt", p);
+    let mut rng = Rng::new(p.seed ^ 0x6e44);
+    let n = 4 + 2 * p.scale; // output rows
+    let m = 6; // input length
+    let x: Vec<Vec<Lit>> = (0..m).map(|i| c.pi_bus(&format!("x{i}"), p.width)).collect();
+    for r in 0..n {
+        let taps: Vec<(Vec<Lit>, u64)> =
+            (0..m).map(|i| (x[i].clone(), weight(&mut rng, p))).collect();
+        let y = mac(&mut c, &taps, p);
+        c.po_bus(&format!("y{r}"), &y);
+    }
+    c
+}
+
+/// GEMM, smaller/denser variant (gemms in Kratos).
+pub fn gemms(p: &BenchParams) -> Circuit {
+    let mut c = super::new_circuit("gemms", p);
+    let mut rng = Rng::new(p.seed ^ 0x6e55);
+    let n = 3 + p.scale;
+    let m = 4;
+    let x: Vec<Vec<Lit>> = (0..m).map(|i| c.pi_bus(&format!("x{i}"), p.width)).collect();
+    for r in 0..n {
+        for r2 in 0..2 {
+            let taps: Vec<(Vec<Lit>, u64)> =
+                (0..m).map(|i| (x[i].clone(), weight(&mut rng, p))).collect();
+            let y = mac(&mut c, &taps, p);
+            c.po_bus(&format!("y{r}_{r2}"), &y);
+        }
+    }
+    c
+}
+
+/// Depthwise convolution: one kernel per channel, no cross-channel sum.
+pub fn dwconv(p: &BenchParams) -> Circuit {
+    let mut c = super::new_circuit("dwconv", p);
+    let mut rng = Rng::new(p.seed ^ 0xd3c);
+    let chans = 3 + p.scale;
+    let taps_n = 3;
+    for ch in 0..chans {
+        let xs: Vec<Vec<Lit>> = (0..taps_n + 2)
+            .map(|i| c.pi_bus(&format!("c{ch}x{i}"), p.width))
+            .collect();
+        for o in 0..3 {
+            let taps: Vec<(Vec<Lit>, u64)> = (0..taps_n)
+                .map(|k| (xs[o + k].clone(), weight(&mut rng, p)))
+                .collect();
+            let y = mac(&mut c, &taps, p);
+            c.po_bus(&format!("c{ch}y{o}"), &y);
+        }
+    }
+    c
+}
+
+/// Tiny MLP layer: dense matrix then ReLU-ish threshold logic.
+pub fn mlp(p: &BenchParams) -> Circuit {
+    let mut c = super::new_circuit("mlp", p);
+    let mut rng = Rng::new(p.seed ^ 0x3117);
+    let n_in = 5;
+    let n_out = 3 + p.scale;
+    let x: Vec<Vec<Lit>> = (0..n_in).map(|i| c.pi_bus(&format!("x{i}"), p.width)).collect();
+    for o in 0..n_out {
+        let taps: Vec<(Vec<Lit>, u64)> =
+            (0..n_in).map(|i| (x[i].clone(), weight(&mut rng, p))).collect();
+        let y = mac(&mut c, &taps, p);
+        // ReLU on the sign-ish MSB: mask outputs by NOT(msb).
+        let msb = *y.last().unwrap();
+        let gated: Vec<Lit> = y.iter().map(|&b| c.aig.and(b, msb.compl())).collect();
+        c.po_bus(&format!("y{o}"), &gated);
+    }
+    c
+}
+
+/// Max-pool-ish reduction: comparators + adders (mixed profile).
+pub fn pool(p: &BenchParams) -> Circuit {
+    let mut c = super::new_circuit("pool", p);
+    let n = 4 * p.scale;
+    for g in 0..n {
+        let a = c.pi_bus(&format!("a{g}"), p.width);
+        let b = c.pi_bus(&format!("b{g}"), p.width);
+        // a + b (hard chain) and max(a, b) (LUT logic).
+        let s = c.ripple_add(&a, &b);
+        c.po_bus(&format!("sum{g}"), &s);
+        // Greater-than comparator chain in soft logic.
+        let mut gt = Lit::FALSE;
+        let mut eq = Lit::TRUE;
+        for i in (0..p.width).rev() {
+            let bit_gt = c.aig.and(a[i], b[i].compl());
+            let t = c.aig.and(eq, bit_gt);
+            gt = c.aig.or(gt, t);
+            let x = c.aig.xor(a[i], b[i]);
+            eq = c.aig.and(eq, x.compl());
+        }
+        let mx: Vec<Lit> = (0..p.width).map(|i| c.aig.mux(gt, a[i], b[i])).collect();
+        c.po_bus(&format!("max{g}"), &mx);
+    }
+    c
+}

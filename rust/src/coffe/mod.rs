@@ -1,0 +1,230 @@
+//! COFFE-2-like circuit-level modeling: transistor sizing over Elmore-delay
+//! RC networks with minimum-width-transistor-area (MWTA) accounting.
+//!
+//! The real COFFE 2 sizes transistors against HSPICE on foundry models; we
+//! do not have HSPICE or 20 nm decks (repro band 0/5), so this engine
+//! substitutes an Elmore-delay RC evaluator with a coordinate-descent sizing
+//! loop, and anchors its technology constants to the paper's published
+//! component values (Table I).  Component *structures* (mux levels, LUT pass
+//! trees, buffer chains) are modeled explicitly, so relative results — the
+//! Z-path speedup, the DD5 area delta, the "AddMux crossbar slower than the
+//! local crossbar because sizing can afford smaller transistors" effect —
+//! come out of the model rather than being hard-coded.
+//!
+//! Regenerates Table I (component area/delay) and Table II (path delays).
+
+pub mod mux;
+pub mod rc;
+pub mod sizing;
+pub mod subcircuits;
+
+use crate::arch::{AreaModel, ArchVariant, Delays};
+use crate::util::Table;
+
+pub use rc::Tech;
+pub use sizing::{size_circuit, Objective};
+
+/// Result of modeling one architecture variant.
+#[derive(Clone, Debug)]
+pub struct CoffeReport {
+    pub variant: ArchVariant,
+    pub delays: Delays,
+    pub area: AreaModel,
+    /// (component name, area MWTA per ALM, delay ps) — Table I rows.
+    pub components: Vec<(String, f64, f64)>,
+}
+
+/// Calibration scales anchoring the Elmore/MWTA model to the paper's
+/// published reference points (see module docs).  Two classes:
+/// interconnect muxes (anchored on the baseline local crossbar) and
+/// ALM-internal paths (anchored on the baseline LUT->adder path delay and
+/// the baseline ALM area).  Everything not anchored — the AddMux, the
+/// AddMux crossbar, every DD5/DD6 composition — is a *prediction*.
+#[derive(Clone, Copy, Debug)]
+struct Calibration {
+    d_int: f64,
+    d_alm: f64,
+    a_int: f64,
+    a_alm: f64,
+}
+
+/// Paper anchor values (Table I / Table II, baseline architecture only).
+const ANCHOR_XBAR_DELAY_PS: f64 = 72.61;
+const ANCHOR_XBAR_AREA_MWTA: f64 = 289.6;
+const ANCHOR_LUT_ADDER_DELAY_PS: f64 = 133.4;
+const ANCHOR_ALM_AREA_MWTA: f64 = 2167.3;
+
+fn calibration(tech: &Tech) -> Calibration {
+    let lx = subcircuits::local_crossbar(tech);
+    let lp = subcircuits::lut_to_adder_path(tech);
+    let ab = subcircuits::alm_area(tech, ArchVariant::Baseline);
+    Calibration {
+        d_int: ANCHOR_XBAR_DELAY_PS / lx.delay_ps,
+        d_alm: ANCHOR_LUT_ADDER_DELAY_PS / lp.delay_ps,
+        a_int: ANCHOR_XBAR_AREA_MWTA / lx.area_mwta,
+        a_alm: ANCHOR_ALM_AREA_MWTA / ab.area_mwta,
+    }
+}
+
+/// Model one architecture variant: size every subcircuit, calibrate, and
+/// compose the `Delays`/`AreaModel` the CAD flow consumes.
+pub fn model_variant(variant: ArchVariant) -> CoffeReport {
+    let tech = Tech::n20();
+    let cal = calibration(&tech);
+
+    // Size the components (raw Elmore/MWTA values).
+    let local_xbar = subcircuits::local_crossbar(&tech);
+    let addmux_xbar = subcircuits::addmux_crossbar(&tech);
+    let addmux = subcircuits::addmux(&tech);
+    let lut_path = subcircuits::lut_to_adder_path(&tech);
+    let alm = subcircuits::alm_area(&tech, variant);
+
+    // Apply class calibration.
+    let lx_d = local_xbar.delay_ps * cal.d_int;
+    let lx_a = local_xbar.area_mwta * cal.a_int;
+    let ax_d = addmux_xbar.delay_ps * cal.d_int;
+    let ax_a = addmux_xbar.area_mwta * cal.a_int;
+    let am_d = addmux.delay_ps * cal.d_alm;
+    let am_a = addmux.area_mwta * cal.a_alm;
+    let lp_d = lut_path.delay_ps * cal.d_alm;
+
+    let dd = !matches!(variant, ArchVariant::Baseline);
+
+    // Compose Table II paths.
+    let mut delays = Delays::paper(variant);
+    delays.lb_in_to_alm_in = lx_d;
+    delays.lb_in_to_z = if dd { ax_d } else { f64::INFINITY };
+    // On DD variants every LUT->adder operand additionally traverses the
+    // AddMux; on baseline it does not exist.
+    delays.alm_in_to_adder = if dd { lp_d + am_d } else { lp_d };
+    delays.z_to_adder = if dd { am_d } else { f64::INFINITY };
+
+    // ALM area: base inventory (+ Z wiring / output-mux rework) in the
+    // ALM class, plus the interconnect-class AddMux crossbar share and the
+    // AddMux itself.
+    let alm_mwta = alm.area_mwta * cal.a_alm + if dd { am_a + ax_a } else { 0.0 };
+
+    let area = AreaModel {
+        alm_mwta,
+        addmux_mwta: if dd { am_a } else { 0.0 },
+        addmux_xbar_mwta: if dd { ax_a } else { 0.0 },
+        tile_overhead_mwta: AreaModel::paper(variant).tile_overhead_mwta,
+    };
+
+    let mut components = vec![
+        ("Baseline Crossbar".to_string(), lx_a, lx_d),
+    ];
+    if dd {
+        components.push(("AddMux".to_string(), am_a, am_d));
+        components.push(("AddMux Crossbar".to_string(), ax_a, ax_d));
+    }
+    components.push((format!("{} ALM", variant.name()), alm_mwta, f64::NAN));
+
+    CoffeReport { variant, delays, area, components }
+}
+
+/// Render Table I: area and delay of the added circuit components.
+pub fn table1() -> Table {
+    let base = model_variant(ArchVariant::Baseline);
+    let dd5 = model_variant(ArchVariant::Dd5);
+    let mut t = Table::new(
+        "Table I: area and delay of added circuit components (per ALM)",
+        &["Circuit", "Area (MWTA)", "Delay (ps)", "Paper area", "Paper delay"],
+    );
+    let find = |r: &CoffeReport, name: &str| -> (f64, f64) {
+        r.components
+            .iter()
+            .find(|(n, _, _)| n == name)
+            .map(|&(_, a, d)| (a, d))
+            .unwrap_or((f64::NAN, f64::NAN))
+    };
+    let (am_a, am_d) = find(&dd5, "AddMux");
+    let (bx_a, bx_d) = find(&base, "Baseline Crossbar");
+    let (ax_a, ax_d) = find(&dd5, "AddMux Crossbar");
+    t.row(&["AddMux".into(), format!("{am_a:.3}"), format!("{am_d:.2}"),
+            "1.698".into(), "68.77".into()]);
+    t.row(&["Baseline Crossbar".into(), format!("{bx_a:.1}"), format!("{bx_d:.2}"),
+            "289.6".into(), "72.61".into()]);
+    t.row(&["AddMux Crossbar".into(), format!("{ax_a:.2}"), format!("{ax_d:.2}"),
+            "77.91".into(), "77.05".into()]);
+    t.row(&["Baseline ALM".into(), format!("{:.1}", base.area.alm_mwta), "-".into(),
+            "2167.3".into(), "-".into()]);
+    let delta = (dd5.area.alm_mwta / base.area.alm_mwta - 1.0) * 100.0;
+    t.row(&["DD5 ALM".into(),
+            format!("{:.1} ({:+.2}% logic)", dd5.area.alm_mwta, delta),
+            "-".into(), "2366.6".into(), "-".into()]);
+    let tile_delta = (dd5.area.per_alm_total() / base.area.per_alm_total() - 1.0) * 100.0;
+    t.row(&["DD5 tile".into(), format!("{tile_delta:+.2}%"), "-".into(),
+            "+3.72%".into(), "-".into()]);
+    t
+}
+
+/// Render Table II: delay impact on the named data paths.
+pub fn table2() -> Table {
+    let base = model_variant(ArchVariant::Baseline);
+    let dd5 = model_variant(ArchVariant::Dd5);
+    let mut t = Table::new(
+        "Table II: delay impact of added circuits on data paths",
+        &["Architecture", "Path", "Delay (ps)", "Paper (ps)"],
+    );
+    t.row(&["Baseline".into(), "LB input -> ALM inputs A-H".into(),
+            format!("{:.2}", base.delays.lb_in_to_alm_in), "72.61".into()]);
+    t.row(&["Baseline".into(), "ALM inputs A-H -> Adder input".into(),
+            format!("{:.1}", base.delays.alm_in_to_adder), "133.4".into()]);
+    t.row(&["Double-Duty".into(), "LB input -> ALM inputs Z1-Z4".into(),
+            format!("{:.2}", dd5.delays.lb_in_to_z), "77.05".into()]);
+    t.row(&["Double-Duty".into(), "ALM inputs A-H -> Adder input".into(),
+            format!("{:.1}", dd5.delays.alm_in_to_adder), "202.2".into()]);
+    t.row(&["Double-Duty".into(), "ALM inputs Z1-Z4 -> Adder input".into(),
+            format!("{:.2}", dd5.delays.z_to_adder), "68.77".into()]);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The calibrated model must land near the paper's Table I/II numbers.
+    #[test]
+    fn near_paper_component_values() {
+        let base = model_variant(ArchVariant::Baseline);
+        let dd5 = model_variant(ArchVariant::Dd5);
+        let close = |got: f64, want: f64, tol: f64| {
+            assert!((got / want - 1.0).abs() < tol,
+                    "got {got:.2}, want {want:.2}");
+        };
+        close(base.delays.lb_in_to_alm_in, 72.61, 0.10);
+        close(base.delays.alm_in_to_adder, 133.4, 0.10);
+        close(dd5.delays.lb_in_to_z, 77.05, 0.10);
+        close(dd5.delays.z_to_adder, 68.77, 0.10);
+        close(dd5.delays.alm_in_to_adder, 202.2, 0.10);
+        close(base.area.alm_mwta, 2167.3, 0.10);
+        close(dd5.area.alm_mwta, 2366.6, 0.10);
+    }
+
+    /// Structural effects the paper calls out must hold.
+    #[test]
+    fn structural_effects() {
+        let base = model_variant(ArchVariant::Baseline);
+        let dd5 = model_variant(ArchVariant::Dd5);
+        // Z path roughly halves the adder feed delay.
+        assert!(dd5.delays.z_to_adder < 0.6 * base.delays.alm_in_to_adder);
+        // DD5 ALM is bigger, but by less than 10%.
+        let ratio = dd5.area.alm_mwta / base.area.alm_mwta;
+        assert!(ratio > 1.0 && ratio < 1.12, "ratio {ratio}");
+        // AddMux crossbar is much smaller than the local crossbar yet slower
+        // (COFFE sizes it lazily because the Z path has slack).
+        let (_, bx_a, bx_d) = &base.components[0];
+        let ax = dd5.components.iter().find(|(n, _, _)| n == "AddMux Crossbar").unwrap();
+        assert!(ax.1 < 0.5 * bx_a);
+        assert!(ax.2 > *bx_d);
+    }
+
+    #[test]
+    fn tables_render() {
+        let t1 = table1().render();
+        assert!(t1.contains("AddMux"));
+        let t2 = table2().render();
+        assert!(t2.contains("Z1-Z4"));
+    }
+}

@@ -1,0 +1,116 @@
+//! Parameterized two-level pass-transistor multiplexer circuit.
+//!
+//! The workhorse of FPGA interconnect modeling: N inputs arranged as
+//! `n_groups` first-level branches of `n_per_group` pass transistors, a
+//! second pass level selecting the group, and a two-stage inverter buffer
+//! driving the output load.  Evaluated with Elmore delay; area in MWTA
+//! including SRAM configuration bits.
+
+use super::rc::{elmore_ps, transistor_area_mwta, RcStage, Tech};
+
+/// SRAM cell area in MWTA (6T cell, COFFE's convention).
+pub const SRAM_MWTA: f64 = 4.0;
+
+/// A sized two-level mux.
+#[derive(Clone, Debug)]
+pub struct Mux {
+    pub n_inputs: usize,
+    pub n_per_group: usize,
+    pub n_groups: usize,
+    /// Widths: [level-1 pass, level-2 pass, buffer inv 1, buffer inv 2].
+    pub w: [f64; 4],
+}
+
+impl Mux {
+    /// Create with a near-square level split and unit widths.
+    pub fn new(n_inputs: usize) -> Self {
+        let n_per_group = (n_inputs as f64).sqrt().ceil() as usize;
+        let n_groups = n_inputs.div_ceil(n_per_group);
+        Mux { n_inputs, n_per_group, n_groups, w: [1.0, 1.0, 1.0, 2.0] }
+    }
+
+    /// Worst-case Elmore delay (ps) from a driven input to the output,
+    /// given the upstream driver resistance and the output load (fF).
+    pub fn delay_ps(&self, tech: &Tech, r_drv: f64, c_load: f64) -> f64 {
+        let [wp1, wp2, wb1, wb2] = self.w;
+        // Node after driver: all first-level drains in the selected group
+        // hang on the input wire? No — the input wire sees one pass gate.
+        let stages = [
+            // Driver charges the input node: pass-gate source junction.
+            RcStage { r: r_drv, c: tech.c_drain_min * wp1 + tech.c_wire },
+            // Through level-1 pass: intermediate node carries the drains of
+            // this group's other level-1 transistors plus one level-2 source.
+            RcStage {
+                r: tech.r_nmos(wp1),
+                c: self.n_per_group as f64 * tech.c_drain_min * wp1
+                    + tech.c_drain_min * wp2
+                    + tech.c_wire,
+            },
+            // Through level-2 pass: sense node carries all group drains and
+            // the buffer input gate.
+            RcStage {
+                r: tech.r_nmos(wp2),
+                c: self.n_groups as f64 * tech.c_drain_min * wp2
+                    + tech.c_inv_in(wb1),
+            },
+            // Buffer stage 1.
+            RcStage { r: tech.r_inv(wb1), c: tech.c_inv_out(wb1) + tech.c_inv_in(wb2) },
+            // Buffer stage 2 into the load.
+            RcStage { r: tech.r_inv(wb2), c: tech.c_inv_out(wb2) + c_load },
+        ];
+        elmore_ps(&stages)
+    }
+
+    /// Layout area (MWTA), including pass transistors, buffers, and SRAM.
+    pub fn area_mwta(&self, tech: &Tech) -> f64 {
+        let [wp1, wp2, wb1, wb2] = self.w;
+        let pass = self.n_inputs as f64 * transistor_area_mwta(wp1)
+            + self.n_groups as f64 * transistor_area_mwta(wp2);
+        let buf = transistor_area_mwta(wb1) + transistor_area_mwta(tech.beta * wb1)
+            + transistor_area_mwta(wb2) + transistor_area_mwta(tech.beta * wb2);
+        // One-hot SRAM per level-1 column + per group.
+        let sram = (self.n_per_group + self.n_groups) as f64 * SRAM_MWTA;
+        pass + buf + sram
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_split_covers_inputs() {
+        for n in [2, 10, 16, 30, 60] {
+            let m = Mux::new(n);
+            assert!(m.n_per_group * m.n_groups >= n, "split for {n}");
+        }
+    }
+
+    #[test]
+    fn bigger_mux_is_slower_and_larger() {
+        let t = Tech::n20();
+        let small = Mux::new(4);
+        let large = Mux::new(32);
+        assert!(large.delay_ps(&t, 500.0, 1.0) > small.delay_ps(&t, 500.0, 1.0));
+        assert!(large.area_mwta(&t) > small.area_mwta(&t));
+    }
+
+    #[test]
+    fn wider_buffers_speed_up_loaded_output() {
+        let t = Tech::n20();
+        let mut m = Mux::new(16);
+        let slow = m.delay_ps(&t, 500.0, 20.0);
+        m.w = [1.0, 1.0, 2.0, 6.0];
+        let fast = m.delay_ps(&t, 500.0, 20.0);
+        assert!(fast < slow);
+    }
+
+    #[test]
+    fn area_monotone_in_width() {
+        let t = Tech::n20();
+        let mut m = Mux::new(16);
+        let a1 = m.area_mwta(&t);
+        m.w = [2.0, 2.0, 2.0, 4.0];
+        assert!(m.area_mwta(&t) > a1);
+    }
+}

@@ -1,0 +1,131 @@
+//! Technology constants and Elmore-delay RC evaluation.
+//!
+//! Transistors are characterized by width `w` in minimum-width units:
+//! on-resistance `R = r_min / w`, gate capacitance `c_gate_min * w`,
+//! drain/source junction capacitance `c_drain_min * w`.  Layout area uses
+//! COFFE's quadratic MWTA fit `0.447 + 0.128*w + 0.425*w^2` ... we use the
+//! published COFFE form `area(w) = 0.447 + 0.660w + 0.150w^2` normalized so
+//! `area(1) = 1` MWTA (one minimum-width transistor = 1 MWTA by definition
+//! after normalization).
+
+/// Technology parameters (nominally 20 nm, anchored to the paper's
+/// published Stratix-10-like component values — see module docs).
+#[derive(Clone, Copy, Debug)]
+pub struct Tech {
+    /// On-resistance of a minimum-width NMOS pass transistor (ohms).
+    pub r_min: f64,
+    /// Gate capacitance per minimum width (fF).
+    pub c_gate_min: f64,
+    /// Drain junction capacitance per minimum width (fF).
+    pub c_drain_min: f64,
+    /// PMOS mobility penalty: a PMOS of width w behaves like NMOS of w/beta.
+    pub beta: f64,
+    /// Local interconnect wire capacitance per tile-relative unit (fF).
+    pub c_wire: f64,
+}
+
+impl Tech {
+    /// 20 nm-class constants. The absolute values are anchored so the
+    /// sized baseline local crossbar lands at Table I's 72.61 ps / 289.6
+    /// MWTA; all other components are *predictions* of the model.
+    pub fn n20() -> Self {
+        Tech {
+            r_min: 11_000.0,
+            c_gate_min: 0.050,
+            c_drain_min: 0.033,
+            beta: 1.8,
+            c_wire: 0.18,
+        }
+    }
+
+    /// NMOS on-resistance at width `w` (min-width units).
+    #[inline]
+    pub fn r_nmos(&self, w: f64) -> f64 {
+        self.r_min / w
+    }
+
+    /// Inverter equivalent drive resistance at size `w` (averaged
+    /// pull-up/pull-down with the PMOS sized beta*w for symmetry).
+    #[inline]
+    pub fn r_inv(&self, w: f64) -> f64 {
+        self.r_min / w
+    }
+
+    /// Inverter input gate capacitance at size `w` (NMOS w + PMOS beta*w).
+    #[inline]
+    pub fn c_inv_in(&self, w: f64) -> f64 {
+        self.c_gate_min * w * (1.0 + self.beta)
+    }
+
+    /// Inverter output (drain) capacitance at size `w`.
+    #[inline]
+    pub fn c_inv_out(&self, w: f64) -> f64 {
+        self.c_drain_min * w * (1.0 + self.beta)
+    }
+}
+
+/// MWTA layout area of one transistor of width `w` (COFFE quadratic fit,
+/// normalized to `area(1) = 1`).
+pub fn transistor_area_mwta(w: f64) -> f64 {
+    let raw = |w: f64| 0.447 + 0.660 * w + 0.150 * w * w;
+    raw(w) / raw(1.0)
+}
+
+/// One node of an RC ladder: series resistance into the node and the
+/// capacitance hanging on it.
+#[derive(Clone, Copy, Debug)]
+pub struct RcStage {
+    pub r: f64,
+    pub c: f64,
+}
+
+/// Elmore delay of a ladder (ps given ohms and fF: R[Ω]·C[fF] = 1e-3 ps...
+/// Ω·fF = 1e-15 s·1e0 = fs·1e0; numerically Ω*fF = 1e-3 ps so we scale).
+/// delay = 0.69 * sum_i R_upstream(i) * C_i (the 0.69 = ln(2) step factor).
+pub fn elmore_ps(stages: &[RcStage]) -> f64 {
+    let mut delay = 0.0;
+    let mut r_up = 0.0;
+    for s in stages {
+        r_up += s.r;
+        delay += r_up * s.c;
+    }
+    0.69 * delay * 1e-3 // ohm * fF = 1e-15 s = 1e-3 ps
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn area_normalized() {
+        assert!((transistor_area_mwta(1.0) - 1.0).abs() < 1e-12);
+        assert!(transistor_area_mwta(2.0) > 1.0);
+        // Quadratic growth: doubling width less than quadruples area.
+        assert!(transistor_area_mwta(2.0) < 4.0);
+    }
+
+    #[test]
+    fn elmore_single_stage() {
+        // R=1k, C=1fF -> 0.69 * 1000 * 1 * 1e-3 ps = 0.69 ps.
+        let d = elmore_ps(&[RcStage { r: 1000.0, c: 1.0 }]);
+        assert!((d - 0.69).abs() < 1e-9);
+    }
+
+    #[test]
+    fn elmore_accumulates_upstream_r() {
+        let two = elmore_ps(&[
+            RcStage { r: 1000.0, c: 1.0 },
+            RcStage { r: 1000.0, c: 1.0 },
+        ]);
+        // 0.69*(1000*1 + 2000*1)*1e-3 = 2.07
+        assert!((two - 2.07).abs() < 1e-9);
+    }
+
+    #[test]
+    fn wider_transistor_is_faster_into_fixed_load() {
+        let t = Tech::n20();
+        let d1 = elmore_ps(&[RcStage { r: t.r_nmos(1.0), c: 10.0 }]);
+        let d2 = elmore_ps(&[RcStage { r: t.r_nmos(2.0), c: 10.0 }]);
+        assert!(d2 < d1);
+    }
+}

@@ -1,0 +1,113 @@
+//! Experiment coordinator: a thread-pool job runner for benchmark sweeps.
+//!
+//! The offline environment has no tokio, so this is a std::thread worker
+//! pool over an MPSC job queue.  Experiments submit (benchmark, variant,
+//! opts) jobs; the coordinator fans them out and collects `FlowResult`s in
+//! submission order, so multi-circuit sweeps (Figs. 5–7) saturate whatever
+//! cores exist while staying deterministic per job (each job carries its
+//! own seeds).
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+use crate::arch::ArchVariant;
+use crate::bench_suites::Benchmark;
+use crate::flow::{run_benchmark, FlowOpts, FlowResult};
+
+/// One experiment job.
+pub struct Job {
+    pub bench: Benchmark,
+    pub variant: ArchVariant,
+    pub opts: FlowOpts,
+}
+
+/// Run all jobs on `workers` threads; results in submission order.
+pub fn run_jobs(jobs: Vec<Job>, workers: usize) -> Vec<FlowResult> {
+    let workers = workers.max(1).min(jobs.len().max(1));
+    if workers <= 1 {
+        return jobs
+            .into_iter()
+            .map(|j| run_benchmark(&j.bench, j.variant, &j.opts))
+            .collect();
+    }
+    let n = jobs.len();
+    let queue = Arc::new(Mutex::new(
+        jobs.into_iter().enumerate().collect::<Vec<(usize, Job)>>(),
+    ));
+    let (tx, rx) = mpsc::channel::<(usize, FlowResult)>();
+    let mut handles = Vec::new();
+    for _ in 0..workers {
+        let queue = Arc::clone(&queue);
+        let tx = tx.clone();
+        handles.push(thread::spawn(move || loop {
+            let job = { queue.lock().unwrap().pop() };
+            let Some((idx, j)) = job else { break };
+            let r = run_benchmark(&j.bench, j.variant, &j.opts);
+            if tx.send((idx, r)).is_err() {
+                break;
+            }
+        }));
+    }
+    drop(tx);
+    let mut slots: Vec<Option<FlowResult>> = (0..n).map(|_| None).collect();
+    for (idx, r) in rx {
+        slots[idx] = Some(r);
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    slots.into_iter().map(|s| s.expect("worker died before finishing job")).collect()
+}
+
+/// Number of workers: respects DDUTY_WORKERS, else available parallelism.
+pub fn default_workers() -> usize {
+    if let Ok(w) = std::env::var("DDUTY_WORKERS") {
+        if let Ok(n) = w.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suites::{vtr_suite, BenchParams};
+
+    #[test]
+    fn jobs_preserve_order_and_complete() {
+        let params = BenchParams::default();
+        let suite = vtr_suite(&params);
+        let opts = FlowOpts {
+            seeds: vec![1],
+            place_effort: 0.05,
+            route: false,
+            ..Default::default()
+        };
+        let jobs: Vec<Job> = suite[..3]
+            .iter()
+            .map(|b| Job { bench: b.clone(), variant: ArchVariant::Baseline, opts: opts.clone() })
+            .collect();
+        let names: Vec<String> = jobs.iter().map(|j| j.bench.name.clone()).collect();
+        let results = run_jobs(jobs, 2);
+        assert_eq!(results.len(), 3);
+        for (r, n) in results.iter().zip(&names) {
+            assert_eq!(&r.name, n);
+        }
+    }
+
+    #[test]
+    fn single_worker_sequential_path() {
+        let params = BenchParams::default();
+        let suite = vtr_suite(&params);
+        let opts = FlowOpts { seeds: vec![1], place_effort: 0.05, route: false, ..Default::default() };
+        let jobs = vec![Job {
+            bench: suite[0].clone(),
+            variant: ArchVariant::Dd5,
+            opts,
+        }];
+        let results = run_jobs(jobs, 1);
+        assert_eq!(results.len(), 1);
+    }
+}

@@ -1,0 +1,191 @@
+//! End-to-end CAD flow orchestration: synth -> map -> pack -> place ->
+//! route -> STA, with multi-seed averaging (the paper runs 3 seeds per
+//! experiment) and the metric set every table/figure consumes.
+
+use crate::arch::device::Device;
+use crate::arch::{Arch, ArchVariant};
+use crate::bench_suites::Benchmark;
+use crate::netlist::{Netlist, NetlistStats};
+use crate::pack::{pack, PackOpts, Packing, Unrelated};
+use crate::place::{place, PlaceOpts};
+use crate::route::{route, routed_net_delay, RouteOpts, Routing};
+use crate::synth::Circuit;
+use crate::techmap::{map_circuit, MapOpts};
+use crate::timing::sta;
+use crate::util::stats::mean;
+
+/// Flow options.
+#[derive(Clone, Debug)]
+pub struct FlowOpts {
+    pub seeds: Vec<u64>,
+    pub place_effort: f64,
+    pub unrelated: Unrelated,
+    pub route: bool,
+    pub use_kernel: bool,
+    /// Fixed device (Table IV stress); `None` auto-sizes per design.
+    pub device: Option<Device>,
+    pub channel_width: Option<u16>,
+}
+
+impl Default for FlowOpts {
+    fn default() -> Self {
+        FlowOpts {
+            seeds: vec![1, 2, 3],
+            place_effort: 0.5,
+            unrelated: Unrelated::Auto,
+            route: true,
+            use_kernel: false,
+            device: None,
+            channel_width: None,
+        }
+    }
+}
+
+/// Metrics of one flow run (averaged over seeds).
+#[derive(Clone, Debug)]
+pub struct FlowResult {
+    pub name: String,
+    pub variant: ArchVariant,
+    pub luts: usize,
+    pub adder_bits: usize,
+    pub alms: usize,
+    pub lbs: usize,
+    pub concurrent_luts: usize,
+    /// ALM area in MWTA (alms x per-variant ALM area — the paper's "Total
+    /// ALM Area" of Table IV).
+    pub alm_area_mwta: f64,
+    /// Critical path delay, ns (post-route when routed).
+    pub cpd_ns: f64,
+    /// Area-delay product (MWTA x ns).
+    pub adp: f64,
+    pub fmax_mhz: f64,
+    pub routed_ok: bool,
+    pub route_iters: f64,
+    /// Channel utilization samples (last seed) for Fig. 8.
+    pub channel_util: Vec<f64>,
+    pub dedup_hits: usize,
+}
+
+/// Run the mapped portion once (deterministic), then place/route per seed.
+pub fn run_flow(circ: &Circuit, arch: &Arch, opts: &FlowOpts) -> FlowResult {
+    let nl = map_circuit(circ, &MapOpts::default());
+    run_flow_mapped(&circ.name, &nl, arch, opts, circ.dedup_hits)
+}
+
+/// Flow from an already-mapped netlist.
+pub fn run_flow_mapped(
+    name: &str,
+    nl: &Netlist,
+    arch: &Arch,
+    opts: &FlowOpts,
+    dedup_hits: usize,
+) -> FlowResult {
+    let mut arch = arch.clone();
+    if let Some(w) = opts.channel_width {
+        arch.routing.channel_width = w;
+    }
+    let packing = pack(nl, &arch, &PackOpts { unrelated: opts.unrelated });
+    let _stats = NetlistStats::of(nl);
+
+    let mut cpds = Vec::new();
+    let mut iters = Vec::new();
+    let mut routed_ok = true;
+    let mut channel_util = Vec::new();
+
+    for &seed in &opts.seeds {
+        let pl = place(
+            nl,
+            &packing,
+            &arch,
+            &PlaceOpts {
+                seed,
+                effort: opts.place_effort,
+                timing_driven: true,
+                use_kernel: opts.use_kernel,
+                device: opts.device.clone(),
+            },
+        );
+        if opts.route {
+            let mut model = crate::place::cost::NetModel::build(nl, &packing);
+            model.set_weights(&[], false);
+            let r: Routing = route(&model, &pl, &arch, &RouteOpts::default());
+            routed_ok &= r.success;
+            iters.push(r.iterations as f64);
+            let delay = routed_net_delay(&r, &model, &arch);
+            let rpt = sta(nl, &packing, &arch, delay);
+            cpds.push(rpt.cpd_ps / 1000.0);
+            channel_util = r.channel_util.clone();
+        } else {
+            cpds.push(pl.est_cpd_ps / 1000.0);
+        }
+    }
+
+    let cpd_ns = mean(&cpds);
+    let alm_area_mwta = packing.stats.alms as f64 * arch.area.alm_mwta;
+    FlowResult {
+        name: name.to_string(),
+        variant: arch.variant,
+        luts: packing.stats.luts,
+        adder_bits: packing.stats.adder_bits,
+        alms: packing.stats.alms,
+        lbs: packing.stats.lbs,
+        concurrent_luts: packing.stats.concurrent_luts,
+        alm_area_mwta,
+        cpd_ns,
+        adp: alm_area_mwta * cpd_ns,
+        fmax_mhz: if cpd_ns > 0.0 { 1000.0 / cpd_ns } else { f64::INFINITY },
+        routed_ok,
+        route_iters: mean(&iters),
+        channel_util,
+        dedup_hits,
+    }
+}
+
+/// Run a benchmark on one architecture variant.
+pub fn run_benchmark(b: &Benchmark, variant: ArchVariant, opts: &FlowOpts) -> FlowResult {
+    let circ = b.generate();
+    let arch = Arch::coffe(variant);
+    let mut r = run_flow(&circ, &arch, opts);
+    r.name = b.name.clone();
+    r
+}
+
+/// Pack-only fast path (Fig. 9 and quick stats).
+pub fn pack_only(circ: &Circuit, variant: ArchVariant, unrelated: Unrelated) -> Packing {
+    let nl = map_circuit(circ, &MapOpts::default());
+    let arch = Arch::coffe(variant);
+    pack(&nl, &arch, &PackOpts { unrelated })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suites::{kratos_suite, BenchParams};
+
+    #[test]
+    fn full_flow_on_kratos_circuit() {
+        let params = BenchParams::default();
+        let b = &kratos_suite(&params)[2]; // gemmt
+        let opts = FlowOpts { seeds: vec![1], place_effort: 0.2, ..Default::default() };
+        let base = run_benchmark(b, ArchVariant::Baseline, &opts);
+        assert!(base.alms > 0 && base.cpd_ns > 0.0 && base.adp > 0.0);
+        assert!(base.routed_ok, "routing failed");
+        let dd5 = run_benchmark(b, ArchVariant::Dd5, &opts);
+        // The paper's core claim: DD5 uses no more ALMs on adder circuits.
+        assert!(dd5.alms <= base.alms, "dd5 {} vs base {}", dd5.alms, base.alms);
+    }
+
+    #[test]
+    fn multi_seed_averaging_runs() {
+        let params = BenchParams::default();
+        let b = &kratos_suite(&params)[0];
+        let opts = FlowOpts {
+            seeds: vec![1, 2],
+            place_effort: 0.1,
+            route: false,
+            ..Default::default()
+        };
+        let r = run_benchmark(b, ArchVariant::Baseline, &opts);
+        assert!(r.cpd_ns > 0.0);
+    }
+}

@@ -1,0 +1,38 @@
+//! # double-duty
+//!
+//! Reproduction of *"Double Duty: FPGA Architecture to Enable Concurrent
+//! LUT and Adder Chain Usage"* (CS.AR 2025): a Stratix-10-like FPGA
+//! architecture model with the DD5/DD6 Double-Duty logic-element variants,
+//! a COFFE-2-like circuit-level modeling engine, and a complete VTR-like
+//! CAD flow — arithmetic-aware synthesis, LUT technology mapping, ALM/LB
+//! packing, timing-driven placement, PathFinder routing, and static timing
+//! analysis — plus generators for the Kratos/Koios/VTR-style benchmark
+//! suites and a harness that regenerates every table and figure of the
+//! paper's evaluation.
+//!
+//! The placer's batched cost model (weighted HPWL + RUDY congestion) is a
+//! JAX/Pallas kernel AOT-compiled to HLO and executed from Rust through
+//! PJRT (`runtime`); Python never runs at flow time.
+
+pub mod arch;
+pub mod coffe;
+pub mod netlist;
+pub mod util;
+
+pub mod synth;
+pub mod techmap;
+
+pub mod pack;
+
+pub mod timing;
+
+pub mod place;
+pub mod runtime;
+
+pub mod route;
+
+pub mod bench_suites;
+
+pub mod coordinator;
+pub mod flow;
+pub mod report;

@@ -1,0 +1,116 @@
+//! `dduty` — CLI for the Double-Duty reproduction.
+//!
+//! Subcommands:
+//!   exp <table1|table2|table3|table4|fig5|fig6|fig7|fig8|fig9|all> [--quick]
+//!       Regenerate a paper table/figure.
+//!   flow --bench <name> [--variant baseline|dd5|dd6] [--seed N] [--no-route]
+//!       Run the full CAD flow on one benchmark and print its metrics.
+//!   list
+//!       List available benchmarks.
+//!   coffe
+//!       Print the COFFE component report (Tables I & II).
+
+use double_duty::arch::ArchVariant;
+use double_duty::bench_suites::{all_suites, BenchParams};
+use double_duty::flow::{run_benchmark, FlowOpts};
+use double_duty::report::{self, ExpOpts};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "exp" => cmd_exp(&args[1..]),
+        "flow" => cmd_flow(&args[1..]),
+        "list" => cmd_list(),
+        "coffe" => {
+            report::table1().print();
+            println!();
+            report::table2().print();
+        }
+        _ => {
+            eprintln!("usage: dduty <exp|flow|list|coffe> ...");
+            eprintln!("  dduty exp <table1|table2|table3|table4|fig5..fig9|all> [--quick]");
+            eprintln!("  dduty flow --bench <name> [--variant baseline|dd5|dd6] [--seed N] [--no-route]");
+            std::process::exit(if cmd == "help" { 0 } else { 2 });
+        }
+    }
+}
+
+fn exp_opts(args: &[String]) -> ExpOpts {
+    if args.iter().any(|a| a == "--quick") {
+        ExpOpts::quick()
+    } else {
+        ExpOpts::default()
+    }
+}
+
+fn cmd_exp(args: &[String]) {
+    let which = args.first().map(|s| s.as_str()).unwrap_or("all");
+    let opts = exp_opts(args);
+    let run_one = |w: &str| match w {
+        "table1" => report::table1().print(),
+        "table2" => report::table2().print(),
+        "table3" => report::table3(&opts).print(),
+        "table4" => report::table4(&opts).print(),
+        "fig5" => report::fig5(&opts).0.print(),
+        "fig6" => report::fig6(&opts).0.print(),
+        "fig7" => report::fig7(&opts).print(),
+        "fig8" => report::fig8(&opts).0.print(),
+        "fig9" => report::fig9().0.print(),
+        other => {
+            eprintln!("unknown experiment {other}");
+            std::process::exit(2);
+        }
+    };
+    if which == "all" {
+        for w in ["table1", "table2", "table3", "fig5", "fig6", "fig7", "fig8",
+                  "fig9", "table4"] {
+            run_one(w);
+            println!();
+        }
+    } else {
+        run_one(which);
+    }
+}
+
+fn cmd_flow(args: &[String]) {
+    let get = |flag: &str| -> Option<String> {
+        args.iter()
+            .position(|a| a == flag)
+            .and_then(|i| args.get(i + 1).cloned())
+    };
+    let bench_name = get("--bench").unwrap_or_else(|| "gemmt-FU-mini".to_string());
+    let variant = match get("--variant").as_deref() {
+        Some("dd5") => ArchVariant::Dd5,
+        Some("dd6") => ArchVariant::Dd6,
+        _ => ArchVariant::Baseline,
+    };
+    let seed: u64 = get("--seed").and_then(|s| s.parse().ok()).unwrap_or(1);
+    let route = !args.iter().any(|a| a == "--no-route");
+    let use_kernel = args.iter().any(|a| a == "--kernel");
+
+    let params = BenchParams::default();
+    let Some(bench) = all_suites(&params).into_iter().find(|b| b.name == bench_name) else {
+        eprintln!("unknown benchmark {bench_name}; see `dduty list`");
+        std::process::exit(2);
+    };
+    let opts = FlowOpts { seeds: vec![seed], route, use_kernel, ..Default::default() };
+    let r = run_benchmark(&bench, variant, &opts);
+    println!("circuit        : {}", r.name);
+    println!("architecture   : {}", r.variant.name());
+    println!("LUTs / adders  : {} / {}", r.luts, r.adder_bits);
+    println!("ALMs / LBs     : {} / {}", r.alms, r.lbs);
+    println!("concurrent LUTs: {}", r.concurrent_luts);
+    println!("ALM area (MWTA): {:.0}", r.alm_area_mwta);
+    println!("CPD            : {:.2} ns  (Fmax {:.1} MHz)", r.cpd_ns, r.fmax_mhz);
+    println!("ADP            : {:.0}", r.adp);
+    println!("routed         : {} (iters {:.0})", r.routed_ok, r.route_iters);
+    println!("chain dedup    : {} hits", r.dedup_hits);
+}
+
+fn cmd_list() {
+    let params = BenchParams::default();
+    for b in all_suites(&params) {
+        println!("{:20} [{}]", b.name, b.suite.name());
+    }
+}

@@ -1,0 +1,347 @@
+//! BLIF-subset reader/writer for mapped netlists.
+//!
+//! Supports `.model/.inputs/.outputs/.names/.latch/.subckt adder/.end`.
+//! `.names` blocks become LUT cells (truth table parsed from the SOP cover);
+//! `.subckt adder a=.. b=.. cin=.. sum=.. cout=..` becomes an adder bit —
+//! the same convention VTR's architecture files use for carry-chain
+//! primitives.  This is interchange + golden-file tooling, not a general
+//! BLIF implementation (no multi-model hierarchies, no don't-cares).
+
+use std::collections::HashMap;
+use std::fmt::Write as _;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::{CellKind, Netlist, NetId};
+
+/// Serialize a netlist to BLIF text.
+pub fn write_blif(nl: &Netlist) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, ".model {}", nl.name);
+    let ins: Vec<&str> = nl
+        .inputs
+        .iter()
+        .map(|&c| nl.nets[nl.cells[c as usize].outs[0] as usize].name.as_str())
+        .collect();
+    let outs: Vec<&str> = nl
+        .outputs
+        .iter()
+        .map(|&c| nl.nets[nl.cells[c as usize].ins[0] as usize].name.as_str())
+        .collect();
+    let _ = writeln!(s, ".inputs {}", ins.join(" "));
+    let _ = writeln!(s, ".outputs {}", outs.join(" "));
+    for cell in &nl.cells {
+        match cell.kind {
+            CellKind::Lut { k, truth } => {
+                let names: Vec<&str> = cell
+                    .ins
+                    .iter()
+                    .map(|&n| nl.nets[n as usize].name.as_str())
+                    .collect();
+                let out = &nl.nets[cell.outs[0] as usize].name;
+                let _ = writeln!(s, ".names {} {}", names.join(" "), out);
+                for row in 0..(1u64 << k) {
+                    if truth >> row & 1 == 1 {
+                        let bits: String = (0..k)
+                            .map(|b| if row >> b & 1 == 1 { '1' } else { '0' })
+                            .collect();
+                        let _ = writeln!(s, "{} 1", bits);
+                    }
+                }
+            }
+            CellKind::AdderBit { .. } => {
+                let n = |id: NetId| nl.nets[id as usize].name.as_str();
+                let _ = writeln!(
+                    s,
+                    ".subckt adder a={} b={} cin={} sumout={} cout={}",
+                    n(cell.ins[0]), n(cell.ins[1]), n(cell.ins[2]),
+                    n(cell.outs[0]), n(cell.outs[1])
+                );
+            }
+            CellKind::Ff => {
+                let _ = writeln!(
+                    s,
+                    ".latch {} {} re clk 2",
+                    nl.nets[cell.ins[0] as usize].name,
+                    nl.nets[cell.outs[0] as usize].name
+                );
+            }
+            CellKind::Const(v) => {
+                let out = &nl.nets[cell.outs[0] as usize].name;
+                let _ = writeln!(s, ".names {}", out);
+                if v {
+                    let _ = writeln!(s, "1");
+                }
+            }
+            CellKind::Input | CellKind::Output => {}
+        }
+    }
+    s.push_str(".end\n");
+    s
+}
+
+/// Parse the BLIF subset produced by [`write_blif`].
+pub fn read_blif(text: &str) -> Result<Netlist> {
+    let mut nl = Netlist::new("top");
+    let mut nets: HashMap<String, NetId> = HashMap::new();
+    let mut chains_next = 0u32;
+
+    // Join continuation lines.
+    let mut lines: Vec<String> = Vec::new();
+    let mut cur = String::new();
+    for raw in text.lines() {
+        let raw = raw.split('#').next().unwrap_or("").trim_end();
+        if let Some(stripped) = raw.strip_suffix('\\') {
+            cur.push_str(stripped);
+            cur.push(' ');
+        } else {
+            cur.push_str(raw);
+            if !cur.trim().is_empty() {
+                lines.push(cur.trim().to_string());
+            }
+            cur.clear();
+        }
+    }
+
+    let mut get_net = |nl: &mut Netlist, nets: &mut HashMap<String, NetId>, name: &str| -> NetId {
+        *nets.entry(name.to_string()).or_insert_with(|| nl.add_net(name.to_string()))
+    };
+
+    let mut i = 0usize;
+    let mut pending_outputs: Vec<String> = Vec::new();
+    while i < lines.len() {
+        let line = lines[i].clone();
+        let mut tok = line.split_whitespace();
+        match tok.next() {
+            Some(".model") => {
+                nl.name = tok.next().unwrap_or("top").to_string();
+                i += 1;
+            }
+            Some(".inputs") => {
+                for name in tok {
+                    let n = get_net(&mut nl, &mut nets, name);
+                    nl.add_cell(CellKind::Input, name, vec![], vec![n]);
+                }
+                i += 1;
+            }
+            Some(".outputs") => {
+                pending_outputs.extend(tok.map(|s| s.to_string()));
+                i += 1;
+            }
+            Some(".names") => {
+                let sig: Vec<&str> = tok.collect();
+                if sig.is_empty() {
+                    bail!("empty .names");
+                }
+                let (in_names, out_name) = sig.split_at(sig.len() - 1);
+                let k = in_names.len();
+                if k > 6 {
+                    bail!(".names with {k} inputs exceeds 6-LUT");
+                }
+                // Collect cover rows.
+                let mut truth = 0u64;
+                let mut is_const1 = false;
+                i += 1;
+                while i < lines.len() && !lines[i].starts_with('.') {
+                    let row = &lines[i];
+                    let parts: Vec<&str> = row.split_whitespace().collect();
+                    if k == 0 {
+                        if parts == ["1"] {
+                            is_const1 = true;
+                        }
+                    } else {
+                        if parts.len() != 2 || parts[1] != "1" {
+                            bail!("unsupported cover row: {row}");
+                        }
+                        let pat = parts[0].as_bytes();
+                        if pat.len() != k {
+                            bail!("cover width mismatch: {row}");
+                        }
+                        // Expand '-' don't-cares.
+                        let mut rows = vec![0u64];
+                        for (b, &ch) in pat.iter().enumerate() {
+                            match ch {
+                                b'0' => {}
+                                b'1' => rows.iter_mut().for_each(|r| *r |= 1 << b),
+                                b'-' => {
+                                    let mut extra: Vec<u64> =
+                                        rows.iter().map(|r| r | 1 << b).collect();
+                                    rows.append(&mut extra);
+                                }
+                                _ => bail!("bad cover char in {row}"),
+                            }
+                        }
+                        for r in rows {
+                            truth |= 1u64 << r;
+                        }
+                    }
+                    i += 1;
+                }
+                let out = get_net(&mut nl, &mut nets, out_name[0]);
+                if k == 0 {
+                    nl.add_cell(CellKind::Const(is_const1),
+                                format!("const_{}", out_name[0]), vec![], vec![out]);
+                } else {
+                    let ins: Vec<NetId> = in_names
+                        .iter()
+                        .map(|n| get_net(&mut nl, &mut nets, n))
+                        .collect();
+                    nl.add_cell(CellKind::Lut { k: k as u8, truth },
+                                format!("lut_{}", out_name[0]), ins, vec![out]);
+                }
+            }
+            Some(".latch") => {
+                let parts: Vec<&str> = tok.collect();
+                if parts.len() < 2 {
+                    bail!("bad .latch");
+                }
+                let d = get_net(&mut nl, &mut nets, parts[0]);
+                let q = get_net(&mut nl, &mut nets, parts[1]);
+                nl.add_cell(CellKind::Ff, format!("ff_{}", parts[1]), vec![d], vec![q]);
+                i += 1;
+            }
+            Some(".subckt") => {
+                let cname = tok.next().ok_or_else(|| anyhow!("bad .subckt"))?;
+                if cname != "adder" {
+                    bail!("unsupported subckt {cname}");
+                }
+                let mut conn: HashMap<&str, &str> = HashMap::new();
+                for kv in tok {
+                    let (k, v) = kv.split_once('=')
+                        .ok_or_else(|| anyhow!("bad subckt pin {kv}"))?;
+                    conn.insert(k, v);
+                }
+                let pin = |p: &str| -> Result<&str> {
+                    conn.get(p).copied().context(format!("missing pin {p}"))
+                };
+                let a = get_net(&mut nl, &mut nets, pin("a")?);
+                let b = get_net(&mut nl, &mut nets, pin("b")?);
+                let cin = get_net(&mut nl, &mut nets, pin("cin")?);
+                let sum = get_net(&mut nl, &mut nets, pin("sumout")?);
+                let cout = get_net(&mut nl, &mut nets, pin("cout")?);
+                // Chain reconstruction: a bit whose cin is driven by an
+                // existing bit's cout joins that chain; otherwise new chain.
+                let (chain, pos) = match nl.nets[cin as usize].driver {
+                    Some((c, 1)) if matches!(nl.cells[c as usize].kind,
+                                             CellKind::AdderBit { .. }) => {
+                        match nl.cells[c as usize].kind {
+                            CellKind::AdderBit { chain, pos } => (chain, pos + 1),
+                            _ => unreachable!(),
+                        }
+                    }
+                    _ => {
+                        let ch = chains_next;
+                        chains_next += 1;
+                        (ch, 0)
+                    }
+                };
+                nl.add_cell(CellKind::AdderBit { chain, pos },
+                            format!("fa_{chain}_{pos}"),
+                            vec![a, b, cin], vec![sum, cout]);
+                i += 1;
+            }
+            Some(".end") => break,
+            Some(other) => bail!("unsupported directive {other}"),
+            None => {
+                i += 1;
+            }
+        }
+    }
+    for name in pending_outputs {
+        let n = get_net(&mut nl, &mut nets, &name);
+        nl.add_cell(CellKind::Output, format!("out_{name}"), vec![n], vec![]);
+    }
+    nl.num_chains = chains_next;
+    Ok(nl)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::CellKind;
+
+    fn sample() -> Netlist {
+        let mut nl = Netlist::new("samp");
+        let a = nl.add_input("a");
+        let b = nl.add_input("b");
+        let c = nl.add_input("c");
+        let y = nl.add_net("y");
+        nl.add_cell(CellKind::Lut { k: 3, truth: 0b1110_1000 }, "maj",
+                    vec![a, b, c], vec![y]);
+        let gnd = nl.add_net("gnd");
+        nl.add_cell(CellKind::Const(false), "gnd", vec![], vec![gnd]);
+        let s0 = nl.add_net("s0");
+        let c0 = nl.add_net("c0");
+        let s1 = nl.add_net("s1");
+        let c1 = nl.add_net("c1");
+        nl.add_cell(CellKind::AdderBit { chain: 0, pos: 0 }, "fa0",
+                    vec![a, b, gnd], vec![s0, c0]);
+        nl.add_cell(CellKind::AdderBit { chain: 0, pos: 1 }, "fa1",
+                    vec![c, y, c0], vec![s1, c1]);
+        nl.num_chains = 1;
+        nl.add_output("o0", s0);
+        nl.add_output("o1", s1);
+        nl
+    }
+
+    #[test]
+    fn round_trip_preserves_structure() {
+        let nl = sample();
+        let text = write_blif(&nl);
+        let back = read_blif(&text).unwrap();
+        assert!(back.check().is_empty(), "{:?}", back.check());
+        assert_eq!(back.num_luts(), nl.num_luts());
+        assert_eq!(back.num_adders(), nl.num_adders());
+        assert_eq!(back.inputs.len(), nl.inputs.len());
+        assert_eq!(back.outputs.len(), nl.outputs.len());
+        assert_eq!(back.num_chains, 1);
+        // Chain order reconstructed.
+        let chain = back.chain_cells(0);
+        assert_eq!(chain.len(), 2);
+    }
+
+    #[test]
+    fn truth_table_round_trip() {
+        let nl = sample();
+        let back = read_blif(&write_blif(&nl)).unwrap();
+        let lut = back.cells.iter().find(|c| matches!(c.kind, CellKind::Lut { .. })).unwrap();
+        match lut.kind {
+            CellKind::Lut { k, truth } => {
+                assert_eq!(k, 3);
+                assert_eq!(truth, 0b1110_1000);
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn dont_care_expansion() {
+        let text = "\
+.model t
+.inputs a b
+.outputs y
+.names a b y
+-1 1
+.end
+";
+        let nl = read_blif(text).unwrap();
+        let lut = nl.cells.iter().find(|c| matches!(c.kind, CellKind::Lut { .. })).unwrap();
+        match lut.kind {
+            // b & (a | !a) = b -> rows 10 (2) and 11 (3) set.
+            CellKind::Lut { truth, .. } => assert_eq!(truth, 0b1100),
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn rejects_unknown_directive() {
+        assert!(read_blif(".model x\n.gate foo\n.end\n").is_err());
+    }
+
+    #[test]
+    fn const_cells() {
+        let text = ".model t\n.inputs\n.outputs y\n.names y\n1\n.end\n";
+        let nl = read_blif(text).unwrap();
+        assert!(nl.cells.iter().any(|c| matches!(c.kind, CellKind::Const(true))));
+    }
+}

@@ -1,0 +1,308 @@
+//! Technology-mapped netlist IR.
+//!
+//! This is the interchange format between technology mapping
+//! ([`crate::techmap`]) and the physical flow ([`crate::pack`],
+//! [`crate::place`], [`crate::route`], [`crate::timing`]).  Cells are LUTs,
+//! adder bits (1-bit full adders linked into carry chains), flip-flops, and
+//! I/Os; nets record their driver and sinks.  A BLIF-subset reader/writer
+//! ([`blif`]) provides external interchange.
+
+pub mod blif;
+pub mod stats;
+
+use std::collections::HashMap;
+
+pub use stats::NetlistStats;
+
+/// Index of a [`Cell`] in [`Netlist::cells`].
+pub type CellId = u32;
+/// Index of a [`Net`] in [`Netlist::nets`].
+pub type NetId = u32;
+
+/// Sentinel for "no net".
+pub const NO_NET: NetId = u32::MAX;
+
+/// Kind of a mapped cell.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CellKind {
+    /// Primary input; drives `outs[0]`.
+    Input,
+    /// Primary output; consumes `ins[0]`.
+    Output,
+    /// K-input LUT. `truth` holds the function over `ins` (LSB-first,
+    /// `ins[0]` is bit 0 of the row index). Up to K = 6.
+    Lut { k: u8, truth: u64 },
+    /// One bit of a carry chain: `ins = [a, b, cin]`, `outs = [sum, cout]`.
+    /// `chain` identifies the chain; `pos` the bit position within it.
+    AdderBit { chain: u32, pos: u32 },
+    /// D flip-flop: `ins = [d]`, `outs = [q]`.
+    Ff,
+    /// Constant driver of `outs[0]`.
+    Const(bool),
+}
+
+/// One mapped cell.
+#[derive(Clone, Debug)]
+pub struct Cell {
+    pub kind: CellKind,
+    pub name: String,
+    pub ins: Vec<NetId>,
+    pub outs: Vec<NetId>,
+}
+
+/// One net: a driver pin and fanout sinks.
+#[derive(Clone, Debug, Default)]
+pub struct Net {
+    pub name: String,
+    /// Driving (cell, output-pin index); `None` for floating nets.
+    pub driver: Option<(CellId, u8)>,
+    /// Sink (cell, input-pin index) pairs.
+    pub sinks: Vec<(CellId, u8)>,
+}
+
+/// A mapped design.
+#[derive(Clone, Debug, Default)]
+pub struct Netlist {
+    pub name: String,
+    pub cells: Vec<Cell>,
+    pub nets: Vec<Net>,
+    pub inputs: Vec<CellId>,
+    pub outputs: Vec<CellId>,
+    /// Number of distinct carry chains (chain ids are `0..num_chains`).
+    pub num_chains: u32,
+}
+
+impl Netlist {
+    pub fn new(name: &str) -> Self {
+        Netlist { name: name.to_string(), ..Default::default() }
+    }
+
+    /// Create a fresh net with an auto-generated name.
+    pub fn add_net(&mut self, name: impl Into<String>) -> NetId {
+        let id = self.nets.len() as NetId;
+        self.nets.push(Net { name: name.into(), ..Default::default() });
+        id
+    }
+
+    /// Add a cell, wiring up driver/sink bookkeeping on its nets.
+    pub fn add_cell(&mut self, kind: CellKind, name: impl Into<String>,
+                    ins: Vec<NetId>, outs: Vec<NetId>) -> CellId {
+        let id = self.cells.len() as CellId;
+        for (pin, &n) in ins.iter().enumerate() {
+            if n != NO_NET {
+                self.nets[n as usize].sinks.push((id, pin as u8));
+            }
+        }
+        for (pin, &n) in outs.iter().enumerate() {
+            if n != NO_NET {
+                debug_assert!(self.nets[n as usize].driver.is_none(),
+                              "net {} multiply driven", self.nets[n as usize].name);
+                self.nets[n as usize].driver = Some((id, pin as u8));
+            }
+        }
+        match kind {
+            CellKind::Input => self.inputs.push(id),
+            CellKind::Output => self.outputs.push(id),
+            _ => {}
+        }
+        self.cells.push(Cell { kind, name: name.into(), ins, outs });
+        id
+    }
+
+    /// Convenience: add a primary input and return its net.
+    pub fn add_input(&mut self, name: &str) -> NetId {
+        let n = self.add_net(name.to_string());
+        self.add_cell(CellKind::Input, name, vec![], vec![n]);
+        n
+    }
+
+    /// Convenience: add a primary output consuming `net`.
+    pub fn add_output(&mut self, name: &str, net: NetId) -> CellId {
+        self.add_cell(CellKind::Output, name, vec![net], vec![])
+    }
+
+    /// Number of cells of each interesting kind.
+    pub fn count<F: Fn(&CellKind) -> bool>(&self, f: F) -> usize {
+        self.cells.iter().filter(|c| f(&c.kind)).count()
+    }
+
+    pub fn num_luts(&self) -> usize {
+        self.count(|k| matches!(k, CellKind::Lut { .. }))
+    }
+
+    pub fn num_adders(&self) -> usize {
+        self.count(|k| matches!(k, CellKind::AdderBit { .. }))
+    }
+
+    pub fn num_ffs(&self) -> usize {
+        self.count(|k| matches!(k, CellKind::Ff))
+    }
+
+    /// All cells of a given chain, ordered by `pos`.
+    pub fn chain_cells(&self, chain: u32) -> Vec<CellId> {
+        let mut v: Vec<(u32, CellId)> = self
+            .cells
+            .iter()
+            .enumerate()
+            .filter_map(|(i, c)| match c.kind {
+                CellKind::AdderBit { chain: ch, pos } if ch == chain => {
+                    Some((pos, i as CellId))
+                }
+                _ => None,
+            })
+            .collect();
+        v.sort_unstable();
+        v.into_iter().map(|(_, c)| c).collect()
+    }
+
+    /// Validate structural invariants; returns a list of human-readable
+    /// violations (empty = clean). Used by tests and after every transform.
+    pub fn check(&self) -> Vec<String> {
+        let mut errs = Vec::new();
+        for (i, c) in self.cells.iter().enumerate() {
+            let (want_in, want_out): (usize, usize) = match c.kind {
+                CellKind::Input => (0, 1),
+                CellKind::Output => (1, 0),
+                CellKind::Lut { k, .. } => (k as usize, 1),
+                CellKind::AdderBit { .. } => (3, 2),
+                CellKind::Ff => (1, 1),
+                CellKind::Const(_) => (0, 1),
+            };
+            if c.ins.len() != want_in {
+                errs.push(format!("cell {i} ({}) has {} ins, want {want_in}",
+                                  c.name, c.ins.len()));
+            }
+            if c.outs.len() != want_out {
+                errs.push(format!("cell {i} ({}) has {} outs, want {want_out}",
+                                  c.name, c.outs.len()));
+            }
+            if let CellKind::Lut { k, truth } = c.kind {
+                if k < 6 && k > 0 {
+                    let rows = 1u64 << k;
+                    if rows < 64 && (truth >> rows) != 0 {
+                        errs.push(format!("cell {i} truth table wider than 2^{k}"));
+                    }
+                }
+            }
+        }
+        // Net driver/sink cross-references.
+        for (ni, net) in self.nets.iter().enumerate() {
+            if let Some((c, pin)) = net.driver {
+                let cell = &self.cells[c as usize];
+                if cell.outs.get(pin as usize) != Some(&(ni as NetId)) {
+                    errs.push(format!("net {ni} driver backref broken"));
+                }
+            }
+            for &(c, pin) in &net.sinks {
+                let cell = &self.cells[c as usize];
+                if cell.ins.get(pin as usize) != Some(&(ni as NetId)) {
+                    errs.push(format!("net {ni} sink backref broken"));
+                }
+            }
+        }
+        // Chain continuity: cout(pos) must feed cin(pos+1).
+        for ch in 0..self.num_chains {
+            let cells = self.chain_cells(ch);
+            for w in cells.windows(2) {
+                let cout = self.cells[w[0] as usize].outs[1];
+                let cin = self.cells[w[1] as usize].ins[2];
+                if cout != cin {
+                    errs.push(format!("chain {ch} broken between {} and {}",
+                                      w[0], w[1]));
+                }
+            }
+        }
+        errs
+    }
+
+    /// Map from net name to id (for tests / BLIF round-trips).
+    pub fn net_by_name(&self) -> HashMap<&str, NetId> {
+        self.nets
+            .iter()
+            .enumerate()
+            .map(|(i, n)| (n.name.as_str(), i as NetId))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a tiny netlist: 2 inputs -> LUT(AND) -> output.
+    fn tiny() -> Netlist {
+        let mut nl = Netlist::new("tiny");
+        let a = nl.add_input("a");
+        let b = nl.add_input("b");
+        let y = nl.add_net("y");
+        nl.add_cell(CellKind::Lut { k: 2, truth: 0b1000 }, "and", vec![a, b], vec![y]);
+        nl.add_output("out_y", y);
+        nl
+    }
+
+    #[test]
+    fn build_and_check() {
+        let nl = tiny();
+        assert_eq!(nl.num_luts(), 1);
+        assert_eq!(nl.inputs.len(), 2);
+        assert_eq!(nl.outputs.len(), 1);
+        assert!(nl.check().is_empty(), "{:?}", nl.check());
+    }
+
+    #[test]
+    fn net_backrefs() {
+        let nl = tiny();
+        let y = nl.net_by_name()["y"];
+        let net = &nl.nets[y as usize];
+        assert!(net.driver.is_some());
+        assert_eq!(net.sinks.len(), 1);
+    }
+
+    #[test]
+    fn chain_cells_ordered() {
+        let mut nl = Netlist::new("chain");
+        let a0 = nl.add_input("a0");
+        let b0 = nl.add_input("b0");
+        let a1 = nl.add_input("a1");
+        let b1 = nl.add_input("b1");
+        let cin = nl.add_net("cin0");
+        nl.add_cell(CellKind::Const(false), "gnd", vec![], vec![cin]);
+        let s0 = nl.add_net("s0");
+        let c0 = nl.add_net("c0");
+        let s1 = nl.add_net("s1");
+        let c1 = nl.add_net("c1");
+        // Deliberately add bit 1 first to exercise ordering.
+        nl.add_cell(CellKind::AdderBit { chain: 0, pos: 1 }, "fa1",
+                    vec![a1, b1, c0], vec![s1, c1]);
+        nl.add_cell(CellKind::AdderBit { chain: 0, pos: 0 }, "fa0",
+                    vec![a0, b0, cin], vec![s0, c0]);
+        nl.num_chains = 1;
+        nl.add_output("o0", s0);
+        nl.add_output("o1", s1);
+        let cells = nl.chain_cells(0);
+        assert_eq!(cells.len(), 2);
+        assert!(matches!(nl.cells[cells[0] as usize].kind,
+                         CellKind::AdderBit { pos: 0, .. }));
+        assert!(nl.check().is_empty(), "{:?}", nl.check());
+    }
+
+    #[test]
+    fn check_catches_broken_chain() {
+        let mut nl = Netlist::new("bad");
+        let a = nl.add_input("a");
+        let b = nl.add_input("b");
+        let g = nl.add_net("gnd");
+        nl.add_cell(CellKind::Const(false), "gnd", vec![], vec![g]);
+        let s0 = nl.add_net("s0");
+        let c0 = nl.add_net("c0");
+        let s1 = nl.add_net("s1");
+        let c1 = nl.add_net("c1");
+        nl.add_cell(CellKind::AdderBit { chain: 0, pos: 0 }, "fa0",
+                    vec![a, b, g], vec![s0, c0]);
+        // Bit 1 takes gnd instead of c0 -> broken chain.
+        nl.add_cell(CellKind::AdderBit { chain: 0, pos: 1 }, "fa1",
+                    vec![a, b, g], vec![s1, c1]);
+        nl.num_chains = 1;
+        assert!(!nl.check().is_empty());
+    }
+}

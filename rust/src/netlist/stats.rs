@@ -1,0 +1,78 @@
+//! Netlist statistics: the per-circuit numbers Table III reports.
+
+use super::{CellKind, Netlist};
+
+/// Summary statistics of a mapped netlist.
+#[derive(Clone, Debug, Default)]
+pub struct NetlistStats {
+    pub luts: usize,
+    pub adders: usize,
+    pub ffs: usize,
+    pub ios: usize,
+    pub nets: usize,
+    pub chains: usize,
+    /// Length of the longest carry chain in bits.
+    pub max_chain_len: usize,
+    /// Fraction of logic cells (LUTs + adder bits) that are adder bits —
+    /// the "Adder Percent" column of Table III.
+    pub adder_fraction: f64,
+}
+
+impl NetlistStats {
+    pub fn of(nl: &Netlist) -> Self {
+        let luts = nl.num_luts();
+        let adders = nl.num_adders();
+        let ffs = nl.num_ffs();
+        let ios = nl.inputs.len() + nl.outputs.len();
+        let mut max_chain_len = 0usize;
+        for ch in 0..nl.num_chains {
+            let len = nl
+                .cells
+                .iter()
+                .filter(|c| matches!(c.kind, CellKind::AdderBit { chain, .. } if chain == ch))
+                .count();
+            max_chain_len = max_chain_len.max(len);
+        }
+        let logic = luts + adders;
+        NetlistStats {
+            luts,
+            adders,
+            ffs,
+            ios,
+            nets: nl.nets.len(),
+            chains: nl.num_chains as usize,
+            max_chain_len,
+            adder_fraction: if logic == 0 { 0.0 } else { adders as f64 / logic as f64 },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::CellKind;
+
+    #[test]
+    fn stats_count_kinds() {
+        let mut nl = Netlist::new("s");
+        let a = nl.add_input("a");
+        let b = nl.add_input("b");
+        let y = nl.add_net("y");
+        nl.add_cell(CellKind::Lut { k: 2, truth: 0b0110 }, "xor", vec![a, b], vec![y]);
+        let g = nl.add_net("g");
+        nl.add_cell(CellKind::Const(false), "gnd", vec![], vec![g]);
+        let s = nl.add_net("s");
+        let c = nl.add_net("c");
+        nl.add_cell(CellKind::AdderBit { chain: 0, pos: 0 }, "fa",
+                    vec![a, b, g], vec![s, c]);
+        nl.num_chains = 1;
+        nl.add_output("o", y);
+        let st = NetlistStats::of(&nl);
+        assert_eq!(st.luts, 1);
+        assert_eq!(st.adders, 1);
+        assert_eq!(st.ios, 3);
+        assert_eq!(st.chains, 1);
+        assert_eq!(st.max_chain_len, 1);
+        assert!((st.adder_fraction - 0.5).abs() < 1e-12);
+    }
+}

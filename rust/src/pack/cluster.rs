@@ -1,0 +1,291 @@
+//! Logic-block clustering: greedy seed-based ALM grouping under the LB
+//! external-input budget, with carry-chain macro handling.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::arch::Arch;
+use crate::netlist::{Netlist, NetId};
+
+use super::{PackOpts, PackedAlm, Unrelated};
+
+/// One packed logic block.
+#[derive(Clone, Debug, Default)]
+pub struct PackedLb {
+    /// Member ALM indices (into `Packing::alms`), <= 10.
+    pub alms: Vec<usize>,
+    /// Distinct nets entering the LB from outside.
+    pub inputs: HashSet<NetId>,
+    /// Nets driven inside the LB that have outside sinks.
+    pub outputs: HashSet<NetId>,
+    /// Chain ids passing through this LB.
+    pub chains: Vec<u32>,
+}
+
+/// Cluster ALMs into logic blocks. Returns the LBs and, per chain, the
+/// ordered LB indices it spans (the placement macro).
+pub fn cluster_lbs(
+    nl: &Netlist,
+    arch: &Arch,
+    alms: &[PackedAlm],
+    chain_alms: &[Vec<usize>],
+    opts: &PackOpts,
+) -> (Vec<PackedLb>, Vec<Vec<usize>>) {
+    let cap = arch.lb.alms as usize;
+    let pin_budget =
+        (arch.lb.inputs as f64 * arch.lb.target_ext_pin_util).floor() as usize;
+
+    // Which nets are driven by which ALM (to distinguish feedback from
+    // external inputs).
+    let mut net_driver_alm: HashMap<NetId, usize> = HashMap::new();
+    for (ai, alm) in alms.iter().enumerate() {
+        for &net in &alm.outputs {
+            net_driver_alm.insert(net, ai);
+        }
+    }
+    // Attraction index: net -> ALMs consuming it.
+    let mut net_consumers: HashMap<NetId, Vec<usize>> = HashMap::new();
+    for (ai, alm) in alms.iter().enumerate() {
+        for &net in alm.gen_inputs.iter().chain(alm.z_inputs.iter()) {
+            net_consumers.entry(net).or_default().push(ai);
+        }
+    }
+
+    let alm_nets = |ai: usize| -> Vec<NetId> {
+        alms[ai]
+            .gen_inputs
+            .iter()
+            .chain(alms[ai].z_inputs.iter())
+            .chain(alms[ai].outputs.iter())
+            .copied()
+            .collect()
+    };
+
+    // External inputs an LB would have after adding `ai`.
+    let inputs_with = |lb: &PackedLb, members: &HashSet<usize>, ai: usize| -> usize {
+        let mut inputs = lb.inputs.clone();
+        // Adding ai may turn some existing inputs into feedback.
+        for &net in &alms[ai].outputs {
+            inputs.remove(&net);
+        }
+        for &net in alms[ai].gen_inputs.iter().chain(alms[ai].z_inputs.iter()) {
+            let internal = net_driver_alm
+                .get(&net)
+                .map(|d| members.contains(d) || *d == ai)
+                .unwrap_or(false);
+            if !internal {
+                inputs.insert(net);
+            }
+        }
+        inputs.len()
+    };
+
+    let mut assigned = vec![false; alms.len()];
+    let mut lbs: Vec<PackedLb> = Vec::new();
+    let mut alm_lb: Vec<usize> = vec![usize::MAX; alms.len()];
+
+    let mut add_alm = |lb: &mut PackedLb, members: &mut HashSet<usize>, ai: usize,
+                       assigned: &mut Vec<bool>, alm_lb: &mut Vec<usize>, lb_idx: usize| {
+        lb.alms.push(ai);
+        members.insert(ai);
+        assigned[ai] = true;
+        alm_lb[ai] = lb_idx;
+        if let Some(ch) = alms[ai].chain {
+            if !lb.chains.contains(&ch) {
+                lb.chains.push(ch);
+            }
+        }
+        // Recompute inputs/outputs incrementally.
+        for &net in &alms[ai].outputs {
+            lb.inputs.remove(&net);
+            lb.outputs.insert(net);
+        }
+        for &net in alms[ai].gen_inputs.iter().chain(alms[ai].z_inputs.iter()) {
+            let internal = net_driver_alm
+                .get(&net)
+                .map(|d| members.contains(d))
+                .unwrap_or(false);
+            if !internal {
+                lb.inputs.insert(net);
+            }
+        }
+    };
+
+    // --- Chain ALM runs first: they are placement macros. ------------------
+    let mut chain_macros: Vec<Vec<usize>> = vec![Vec::new(); chain_alms.len()];
+    for (ch, alms_of_chain) in chain_alms.iter().enumerate() {
+        for seg in alms_of_chain.chunks(cap) {
+            let lb_idx = lbs.len();
+            let mut lb = PackedLb::default();
+            let mut members: HashSet<usize> = HashSet::new();
+            for &ai in seg {
+                // Chain segments ignore the pin budget check: carry chains
+                // are pin-light and must stay contiguous (VPR does the same
+                // for carry macros).
+                add_alm(&mut lb, &mut members, ai, &mut assigned, &mut alm_lb, lb_idx);
+            }
+            chain_macros[ch].push(lb_idx);
+            lbs.push(lb);
+        }
+    }
+
+    // --- Fill chain LBs and build the rest greedily. -----------------------
+    // Candidate queue: unassigned ALMs, highest connectivity first.
+    let mut queue: Vec<usize> = (0..alms.len()).filter(|&i| !assigned[i]).collect();
+    queue.sort_by_key(|&i| std::cmp::Reverse(alms[i].gen_inputs.len() + alms[i].outputs.len()));
+
+    // Helper: grow one LB to capacity by attraction.
+    let grow = |lb_idx: usize,
+                lbs: &mut Vec<PackedLb>,
+                assigned: &mut Vec<bool>,
+                alm_lb: &mut Vec<usize>| {
+        let mut members: HashSet<usize> = lbs[lb_idx].alms.iter().copied().collect();
+        while lbs[lb_idx].alms.len() < cap {
+            // Attracted candidates: consumers/drivers of nets in the LB.
+            let mut best: Option<(usize, usize)> = None; // (score, ai)
+            let mut nets: Vec<NetId> = lbs[lb_idx]
+                .inputs
+                .iter()
+                .chain(lbs[lb_idx].outputs.iter())
+                .copied()
+                .collect();
+            nets.sort_unstable(); // deterministic scan order
+            let mut scan = |ai: usize, best: &mut Option<(usize, usize)>| {
+                if assigned[ai] || alms[ai].chain.is_some() {
+                    return;
+                }
+                let shared = alm_nets(ai)
+                    .iter()
+                    .filter(|n| lbs[lb_idx].inputs.contains(n) || lbs[lb_idx].outputs.contains(n))
+                    .count();
+                if shared == 0 {
+                    return;
+                }
+                if inputs_with(&lbs[lb_idx], &members, ai) <= pin_budget
+                    && best.map_or(true, |(s, _)| shared > s)
+                {
+                    *best = Some((shared, ai));
+                }
+            };
+            for &net in &nets {
+                if let Some(cs) = net_consumers.get(&net) {
+                    for &ai in cs {
+                        scan(ai, &mut best);
+                    }
+                }
+                if let Some(&d) = net_driver_alm.get(&net) {
+                    scan(d, &mut best);
+                }
+            }
+            let Some((_, ai)) = best else { break };
+            let mut lb = std::mem::take(&mut lbs[lb_idx]);
+            add_alm(&mut lb, &mut members, ai, assigned, alm_lb, lb_idx);
+            lbs[lb_idx] = lb;
+        }
+    };
+
+    // Fill chain LBs that still have room.
+    for lb_idx in 0..lbs.len() {
+        grow(lb_idx, &mut lbs, &mut assigned, &mut alm_lb);
+    }
+
+    // New LBs from remaining ALMs.
+    for qi in 0..queue.len() {
+        let seed = queue[qi];
+        if assigned[seed] {
+            continue;
+        }
+        let lb_idx = lbs.len();
+        let mut lb = PackedLb::default();
+        let mut members: HashSet<usize> = HashSet::new();
+        add_alm(&mut lb, &mut members, seed, &mut assigned, &mut alm_lb, lb_idx);
+        lbs.push(lb);
+        grow(lb_idx, &mut lbs, &mut assigned, &mut alm_lb);
+        // Unrelated fill if allowed: top up with arbitrary ALMs.
+        if opts.unrelated != Unrelated::Off {
+            let mut members: HashSet<usize> = lbs[lb_idx].alms.iter().copied().collect();
+            let mut qj = qi + 1;
+            while lbs[lb_idx].alms.len() < cap && qj < queue.len() {
+                let ai = queue[qj];
+                qj += 1;
+                if assigned[ai] || alms[ai].chain.is_some() {
+                    continue;
+                }
+                if inputs_with(&lbs[lb_idx], &members, ai) <= pin_budget {
+                    let mut lb = std::mem::take(&mut lbs[lb_idx]);
+                    add_alm(&mut lb, &mut members, ai, &mut assigned, &mut alm_lb, lb_idx);
+                    lbs[lb_idx] = lb;
+                    // In Auto mode stop at one unrelated top-up per LB pass
+                    // to avoid destroying locality; On packs to the brim.
+                    if opts.unrelated == Unrelated::Auto {
+                        break;
+                    }
+                }
+            }
+        }
+    }
+
+    (lbs, chain_macros)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::ArchVariant;
+    use crate::pack::{pack, PackOpts};
+    use crate::synth::circuit::Circuit;
+    use crate::synth::multiplier::{soft_mul, AdderAlgo};
+    use crate::techmap::{map_circuit, MapOpts};
+
+    fn packed(w: usize, v: ArchVariant) -> crate::pack::Packing {
+        let mut c = Circuit::new("m");
+        let x = c.pi_bus("x", w);
+        let y = c.pi_bus("y", w);
+        let p = soft_mul(&mut c, &x, &y, AdderAlgo::Dadda);
+        c.po_bus("p", &p);
+        let nl = map_circuit(&c, &MapOpts::default());
+        pack(&nl, &Arch::paper(v), &PackOpts::default())
+    }
+
+    #[test]
+    fn lbs_hold_at_most_ten_alms() {
+        let p = packed(8, ArchVariant::Baseline);
+        for lb in &p.lbs {
+            assert!(lb.alms.len() <= 10);
+        }
+    }
+
+    #[test]
+    fn every_alm_in_exactly_one_lb() {
+        let p = packed(8, ArchVariant::Dd5);
+        let mut seen = vec![false; p.alms.len()];
+        for lb in &p.lbs {
+            for &ai in &lb.alms {
+                assert!(!seen[ai], "ALM {ai} in two LBs");
+                seen[ai] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn chain_macros_cover_all_chain_alms() {
+        let p = packed(8, ArchVariant::Baseline);
+        for (ch, lbs) in p.chain_macros.iter().enumerate() {
+            // Each macro LB must actually contain the chain.
+            for &lb in lbs {
+                assert!(p.lbs[lb].chains.contains(&(ch as u32)));
+            }
+        }
+    }
+
+    #[test]
+    fn feedback_nets_not_counted_as_inputs() {
+        let p = packed(6, ArchVariant::Baseline);
+        for lb in &p.lbs {
+            for net in &lb.inputs {
+                assert!(!lb.outputs.contains(net),
+                        "net counted both input and output of one LB");
+            }
+        }
+    }
+}

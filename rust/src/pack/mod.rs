@@ -1,0 +1,633 @@
+//! ALM / logic-block packing — where the Double-Duty legality lives.
+//!
+//! The packer turns a mapped netlist into ALM instances and clusters them
+//! into logic blocks, enforcing the per-variant legality rules from §III:
+//!
+//! * **Baseline**: every adder operand enters through one of the ALM's
+//!   4-LUTs — either *absorbing* a fanout-1 (<=4 input) driver LUT or
+//!   burning a LUT as a route-through.  An ALM using its adders therefore
+//!   exposes no independent LUT outputs.
+//! * **DD5**: operands may bypass the LUTs through the Z1–Z4 inputs, so an
+//!   ALM half whose operands both arrive via Z can host an independent
+//!   <=5-input LUT on O2/O4 — the *concurrent* usage the paper enables.
+//! * **DD6**: additionally, a 6-LUT (both halves) may be used concurrently
+//!   with both adders when all four operands arrive via Z.
+//!
+//! The LB stage mirrors VPR's greedy seed-based clustering with an external
+//! input-pin budget (`target_ext_pin_util` x 60) and carry-chain macros
+//! that must occupy consecutive ALM slots (and consecutive LBs when a
+//! chain spans blocks).
+
+pub mod cluster;
+
+use std::collections::{HashMap, HashSet};
+
+use crate::arch::{Arch, ArchVariant};
+use crate::netlist::{CellId, CellKind, Netlist, NetId};
+
+pub use cluster::{cluster_lbs, PackedLb};
+
+/// Unrelated-clustering policy (VPR's `--allow_unrelated_clustering`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Unrelated {
+    /// Never pack unconnected cells together.
+    Off,
+    /// Allow when attraction finds nothing (VPR "auto"; our default).
+    Auto,
+    /// Aggressively pack for density, ignoring timing (Fig. 9 stress test).
+    On,
+}
+
+/// Packer options.
+#[derive(Clone, Copy, Debug)]
+pub struct PackOpts {
+    pub unrelated: Unrelated,
+}
+
+impl Default for PackOpts {
+    fn default() -> Self {
+        PackOpts { unrelated: Unrelated::Auto }
+    }
+}
+
+/// How an adder operand reaches the adder.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OperandPath {
+    /// Constant operand (tied off inside the ALM).
+    Const,
+    /// Absorbed driver LUT (the LUT cell lives inside this ALM).
+    AbsorbedLut(CellId),
+    /// Route-through LUT (burns a LUT unit; baseline only).
+    RouteThrough,
+    /// Z-input bypass (DD variants only).
+    ZBypass,
+}
+
+/// One packed ALM instance.
+#[derive(Clone, Debug, Default)]
+pub struct PackedAlm {
+    /// Adder-bit cells hosted (0..=2, consecutive positions of one chain).
+    pub adder_bits: Vec<CellId>,
+    /// Operand entry paths, two per adder bit ([a, b] each).
+    pub operand_paths: Vec<[OperandPath; 2]>,
+    /// Independent logic LUTs (<=2 on DD5 halves, or one 6-LUT on DD6).
+    pub logic_luts: Vec<CellId>,
+    /// FF cells packed with this ALM.
+    pub ffs: Vec<CellId>,
+    /// Distinct general-input nets (A–H budget: 8).
+    pub gen_inputs: HashSet<NetId>,
+    /// Distinct Z-input nets (budget: 4; DD only).
+    pub z_inputs: HashSet<NetId>,
+    /// Nets driven by this ALM that leave it.
+    pub outputs: HashSet<NetId>,
+    /// Chain id if this ALM hosts adder bits.
+    pub chain: Option<u32>,
+}
+
+impl PackedAlm {
+    /// LUT units consumed (of 4): absorbed feeders + route-throughs + logic.
+    pub fn lut_units(&self) -> usize {
+        let feeders = self
+            .operand_paths
+            .iter()
+            .flatten()
+            .filter(|p| matches!(p, OperandPath::AbsorbedLut(_) | OperandPath::RouteThrough))
+            .count();
+        let logic: usize = self.logic_luts.len() * 2; // a logic LUT uses one half
+        feeders + logic
+    }
+
+    /// Which halves are free to host an independent logic LUT.
+    /// Half `i` hosts adder bit `i`'s feeders; it is free iff it has no
+    /// adder bit or its operands all bypass via Z/const.
+    pub fn free_halves(&self) -> usize {
+        let mut free = 0;
+        for h in 0..2 {
+            let busy = match self.operand_paths.get(h) {
+                Some(paths) => paths.iter().any(|p| {
+                    matches!(p, OperandPath::AbsorbedLut(_) | OperandPath::RouteThrough)
+                }),
+                None => self.adder_bits.len() > h && false,
+            };
+            // A half with no adder bit at all is also free.
+            if !busy {
+                free += 1;
+            }
+        }
+        free - self.logic_luts.len().min(free)
+    }
+
+    pub fn uses_adders(&self) -> bool {
+        !self.adder_bits.is_empty()
+    }
+}
+
+/// Packing statistics (the numbers Figs. 6/9 and Table IV report).
+#[derive(Clone, Debug, Default)]
+pub struct PackStats {
+    pub alms: usize,
+    pub lbs: usize,
+    pub adder_bits: usize,
+    pub luts: usize,
+    /// LUTs absorbed as adder feeders.
+    pub absorbed_luts: usize,
+    /// Independent LUTs packed into adder-using ALMs (impossible on
+    /// baseline) — the paper's "Concurrent 5-LUTs".
+    pub concurrent_luts: usize,
+    pub ffs: usize,
+    pub ios: usize,
+}
+
+/// A fully packed design.
+#[derive(Clone, Debug)]
+pub struct Packing {
+    pub variant: ArchVariant,
+    pub alms: Vec<PackedAlm>,
+    pub lbs: Vec<PackedLb>,
+    /// Per chain: ordered list of LB indices it spans (placement macro).
+    pub chain_macros: Vec<Vec<usize>>,
+    /// I/O cells (Input/Output cells of the netlist), each its own pad.
+    pub ios: Vec<CellId>,
+    pub stats: PackStats,
+}
+
+/// Entry point: pack `nl` for `arch`.
+pub fn pack(nl: &Netlist, arch: &Arch, opts: &PackOpts) -> Packing {
+    let dd = arch.variant.concurrent_lut5();
+
+    // --- Identify absorbable feeder LUTs. --------------------------------
+    // A LUT can be absorbed into an adder ALM when it has <= 4 inputs and
+    // its only sink is that single adder operand.
+    let mut absorbed: HashMap<CellId, CellId> = HashMap::new(); // lut -> adder bit
+    let absorbable = |net: NetId| -> Option<CellId> {
+        let netref = &nl.nets[net as usize];
+        let (drv, _) = netref.driver?;
+        if netref.sinks.len() != 1 {
+            return None;
+        }
+        match nl.cells[drv as usize].kind {
+            CellKind::Lut { k, .. } if k <= 4 => Some(drv),
+            _ => None,
+        }
+    };
+
+    // --- Build adder ALMs from chains. -----------------------------------
+    let mut alms: Vec<PackedAlm> = Vec::new();
+    let mut cell_alm: HashMap<CellId, usize> = HashMap::new();
+    // Per chain: list of ALM indices in chain order.
+    let mut chain_alms: Vec<Vec<usize>> = vec![Vec::new(); nl.num_chains as usize];
+
+    for chain in 0..nl.num_chains {
+        let bits = nl.chain_cells(chain);
+        for pair in bits.chunks(2) {
+            let mut alm = PackedAlm { chain: Some(chain), ..Default::default() };
+            let alm_idx = alms.len();
+            for &bit in pair {
+                alm.adder_bits.push(bit);
+                cell_alm.insert(bit, alm_idx);
+                let cell = &nl.cells[bit as usize];
+                let mut paths = [OperandPath::Const, OperandPath::Const];
+                for (oi, &net) in cell.ins.iter().take(2).enumerate() {
+                    let driver_kind = nl.nets[net as usize]
+                        .driver
+                        .map(|(c, _)| &nl.cells[c as usize].kind);
+                    if matches!(driver_kind, Some(CellKind::Const(_))) {
+                        paths[oi] = OperandPath::Const;
+                        continue;
+                    }
+                    if let Some(lut) = absorbable(net) {
+                        // Absorb the driver LUT into this ALM.
+                        paths[oi] = OperandPath::AbsorbedLut(lut);
+                        absorbed.insert(lut, bit);
+                        cell_alm.insert(lut, alm_idx);
+                        for &inet in &nl.cells[lut as usize].ins {
+                            alm.gen_inputs.insert(inet);
+                        }
+                    } else if dd {
+                        paths[oi] = OperandPath::ZBypass;
+                        alm.z_inputs.insert(net);
+                    } else {
+                        paths[oi] = OperandPath::RouteThrough;
+                        alm.gen_inputs.insert(net);
+                    }
+                }
+                alm.operand_paths.push(paths);
+                // Sum output leaves the ALM if it has external sinks.
+                let sum = cell.outs[0];
+                if !nl.nets[sum as usize].sinks.is_empty() {
+                    alm.outputs.insert(sum);
+                }
+            }
+            // Enforce the 8-general-input budget: spill absorbed feeders
+            // (largest first) back to the LUT pool as route-through/Z.
+            while alm.gen_inputs.len() > 8 {
+                let spill = alm
+                    .operand_paths
+                    .iter()
+                    .flatten()
+                    .filter_map(|p| match p {
+                        OperandPath::AbsorbedLut(l) => Some(*l),
+                        _ => None,
+                    })
+                    .max_by_key(|&l| nl.cells[l as usize].ins.len());
+                let Some(lut) = spill else { break };
+                absorbed.remove(&lut);
+                cell_alm.remove(&lut);
+                // Recompute this ALM's operand paths and inputs.
+                alm.gen_inputs.clear();
+                alm.z_inputs.clear();
+                for (bi, &bit) in alm.adder_bits.iter().enumerate() {
+                    let cell = &nl.cells[bit as usize];
+                    for (oi, &net) in cell.ins.iter().take(2).enumerate() {
+                        match alm.operand_paths[bi][oi] {
+                            OperandPath::AbsorbedLut(l) if l == lut => {
+                                alm.operand_paths[bi][oi] = if dd {
+                                    alm.z_inputs.insert(net);
+                                    OperandPath::ZBypass
+                                } else {
+                                    alm.gen_inputs.insert(net);
+                                    OperandPath::RouteThrough
+                                };
+                            }
+                            OperandPath::AbsorbedLut(l) => {
+                                for &inet in &nl.cells[l as usize].ins {
+                                    alm.gen_inputs.insert(inet);
+                                }
+                            }
+                            OperandPath::RouteThrough => {
+                                alm.gen_inputs.insert(net);
+                            }
+                            OperandPath::ZBypass => {
+                                alm.z_inputs.insert(net);
+                            }
+                            OperandPath::Const => {}
+                        }
+                    }
+                }
+            }
+            chain_alms[chain as usize].push(alm_idx);
+            alms.push(alm);
+        }
+    }
+
+    // --- LUT pool: everything not absorbed. -------------------------------
+    let lut_pool: Vec<CellId> = nl
+        .cells
+        .iter()
+        .enumerate()
+        .filter_map(|(i, c)| match c.kind {
+            CellKind::Lut { .. } if !absorbed.contains_key(&(i as CellId)) => {
+                Some(i as CellId)
+            }
+            _ => None,
+        })
+        .collect();
+
+    let lut_k = |cell: CellId| -> u8 {
+        match nl.cells[cell as usize].kind {
+            CellKind::Lut { k, .. } => k,
+            _ => unreachable!(),
+        }
+    };
+
+    // Net -> pool LUT index for attraction lookups.
+    let mut net_users: HashMap<NetId, Vec<CellId>> = HashMap::new();
+    for &lut in &lut_pool {
+        for &net in &nl.cells[lut as usize].ins {
+            net_users.entry(net).or_default().push(lut);
+        }
+    }
+
+    let mut placed: HashSet<CellId> = HashSet::new();
+    let mut concurrent_luts = 0usize;
+
+    // --- DD variants: fill free halves of adder ALMs. ---------------------
+    if dd {
+        let max_k_concurrent = if arch.variant.concurrent_lut6() { 6 } else { 5 };
+        // Chains spanning multiple LBs become placement macros; stuffing
+        // unrelated logic into them stretches that logic's nets across the
+        // macro column and inflates CPD, so unrelated fill is restricted
+        // to single-LB chains (attraction-based fill stays allowed).
+        let chain_len: Vec<usize> = chain_alms.iter().map(|v| v.len()).collect();
+        for alm_idx in 0..alms.len() {
+            if !alms[alm_idx].uses_adders() {
+                continue;
+            }
+            let in_macro = alms[alm_idx]
+                .chain
+                .map(|ch| chain_len[ch as usize] > arch.lb.alms as usize)
+                .unwrap_or(false);
+            loop {
+                let free = alms[alm_idx].free_halves();
+                if free == 0 {
+                    break;
+                }
+                // Gather attracted candidates: LUTs sharing a net with this
+                // ALM's current inputs/outputs.
+                let mut cand: Option<CellId> = None;
+                let mut best_shared = 0usize;
+                let mut nets: Vec<NetId> = alms[alm_idx]
+                    .gen_inputs
+                    .iter()
+                    .chain(alms[alm_idx].z_inputs.iter())
+                    .chain(alms[alm_idx].outputs.iter())
+                    .copied()
+                    .collect();
+                // HashSet iteration order is nondeterministic; sort so the
+                // candidate scan (and its tie-breaks) is reproducible.
+                nets.sort_unstable();
+                for &net in &nets {
+                    if let Some(users) = net_users.get(&net) {
+                        for &lut in users {
+                            if placed.contains(&lut) || absorbed.contains_key(&lut) {
+                                continue;
+                            }
+                            let k = lut_k(lut);
+                            let needs_halves = if k == 6 { 2 } else { 1 };
+                            if k > max_k_concurrent || needs_halves > free {
+                                continue;
+                            }
+                            let ins: HashSet<NetId> = nl.cells[lut as usize]
+                                .ins
+                                .iter()
+                                .copied()
+                                .collect();
+                            let union: HashSet<NetId> = alms[alm_idx]
+                                .gen_inputs
+                                .union(&ins)
+                                .copied()
+                                .collect();
+                            if union.len() > 8 {
+                                continue;
+                            }
+                            let shared = ins
+                                .iter()
+                                .filter(|n| alms[alm_idx].gen_inputs.contains(n))
+                                .count()
+                                + 1;
+                            if shared > best_shared {
+                                best_shared = shared;
+                                cand = Some(lut);
+                            }
+                        }
+                    }
+                }
+                let unrelated_ok = match opts.unrelated {
+                    Unrelated::On => true,
+                    Unrelated::Auto => !in_macro,
+                    Unrelated::Off => false,
+                };
+                if cand.is_none() && unrelated_ok {
+                    // Unrelated fill (VPR's auto behaviour): take any
+                    // fitting LUT — this is what converts DD5's free
+                    // halves into the paper's concurrent-usage density.
+                    cand = lut_pool.iter().copied().find(|&l| {
+                        if placed.contains(&l) || absorbed.contains_key(&l) {
+                            return false;
+                        }
+                        let k = lut_k(l);
+                        let needs = if k == 6 { 2 } else { 1 };
+                        if k > max_k_concurrent || needs > free {
+                            return false;
+                        }
+                        let ins: HashSet<NetId> =
+                            nl.cells[l as usize].ins.iter().copied().collect();
+                        let union: HashSet<NetId> = alms[alm_idx]
+                            .gen_inputs
+                            .union(&ins)
+                            .copied()
+                            .collect();
+                        union.len() <= 8
+                    });
+                }
+                let Some(lut) = cand else { break };
+                placed.insert(lut);
+                cell_alm.insert(lut, alm_idx);
+                for &inet in &nl.cells[lut as usize].ins {
+                    alms[alm_idx].gen_inputs.insert(inet);
+                }
+                alms[alm_idx].outputs.insert(nl.cells[lut as usize].outs[0]);
+                alms[alm_idx].logic_luts.push(lut);
+                concurrent_luts += 1;
+            }
+        }
+    }
+
+    // --- Remaining LUTs: pair into logic ALMs. ----------------------------
+    let mut remaining: Vec<CellId> = lut_pool
+        .iter()
+        .copied()
+        .filter(|l| !placed.contains(l))
+        .collect();
+    // Pair by shared inputs: sort by (first input net, k) so related LUTs
+    // are adjacent, then greedily pair.
+    remaining.sort_by_key(|&l| {
+        let c = &nl.cells[l as usize];
+        (c.ins.first().copied().unwrap_or(0), std::cmp::Reverse(c.ins.len()))
+    });
+    let mut i = 0;
+    while i < remaining.len() {
+        let a = remaining[i];
+        let ka = lut_k(a);
+        let mut alm = PackedAlm::default();
+        let alm_idx = alms.len();
+        for &inet in &nl.cells[a as usize].ins {
+            alm.gen_inputs.insert(inet);
+        }
+        alm.outputs.insert(nl.cells[a as usize].outs[0]);
+        alm.logic_luts.push(a);
+        cell_alm.insert(a, alm_idx);
+        i += 1;
+        if ka <= 5 {
+            // Try to add a second <=5-LUT within the 8-input budget.
+            let mut j = i;
+            let limit = (i + 24).min(remaining.len()); // bounded lookahead
+            while j < limit {
+                let b = remaining[j];
+                if lut_k(b) <= 5 {
+                    let ins_b: HashSet<NetId> =
+                        nl.cells[b as usize].ins.iter().copied().collect();
+                    let union: HashSet<NetId> =
+                        alm.gen_inputs.union(&ins_b).copied().collect();
+                    let ok_unrelated = opts.unrelated != Unrelated::Off
+                        || ins_b.iter().any(|n| alm.gen_inputs.contains(n));
+                    if union.len() <= 8 && ok_unrelated {
+                        alm.gen_inputs = union;
+                        alm.outputs.insert(nl.cells[b as usize].outs[0]);
+                        alm.logic_luts.push(b);
+                        cell_alm.insert(b, alm_idx);
+                        remaining.remove(j);
+                        break;
+                    }
+                }
+                j += 1;
+            }
+        }
+        alms.push(alm);
+    }
+
+    // --- FFs: pack with the ALM driving d when possible. -------------------
+    let mut ff_overflow: Vec<CellId> = Vec::new();
+    for (i, cell) in nl.cells.iter().enumerate() {
+        if !matches!(cell.kind, CellKind::Ff) {
+            continue;
+        }
+        let d_net = cell.ins[0];
+        let host = nl.nets[d_net as usize]
+            .driver
+            .and_then(|(c, _)| cell_alm.get(&c).copied());
+        match host {
+            Some(a) if alms[a].ffs.len() < 4 => {
+                alms[a].ffs.push(i as CellId);
+                alms[a].outputs.insert(cell.outs[0]);
+                cell_alm.insert(i as CellId, a);
+            }
+            _ => ff_overflow.push(i as CellId),
+        }
+    }
+    for group in ff_overflow.chunks(4) {
+        let mut alm = PackedAlm::default();
+        let alm_idx = alms.len();
+        for &ff in group {
+            alm.ffs.push(ff);
+            alm.gen_inputs.insert(nl.cells[ff as usize].ins[0]);
+            alm.outputs.insert(nl.cells[ff as usize].outs[0]);
+            cell_alm.insert(ff, alm_idx);
+        }
+        alms.push(alm);
+    }
+
+    // --- Cluster ALMs into LBs. -------------------------------------------
+    let (lbs, chain_macros) = cluster::cluster_lbs(nl, arch, &alms, &chain_alms, opts);
+
+    // --- I/Os. -------------------------------------------------------------
+    let ios: Vec<CellId> = nl
+        .cells
+        .iter()
+        .enumerate()
+        .filter_map(|(i, c)| {
+            matches!(c.kind, CellKind::Input | CellKind::Output).then_some(i as CellId)
+        })
+        .collect();
+
+    let stats = PackStats {
+        alms: alms.len(),
+        lbs: lbs.len(),
+        adder_bits: nl.num_adders(),
+        luts: nl.num_luts(),
+        absorbed_luts: absorbed.len(),
+        concurrent_luts,
+        ffs: nl.num_ffs(),
+        ios: ios.len(),
+    };
+
+    Packing { variant: arch.variant, alms, lbs, chain_macros, ios, stats }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::synth::circuit::Circuit;
+    use crate::synth::multiplier::{soft_mul, AdderAlgo};
+    use crate::techmap::{map_circuit, MapOpts};
+
+    fn mul_netlist(w: usize) -> Netlist {
+        let mut c = Circuit::new("m");
+        let x = c.pi_bus("x", w);
+        let y = c.pi_bus("y", w);
+        let p = soft_mul(&mut c, &x, &y, AdderAlgo::Wallace);
+        c.po_bus("p", &p);
+        map_circuit(&c, &MapOpts::default())
+    }
+
+    #[test]
+    fn baseline_has_no_concurrent_luts() {
+        let nl = mul_netlist(6);
+        let arch = Arch::paper(ArchVariant::Baseline);
+        let p = pack(&nl, &arch, &PackOpts::default());
+        assert_eq!(p.stats.concurrent_luts, 0);
+        assert!(p.stats.alms > 0);
+        assert!(p.stats.lbs > 0);
+    }
+
+    #[test]
+    fn dd5_packs_concurrent_luts_and_fewer_alms() {
+        let nl = mul_netlist(6);
+        let base = pack(&nl, &Arch::paper(ArchVariant::Baseline), &PackOpts::default());
+        let dd5 = pack(&nl, &Arch::paper(ArchVariant::Dd5), &PackOpts::default());
+        assert!(dd5.stats.alms <= base.stats.alms,
+                "dd5 {} vs base {}", dd5.stats.alms, base.stats.alms);
+    }
+
+    #[test]
+    fn alm_respects_input_budget() {
+        let nl = mul_netlist(8);
+        for v in [ArchVariant::Baseline, ArchVariant::Dd5, ArchVariant::Dd6] {
+            let p = pack(&nl, &Arch::paper(v), &PackOpts::default());
+            for alm in &p.alms {
+                assert!(alm.gen_inputs.len() <= 8,
+                        "{} gen inputs on {v:?}", alm.gen_inputs.len());
+                assert!(alm.z_inputs.len() <= 4);
+                assert!(alm.lut_units() <= 4, "units {}", alm.lut_units());
+                if v == ArchVariant::Baseline {
+                    assert!(alm.z_inputs.is_empty());
+                    if alm.uses_adders() {
+                        assert!(alm.logic_luts.is_empty(),
+                                "baseline adder ALM hosts logic LUTs");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn every_cell_is_packed_exactly_once() {
+        let nl = mul_netlist(6);
+        let p = pack(&nl, &Arch::paper(ArchVariant::Dd5), &PackOpts::default());
+        let mut seen: HashSet<CellId> = HashSet::new();
+        for alm in &p.alms {
+            for &c in alm
+                .adder_bits
+                .iter()
+                .chain(alm.logic_luts.iter())
+                .chain(alm.ffs.iter())
+            {
+                assert!(seen.insert(c), "cell {c} packed twice");
+            }
+            for paths in &alm.operand_paths {
+                for p in paths {
+                    if let OperandPath::AbsorbedLut(l) = p {
+                        assert!(seen.insert(*l), "feeder {l} packed twice");
+                    }
+                }
+            }
+        }
+        let packable = nl
+            .cells
+            .iter()
+            .filter(|c| {
+                matches!(c.kind,
+                         CellKind::Lut { .. } | CellKind::AdderBit { .. } | CellKind::Ff)
+            })
+            .count();
+        assert_eq!(seen.len(), packable);
+    }
+
+    #[test]
+    fn chains_occupy_consecutive_alm_pairs() {
+        let nl = mul_netlist(6);
+        let p = pack(&nl, &Arch::paper(ArchVariant::Baseline), &PackOpts::default());
+        for alm in &p.alms {
+            if alm.adder_bits.len() == 2 {
+                let (c0, p0, c1, p1) = match (&nl.cells[alm.adder_bits[0] as usize].kind,
+                                              &nl.cells[alm.adder_bits[1] as usize].kind) {
+                    (CellKind::AdderBit { chain: c0, pos: p0 },
+                     CellKind::AdderBit { chain: c1, pos: p1 }) => (*c0, *p0, *c1, *p1),
+                    _ => unreachable!(),
+                };
+                assert_eq!(c0, c1);
+                assert_eq!(p1, p0 + 1);
+            }
+        }
+    }
+}

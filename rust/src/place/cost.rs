@@ -1,0 +1,372 @@
+//! Placement cost model: criticality-weighted HPWL with VPR's fanout
+//! correction factor, evaluated incrementally per move.
+
+use std::collections::HashMap;
+
+use crate::arch::device::Loc;
+use crate::netlist::{CellId, CellKind, Netlist, NetId};
+use crate::pack::Packing;
+
+/// A placeable terminal of a net.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Term {
+    Lb(usize),
+    Io(CellId),
+}
+
+/// One external (inter-block) net.
+#[derive(Clone, Debug)]
+pub struct ExtNet {
+    pub net: NetId,
+    pub terms: Vec<Term>,
+    /// Timing weight (1 + criticality amplification).
+    pub weight: f64,
+}
+
+/// VPR's crossing-count correction for multi-terminal nets.
+fn q_factor(n_terms: usize) -> f64 {
+    const Q: [f64; 10] = [1.0, 1.0, 1.0, 1.0828, 1.1536, 1.2206, 1.2823, 1.3385, 1.3991, 1.4493];
+    if n_terms <= 10 {
+        Q[n_terms.saturating_sub(1)]
+    } else {
+        1.4493 + 0.02616 * (n_terms as f64 - 10.0)
+    }
+}
+
+/// Net model for placement: external nets, terminal lookup, weights.
+#[derive(Clone, Debug)]
+pub struct NetModel {
+    pub nets: Vec<ExtNet>,
+    /// For each LB: indices of nets touching it.
+    lb_nets: Vec<Vec<usize>>,
+    /// NetId -> ExtNet index.
+    net_index: HashMap<NetId, usize>,
+    /// Cell -> LB index (for endpoint queries).
+    cell_lb: HashMap<CellId, usize>,
+}
+
+/// Aggregate placement cost snapshot.
+#[derive(Clone, Copy, Debug)]
+pub struct PlacementCost {
+    pub whpwl: f64,
+}
+
+impl NetModel {
+    /// Identify external nets: nets whose terminals span >= 2 blocks.
+    pub fn build(nl: &Netlist, packing: &Packing) -> NetModel {
+        // Cell -> block mapping.
+        let mut cell_lb: HashMap<CellId, usize> = HashMap::new();
+        for (li, lb) in packing.lbs.iter().enumerate() {
+            for &ai in &lb.alms {
+                let alm = &packing.alms[ai];
+                for &c in alm
+                    .adder_bits
+                    .iter()
+                    .chain(alm.logic_luts.iter())
+                    .chain(alm.ffs.iter())
+                {
+                    cell_lb.insert(c, li);
+                }
+                for paths in &alm.operand_paths {
+                    for p in paths {
+                        if let crate::pack::OperandPath::AbsorbedLut(l) = p {
+                            cell_lb.insert(*l, li);
+                        }
+                    }
+                }
+            }
+        }
+
+        let mut nets = Vec::new();
+        let mut net_index = HashMap::new();
+        let mut lb_nets: Vec<Vec<usize>> = vec![Vec::new(); packing.lbs.len()];
+
+        for (ni, net) in nl.nets.iter().enumerate() {
+            let mut terms: Vec<Term> = Vec::new();
+            let mut push = |t: Term, terms: &mut Vec<Term>| {
+                if !terms.contains(&t) {
+                    terms.push(t);
+                }
+            };
+            if let Some((drv, _)) = net.driver {
+                match nl.cells[drv as usize].kind {
+                    CellKind::Input => push(Term::Io(drv), &mut terms),
+                    _ => {
+                        if let Some(&lb) = cell_lb.get(&drv) {
+                            push(Term::Lb(lb), &mut terms);
+                        }
+                    }
+                }
+            }
+            for &(sink, _) in &net.sinks {
+                match nl.cells[sink as usize].kind {
+                    CellKind::Output => push(Term::Io(sink), &mut terms),
+                    _ => {
+                        if let Some(&lb) = cell_lb.get(&sink) {
+                            push(Term::Lb(lb), &mut terms);
+                        }
+                    }
+                }
+            }
+            if terms.len() < 2 {
+                continue; // intra-block or dangling
+            }
+            let idx = nets.len();
+            for t in &terms {
+                if let Term::Lb(lb) = t {
+                    lb_nets[*lb].push(idx);
+                }
+            }
+            net_index.insert(ni as NetId, idx);
+            nets.push(ExtNet { net: ni as NetId, terms, weight: 1.0 });
+        }
+
+        NetModel { nets, lb_nets, net_index, cell_lb }
+    }
+
+    pub fn num_nets(&self) -> usize {
+        self.nets.len()
+    }
+
+    /// Set timing weights: `w = 1 + 8*crit^2` (sharp criticality emphasis).
+    pub fn set_weights(&mut self, net_crit: &[f64], timing_driven: bool) {
+        for en in &mut self.nets {
+            let c = if timing_driven {
+                net_crit.get(en.net as usize).copied().unwrap_or(0.0)
+            } else {
+                0.0
+            };
+            en.weight = 1.0 + 8.0 * c * c;
+        }
+    }
+
+    #[inline]
+    fn term_loc(
+        &self,
+        t: Term,
+        lb_loc: &[Loc],
+        io_loc: &HashMap<CellId, Loc>,
+    ) -> Loc {
+        match t {
+            Term::Lb(i) => lb_loc[i],
+            Term::Io(c) => io_loc[&c],
+        }
+    }
+
+    /// Weighted HPWL of one net.
+    #[inline]
+    pub fn net_cost(&self, en: &ExtNet, lb_loc: &[Loc], io_loc: &HashMap<CellId, Loc>) -> f64 {
+        let mut xmin = u16::MAX;
+        let mut xmax = 0u16;
+        let mut ymin = u16::MAX;
+        let mut ymax = 0u16;
+        for &t in &en.terms {
+            let l = self.term_loc(t, lb_loc, io_loc);
+            xmin = xmin.min(l.x);
+            xmax = xmax.max(l.x);
+            ymin = ymin.min(l.y);
+            ymax = ymax.max(l.y);
+        }
+        let span = (xmax - xmin) as f64 + (ymax - ymin) as f64;
+        en.weight * q_factor(en.terms.len()) * span
+    }
+
+    /// Total cost from scratch.
+    pub fn full_cost(&self, lb_loc: &[Loc], io_loc: &HashMap<CellId, Loc>) -> f64 {
+        self.nets.iter().map(|en| self.net_cost(en, lb_loc, io_loc)).sum()
+    }
+
+    /// Cost delta if `moved` blocks relocate (positions not yet applied).
+    pub fn move_delta(
+        &self,
+        lb_loc: &[Loc],
+        io_loc: &HashMap<CellId, Loc>,
+        moved: &[(usize, Loc)],
+    ) -> f64 {
+        // Affected nets (dedup).
+        let mut affected: Vec<usize> = Vec::with_capacity(16);
+        for &(lb, _) in moved {
+            for &ni in &self.lb_nets[lb] {
+                if !affected.contains(&ni) {
+                    affected.push(ni);
+                }
+            }
+        }
+        let mut delta = 0.0;
+        // Temporary location override.
+        let loc_of = |lb: usize| -> Loc {
+            for &(m, l) in moved {
+                if m == lb {
+                    return l;
+                }
+            }
+            lb_loc[lb]
+        };
+        for &ni in &affected {
+            let en = &self.nets[ni];
+            let before = self.net_cost(en, lb_loc, io_loc);
+            // After: recompute bbox with overrides.
+            let mut xmin = u16::MAX;
+            let mut xmax = 0u16;
+            let mut ymin = u16::MAX;
+            let mut ymax = 0u16;
+            for &t in &en.terms {
+                let l = match t {
+                    Term::Lb(i) => loc_of(i),
+                    Term::Io(c) => io_loc[&c],
+                };
+                xmin = xmin.min(l.x);
+                xmax = xmax.max(l.x);
+                ymin = ymin.min(l.y);
+                ymax = ymax.max(l.y);
+            }
+            let span = (xmax - xmin) as f64 + (ymax - ymin) as f64;
+            let after = en.weight * q_factor(en.terms.len()) * span;
+            delta += after - before;
+        }
+        delta
+    }
+
+    /// The placeable terminal a cell belongs to (LB or its own IO pad).
+    pub fn term_of_cell(&self, cell: CellId) -> Option<Term> {
+        if let Some(&lb) = self.cell_lb.get(&cell) {
+            return Some(Term::Lb(lb));
+        }
+        None
+    }
+
+    /// Source/sink locations of a net endpoint for delay estimation.
+    pub fn endpoint_locs(
+        &self,
+        net: NetId,
+        sink_cell: CellId,
+        lb_loc: &[Loc],
+        io_loc: &HashMap<CellId, Loc>,
+    ) -> Option<(Loc, Loc)> {
+        let &idx = self.net_index.get(&net)?;
+        let en = &self.nets[idx];
+        let src = en.terms.first()?;
+        let src_loc = self.term_loc(*src, lb_loc, io_loc);
+        let dst_loc = if let Some(&lb) = self.cell_lb.get(&sink_cell) {
+            lb_loc[lb]
+        } else if let Some(&l) = io_loc.get(&sink_cell) {
+            l
+        } else {
+            return None;
+        };
+        Some((src_loc, dst_loc))
+    }
+
+    /// Export per-net bounding boxes for the PJRT kernel (bin coordinates
+    /// scaled to the kernel's fixed grid).
+    pub fn export_bboxes(
+        &self,
+        lb_loc: &[Loc],
+        io_loc: &HashMap<CellId, Loc>,
+        scale: f64,
+        grid_max: f64,
+    ) -> Vec<[f32; 5]> {
+        self.nets
+            .iter()
+            .map(|en| {
+                let mut xmin = f64::INFINITY;
+                let mut xmax = 0.0f64;
+                let mut ymin = f64::INFINITY;
+                let mut ymax = 0.0f64;
+                for &t in &en.terms {
+                    let l = self.term_loc(t, lb_loc, io_loc);
+                    xmin = xmin.min(l.x as f64);
+                    xmax = xmax.max(l.x as f64);
+                    ymin = ymin.min(l.y as f64);
+                    ymax = ymax.max(l.y as f64);
+                }
+                [
+                    ((xmin * scale).min(grid_max)) as f32,
+                    ((xmax * scale).min(grid_max)) as f32,
+                    ((ymin * scale).min(grid_max)) as f32,
+                    ((ymax * scale).min(grid_max)) as f32,
+                    (en.weight * q_factor(en.terms.len())) as f32,
+                ]
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{Arch, ArchVariant};
+    use crate::pack::{pack, PackOpts};
+    use crate::synth::circuit::Circuit;
+    use crate::synth::multiplier::{soft_mul, AdderAlgo};
+    use crate::techmap::{map_circuit, MapOpts};
+
+    fn model() -> (NetModel, usize) {
+        let mut c = Circuit::new("m");
+        let x = c.pi_bus("x", 4);
+        let y = c.pi_bus("y", 4);
+        let p = soft_mul(&mut c, &x, &y, AdderAlgo::Cascade);
+        c.po_bus("p", &p);
+        let nl = map_circuit(&c, &MapOpts::default());
+        let packing = pack(&nl, &Arch::paper(ArchVariant::Baseline), &PackOpts::default());
+        let n_lbs = packing.lbs.len();
+        (NetModel::build(&nl, &packing), n_lbs)
+    }
+
+    #[test]
+    fn q_factor_monotone() {
+        assert_eq!(q_factor(2), 1.0);
+        assert!(q_factor(5) > q_factor(3));
+        assert!(q_factor(20) > q_factor(10));
+    }
+
+    #[test]
+    fn move_delta_matches_full_recompute() {
+        let (mut m, n_lbs) = model();
+        m.set_weights(&[], false);
+        // Synthetic locations.
+        let mut lb_loc: Vec<Loc> = (0..n_lbs)
+            .map(|i| Loc::new((i % 5 + 1) as u16, (i / 5 + 1) as u16))
+            .collect();
+        let mut io_loc = HashMap::new();
+        for en in &m.nets {
+            for &t in &en.terms {
+                if let Term::Io(c) = t {
+                    io_loc.insert(c, Loc::new(0, (c % 7 + 1) as u16));
+                }
+            }
+        }
+        let before = m.full_cost(&lb_loc, &io_loc);
+        if n_lbs >= 2 {
+            let moved = [(0usize, Loc::new(9, 9)), (1usize, lb_loc[0])];
+            let delta = m.move_delta(&lb_loc, &io_loc, &moved);
+            lb_loc[0] = Loc::new(9, 9);
+            lb_loc[1] = moved[1].1;
+            let after = m.full_cost(&lb_loc, &io_loc);
+            assert!((before + delta - after).abs() < 1e-9,
+                    "delta {delta} vs {}", after - before);
+        }
+    }
+
+    #[test]
+    fn weights_scale_cost() {
+        let (mut m, n_lbs) = model();
+        let lb_loc: Vec<Loc> = (0..n_lbs)
+            .map(|i| Loc::new((i % 5 + 1) as u16, (i / 5 + 1) as u16))
+            .collect();
+        let mut io_loc = HashMap::new();
+        for en in &m.nets {
+            for &t in &en.terms {
+                if let Term::Io(c) = t {
+                    io_loc.insert(c, Loc::new(0, (c % 7 + 1) as u16));
+                }
+            }
+        }
+        m.set_weights(&[], false);
+        let base = m.full_cost(&lb_loc, &io_loc);
+        let crit = vec![1.0; 10_000];
+        m.set_weights(&crit, true);
+        let weighted = m.full_cost(&lb_loc, &io_loc);
+        assert!(weighted > base * 5.0);
+    }
+}

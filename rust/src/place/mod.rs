@@ -1,0 +1,483 @@
+//! Timing-driven simulated-annealing placement (the VPR substitute).
+//!
+//! Blocks are packed LBs plus I/O pads; carry chains spanning multiple LBs
+//! are vertical macros that move as units.  Cost is criticality-weighted
+//! HPWL (the classic VPR formulation); criticalities refresh from STA at
+//! every temperature.  The batched full-cost + congestion evaluation runs
+//! through the AOT-compiled JAX/Pallas kernel via PJRT
+//! ([`kernel_accel`]) — python never executes at placement time.
+
+pub mod cost;
+pub mod kernel_accel;
+
+use std::collections::HashMap;
+
+use crate::arch::device::{Device, Loc};
+use crate::arch::Arch;
+use crate::netlist::{CellId, CellKind, Netlist, NetId};
+use crate::pack::Packing;
+use crate::timing;
+use crate::util::Rng;
+
+pub use cost::{NetModel, PlacementCost};
+
+/// Placement result: locations for every LB and I/O cell.
+#[derive(Clone, Debug)]
+pub struct Placement {
+    pub device: Device,
+    /// Location of each packed LB (index parallel to `Packing::lbs`).
+    pub lb_loc: Vec<Loc>,
+    /// Location of each I/O cell.
+    pub io_loc: HashMap<CellId, Loc>,
+    /// Final placement cost (weighted HPWL).
+    pub cost: f64,
+    /// Post-placement estimated critical path (ps).
+    pub est_cpd_ps: f64,
+}
+
+/// Placer options.
+#[derive(Clone, Debug)]
+pub struct PlaceOpts {
+    pub seed: u64,
+    /// Moves per temperature = `effort * blocks^(4/3)` (VPR's inner_num).
+    pub effort: f64,
+    /// Timing-driven (criticality-weighted) vs pure wirelength.
+    pub timing_driven: bool,
+    /// Evaluate the full cost + congestion map through the PJRT kernel at
+    /// each temperature (validated against the incremental Rust cost).
+    pub use_kernel: bool,
+    /// Fix the device size (Table IV stress tests); `None` auto-sizes.
+    pub device: Option<Device>,
+}
+
+impl Default for PlaceOpts {
+    fn default() -> Self {
+        PlaceOpts {
+            seed: 1,
+            effort: 1.0,
+            timing_driven: true,
+            use_kernel: false,
+            device: None,
+        }
+    }
+}
+
+/// Net -> placement delay estimate: connection block + wire segments.
+pub fn est_net_delay(arch: &Arch, src: Loc, dst: Loc) -> f64 {
+    if src == dst {
+        return 0.0; // intra-LB feedback (local crossbar charged in STA)
+    }
+    let d = src.dist(dst);
+    let segs = (d as f64 / arch.routing.segment_len as f64).ceil().max(1.0);
+    arch.delays.conn_block + segs * arch.delays.wire_segment
+}
+
+/// Place a packed design.
+pub fn place(nl: &Netlist, packing: &Packing, arch: &Arch, opts: &PlaceOpts) -> Placement {
+    let mut rng = Rng::new(opts.seed);
+
+    // --- Device sizing. ----------------------------------------------------
+    // Tallest chain macro constrains the minimum grid height.
+    let max_macro = packing
+        .chain_macros
+        .iter()
+        .map(|m| m.len())
+        .max()
+        .unwrap_or(1)
+        .max(1);
+    let mut device = opts.device.clone().unwrap_or_else(|| {
+        Device::auto_size(packing.lbs.len(), packing.ios.len(), 1.15)
+    });
+    while (device.lb_rows as usize) < max_macro {
+        device = Device::new(device.lb_cols + 1, device.lb_rows + 1);
+    }
+    assert!(
+        device.lb_capacity() >= packing.lbs.len(),
+        "device too small: {} LBs for {} slots",
+        packing.lbs.len(),
+        device.lb_capacity()
+    );
+    assert!(device.io_capacity() >= packing.ios.len(), "not enough I/O sites");
+
+    // --- Macro identification. ---------------------------------------------
+    // lb -> macro id; macros are vertically-consecutive LB lists.
+    let mut lb_macro: Vec<Option<usize>> = vec![None; packing.lbs.len()];
+    let mut macros: Vec<Vec<usize>> = Vec::new();
+    for m in &packing.chain_macros {
+        if m.len() > 1 {
+            let id = macros.len();
+            for &lb in m {
+                // An LB can belong to at most one macro (chains packed into
+                // the same LBs merge their macros).
+                if lb_macro[lb].is_none() {
+                    lb_macro[lb] = Some(id);
+                }
+            }
+            macros.push(m.clone());
+        }
+    }
+
+    // --- Initial placement. --------------------------------------------------
+    let mut grid: HashMap<Loc, usize> = HashMap::new(); // loc -> lb index
+    let mut lb_loc: Vec<Loc> = vec![Loc::new(0, 0); packing.lbs.len()];
+    let lb_locs = device.lb_locs();
+    // Macros first: place each in a free vertical window, column-major scan.
+    let mut col_fill: Vec<u16> = vec![1; device.lb_cols as usize + 1]; // next free y per col
+    for m in &macros {
+        let len = m.len() as u16;
+        let mut placed = false;
+        for x in 1..=device.lb_cols {
+            let y0 = col_fill[x as usize];
+            if y0 + len - 1 <= device.lb_rows {
+                for (i, &lb) in m.iter().enumerate() {
+                    let loc = Loc::new(x, y0 + i as u16);
+                    grid.insert(loc, lb);
+                    lb_loc[lb] = loc;
+                }
+                col_fill[x as usize] = y0 + len;
+                placed = true;
+                break;
+            }
+        }
+        assert!(placed, "no vertical window for chain macro of {} LBs", m.len());
+    }
+    // Singles into remaining slots.
+    let mut free: Vec<Loc> = lb_locs
+        .iter()
+        .copied()
+        .filter(|l| !grid.contains_key(l))
+        .collect();
+    rng.shuffle(&mut free);
+    let mut fi = 0;
+    for lb in 0..packing.lbs.len() {
+        if lb_macro[lb].is_some() && grid.values().any(|&v| v == lb) {
+            continue;
+        }
+        if lb_macro[lb].is_some() {
+            continue; // already placed with macro
+        }
+        let loc = free[fi];
+        fi += 1;
+        grid.insert(loc, lb);
+        lb_loc[lb] = loc;
+    }
+    // I/Os round-robin over pad sites.
+    let io_sites = device.io_locs();
+    let mut io_loc: HashMap<CellId, Loc> = HashMap::new();
+    let mut io_fill: HashMap<Loc, u16> = HashMap::new();
+    let mut site_i = 0usize;
+    for &io in &packing.ios {
+        loop {
+            let s = io_sites[site_i % io_sites.len()];
+            let f = io_fill.entry(s).or_insert(0);
+            if *f < device.io_per_tile {
+                *f += 1;
+                io_loc.insert(io, s);
+                break;
+            }
+            site_i += 1;
+        }
+        site_i += 1;
+    }
+
+    // --- Net model. -----------------------------------------------------------
+    let mut model = cost::NetModel::build(nl, packing);
+    let mut crit = vec![0.0f64; nl.nets.len()];
+    if opts.timing_driven {
+        let rpt = timing::sta(nl, packing, arch, |_, _, _| arch.delays.wire_segment * 2.0);
+        crit = rpt.net_crit;
+    }
+    model.set_weights(&crit, opts.timing_driven);
+    let mut cur_cost = model.full_cost(&lb_loc, &io_loc);
+
+    // Optional PJRT kernel evaluator.
+    let mut kernel = if opts.use_kernel {
+        kernel_accel::KernelCost::try_new(model.num_nets()).ok()
+    } else {
+        None
+    };
+
+    // --- Annealing schedule (VPR-style adaptive). -------------------------------
+    let n_blocks = packing.lbs.len().max(2);
+    let moves_per_t = ((opts.effort * (n_blocks as f64).powf(4.0 / 3.0)) as usize).max(64);
+    // Initial temperature: 20x the std-dev of random move deltas.
+    let mut t = {
+        let mut deltas = Vec::with_capacity(64);
+        for _ in 0..64 {
+            let save_loc = lb_loc.clone();
+            let save_grid = grid.clone();
+            if let Some(dc) = try_move(&mut rng, &device, &mut grid, &mut lb_loc,
+                                       &lb_macro, &macros, &model, &io_loc,
+                                       device.lb_cols.max(device.lb_rows), f64::INFINITY)
+            {
+                deltas.push(dc.abs());
+                cur_cost += dc;
+            }
+            let _ = (save_loc, save_grid);
+        }
+        let m = crate::util::stats::mean(&deltas);
+        (20.0 * m).max(1.0)
+    };
+    let mut rlim = device.lb_cols.max(device.lb_rows);
+    let mut temp_idx = 0usize;
+    let t_min = 0.005 * cur_cost.max(1.0) / model.num_nets().max(1) as f64;
+
+    while t > t_min {
+        let mut accepted = 0usize;
+        for _ in 0..moves_per_t {
+            if let Some(dc) = try_move(&mut rng, &device, &mut grid, &mut lb_loc,
+                                       &lb_macro, &macros, &model, &io_loc, rlim, t)
+            {
+                cur_cost += dc;
+                accepted += 1;
+            }
+        }
+        let alpha = {
+            let r = accepted as f64 / moves_per_t as f64;
+            // VPR's adaptive alpha.
+            if r > 0.96 { 0.5 } else if r > 0.8 { 0.9 } else if r > 0.15 { 0.95 } else { 0.8 }
+        };
+        t *= alpha;
+        // Adapt range limit toward 44% acceptance.
+        let r = accepted as f64 / moves_per_t as f64;
+        let new_rlim = (rlim as f64 * (1.0 - 0.44 + r)).clamp(1.0, device.lb_cols.max(device.lb_rows) as f64);
+        rlim = new_rlim.round() as u16;
+        // Refresh criticalities + full cost (guards incremental drift).
+        // STA is the placer's most expensive periodic step; every 4th
+        // temperature tracks criticality closely enough (perf pass, see
+        // EXPERIMENTS.md §Perf).
+        temp_idx += 1;
+        if opts.timing_driven && temp_idx % 4 == 0 {
+            let rpt = timing::sta(nl, packing, arch, |net, sink, _| {
+                net_endpoint_delay(&model, &lb_loc, &io_loc, arch, net, sink)
+            });
+            model.set_weights(&rpt.net_crit, true);
+        }
+        cur_cost = model.full_cost(&lb_loc, &io_loc);
+        // Kernel-evaluated full cost: consistency check + congestion signal.
+        if let Some(k) = kernel.as_mut() {
+            if let Ok(kc) = k.evaluate(&model, &lb_loc, &io_loc, &device) {
+                // Within float tolerance of the Rust cost.
+                debug_assert!((kc.whpwl - cur_cost).abs() <= 1e-3 * cur_cost.max(1.0) + 1.0,
+                              "kernel {} vs rust {}", kc.whpwl, cur_cost);
+            }
+        }
+    }
+
+    // Final STA with placed delays.
+    let rpt = timing::sta(nl, packing, arch, |net, sink, _| {
+        net_endpoint_delay(&model, &lb_loc, &io_loc, arch, net, sink)
+    });
+
+    Placement { device, lb_loc, io_loc, cost: cur_cost, est_cpd_ps: rpt.cpd_ps }
+}
+
+/// Estimated interconnect delay for one net sink given current locations.
+pub fn net_endpoint_delay(
+    model: &cost::NetModel,
+    lb_loc: &[Loc],
+    io_loc: &HashMap<CellId, Loc>,
+    arch: &Arch,
+    net: NetId,
+    sink_cell: CellId,
+) -> f64 {
+    let Some((src, dst)) = model.endpoint_locs(net, sink_cell, lb_loc, io_loc) else {
+        return 0.0;
+    };
+    est_net_delay(arch, src, dst)
+}
+
+/// One SA move: pick a block (macro or single LB), propose a relocation
+/// within `rlim`, accept by Metropolis. Returns the accepted cost delta.
+#[allow(clippy::too_many_arguments)]
+fn try_move(
+    rng: &mut Rng,
+    device: &Device,
+    grid: &mut HashMap<Loc, usize>,
+    lb_loc: &mut Vec<Loc>,
+    lb_macro: &[Option<usize>],
+    macros: &[Vec<usize>],
+    model: &cost::NetModel,
+    io_loc: &HashMap<CellId, Loc>,
+    rlim: u16,
+    t: f64,
+) -> Option<f64> {
+    let n = lb_loc.len();
+    if n < 2 {
+        return None;
+    }
+    let a = rng.below(n);
+    let a_loc = lb_loc[a];
+
+    if let Some(mid) = lb_macro[a] {
+        // Macro move: shift the whole vertical run to a new column window.
+        let m = &macros[mid];
+        let len = m.len() as u16;
+        let dx = rng.range(-(rlim as i64), rlim as i64) as i32;
+        let dy = rng.range(-(rlim as i64), rlim as i64) as i32;
+        let base = lb_loc[m[0]];
+        let nx = (base.x as i32 + dx).clamp(1, device.lb_cols as i32) as u16;
+        let ny = (base.y as i32 + dy).clamp(1, (device.lb_rows - len + 1).max(1) as i32) as u16;
+        if nx == base.x && ny == base.y {
+            return None;
+        }
+        // Target window must be empty or contain only single (non-macro) LBs
+        // we can swap out.
+        let mut displaced: Vec<(usize, Loc)> = Vec::new();
+        for i in 0..len {
+            let tgt = Loc::new(nx, ny + i);
+            if let Some(&occ) = grid.get(&tgt) {
+                if lb_macro[occ].is_some() && !m.contains(&occ) {
+                    return None; // macro collision: reject
+                }
+                if !m.contains(&occ) {
+                    displaced.push((occ, Loc::new(0, 0)));
+                }
+            }
+        }
+        // Old slots for displaced singles.
+        let old_slots: Vec<Loc> = (0..len).map(|i| Loc::new(base.x, base.y + i)).collect();
+        let mut slot_i = 0;
+        for d in displaced.iter_mut() {
+            d.1 = old_slots[slot_i];
+            slot_i += 1;
+        }
+        // Compute delta over affected nets.
+        let mut moved: Vec<(usize, Loc)> = Vec::new();
+        for (i, &lb) in m.iter().enumerate() {
+            moved.push((lb, Loc::new(nx, ny + i as u16)));
+        }
+        for &(lb, loc) in &displaced {
+            moved.push((lb, loc));
+        }
+        let delta = model.move_delta(lb_loc, io_loc, &moved);
+        if accept(rng, delta, t) {
+            for &(lb, _) in &moved {
+                grid.remove(&lb_loc[lb]);
+            }
+            for &(lb, loc) in &moved {
+                grid.insert(loc, lb);
+                lb_loc[lb] = loc;
+            }
+            return Some(delta);
+        }
+        return None;
+    }
+
+    // Single LB: swap with another location (occupied by single or empty).
+    let dx = rng.range(-(rlim as i64), rlim as i64) as i32;
+    let dy = rng.range(-(rlim as i64), rlim as i64) as i32;
+    let nx = (a_loc.x as i32 + dx).clamp(1, device.lb_cols as i32) as u16;
+    let ny = (a_loc.y as i32 + dy).clamp(1, device.lb_rows as i32) as u16;
+    let b_loc = Loc::new(nx, ny);
+    if b_loc == a_loc {
+        return None;
+    }
+    let occupant = grid.get(&b_loc).copied();
+    if let Some(b) = occupant {
+        if lb_macro[b].is_some() {
+            return None;
+        }
+        let moved = [(a, b_loc), (b, a_loc)];
+        let delta = model.move_delta(lb_loc, io_loc, &moved);
+        if accept(rng, delta, t) {
+            grid.insert(a_loc, b);
+            grid.insert(b_loc, a);
+            lb_loc[a] = b_loc;
+            lb_loc[b] = a_loc;
+            return Some(delta);
+        }
+    } else {
+        let moved = [(a, b_loc)];
+        let delta = model.move_delta(lb_loc, io_loc, &moved);
+        if accept(rng, delta, t) {
+            grid.remove(&a_loc);
+            grid.insert(b_loc, a);
+            lb_loc[a] = b_loc;
+            return Some(delta);
+        }
+    }
+    None
+}
+
+#[inline]
+fn accept(rng: &mut Rng, delta: f64, t: f64) -> bool {
+    delta <= 0.0 || (t > 0.0 && rng.f64() < (-delta / t).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::ArchVariant;
+    use crate::pack::{pack, PackOpts};
+    use crate::synth::circuit::Circuit;
+    use crate::synth::multiplier::{soft_mul, AdderAlgo};
+    use crate::techmap::{map_circuit, MapOpts};
+
+    fn setup() -> (Netlist, Packing, Arch) {
+        let mut c = Circuit::new("m");
+        let x = c.pi_bus("x", 6);
+        let y = c.pi_bus("y", 6);
+        let p = soft_mul(&mut c, &x, &y, AdderAlgo::Wallace);
+        c.po_bus("p", &p);
+        let nl = map_circuit(&c, &MapOpts::default());
+        let arch = Arch::paper(ArchVariant::Baseline);
+        let packing = pack(&nl, &arch, &PackOpts::default());
+        (nl, packing, arch)
+    }
+
+    #[test]
+    fn placement_is_legal() {
+        let (nl, packing, arch) = setup();
+        let p = place(&nl, &packing, &arch, &PlaceOpts { effort: 0.3, ..Default::default() });
+        // Every LB on a distinct logic tile.
+        let mut seen = std::collections::HashSet::new();
+        for &loc in &p.lb_loc {
+            assert!(p.device.is_lb(loc), "LB off-grid at {loc:?}");
+            assert!(seen.insert(loc), "two LBs at {loc:?}");
+        }
+        // IOs on the periphery.
+        for loc in p.io_loc.values() {
+            assert!(p.device.is_io(*loc));
+        }
+        assert!(p.est_cpd_ps > 0.0);
+    }
+
+    #[test]
+    fn chain_macros_stay_vertical() {
+        let (nl, packing, arch) = setup();
+        let p = place(&nl, &packing, &arch, &PlaceOpts { effort: 0.3, ..Default::default() });
+        for m in &packing.chain_macros {
+            if m.len() < 2 {
+                continue;
+            }
+            for w in m.windows(2) {
+                let a = p.lb_loc[w[0]];
+                let b = p.lb_loc[w[1]];
+                assert_eq!(a.x, b.x, "macro not in one column");
+                assert_eq!(b.y, a.y + 1, "macro not vertically consecutive");
+            }
+        }
+    }
+
+    #[test]
+    fn annealing_improves_over_initial() {
+        let (nl, packing, arch) = setup();
+        // Effort 0 -> essentially initial placement.
+        let rough = place(&nl, &packing, &arch,
+                          &PlaceOpts { effort: 0.05, seed: 3, ..Default::default() });
+        let tuned = place(&nl, &packing, &arch,
+                          &PlaceOpts { effort: 1.5, seed: 3, ..Default::default() });
+        assert!(tuned.cost <= rough.cost * 1.05,
+                "tuned {} vs rough {}", tuned.cost, rough.cost);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let (nl, packing, arch) = setup();
+        let a = place(&nl, &packing, &arch, &PlaceOpts { effort: 0.3, seed: 7, ..Default::default() });
+        let b = place(&nl, &packing, &arch, &PlaceOpts { effort: 0.3, seed: 7, ..Default::default() });
+        assert_eq!(a.lb_loc, b.lb_loc);
+        assert_eq!(a.cost, b.cost);
+    }
+}

@@ -1,0 +1,513 @@
+//! Experiment harness: one function per table/figure of the paper's
+//! evaluation (the DESIGN.md experiment index).  Each returns rendered
+//! tables plus the raw series, so `cargo bench` targets, the `dduty exp`
+//! CLI, and EXPERIMENTS.md all draw from the same code.
+
+use std::collections::HashMap;
+
+use crate::arch::device::Device;
+use crate::arch::{Arch, ArchVariant};
+use crate::bench_suites::{all_suites, koios_suite, kratos_suite, vtr_suite, BenchParams,
+                          Benchmark, Suite};
+use crate::coordinator::{default_workers, run_jobs, Job};
+use crate::flow::{run_flow, FlowOpts, FlowResult};
+use crate::netlist::NetlistStats;
+use crate::pack::{pack, PackOpts, Unrelated};
+use crate::synth::multiplier::AdderAlgo;
+use crate::synth::Circuit;
+use crate::techmap::{map_circuit, MapOpts};
+use crate::util::stats::geomean;
+use crate::util::Table;
+
+/// Shared experiment effort knobs (scaled-down defaults for 1-core runs).
+#[derive(Clone, Debug)]
+pub struct ExpOpts {
+    pub quick: bool,
+    pub seeds: Vec<u64>,
+}
+
+impl Default for ExpOpts {
+    fn default() -> Self {
+        ExpOpts { quick: false, seeds: vec![1, 2, 3] }
+    }
+}
+
+impl ExpOpts {
+    pub fn quick() -> Self {
+        ExpOpts { quick: true, seeds: vec![1] }
+    }
+
+    fn flow(&self) -> FlowOpts {
+        FlowOpts {
+            seeds: self.seeds.clone(),
+            place_effort: if self.quick { 0.15 } else { 0.5 },
+            route: true,
+            ..Default::default()
+        }
+    }
+}
+
+/// Table I (delegates to the COFFE engine).
+pub fn table1() -> Table {
+    crate::coffe::table1()
+}
+
+/// Table II.
+pub fn table2() -> Table {
+    crate::coffe::table2()
+}
+
+/// Table III: benchmark-suite statistics on the baseline architecture.
+pub fn table3(opts: &ExpOpts) -> Table {
+    let params = BenchParams::default();
+    let mut t = Table::new(
+        "Table III: benchmark suite statistics (baseline Stratix-10-like, scaled)",
+        &["Benchmark", "Num. circuits", "ALMs avg", "ALMs max", "Adder% avg",
+          "Adder% max", "Avg Fmax (MHz)"],
+    );
+    for (suite, benches) in [
+        (Suite::Vtr, vtr_suite(&params)),
+        (Suite::Koios, koios_suite(&params)),
+        (Suite::Kratos, kratos_suite(&params)),
+    ] {
+        let jobs: Vec<Job> = benches
+            .iter()
+            .map(|b| Job { bench: b.clone(), variant: ArchVariant::Baseline, opts: opts.flow() })
+            .collect();
+        let results = run_jobs(jobs, default_workers());
+        let mut alms = Vec::new();
+        let mut fracs = Vec::new();
+        let mut fmaxs = Vec::new();
+        for (b, r) in benches.iter().zip(&results) {
+            let nl = map_circuit(&b.generate(), &MapOpts::default());
+            let st = NetlistStats::of(&nl);
+            alms.push(r.alms as f64);
+            fracs.push(st.adder_fraction * 100.0);
+            fmaxs.push(r.fmax_mhz);
+        }
+        let max_or = |v: &[f64]| v.iter().cloned().fold(0.0f64, f64::max);
+        t.row(&[
+            suite.name().to_string(),
+            benches.len().to_string(),
+            format!("{:.0}", crate::util::stats::mean(&alms)),
+            format!("{:.0}", max_or(&alms)),
+            format!("{:.1}%", crate::util::stats::mean(&fracs)),
+            format!("{:.1}%", max_or(&fracs)),
+            format!("{:.1}", crate::util::stats::mean(&fmaxs)),
+        ]);
+    }
+    t
+}
+
+/// Fig. 5: CAD-improvement validation on Kratos — baseline VTR synthesis
+/// vs improved Cascade / Wallace / Dadda (+ strength-DP binary tree).
+/// Reports normalized geomeans of adders, ALMs, CPD, and ADP.
+pub fn fig5(opts: &ExpOpts) -> (Table, HashMap<&'static str, [f64; 4]>) {
+    let params = BenchParams::default();
+    let algos: [AdderAlgo; 5] = [
+        AdderAlgo::VtrBaseline,
+        AdderAlgo::Cascade,
+        AdderAlgo::BinaryTree,
+        AdderAlgo::Wallace,
+        AdderAlgo::Dadda,
+    ];
+    // Per algo, per circuit metrics.
+    let mut per_algo: HashMap<&'static str, Vec<FlowResult>> = HashMap::new();
+    for algo in algos {
+        let benches: Vec<Benchmark> = kratos_suite(&params)
+            .iter()
+            .map(|b| b.with_algo(algo))
+            .collect();
+        let jobs: Vec<Job> = benches
+            .into_iter()
+            .map(|bench| Job { bench, variant: ArchVariant::Baseline, opts: opts.flow() })
+            .collect();
+        per_algo.insert(algo.name(), run_jobs(jobs, default_workers()));
+    }
+
+    let base = &per_algo["vtr-baseline"];
+    let mut t = Table::new(
+        "Fig. 5: CAD validation on Kratos (normalized to baseline VTR synthesis, geomean)",
+        &["Algorithm", "Adders", "ALMs", "CPD", "ADP"],
+    );
+    let mut series = HashMap::new();
+    for algo in algos {
+        let rs = &per_algo[algo.name()];
+        let nad: Vec<f64> = rs
+            .iter()
+            .zip(base)
+            .map(|(r, b)| r.adder_bits as f64 / b.adder_bits.max(1) as f64)
+            .collect();
+        let nalm: Vec<f64> = rs
+            .iter()
+            .zip(base)
+            .map(|(r, b)| r.alms as f64 / b.alms.max(1) as f64)
+            .collect();
+        let ncpd: Vec<f64> = rs.iter().zip(base).map(|(r, b)| r.cpd_ns / b.cpd_ns).collect();
+        let nadp: Vec<f64> = rs.iter().zip(base).map(|(r, b)| r.adp / b.adp).collect();
+        let row = [geomean(&nad), geomean(&nalm), geomean(&ncpd), geomean(&nadp)];
+        series.insert(algo.name(), row);
+        t.row(&[
+            algo.name().to_string(),
+            format!("{:.3}", row[0]),
+            format!("{:.3}", row[1]),
+            format!("{:.3}", row[2]),
+            format!("{:.3}", row[3]),
+        ]);
+    }
+    (t, series)
+}
+
+/// Fig. 6: DD5 vs baseline across the three suites (normalized per circuit;
+/// geomean rows per suite).
+pub fn fig6(opts: &ExpOpts) -> (Table, Vec<(String, Suite, f64, f64, f64)>) {
+    let params = BenchParams::default();
+    let benches = all_suites(&params);
+    let mk_jobs = |variant: ArchVariant| -> Vec<Job> {
+        benches
+            .iter()
+            .map(|b| Job { bench: b.clone(), variant, opts: opts.flow() })
+            .collect()
+    };
+    let base = run_jobs(mk_jobs(ArchVariant::Baseline), default_workers());
+    let dd5 = run_jobs(mk_jobs(ArchVariant::Dd5), default_workers());
+
+    let mut rows = Vec::new();
+    let mut t = Table::new(
+        "Fig. 6: Double-Duty DD5 vs baseline (normalized; <1 is better)",
+        &["Circuit", "Suite", "ALM area", "CPD", "ADP"],
+    );
+    for ((b, rb), rd) in benches.iter().zip(&base).zip(&dd5) {
+        let area = rd.alm_area_mwta / rb.alm_area_mwta;
+        let cpd = rd.cpd_ns / rb.cpd_ns;
+        let adp = rd.adp / rb.adp;
+        rows.push((b.name.clone(), b.suite, area, cpd, adp));
+        t.row(&[
+            b.name.clone(),
+            b.suite.name().to_string(),
+            format!("{:.3}", area),
+            format!("{:.3}", cpd),
+            format!("{:.3}", adp),
+        ]);
+    }
+    for suite in [Suite::Koios, Suite::Vtr, Suite::Kratos] {
+        let a: Vec<f64> = rows.iter().filter(|r| r.1 == suite).map(|r| r.2).collect();
+        let c: Vec<f64> = rows.iter().filter(|r| r.1 == suite).map(|r| r.3).collect();
+        let p: Vec<f64> = rows.iter().filter(|r| r.1 == suite).map(|r| r.4).collect();
+        t.row(&[
+            format!("GEOMEAN {}", suite.name()),
+            suite.name().to_string(),
+            format!("{:.3}", geomean(&a)),
+            format!("{:.3}", geomean(&c)),
+            format!("{:.3}", geomean(&p)),
+        ]);
+    }
+    let all_a: Vec<f64> = rows.iter().map(|r| r.2).collect();
+    let all_p: Vec<f64> = rows.iter().map(|r| r.4).collect();
+    t.row(&[
+        "GEOMEAN all".to_string(),
+        "-".to_string(),
+        format!("{:.3} (paper 0.891)", geomean(&all_a)),
+        "-".to_string(),
+        format!("{:.3} (paper 0.903)", geomean(&all_p)),
+    ]);
+    (t, rows)
+}
+
+/// Fig. 7: DD5 vs DD6 geomeans per suite at width 6 / 50% sparsity.
+pub fn fig7(opts: &ExpOpts) -> Table {
+    let params = BenchParams { width: 6, sparsity: 0.5, ..Default::default() };
+    let benches = all_suites(&params);
+    let run_variant = |variant: ArchVariant| -> Vec<FlowResult> {
+        let jobs = benches
+            .iter()
+            .map(|b| Job { bench: b.clone(), variant, opts: opts.flow() })
+            .collect();
+        run_jobs(jobs, default_workers())
+    };
+    let base = run_variant(ArchVariant::Baseline);
+    let dd5 = run_variant(ArchVariant::Dd5);
+    let dd6 = run_variant(ArchVariant::Dd6);
+
+    let mut t = Table::new(
+        "Fig. 7: DD5 vs DD6 (normalized to baseline, geomean per suite)",
+        &["Suite", "Arch", "ALM area", "CPD", "ADP"],
+    );
+    for suite in [Suite::Vtr, Suite::Koios, Suite::Kratos] {
+        for (name, rs) in [("DD5", &dd5), ("DD6", &dd6)] {
+            let sel = |f: &dyn Fn(&FlowResult, &FlowResult) -> f64| -> f64 {
+                let v: Vec<f64> = benches
+                    .iter()
+                    .zip(rs.iter().zip(&base))
+                    .filter(|(b, _)| b.suite == suite)
+                    .map(|(_, (r, b))| f(r, b))
+                    .collect();
+                geomean(&v)
+            };
+            t.row(&[
+                suite.name().to_string(),
+                name.to_string(),
+                format!("{:.3}", sel(&|r, b| r.alm_area_mwta / b.alm_area_mwta)),
+                format!("{:.3}", sel(&|r, b| r.cpd_ns / b.cpd_ns)),
+                format!("{:.3}", sel(&|r, b| r.adp / b.adp)),
+            ]);
+        }
+    }
+    t
+}
+
+/// Fig. 8: routing channel utilization histogram on Kratos (baseline vs
+/// DD5). Returns the table and (baseline, dd5) 10-bin histograms.
+pub fn fig8(opts: &ExpOpts) -> (Table, Vec<f64>, Vec<f64>) {
+    let params = BenchParams::default();
+    let benches = kratos_suite(&params);
+    let hist_for = |variant: ArchVariant| -> Vec<f64> {
+        let jobs: Vec<Job> = benches
+            .iter()
+            .map(|b| Job { bench: b.clone(), variant, opts: opts.flow() })
+            .collect();
+        let results = run_jobs(jobs, default_workers());
+        let mut h = vec![0.0; 10];
+        let mut n = 0usize;
+        for r in &results {
+            if r.channel_util.is_empty() {
+                continue;
+            }
+            let rh = {
+                let mut hh = vec![0.0; 10];
+                for &u in &r.channel_util {
+                    hh[((u * 10.0) as usize).min(9)] += 1.0;
+                }
+                let tot: f64 = hh.iter().sum();
+                hh.iter_mut().for_each(|v| *v /= tot);
+                hh
+            };
+            for i in 0..10 {
+                h[i] += rh[i];
+            }
+            n += 1;
+        }
+        h.iter_mut().for_each(|v| *v /= n.max(1) as f64);
+        h
+    };
+    let hb = hist_for(ArchVariant::Baseline);
+    let hd = hist_for(ArchVariant::Dd5);
+    let mut t = Table::new(
+        "Fig. 8: routing channel utilization histogram, Kratos average",
+        &["Utilization bin", "Baseline", "DD5"],
+    );
+    for i in 0..10 {
+        t.row(&[
+            format!("{:.1}-{:.1}", i as f64 / 10.0, (i + 1) as f64 / 10.0),
+            format!("{:.3}", hb[i]),
+            format!("{:.3}", hd[i]),
+        ]);
+    }
+    let mean_bin = |h: &[f64]| -> f64 {
+        h.iter().enumerate().map(|(i, &v)| v * (i as f64 + 0.5) / 10.0).sum()
+    };
+    t.row(&[
+        "mean utilization".to_string(),
+        format!("{:.3}", mean_bin(&hb)),
+        format!("{:.3} (paper: shifts higher)", mean_bin(&hd)),
+    ]);
+    (t, hb, hd)
+}
+
+/// Fig. 9 synthetic stress circuit: `n_adders` adder bits in 20-bit chains
+/// plus `n_luts` 5-LUTs drawing inputs from a shared pool (so pairs can
+/// co-habit an ALM's 8 general inputs, as the paper's stress circuit does).
+pub fn stress_circuit(n_adders: usize, n_luts: usize) -> Circuit {
+    let mut c = Circuit::new("stress");
+    c.disable_dedup();
+    // Shared input pool.
+    let pool: Vec<crate::techmap::aig::Lit> =
+        (0..192).map(|i| c.pi(&format!("p{i}"))).collect();
+    // Adder chains of 20 bits.
+    let mut made = 0usize;
+    let mut ch = 0usize;
+    while made < n_adders {
+        let len = 20.min(n_adders - made);
+        let ops: Vec<_> = (0..len)
+            .map(|i| (pool[(ch * 7 + i) % 192], pool[(ch * 13 + i * 3 + 1) % 192]))
+            .collect();
+        let (sums, cout) = c.add_chain(ops, crate::techmap::aig::Lit::FALSE);
+        c.po_bus(&format!("s{ch}"), &sums);
+        c.po(&format!("co{ch}"), cout);
+        made += len;
+        ch += 1;
+    }
+    // Independent 5-LUTs: 5-input cones over pool windows.  Windows repeat
+    // (so ALM pairs can share inputs, as the paper's stress circuit allows)
+    // but each LUT gets a distinct function — a different conjunctive term
+    // per window reuse — so structural hashing cannot collapse them.
+    const PAIRS: [(usize, usize); 10] =
+        [(0, 1), (0, 2), (0, 3), (0, 4), (1, 2), (1, 3), (1, 4), (2, 3), (2, 4), (3, 4)];
+    for l in 0..n_luts {
+        let base = (l * 5) % 181;
+        let variant = PAIRS[(l / 181) % 10];
+        let ins: Vec<_> = (0..5).map(|k| pool[(base + k) % 192]).collect();
+        let mut acc = ins[0];
+        for &x in &ins[1..] {
+            acc = c.aig.xor(acc, x);
+        }
+        let g = c.aig.and(ins[variant.0], ins[variant.1]);
+        let f = c.aig.or(acc, g);
+        c.po(&format!("l{l}"), f);
+    }
+    c
+}
+
+/// Fig. 9: packing stress test — 500 adders, increasing LUT count,
+/// unrelated clustering ON. Returns rows (n_luts, base area, dd5 area,
+/// concurrent packed LUTs).
+pub fn fig9() -> (Table, Vec<(usize, f64, f64, usize)>) {
+    let n_adders = 500;
+    let mut t = Table::new(
+        "Fig. 9: packing stress test (500 adders + K 5-LUTs, unrelated clustering)",
+        &["K LUTs", "Base ALMs", "DD5 ALMs", "Base area (MWTA)", "DD5 area (MWTA)",
+          "Concurrent 5-LUTs"],
+    );
+    let mut rows = Vec::new();
+    for k in (0..=500).step_by(50) {
+        let circ = stress_circuit(n_adders, k);
+        let nl = map_circuit(&circ, &MapOpts::default());
+        let base_arch = Arch::coffe(ArchVariant::Baseline);
+        let dd5_arch = Arch::coffe(ArchVariant::Dd5);
+        let pb = pack(&nl, &base_arch, &PackOpts { unrelated: Unrelated::On });
+        let pd = pack(&nl, &dd5_arch, &PackOpts { unrelated: Unrelated::On });
+        let area_b = pb.stats.alms as f64 * base_arch.area.per_alm_total();
+        let area_d = pd.stats.alms as f64 * dd5_arch.area.per_alm_total();
+        rows.push((k, area_b, area_d, pd.stats.concurrent_luts));
+        t.row(&[
+            k.to_string(),
+            pb.stats.alms.to_string(),
+            pd.stats.alms.to_string(),
+            format!("{:.0}", area_b),
+            format!("{:.0}", area_d),
+            pd.stats.concurrent_luts.to_string(),
+        ]);
+    }
+    (t, rows)
+}
+
+/// Table IV: end-to-end stress test — fixed device sized for a Kratos
+/// circuit, then add SHA instances until place/route fails.
+pub fn table4(opts: &ExpOpts) -> Table {
+    let params = BenchParams::default();
+    let kratos_names = ["conv1d-FU-mini", "conv2d-FU-mini", "gemmt-FU-mini"];
+    let mut t = Table::new(
+        "Table IV: end-to-end stress test (max SHA instances in a fixed device)",
+        &["Circuit", "Arch", "Max SHA", "Adders", "5-LUTs", "Concurrent",
+          "CPD (ns)", "ALMs", "LBs"],
+    );
+    for name in kratos_names {
+        let bench = kratos_suite(&params)
+            .into_iter()
+            .find(|b| b.name == name)
+            .unwrap();
+        let base_circ = bench.generate();
+
+        // Device sized for baseline + small headroom (the paper fixes the
+        // FPGA size needed for a successful baseline implementation).
+        let nl0 = map_circuit(&base_circ, &MapOpts::default());
+        let arch0 = Arch::coffe(ArchVariant::Baseline);
+        let p0 = pack(&nl0, &arch0, &PackOpts::default());
+        let device = Device::auto_size(p0.lbs.len() + 10, p0.stats.ios + 200, 1.30);
+
+        for variant in [ArchVariant::Baseline, ArchVariant::Dd5] {
+            let arch = Arch::coffe(variant);
+            let mut best: Option<(usize, FlowResult)> = None;
+            let mut n_sha = 0usize;
+            loop {
+                n_sha += 1;
+                let mut circ = bench.generate();
+                for s in 0..n_sha {
+                    let sha = crate::bench_suites::vtr::sha_stress(&params);
+                    circ.absorb(&sha, &format!("sha{s}_"));
+                }
+                let nl = map_circuit(&circ, &MapOpts::default());
+                let packing = pack(&nl, &arch, &PackOpts { unrelated: Unrelated::Auto });
+                if packing.lbs.len() > device.lb_capacity()
+                    || packing.stats.ios > device.io_capacity()
+                {
+                    break;
+                }
+                let fo = FlowOpts {
+                    seeds: vec![opts.seeds[0]],
+                    place_effort: if opts.quick { 0.1 } else { 0.3 },
+                    device: Some(device.clone()),
+                    // The paper's W=400 leaves routing headroom so *logic*
+                    // capacity binds; at our scale that corresponds to a
+                    // wide channel, otherwise DD5's denser packing hits
+                    // routing first and inverts the comparison.
+                    channel_width: Some(112),
+                    ..Default::default()
+                };
+                let r = run_flow(&circ, &arch, &fo);
+                if !r.routed_ok {
+                    break;
+                }
+                best = Some((n_sha, r));
+                if n_sha > 40 {
+                    break; // safety bound
+                }
+            }
+            match best {
+                Some((n, r)) => t.row(&[
+                    name.to_string(),
+                    variant.name().to_string(),
+                    n.to_string(),
+                    r.adder_bits.to_string(),
+                    r.luts.to_string(),
+                    r.concurrent_luts.to_string(),
+                    format!("{:.2}", r.cpd_ns),
+                    r.alms.to_string(),
+                    r.lbs.to_string(),
+                ]),
+                None => t.row(&[
+                    name.to_string(),
+                    variant.name().to_string(),
+                    "0".into(), "-".into(), "-".into(), "-".into(), "-".into(),
+                    "-".into(), "-".into(),
+                ]),
+            };
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stress_circuit_shape() {
+        let c = stress_circuit(100, 40);
+        assert_eq!(c.num_adder_bits(), 100);
+        let nl = map_circuit(&c, &MapOpts::default());
+        assert!(nl.num_luts() >= 40);
+        assert!(nl.check().is_empty());
+    }
+
+    #[test]
+    fn fig9_dd5_absorbs_luts() {
+        let (_, rows) = fig9();
+        // At K=0, baseline is no larger than DD5 (DD5 ALM is bigger).
+        let first = rows.first().unwrap();
+        assert!(first.1 <= first.2 * 1.001);
+        // At K=500, DD5 total area is clearly smaller (absorbed LUTs).
+        let last = rows.last().unwrap();
+        assert!(last.2 < last.1, "dd5 {} vs base {}", last.2, last.1);
+        // Concurrency is substantial.
+        assert!(last.3 > 50, "concurrent {}", last.3);
+    }
+
+    #[test]
+    fn tables12_contain_paper_anchors() {
+        let t1 = table1().render();
+        assert!(t1.contains("289.6"));
+        let t2 = table2().render();
+        assert!(t2.contains("202.2"));
+    }
+}

@@ -1,0 +1,547 @@
+//! PathFinder negotiated-congestion routing on a grid routing-resource
+//! graph.
+//!
+//! The RR abstraction: every grid corner (x, y) carries `W` horizontal and
+//! `W` vertical track nodes.  Horizontal tracks chain along x, vertical
+//! along y; turns connect track `t` to `t` and `(t+1) % W` (a Wilton-like
+//! twist, so planes are not isolated).  Block output pins reach an
+//! `fc_out` fraction of the adjacent tracks, input pins an `fc_in`
+//! fraction (selection hashed per block so pins spread over the channel).
+//!
+//! Classic PathFinder: route every net by A*, then re-route while any node
+//! is overused, inflating present-congestion cost and accumulating history
+//! cost each iteration.  Produces per-sink routed path lengths (for the
+//! post-route STA) and the channel-utilization histogram of Fig. 8.
+
+use std::collections::{BinaryHeap, HashMap};
+
+use crate::arch::device::{Device, Loc};
+use crate::arch::Arch;
+use crate::netlist::{CellId, NetId};
+use crate::place::cost::{NetModel, Term};
+use crate::place::Placement;
+
+/// Router options.
+#[derive(Clone, Copy, Debug)]
+pub struct RouteOpts {
+    pub max_iters: usize,
+    /// Initial present-congestion factor and its per-iteration growth.
+    pub pres_fac0: f64,
+    pub pres_mult: f64,
+    /// History cost increment per overused node per iteration.
+    pub hist_fac: f64,
+}
+
+impl Default for RouteOpts {
+    fn default() -> Self {
+        RouteOpts { max_iters: 45, pres_fac0: 0.5, pres_mult: 1.6, hist_fac: 0.5 }
+    }
+}
+
+/// Routing result.
+#[derive(Clone, Debug)]
+pub struct Routing {
+    pub success: bool,
+    pub iterations: usize,
+    /// Per external net: per sink terminal, wire-hop count of its path.
+    pub sink_hops: Vec<Vec<(Term, usize)>>,
+    /// Occupancy / capacity per channel node (for the Fig. 8 histogram).
+    pub channel_util: Vec<f64>,
+    /// Total wirelength in hops.
+    pub wirelength: usize,
+    /// Nodes still overused at exit (0 on success).
+    pub overused: usize,
+    /// Debug: overused node descriptors (dir, x, y, track, occupancy).
+    pub overused_nodes: Vec<(usize, usize, usize, usize, u16)>,
+    /// Debug: per-net routed node ids.
+    pub net_nodes: Vec<Vec<usize>>,
+}
+
+impl Routing {
+    /// Fig. 8 histogram: fraction of channel segments per utilization bin.
+    pub fn util_histogram(&self, bins: usize) -> Vec<f64> {
+        let mut h = vec![0.0; bins];
+        if self.channel_util.is_empty() {
+            return h;
+        }
+        for &u in &self.channel_util {
+            let b = ((u * bins as f64) as usize).min(bins - 1);
+            h[b] += 1.0;
+        }
+        let total: f64 = h.iter().sum();
+        h.iter_mut().for_each(|v| *v /= total);
+        h
+    }
+
+    /// Routed interconnect delay for a sink with `hops` wire segments.
+    pub fn hop_delay(arch: &Arch, hops: usize) -> f64 {
+        arch.delays.conn_block
+            + (hops as f64 / arch.routing.segment_len as f64).ceil().max(1.0)
+                * arch.delays.wire_segment
+    }
+}
+
+/// Node indexing: dir (0 = H, 1 = V) x width x height x W tracks.
+#[derive(Clone, Copy)]
+struct Geometry {
+    w: usize,
+    h: usize,
+    tracks: usize,
+}
+
+impl Geometry {
+    #[inline]
+    fn id(&self, dir: usize, x: usize, y: usize, t: usize) -> usize {
+        ((dir * self.h + y) * self.w + x) * self.tracks + t
+    }
+
+    #[inline]
+    fn decode(&self, id: usize) -> (usize, usize, usize, usize) {
+        let t = id % self.tracks;
+        let rest = id / self.tracks;
+        let x = rest % self.w;
+        let rest = rest / self.w;
+        let y = rest % self.h;
+        let dir = rest / self.h;
+        (dir, x, y, t)
+    }
+
+    fn num_nodes(&self) -> usize {
+        2 * self.w * self.h * self.tracks
+    }
+
+    /// Manhattan distance heuristic from node to target location.
+    #[inline]
+    fn heur(&self, id: usize, tx: usize, ty: usize) -> f64 {
+        let (_, x, y, _) = self.decode(id);
+        ((x as i64 - tx as i64).abs() + (y as i64 - ty as i64).abs()) as f64
+    }
+}
+
+#[derive(PartialEq)]
+struct QItem {
+    prio: f64,
+    cost: f64,
+    node: usize,
+}
+impl Eq for QItem {}
+impl Ord for QItem {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        other.prio.partial_cmp(&self.prio).unwrap_or(std::cmp::Ordering::Equal)
+    }
+}
+impl PartialOrd for QItem {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Channel nodes a block pin can reach: a hashed `frac` subset of the
+/// tracks, spread over the four channel corners adjacent to the block
+/// (blocks have pins on all sides, so their taps must not pile onto a
+/// single grid point).
+fn pin_nodes(geo: &Geometry, loc: Loc, frac: f64, salt: u64) -> Vec<usize> {
+    let tracks = geo.tracks;
+    let n = ((tracks as f64 * frac).ceil() as usize).clamp(2, tracks) * 2;
+    let mut v = Vec::with_capacity(n);
+    let mut x = (loc.x as u64)
+        .wrapping_mul(0x9E3779B97F4A7C15)
+        .wrapping_add((loc.y as u64).wrapping_mul(0xBF58476D1CE4E5B9))
+        .wrapping_add(salt);
+    let corners = [
+        (loc.x as usize, loc.y as usize),
+        (loc.x.saturating_sub(1) as usize, loc.y as usize),
+        (loc.x as usize, loc.y.saturating_sub(1) as usize),
+        (loc.x.saturating_sub(1) as usize, loc.y.saturating_sub(1) as usize),
+    ];
+    for _ in 0..n {
+        x ^= x >> 27;
+        x = x.wrapping_mul(0x94D049BB133111EB);
+        let t = (x % tracks as u64) as usize;
+        let (cx, cy) = corners[((x >> 17) % 4) as usize];
+        let dir = ((x >> 33) & 1) as usize;
+        if cx < geo.w && cy < geo.h {
+            v.push(geo.id(dir, cx, cy, t));
+        }
+    }
+    v.sort_unstable();
+    v.dedup();
+    v
+}
+
+/// Route a placed design.
+pub fn route(
+    model: &NetModel,
+    placement: &Placement,
+    arch: &Arch,
+    opts: &RouteOpts,
+) -> Routing {
+    let device = &placement.device;
+    let geo = Geometry {
+        w: device.width() as usize,
+        h: device.height() as usize,
+        tracks: arch.routing.channel_width as usize,
+    };
+    let n_nodes = geo.num_nodes();
+
+    let term_loc = |t: Term| -> Loc {
+        match t {
+            Term::Lb(i) => placement.lb_loc[i],
+            Term::Io(c) => placement.io_loc[&c],
+        }
+    };
+
+    // Per-net terminals (source first).
+    let nets: Vec<(NetId, Vec<Term>)> = model
+        .nets
+        .iter()
+        .map(|en| (en.net, en.terms.clone()))
+        .collect();
+
+    let mut occ = vec![0u16; n_nodes];
+    let mut hist = vec![0.0f32; n_nodes];
+    // Per net: routed node set (tree) and per-sink paths.
+    let mut net_nodes: Vec<Vec<usize>> = vec![Vec::new(); nets.len()];
+    let mut sink_hops: Vec<Vec<(Term, usize)>> = vec![Vec::new(); nets.len()];
+
+    let mut pres_fac = opts.pres_fac0;
+    let mut iterations = 0;
+    let mut success = false;
+
+    // A* state arrays, reused across searches.
+    let mut cost_arr = vec![f64::INFINITY; n_nodes];
+    let mut prev = vec![usize::MAX; n_nodes];
+    let mut touched: Vec<usize> = Vec::new();
+
+    for iter in 0..opts.max_iters {
+        iterations = iter + 1;
+        // First iteration routes everything; later iterations rip up and
+        // re-route only nets touching overused nodes (VPR's incremental
+        // rip-up — the bulk of nets keep their legal routes).
+        let congested: Vec<bool> = if iter == 0 {
+            vec![true; nets.len()]
+        } else {
+            net_nodes
+                .iter()
+                .map(|ns| ns.iter().any(|&n| occ[n] as f64 > arch_cap()))
+                .collect()
+        };
+        for (ni, (_, terms)) in nets.iter().enumerate() {
+            if !congested[ni] {
+                continue;
+            }
+            // Rip up.
+            for &n in &net_nodes[ni] {
+                occ[n] = occ[n].saturating_sub(1);
+            }
+            net_nodes[ni].clear();
+            sink_hops[ni].clear();
+
+            let src_loc = term_loc(terms[0]);
+            let src_nodes = pin_nodes(&geo, src_loc, arch.routing.fc_out,
+                                      17 + 131 * ni as u64);
+
+            // Route tree as a set of nodes with hop-distance from source.
+            // Seeds (source track taps) are search entry points but only
+            // nodes actually used by a sink path get committed.
+            let mut tree: HashMap<usize, usize> = HashMap::new(); // node -> hops
+            let mut used: Vec<usize> = Vec::new();
+            for &id in &src_nodes {
+                tree.insert(id, 0);
+            }
+
+            for &sink in &terms[1..] {
+                let dst_loc = term_loc(sink);
+                let dst_nodes = pin_nodes(&geo, dst_loc, arch.routing.fc_in,
+                                          71 + 131 * ni as u64);
+                // Target node set.
+                let mut is_target = HashMap::new();
+                for &id in &dst_nodes {
+                    is_target.insert(id, ());
+                }
+
+                // A* from the current tree.
+                let mut heap: BinaryHeap<QItem> = BinaryHeap::new();
+                for &n in touched.iter() {
+                    cost_arr[n] = f64::INFINITY;
+                    prev[n] = usize::MAX;
+                }
+                touched.clear();
+                let mut seeds: Vec<(usize, usize)> =
+                    tree.iter().map(|(&n, &h)| (n, h)).collect();
+                seeds.sort_unstable(); // deterministic A* tie-breaking
+                for (n, hops) in seeds {
+                    // Fresh source taps pay their own congestion cost
+                    // (otherwise a net would happily start on an occupied
+                    // tap it never perceives); nodes already on this net's
+                    // committed tree re-enter free.
+                    let entry = if hops == 0 && !net_nodes[ni].contains(&n) {
+                        let over = (occ[n] as f64 + 1.0 - arch_cap()).max(0.0);
+                        (1.0 + hist[n] as f64) * (1.0 + over * pres_fac)
+                    } else {
+                        0.0
+                    };
+                    cost_arr[n] = entry;
+                    prev[n] = usize::MAX;
+                    touched.push(n);
+                    heap.push(QItem {
+                        prio: entry + geo.heur(n, dst_loc.x as usize, dst_loc.y as usize),
+                        cost: entry,
+                        node: n,
+                    });
+                }
+                let mut found = usize::MAX;
+                while let Some(QItem { cost, node, .. }) = heap.pop() {
+                    if cost > cost_arr[node] {
+                        continue;
+                    }
+                    if is_target.contains_key(&node) {
+                        found = node;
+                        break;
+                    }
+                    let (dir, x, y, t) = geo.decode(node);
+                    let mut push = |nid: usize, heap: &mut BinaryHeap<QItem>,
+                                    cost_arr: &mut Vec<f64>, prev: &mut Vec<usize>,
+                                    touched: &mut Vec<usize>| {
+                        // PathFinder node cost.
+                        let over = (occ[nid] as f64 + 1.0
+                            - arch_cap())
+                            .max(0.0);
+                        let c_node = (1.0 + hist[nid] as f64) * (1.0 + over * pres_fac);
+                        let nc = cost + c_node;
+                        if nc < cost_arr[nid] {
+                            if cost_arr[nid].is_infinite() && prev[nid] == usize::MAX {
+                                touched.push(nid);
+                            }
+                            cost_arr[nid] = nc;
+                            prev[nid] = node;
+                            heap.push(QItem {
+                                // VPR's astar_fac: inflate the admissible
+                                // heuristic for a large search-space cut at
+                                // bounded routing-cost suboptimality.
+                                prio: nc + 1.3 * geo.heur(nid, dst_loc.x as usize,
+                                                          dst_loc.y as usize),
+                                cost: nc,
+                                node: nid,
+                            });
+                        }
+                    };
+                    if dir == 0 {
+                        // Horizontal: extend along x; turn onto V at (x, y).
+                        if x + 1 < geo.w {
+                            push(geo.id(0, x + 1, y, t), &mut heap, &mut cost_arr, &mut prev, &mut touched);
+                        }
+                        if x > 0 {
+                            push(geo.id(0, x - 1, y, t), &mut heap, &mut cost_arr, &mut prev, &mut touched);
+                        }
+                        push(geo.id(1, x, y, t), &mut heap, &mut cost_arr, &mut prev, &mut touched);
+                        push(geo.id(1, x, y, (t + 1) % geo.tracks), &mut heap, &mut cost_arr, &mut prev, &mut touched);
+                    } else {
+                        if y + 1 < geo.h {
+                            push(geo.id(1, x, y + 1, t), &mut heap, &mut cost_arr, &mut prev, &mut touched);
+                        }
+                        if y > 0 {
+                            push(geo.id(1, x, y - 1, t), &mut heap, &mut cost_arr, &mut prev, &mut touched);
+                        }
+                        push(geo.id(0, x, y, t), &mut heap, &mut cost_arr, &mut prev, &mut touched);
+                        push(geo.id(0, x, y, (t + 1) % geo.tracks), &mut heap, &mut cost_arr, &mut prev, &mut touched);
+                    }
+                }
+
+                if found == usize::MAX {
+                    // Unroutable sink this iteration; count as overuse and
+                    // keep going (pressure will reshape other nets).
+                    sink_hops[ni].push((sink, (src_loc.dist(dst_loc) as usize).max(1)));
+                    continue;
+                }
+                // Walk back, add path to tree.
+                let mut path = Vec::new();
+                let mut cur = found;
+                while cur != usize::MAX && !tree.contains_key(&cur) {
+                    path.push(cur);
+                    cur = prev[cur];
+                }
+                let base_hops = if cur == usize::MAX { 0 } else { tree[&cur] };
+                // The attachment node is used (it may be a fresh seed tap).
+                if cur != usize::MAX {
+                    used.push(cur);
+                }
+                let hops = base_hops + path.len();
+                sink_hops[ni].push((sink, hops));
+                for (off, &n) in path.iter().rev().enumerate() {
+                    tree.insert(n, base_hops + off + 1);
+                    used.push(n);
+                }
+            }
+
+            // Commit occupancy for path nodes only (dedup).
+            used.sort_unstable();
+            used.dedup();
+            for &n in &used {
+                occ[n] += 1;
+                net_nodes[ni].push(n);
+            }
+        }
+
+        // Overuse accounting.
+        let mut overused = 0usize;
+        for n in 0..n_nodes {
+            if occ[n] as f64 > arch_cap() {
+                overused += 1;
+                hist[n] += opts.hist_fac as f32;
+            }
+        }
+        if overused == 0 {
+            success = true;
+            break;
+        }
+        pres_fac *= opts.pres_mult;
+    }
+
+    let overused = occ.iter().filter(|&&o| o as f64 > arch_cap()).count();
+    let overused_nodes: Vec<(usize, usize, usize, usize, u16)> = occ
+        .iter()
+        .enumerate()
+        .filter(|&(_, &o)| o as f64 > arch_cap())
+        .map(|(id, &o)| {
+            let (d, x, y, t) = geo.decode(id);
+            (d, x, y, t, o)
+        })
+        .collect();
+
+    // Channel utilization: average occupancy per channel segment (all W
+    // tracks of one direction at one grid point form a "channel").
+    let mut channel_util = Vec::with_capacity(2 * geo.w * geo.h);
+    for dir in 0..2 {
+        for y in 0..geo.h {
+            for x in 0..geo.w {
+                let used: usize = (0..geo.tracks)
+                    .filter(|&t| occ[geo.id(dir, x, y, t)] > 0)
+                    .count();
+                channel_util.push(used as f64 / geo.tracks as f64);
+            }
+        }
+    }
+
+    let wirelength = occ.iter().map(|&o| o as usize).sum();
+
+    Routing { success, iterations, sink_hops, channel_util, wirelength, overused, overused_nodes, net_nodes }
+}
+
+/// Per-track capacity (1 wire per track node).
+#[inline]
+fn arch_cap() -> f64 {
+    1.0
+}
+
+/// Per-net, per-sink routed delays for post-route STA.
+pub fn routed_net_delay<'a>(
+    routing: &'a Routing,
+    model: &'a NetModel,
+    arch: &'a Arch,
+) -> impl Fn(NetId, CellId, u8) -> f64 + 'a {
+    // net -> (ExtNet index) for lookup.
+    let mut by_net: HashMap<NetId, usize> = HashMap::new();
+    for (i, en) in model.nets.iter().enumerate() {
+        by_net.insert(en.net, i);
+    }
+    move |net: NetId, sink: CellId, _pin: u8| -> f64 {
+        let Some(&i) = by_net.get(&net) else { return 0.0 };
+        // Per-sink routed hops: the sink cell's terminal identifies which
+        // branch of the route tree it rides. Cells without a terminal
+        // (intra-LB) and IO sinks fall back to the worst branch.
+        let hops = match model.term_of_cell(sink) {
+            Some(t) => routing.sink_hops[i]
+                .iter()
+                .find(|&&(st, _)| st == t)
+                .map(|&(_, h)| h)
+                .unwrap_or_else(|| {
+                    routing.sink_hops[i].iter().map(|&(_, h)| h).max().unwrap_or(0)
+                }),
+            None => routing.sink_hops[i].iter().map(|&(_, h)| h).max().unwrap_or(0),
+        };
+        if hops == 0 {
+            return 0.0;
+        }
+        Routing::hop_delay(arch, hops)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{Arch, ArchVariant};
+    use crate::pack::{pack, PackOpts};
+    use crate::place::{place, PlaceOpts};
+    use crate::synth::circuit::Circuit;
+    use crate::synth::multiplier::{soft_mul, AdderAlgo};
+    use crate::techmap::{map_circuit, MapOpts};
+
+    fn routed(w: usize) -> (Routing, NetModel, Arch) {
+        let mut c = Circuit::new("m");
+        let x = c.pi_bus("x", w);
+        let y = c.pi_bus("y", w);
+        let p = soft_mul(&mut c, &x, &y, AdderAlgo::Wallace);
+        c.po_bus("p", &p);
+        let nl = map_circuit(&c, &MapOpts::default());
+        let arch = Arch::paper(ArchVariant::Baseline);
+        let packing = pack(&nl, &arch, &PackOpts::default());
+        let pl = place(&nl, &packing, &arch,
+                       &PlaceOpts { effort: 0.3, ..Default::default() });
+        let mut model = NetModel::build(&nl, &packing);
+        model.set_weights(&[], false);
+        let r = route(&model, &pl, &arch, &RouteOpts::default());
+        (r, model, arch)
+    }
+
+    #[test]
+    fn routes_small_multiplier() {
+        let (r, model, _) = routed(5);
+        assert!(r.success, "unrouted after {} iters ({} overused)", r.iterations, r.overused);
+        assert_eq!(r.sink_hops.len(), model.num_nets());
+        // Every sink of every net has a path.
+        for (i, en) in model.nets.iter().enumerate() {
+            assert_eq!(r.sink_hops[i].len(), en.terms.len() - 1);
+        }
+        assert!(r.wirelength > 0);
+    }
+
+    #[test]
+    fn histogram_normalized() {
+        let (r, _, _) = routed(5);
+        let h = r.util_histogram(10);
+        assert_eq!(h.len(), 10);
+        let sum: f64 = h.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn hop_delay_monotone() {
+        let arch = Arch::paper(ArchVariant::Baseline);
+        assert!(Routing::hop_delay(&arch, 8) > Routing::hop_delay(&arch, 2));
+    }
+
+    #[test]
+    fn tight_channel_increases_congestion() {
+        let mut c = Circuit::new("m");
+        let x = c.pi_bus("x", 6);
+        let y = c.pi_bus("y", 6);
+        let p = soft_mul(&mut c, &x, &y, AdderAlgo::Wallace);
+        c.po_bus("p", &p);
+        let nl = map_circuit(&c, &MapOpts::default());
+        let mut arch = Arch::paper(ArchVariant::Baseline);
+        let packing = pack(&nl, &arch, &PackOpts::default());
+        let pl = place(&nl, &packing, &arch,
+                       &PlaceOpts { effort: 0.3, ..Default::default() });
+        let mut model = NetModel::build(&nl, &packing);
+        model.set_weights(&[], false);
+        arch.routing.channel_width = 48;
+        let wide = route(&model, &pl, &arch, &RouteOpts::default());
+        arch.routing.channel_width = 12;
+        let narrow = route(&model, &pl, &arch, &RouteOpts::default());
+        let mean_u = |r: &Routing| {
+            r.channel_util.iter().sum::<f64>() / r.channel_util.len() as f64
+        };
+        assert!(mean_u(&narrow) > mean_u(&wide));
+    }
+}

@@ -1,0 +1,202 @@
+//! PJRT runtime: load the AOT-compiled placement-cost HLO artifacts and
+//! execute them from the Rust hot path.
+//!
+//! The interchange format is HLO *text* (see python/compile/aot.py and
+//! /opt/xla-example/README.md): jax >= 0.5 emits protos with 64-bit ids
+//! that xla_extension 0.5.1 rejects; the text parser reassigns ids.
+//!
+//! Artifacts come in net-count buckets (`cost_n{N}.hlo.txt`); the runtime
+//! compiles each once and picks the smallest bucket that fits the live net
+//! count, padding the rest with `valid = 0`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// Fixed congestion-grid side, matching python/compile/kernels/hpwl.py.
+pub const GRID: usize = 64;
+
+/// One compiled bucket.
+struct Bucket {
+    nets: usize,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The placement-cost kernel, compiled for every available bucket.
+pub struct CostKernel {
+    _client: xla::PjRtClient,
+    buckets: Vec<Bucket>,
+}
+
+/// Result of one kernel evaluation.
+#[derive(Clone, Debug)]
+pub struct CostEval {
+    /// Weighted HPWL (in the caller's coordinate units — already unscaled).
+    pub whpwl: f64,
+    /// RUDY congestion map, row-major GRID x GRID.
+    pub congestion: Vec<f32>,
+    /// Total demand above capacity.
+    pub overflow: f64,
+}
+
+/// Locate the artifacts directory: $DDUTY_ARTIFACTS, ./artifacts, or the
+/// repo-root artifacts next to Cargo.toml.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("DDUTY_ARTIFACTS") {
+        return PathBuf::from(d);
+    }
+    let cwd = PathBuf::from("artifacts");
+    if cwd.is_dir() {
+        return cwd;
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+impl CostKernel {
+    /// Load and compile every `cost_n*.hlo.txt` bucket in `dir`.
+    pub fn load(dir: &Path) -> Result<CostKernel> {
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        let mut buckets = Vec::new();
+        let entries = std::fs::read_dir(dir)
+            .with_context(|| format!("artifacts dir {dir:?} (run `make artifacts`)"))?;
+        for e in entries {
+            let path = e?.path();
+            let name = path.file_name().unwrap_or_default().to_string_lossy().to_string();
+            let Some(rest) = name.strip_prefix("cost_n") else { continue };
+            let Some(nstr) = rest.strip_suffix(".hlo.txt") else { continue };
+            let nets: usize = nstr.parse().with_context(|| format!("bucket size in {name}"))?;
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parse {name}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).with_context(|| format!("compile {name}"))?;
+            buckets.push(Bucket { nets, exe });
+        }
+        if buckets.is_empty() {
+            bail!("no cost_n*.hlo.txt artifacts in {dir:?} — run `make artifacts`");
+        }
+        buckets.sort_by_key(|b| b.nets);
+        Ok(CostKernel { _client: client, buckets })
+    }
+
+    /// Load from the default artifacts location.
+    pub fn load_default() -> Result<CostKernel> {
+        Self::load(&artifacts_dir())
+    }
+
+    /// Largest supported net count.
+    pub fn max_nets(&self) -> usize {
+        self.buckets.last().map(|b| b.nets).unwrap_or(0)
+    }
+
+    /// Evaluate the cost model over per-net boxes
+    /// `[xmin, xmax, ymin, ymax, weight]` in kernel grid coordinates
+    /// (0..GRID), with a per-bin `capacity` for the overflow term.
+    pub fn evaluate(&self, boxes: &[[f32; 5]], capacity: f32) -> Result<CostEval> {
+        let n_live = boxes.len();
+        let bucket = self
+            .buckets
+            .iter()
+            .find(|b| b.nets >= n_live)
+            .with_context(|| {
+                format!("{} nets exceeds largest bucket {}", n_live, self.max_nets())
+            })?;
+        let n = bucket.nets;
+
+        let mut xmin = vec![0.0f32; n];
+        let mut xmax = vec![0.0f32; n];
+        let mut ymin = vec![0.0f32; n];
+        let mut ymax = vec![0.0f32; n];
+        let mut w = vec![0.0f32; n];
+        let mut valid = vec![0.0f32; n];
+        for (i, b) in boxes.iter().enumerate() {
+            xmin[i] = b[0];
+            xmax[i] = b[1];
+            ymin[i] = b[2];
+            ymax[i] = b[3];
+            w[i] = b[4];
+            valid[i] = 1.0;
+        }
+
+        let lits = [
+            xla::Literal::vec1(&xmin),
+            xla::Literal::vec1(&xmax),
+            xla::Literal::vec1(&ymin),
+            xla::Literal::vec1(&ymax),
+            xla::Literal::vec1(&w),
+            xla::Literal::vec1(&valid),
+            xla::Literal::vec1(&[capacity]),
+        ];
+        let result = bucket
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .context("kernel execute")?[0][0]
+            .to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        if parts.len() != 3 {
+            bail!("expected 3-tuple from cost kernel, got {}", parts.len());
+        }
+        let whpwl = parts[0].to_vec::<f32>()?[0] as f64;
+        let congestion = parts[1].to_vec::<f32>()?;
+        let overflow = parts[2].to_vec::<f32>()?[0] as f64;
+        Ok(CostEval { whpwl, congestion, overflow })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kernel() -> Option<CostKernel> {
+        CostKernel::load_default().ok()
+    }
+
+    #[test]
+    fn loads_buckets_and_evaluates() {
+        let Some(k) = kernel() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        assert!(k.max_nets() >= 1024);
+        // One net: bbox (0,3)x(0,1), weight 2 -> whpwl = 2*(3+1) = 8.
+        let eval = k.evaluate(&[[0.0, 3.0, 0.0, 1.0, 2.0]], 1e9).unwrap();
+        assert!((eval.whpwl - 8.0).abs() < 1e-4, "whpwl {}", eval.whpwl);
+        assert_eq!(eval.congestion.len(), GRID * GRID);
+        assert_eq!(eval.overflow, 0.0);
+        // RUDY integrates to w * (dx + dy) = 2 * (4 + 2) = 12.
+        let total: f32 = eval.congestion.iter().sum();
+        assert!((total - 12.0).abs() < 1e-3, "total {total}");
+    }
+
+    #[test]
+    fn bucket_selection_pads() {
+        let Some(k) = kernel() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        // 1500 nets forces the 4096 bucket.
+        let boxes: Vec<[f32; 5]> = (0..1500)
+            .map(|i| {
+                let x = (i % 60) as f32;
+                let y = (i / 60 % 60) as f32;
+                [x, (x + 2.0).min(63.0), y, (y + 1.0).min(63.0), 1.0]
+            })
+            .collect();
+        let eval = k.evaluate(&boxes, 0.0).unwrap();
+        assert!(eval.whpwl > 0.0);
+        // capacity 0 -> overflow equals total demand.
+        let total: f32 = eval.congestion.iter().sum();
+        assert!((eval.overflow - total as f64).abs() < 1e-2 * total as f64 + 1e-3);
+    }
+
+    #[test]
+    fn oversize_rejected() {
+        let Some(k) = kernel() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let boxes = vec![[0.0f32, 1.0, 0.0, 1.0, 1.0]; k.max_nets() + 1];
+        assert!(k.evaluate(&boxes, 1.0).is_err());
+    }
+}

@@ -1,0 +1,484 @@
+//! Pre-mapping circuit: AIG soft logic + hard adder-chain macros + FFs.
+
+use std::collections::HashMap;
+
+use crate::techmap::aig::{Aig, LeafKind, Lit};
+
+/// One hard carry chain: per-bit operand literals, plus leaf literals for
+/// the sums and the final carry-out that re-enter the AIG.
+#[derive(Clone, Debug)]
+pub struct AdderChainMacro {
+    pub cin: Lit,
+    /// Per-bit operands (a, b).
+    pub ops: Vec<(Lit, Lit)>,
+    /// Sum leaf literals (one per bit).
+    pub sums: Vec<Lit>,
+    /// Final carry-out leaf literal.
+    pub cout: Lit,
+}
+
+/// Key identifying a chain's function for deduplication: identical operand
+/// literals + carry-in compute identical sums, so a single chain can fan
+/// out to every user (§IV "Unrolled Multiplication").
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+struct ChainKey {
+    cin: Lit,
+    ops: Vec<(Lit, Lit)>,
+}
+
+/// A synthesizable design before technology mapping.
+#[derive(Clone, Debug)]
+pub struct Circuit {
+    pub name: String,
+    pub aig: Aig,
+    pub chains: Vec<AdderChainMacro>,
+    /// FFs: (d literal — set after creation, q leaf literal).
+    pub ffs: Vec<(Lit, Lit)>,
+    pub pis: Vec<String>,
+    pub pos: Vec<(String, Lit)>,
+    /// Dedup cache; `None` disables chain deduplication (the VTR-baseline
+    /// behaviour the paper improves on).
+    chain_cache: Option<HashMap<ChainKey, usize>>,
+    /// Count of chain instantiation requests that hit the dedup cache.
+    pub dedup_hits: usize,
+}
+
+impl Circuit {
+    pub fn new(name: &str) -> Self {
+        Circuit {
+            name: name.to_string(),
+            aig: Aig::new(),
+            chains: Vec::new(),
+            ffs: Vec::new(),
+            pis: Vec::new(),
+            pos: Vec::new(),
+            chain_cache: Some(HashMap::new()),
+            dedup_hits: 0,
+        }
+    }
+
+    /// Disable adder-chain deduplication (baseline-VTR mode for Fig. 5).
+    pub fn disable_dedup(&mut self) {
+        self.chain_cache = None;
+    }
+
+    pub fn pi(&mut self, name: &str) -> Lit {
+        self.pis.push(name.to_string());
+        self.aig.pi()
+    }
+
+    /// An n-bit input bus, LSB-first.
+    pub fn pi_bus(&mut self, name: &str, n: usize) -> Vec<Lit> {
+        (0..n).map(|i| self.pi(&format!("{name}[{i}]"))).collect()
+    }
+
+    pub fn po(&mut self, name: &str, lit: Lit) {
+        self.pos.push((name.to_string(), lit));
+    }
+
+    pub fn po_bus(&mut self, name: &str, bits: &[Lit]) {
+        for (i, &b) in bits.iter().enumerate() {
+            self.po(&format!("{name}[{i}]"), b);
+        }
+    }
+
+    /// Create a flip-flop; returns its q literal. Set d later with
+    /// [`Circuit::set_ff_d`].
+    pub fn ff(&mut self) -> Lit {
+        let idx = self.ffs.len() as u32;
+        let q = self.aig.leaf(LeafKind::FfQ(idx));
+        self.ffs.push((Lit::FALSE, q));
+        q
+    }
+
+    pub fn set_ff_d(&mut self, q: Lit, d: Lit) {
+        let idx = self
+            .ffs
+            .iter()
+            .position(|&(_, fq)| fq == q)
+            .expect("not an FF q literal");
+        self.ffs[idx].0 = d;
+    }
+
+    /// Instantiate (or reuse) a carry chain over `ops` with carry-in `cin`.
+    /// Returns (sum literals, cout literal).
+    ///
+    /// Chains are *normalized* before dedup lookup: leading `(0, 0)` bit
+    /// positions (with a zero carry-in) contribute constant-zero sums and
+    /// are stripped, so shift-equivalent chains — e.g. `(x<<1)+(x<<3)`
+    /// versus `x+(x<<2)` in an unrolled multiplier — share one chain, the
+    /// redundancy the paper's Fig. 4 exploits.
+    pub fn add_chain(&mut self, mut ops: Vec<(Lit, Lit)>, cin: Lit) -> (Vec<Lit>, Lit) {
+        assert!(!ops.is_empty(), "empty adder chain");
+        let mut shift = 0usize;
+        if cin == Lit::FALSE {
+            while ops.len() > 1 && ops[0] == (Lit::FALSE, Lit::FALSE) {
+                ops.remove(0);
+                shift += 1;
+            }
+        }
+        if shift > 0 {
+            let (sums, cout) = self.add_chain(ops, cin);
+            let mut full = vec![Lit::FALSE; shift];
+            full.extend(sums);
+            return (full, cout);
+        }
+        let key = ChainKey { cin, ops: ops.clone() };
+        if let Some(cache) = &self.chain_cache {
+            if let Some(&idx) = cache.get(&key) {
+                self.dedup_hits += 1;
+                let ch = &self.chains[idx];
+                return (ch.sums.clone(), ch.cout);
+            }
+        }
+        let chain_id = self.chains.len() as u32;
+        let sums: Vec<Lit> = (0..ops.len())
+            .map(|pos| self.aig.leaf(LeafKind::AdderSum { chain: chain_id, pos: pos as u32 }))
+            .collect();
+        let cout = self.aig.leaf(LeafKind::AdderCout { chain: chain_id });
+        self.chains.push(AdderChainMacro { cin, ops, sums: sums.clone(), cout });
+        if let Some(cache) = &mut self.chain_cache {
+            cache.insert(key, chain_id as usize);
+        }
+        (sums, cout)
+    }
+
+    /// Multi-bit ripple add on a hard chain: `x + y` (widths may differ;
+    /// missing bits are zero).  Returns `max(w_x, w_y) + 1` bits.
+    pub fn ripple_add(&mut self, x: &[Lit], y: &[Lit]) -> Vec<Lit> {
+        let w = x.len().max(y.len());
+        let get = |v: &[Lit], i: usize| v.get(i).copied().unwrap_or(Lit::FALSE);
+        let ops: Vec<(Lit, Lit)> = (0..w).map(|i| (get(x, i), get(y, i))).collect();
+        let (mut sums, cout) = self.add_chain(ops, Lit::FALSE);
+        sums.push(cout);
+        sums
+    }
+
+    /// Instantiate a chain with NO normalization and NO dedup — stock
+    /// VTR's behaviour for inferred bus-width adders (baseline mode).
+    pub fn add_chain_untrimmed(&mut self, ops: Vec<(Lit, Lit)>, cin: Lit) -> (Vec<Lit>, Lit) {
+        assert!(!ops.is_empty(), "empty adder chain");
+        let chain_id = self.chains.len() as u32;
+        let sums: Vec<Lit> = (0..ops.len())
+            .map(|pos| self.aig.leaf(LeafKind::AdderSum { chain: chain_id, pos: pos as u32 }))
+            .collect();
+        let cout = self.aig.leaf(LeafKind::AdderCout { chain: chain_id });
+        self.chains.push(AdderChainMacro { cin, ops, sums: sums.clone(), cout });
+        (sums, cout)
+    }
+
+    /// Would a chain over `ops`/`cin` hit the dedup cache? (Used by the
+    /// Algorithm-1 strength heuristic to reward duplicate placements
+    /// without instantiating anything.)
+    pub fn chain_exists(&self, ops: &[(Lit, Lit)], cin: Lit) -> bool {
+        let Some(cache) = &self.chain_cache else { return false };
+        let mut ops = ops.to_vec();
+        if cin == Lit::FALSE {
+            while ops.len() > 1 && ops[0] == (Lit::FALSE, Lit::FALSE) {
+                ops.remove(0);
+            }
+        }
+        cache.contains_key(&ChainKey { cin, ops })
+    }
+
+    /// Absorb another circuit into this one (fresh PIs/POs/FFs/chains,
+    /// names prefixed) — used to build the Table IV stress designs that
+    /// pack a Kratos circuit plus N SHA instances into one netlist.
+    pub fn absorb(&mut self, other: &Circuit, prefix: &str) {
+        use crate::techmap::aig::{LeafKind, Node};
+        let mut lit_map: Vec<Option<Lit>> = vec![None; other.aig.len()];
+        lit_map[0] = Some(Lit::FALSE);
+        // chain/FF id mapping built lazily as leaves appear.
+        let mut chain_map: Vec<Option<usize>> = vec![None; other.chains.len()];
+        let mut ff_map: Vec<Option<Lit>> = vec![None; other.ffs.len()];
+        let map_lit = |m: &Vec<Option<Lit>>, l: Lit| -> Lit {
+            let base = m[l.node() as usize].expect("forward reference in absorb");
+            if l.is_compl() { base.compl() } else { base }
+        };
+        for id in 0..other.aig.len() as u32 {
+            let mapped: Lit = match *other.aig.node(id) {
+                Node::Const0 => Lit::FALSE,
+                Node::And(a, b) => {
+                    let ma = map_lit(&lit_map, a);
+                    let mb = map_lit(&lit_map, b);
+                    self.aig.and(ma, mb)
+                }
+                Node::Leaf(LeafKind::Pi(i)) => {
+                    self.pi(&format!("{prefix}{}", other.pis[i as usize]))
+                }
+                Node::Leaf(LeafKind::FfQ(i)) => match ff_map[i as usize] {
+                    Some(q) => q,
+                    None => {
+                        let nq = self.ff();
+                        ff_map[i as usize] = Some(nq);
+                        nq
+                    }
+                },
+                // Chain leaves resolved below, after the chain exists.
+                Node::Leaf(LeafKind::AdderSum { .. })
+                | Node::Leaf(LeafKind::AdderCout { .. }) => Lit::FALSE,
+            };
+            lit_map[id as usize] = Some(mapped);
+            // Chain leaves: instantiate the chain on first encounter.
+            if let Node::Leaf(LeafKind::AdderSum { chain, pos }) = *other.aig.node(id) {
+                if chain_map[chain as usize].is_none() {
+                    let ch = &other.chains[chain as usize];
+                    let ops: Vec<(Lit, Lit)> = ch
+                        .ops
+                        .iter()
+                        .map(|&(a, b)| (map_lit(&lit_map, a), map_lit(&lit_map, b)))
+                        .collect();
+                    let cin = map_lit(&lit_map, ch.cin);
+                    let (_, _) = self.add_chain(ops, cin);
+                    chain_map[chain as usize] = Some(self.chains.len() - 1);
+                }
+                let nch = chain_map[chain as usize].unwrap();
+                lit_map[id as usize] = Some(self.chains[nch].sums[pos as usize]);
+            }
+            if let Node::Leaf(LeafKind::AdderCout { chain }) = *other.aig.node(id) {
+                if chain_map[chain as usize].is_none() {
+                    let ch = &other.chains[chain as usize];
+                    let ops: Vec<(Lit, Lit)> = ch
+                        .ops
+                        .iter()
+                        .map(|&(a, b)| (map_lit(&lit_map, a), map_lit(&lit_map, b)))
+                        .collect();
+                    let cin = map_lit(&lit_map, ch.cin);
+                    let (_, _) = self.add_chain(ops, cin);
+                    chain_map[chain as usize] = Some(self.chains.len() - 1);
+                }
+                let nch = chain_map[chain as usize].unwrap();
+                lit_map[id as usize] = Some(self.chains[nch].cout);
+            }
+        }
+        // FF d hookups.
+        for (i, &(d, _)) in other.ffs.iter().enumerate() {
+            if let Some(q) = ff_map[i] {
+                let md = map_lit(&lit_map, d);
+                self.set_ff_d(q, md);
+            }
+        }
+        // POs.
+        for (name, lit) in &other.pos {
+            let ml = map_lit(&lit_map, *lit);
+            self.po(&format!("{prefix}{name}"), ml);
+        }
+    }
+
+    /// Total adder bits across all chains.
+    pub fn num_adder_bits(&self) -> usize {
+        self.chains.iter().map(|c| c.ops.len()).sum()
+    }
+
+    /// Simulate combinationally: FF outputs read `ff_state`, chains are
+    /// evaluated as integer adds.  Returns PO values in declaration order.
+    /// (Oracle for synthesis/mapping tests; small circuits only.)
+    pub fn simulate(&self, pi_vals: &[bool], ff_state: &[bool]) -> Vec<bool> {
+        assert_eq!(pi_vals.len(), self.pis.len());
+        let mut chain_sums: Vec<Option<(Vec<bool>, bool)>> = vec![None; self.chains.len()];
+        // Fixpoint: evaluate chains whose operand cones are ready.
+        loop {
+            let mut progress = false;
+            for (ci, ch) in self.chains.iter().enumerate() {
+                if chain_sums[ci].is_some() {
+                    continue;
+                }
+                let leaf = |k: LeafKind| -> Option<bool> {
+                    match k {
+                        LeafKind::Pi(i) => Some(pi_vals[i as usize]),
+                        LeafKind::FfQ(i) => Some(*ff_state.get(i as usize).unwrap_or(&false)),
+                        LeafKind::AdderSum { chain, pos } => chain_sums
+                            [chain as usize]
+                            .as_ref()
+                            .map(|(s, _)| s[pos as usize]),
+                        LeafKind::AdderCout { chain } => {
+                            chain_sums[chain as usize].as_ref().map(|&(_, c)| c)
+                        }
+                    }
+                };
+                let try_eval = |l: Lit| self.try_eval(l, &leaf);
+                let cin = try_eval(ch.cin);
+                let ops: Option<Vec<(bool, bool)>> = ch
+                    .ops
+                    .iter()
+                    .map(|&(a, b)| Some((try_eval(a)?, try_eval(b)?)))
+                    .collect();
+                if let (Some(mut carry), Some(ops)) = (cin, ops) {
+                    let mut sums = Vec::with_capacity(ops.len());
+                    for (a, b) in ops {
+                        sums.push(a ^ b ^ carry);
+                        carry = (a & b) | (a & carry) | (b & carry);
+                    }
+                    chain_sums[ci] = Some((sums, carry));
+                    progress = true;
+                }
+            }
+            if !progress {
+                break;
+            }
+        }
+        let leaf = |k: LeafKind| -> Option<bool> {
+            match k {
+                LeafKind::Pi(i) => Some(pi_vals[i as usize]),
+                LeafKind::FfQ(i) => Some(*ff_state.get(i as usize).unwrap_or(&false)),
+                LeafKind::AdderSum { chain, pos } => {
+                    chain_sums[chain as usize].as_ref().map(|(s, _)| s[pos as usize])
+                }
+                LeafKind::AdderCout { chain } => {
+                    chain_sums[chain as usize].as_ref().map(|&(_, c)| c)
+                }
+            }
+        };
+        self.pos
+            .iter()
+            .map(|&(_, l)| self.try_eval(l, &leaf).expect("combinational loop or unresolved chain"))
+            .collect()
+    }
+
+    /// Evaluate a literal, returning None if any required leaf is unknown.
+    fn try_eval<F: Fn(LeafKind) -> Option<bool>>(&self, lit: Lit, leaf: &F) -> Option<bool> {
+        use crate::techmap::aig::Node;
+        let mut memo: HashMap<u32, Option<bool>> = HashMap::new();
+        let mut stack = vec![lit.node()];
+        while let Some(&id) = stack.last() {
+            if memo.contains_key(&id) {
+                stack.pop();
+                continue;
+            }
+            match *self.aig.node(id) {
+                Node::Const0 => {
+                    memo.insert(id, Some(false));
+                    stack.pop();
+                }
+                Node::Leaf(k) => {
+                    memo.insert(id, leaf(k));
+                    stack.pop();
+                }
+                Node::And(a, b) => {
+                    let need_a = !memo.contains_key(&a.node());
+                    let need_b = !memo.contains_key(&b.node());
+                    if need_a {
+                        stack.push(a.node());
+                    }
+                    if need_b {
+                        stack.push(b.node());
+                    }
+                    if !need_a && !need_b {
+                        let v = match (memo[&a.node()], memo[&b.node()]) {
+                            (Some(va), Some(vb)) => {
+                                Some((va ^ a.is_compl()) && (vb ^ b.is_compl()))
+                            }
+                            _ => None,
+                        };
+                        memo.insert(id, v);
+                        stack.pop();
+                    }
+                }
+            }
+        }
+        memo[&lit.node()].map(|v| v ^ lit.is_compl())
+    }
+
+    /// Interpret a PO bus as an unsigned integer (LSB-first by PO order of
+    /// `name[i]` buses) for arithmetic tests.
+    pub fn simulate_uint(&self, pi_bits: &[(usize, u64)], widths: &[usize]) -> u64 {
+        // pi_bits: (starting PI index, value) pairs mapped onto the PI list
+        // by `widths` — convenience for bus-shaped circuits.
+        let _ = widths;
+        let mut vals = vec![false; self.pis.len()];
+        for &(start, v) in pi_bits {
+            let mut i = 0;
+            while start + i < vals.len() && i < 64 {
+                vals[start + i] = v >> i & 1 == 1;
+                i += 1;
+            }
+        }
+        let out = self.simulate(&vals, &[]);
+        out.iter()
+            .enumerate()
+            .fold(0u64, |acc, (i, &b)| acc | ((b as u64) << i))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ripple_add_is_integer_add() {
+        let mut c = Circuit::new("add4");
+        let x = c.pi_bus("x", 4);
+        let y = c.pi_bus("y", 4);
+        let s = c.ripple_add(&x, &y);
+        c.po_bus("s", &s);
+        for (a, b) in [(0u64, 0u64), (3, 5), (15, 15), (9, 7), (15, 1)] {
+            let mut vals = vec![false; 8];
+            for i in 0..4 {
+                vals[i] = a >> i & 1 == 1;
+                vals[4 + i] = b >> i & 1 == 1;
+            }
+            let out = c.simulate(&vals, &[]);
+            let got = out.iter().enumerate().fold(0u64, |acc, (i, &v)| acc | ((v as u64) << i));
+            assert_eq!(got, a + b, "{a}+{b}");
+        }
+    }
+
+    #[test]
+    fn chain_dedup_reuses() {
+        let mut c = Circuit::new("dd");
+        let x = c.pi_bus("x", 4);
+        let y = c.pi_bus("y", 4);
+        let s1 = c.ripple_add(&x, &y);
+        let s2 = c.ripple_add(&x, &y);
+        assert_eq!(s1, s2);
+        assert_eq!(c.chains.len(), 1);
+        assert_eq!(c.dedup_hits, 1);
+    }
+
+    #[test]
+    fn dedup_disabled_duplicates() {
+        let mut c = Circuit::new("nodd");
+        c.disable_dedup();
+        let x = c.pi_bus("x", 4);
+        let y = c.pi_bus("y", 4);
+        let _ = c.ripple_add(&x, &y);
+        let _ = c.ripple_add(&x, &y);
+        assert_eq!(c.chains.len(), 2);
+        assert_eq!(c.dedup_hits, 0);
+    }
+
+    #[test]
+    fn chained_chains_simulate() {
+        // (x + y) + z via two chains, second consuming the first's sums.
+        let mut c = Circuit::new("add3");
+        let x = c.pi_bus("x", 3);
+        let y = c.pi_bus("y", 3);
+        let z = c.pi_bus("z", 3);
+        let s1 = c.ripple_add(&x, &y);
+        let s2 = c.ripple_add(&s1, &z);
+        c.po_bus("s", &s2);
+        for (a, b, d) in [(1u64, 2u64, 3u64), (7, 7, 7), (5, 0, 6)] {
+            let mut vals = vec![false; 9];
+            for i in 0..3 {
+                vals[i] = a >> i & 1 == 1;
+                vals[3 + i] = b >> i & 1 == 1;
+                vals[6 + i] = d >> i & 1 == 1;
+            }
+            let out = c.simulate(&vals, &[]);
+            let got = out.iter().enumerate().fold(0u64, |acc, (i, &v)| acc | ((v as u64) << i));
+            assert_eq!(got, a + b + d);
+        }
+    }
+
+    #[test]
+    fn ff_roundtrip() {
+        let mut c = Circuit::new("ff");
+        let a = c.pi("a");
+        let q = c.ff();
+        let d = c.aig.xor(a, q);
+        c.set_ff_d(q, d);
+        c.po("o", q);
+        assert_eq!(c.simulate(&[true], &[false]), vec![false]);
+        assert_eq!(c.simulate(&[true], &[true]), vec![true]);
+    }
+}

@@ -1,0 +1,14 @@
+//! Arithmetic-aware synthesis front-end (the paper's Parmys enhancements).
+//!
+//! A [`circuit::Circuit`] couples an AIG (soft logic) with hard carry-chain
+//! adder macros.  On top of it, [`multiplier`] implements the paper's §IV
+//! algorithms: unrolled-multiplication deduplication with selector-bit row
+//! elision, the strength-heuristic binary adder tree (Algorithm 1), and the
+//! Proposed-Wallace / Dadda compressor trees, plus the naive cascade and a
+//! VTR-baseline mode (no dedup) for the Fig. 5 comparison.
+
+pub mod circuit;
+pub mod multiplier;
+
+pub use circuit::{AdderChainMacro, Circuit};
+pub use multiplier::{reduce_rows, soft_mul, unrolled_mul, AdderAlgo, Rows};

@@ -1,0 +1,570 @@
+//! Soft-multiplier and multi-operand reduction synthesis (paper §IV).
+//!
+//! Partial-product rows are reduced to a final result with one of:
+//!
+//! * [`AdderAlgo::VtrBaseline`] — naive binary adder tree with adjacent
+//!   pairing (what stock VTR/Parmys does; combined with disabling chain
+//!   dedup on the [`Circuit`] this reproduces the paper's baseline).
+//! * [`AdderAlgo::Cascade`] — sequential chain accumulation (Fig. 1 left).
+//! * [`AdderAlgo::BinaryTree`] — the improved binary adder tree using the
+//!   strength heuristic and the Algorithm-1 dynamic program to choose row
+//!   pairings that maximize chain reuse.
+//! * [`AdderAlgo::Wallace`] / [`AdderAlgo::Dadda`] — compressor trees:
+//!   carry-save full/half-adder *gates* (LUT fodder) reduce the rows to
+//!   two, which a single hard carry chain then sums (Fig. 1 middle/right).
+
+use crate::techmap::aig::Lit;
+
+use super::circuit::Circuit;
+
+/// One partial-product row: LSB-first literals, `Lit::FALSE` for absent
+/// bits.  Rows in a set may have different lengths.
+pub type Row = Vec<Lit>;
+/// A set of rows to be summed.
+pub type Rows = Vec<Row>;
+
+/// Reduction algorithm selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum AdderAlgo {
+    VtrBaseline,
+    Cascade,
+    BinaryTree,
+    Wallace,
+    Dadda,
+}
+
+impl AdderAlgo {
+    pub fn name(self) -> &'static str {
+        match self {
+            AdderAlgo::VtrBaseline => "vtr-baseline",
+            AdderAlgo::Cascade => "cascade",
+            AdderAlgo::BinaryTree => "binary-tree",
+            AdderAlgo::Wallace => "wallace",
+            AdderAlgo::Dadda => "dadda",
+        }
+    }
+}
+
+fn bit(row: &Row, i: usize) -> Lit {
+    row.get(i).copied().unwrap_or(Lit::FALSE)
+}
+
+/// Add two rows on a hard carry chain (trimmed to the occupied span).
+fn add_rows(c: &mut Circuit, r1: &Row, r2: &Row) -> Row {
+    add_rows_opt(c, r1, r2, true)
+}
+
+/// Add two rows; with `trim = false` the chain spans the full bus width —
+/// the stock-VTR behaviour (adder inference pads to the declared bus), the
+/// baseline the paper's §IV improvements are measured against.
+fn add_rows_opt(c: &mut Circuit, r1: &Row, r2: &Row, trim: bool) -> Row {
+    let w = r1.len().max(r2.len());
+    let ops: Vec<(Lit, Lit)> = (0..w).map(|i| (bit(r1, i), bit(r2, i))).collect();
+    let last = if trim {
+        // Trim trailing all-zero positions; the cout covers the carry.
+        ops.iter()
+            .rposition(|&(a, b)| a != Lit::FALSE || b != Lit::FALSE)
+            .unwrap_or(0)
+    } else {
+        w - 1
+    };
+    let (sums, cout) = if trim {
+        c.add_chain(ops[..=last].to_vec(), Lit::FALSE)
+    } else {
+        c.add_chain_untrimmed(ops, Lit::FALSE)
+    };
+    let mut out = sums;
+    out.push(cout);
+    out
+}
+
+/// Count of live (non-constant-false) bits in a row.
+fn popcount(row: &Row) -> usize {
+    row.iter().filter(|&&l| l != Lit::FALSE).count()
+}
+
+/// Reduce `rows` to a single row with the chosen algorithm. Returns the
+/// result bits (LSB-first).
+pub fn reduce_rows(c: &mut Circuit, rows: Rows, algo: AdderAlgo) -> Row {
+    let mut rows: Rows = rows.into_iter().filter(|r| popcount(r) > 0).collect();
+    match rows.len() {
+        0 => return vec![Lit::FALSE],
+        1 => return rows.pop().unwrap(),
+        _ => {}
+    }
+    match algo {
+        AdderAlgo::Cascade => {
+            let mut acc = rows[0].clone();
+            for r in &rows[1..] {
+                acc = add_rows(c, &acc, r);
+            }
+            acc
+        }
+        AdderAlgo::VtrBaseline => binary_tree(c, rows, false),
+        AdderAlgo::BinaryTree => binary_tree(c, rows, true),
+        AdderAlgo::Wallace => compressor_tree(c, rows, false),
+        AdderAlgo::Dadda => compressor_tree(c, rows, true),
+    }
+}
+
+/// Binary adder tree. With `strength`, each stage's pairing is chosen by
+/// the Algorithm-1 DP (maximizing included-inputs / unique-chain-outputs);
+/// otherwise rows are paired in order (stock VTR behaviour).
+fn binary_tree(c: &mut Circuit, mut rows: Rows, strength: bool) -> Row {
+    let trim = strength;
+    while rows.len() > 1 {
+        let order: Vec<usize> = if strength && rows.len() <= 14 {
+            best_placement(c, &rows)
+        } else if strength {
+            greedy_placement(&rows)
+        } else {
+            (0..rows.len()).collect()
+        };
+        let mut next: Rows = Vec::with_capacity(rows.len().div_ceil(2));
+        let mut it = order.chunks_exact(2);
+        for pair in &mut it {
+            next.push(add_rows_opt(c, &rows[pair[0]], &rows[pair[1]], trim));
+        }
+        // Odd row passes through to the next stage.
+        if let [leftover] = it.remainder() {
+            next.push(rows[*leftover].clone());
+        }
+        rows = next;
+    }
+    rows.pop().unwrap()
+}
+
+/// Normalized chain key of a candidate pair, mirroring
+/// [`Circuit::add_chain`]'s normalization: for duplicate detection only.
+fn pair_key(r1: &Row, r2: &Row) -> Vec<(Lit, Lit)> {
+    let w = r1.len().max(r2.len());
+    let mut ops: Vec<(Lit, Lit)> = (0..w).map(|i| (bit(r1, i), bit(r2, i))).collect();
+    let last = ops
+        .iter()
+        .rposition(|&(a, b)| a != Lit::FALSE || b != Lit::FALSE)
+        .unwrap_or(0);
+    ops.truncate(last + 1);
+    while ops.len() > 1 && ops[0] == (Lit::FALSE, Lit::FALSE) {
+        ops.remove(0);
+    }
+    ops
+}
+
+/// Algorithm 1: adder row selection for maximum strength, as a DP over row
+/// subsets (bitmask memo).  Returns the row ordering: consecutive pairs
+/// form chains; a trailing single index passes through.
+fn best_placement(c: &Circuit, rows: &Rows) -> Vec<usize> {
+    use std::collections::HashMap;
+
+    #[derive(Clone)]
+    struct Sol {
+        pairs: Vec<(usize, usize)>,
+        inputs: f64,
+        outputs: f64,
+        leftover: Option<usize>,
+    }
+    impl Sol {
+        fn strength(&self) -> f64 {
+            if self.outputs == 0.0 {
+                0.0
+            } else {
+                self.inputs / self.outputs
+            }
+        }
+    }
+
+    let n = rows.len();
+    let full: u32 = if n == 32 { u32::MAX } else { (1u32 << n) - 1 };
+    let mut memo: HashMap<u32, Sol> = HashMap::new();
+
+    // Per-pair precomputation: included inputs (by position) and the chain
+    // key (by chain) for duplicate detection.
+    let mut pair_inputs = vec![vec![0.0f64; n]; n];
+    let mut pair_keys: Vec<Vec<Vec<(Lit, Lit)>>> = vec![vec![Vec::new(); n]; n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            pair_inputs[i][j] = (popcount(&rows[i]) + popcount(&rows[j])) as f64;
+            pair_keys[i][j] = pair_key(&rows[i], &rows[j]);
+        }
+    }
+    let chain_outputs = |key: &Vec<(Lit, Lit)>| (key.len() + 1) as f64;
+
+    fn solve(
+        mask: u32,
+        n: usize,
+        memo: &mut std::collections::HashMap<u32, Sol>,
+        pair_inputs: &Vec<Vec<f64>>,
+        pair_keys: &Vec<Vec<Vec<(Lit, Lit)>>>,
+        chain_outputs: &dyn Fn(&Vec<(Lit, Lit)>) -> f64,
+        c: &Circuit,
+    ) -> Sol {
+        if let Some(s) = memo.get(&mask) {
+            return s.clone();
+        }
+        let count = mask.count_ones() as usize;
+        let members: Vec<usize> = (0..n).filter(|&i| mask >> i & 1 == 1).collect();
+        let sol = if count == 0 {
+            Sol { pairs: vec![], inputs: 0.0, outputs: 0.0, leftover: None }
+        } else if count == 1 {
+            Sol { pairs: vec![], inputs: 0.0, outputs: 0.0, leftover: Some(members[0]) }
+        } else if count % 2 == 0 {
+            // Anchor on the lowest member to avoid enumerating symmetric
+            // pairings (every perfect matching pairs it with someone).
+            let a = members[0];
+            let mut best: Option<Sol> = None;
+            for &b in &members[1..] {
+                let sub = solve(mask & !(1 << a) & !(1 << b), n, memo,
+                                pair_inputs, pair_keys, chain_outputs, c);
+                let (lo, hi) = (a.min(b), a.max(b));
+                let key = &pair_keys[lo][hi];
+                let mut inputs = sub.inputs + pair_inputs[lo][hi];
+                let mut outputs = sub.outputs;
+                // A duplicate chain (already placed in this solution or in
+                // the circuit at large) adds inputs but no new outputs.
+                let dup_in_sub = sub
+                    .pairs
+                    .iter()
+                    .any(|&(x, y)| pair_keys[x.min(y)][x.max(y)] == *key);
+                let dup_global = c.chain_exists(key, Lit::FALSE);
+                if !(dup_in_sub || dup_global) {
+                    outputs += chain_outputs(key);
+                }
+                let _ = &mut inputs;
+                let mut pairs = sub.pairs.clone();
+                pairs.push((a, b));
+                let cand = Sol { pairs, inputs, outputs, leftover: sub.leftover };
+                if best.as_ref().map_or(true, |s| cand.strength() > s.strength()) {
+                    best = Some(cand);
+                }
+            }
+            best.unwrap()
+        } else {
+            // Odd: choose which row passes through.
+            let mut best: Option<Sol> = None;
+            for &r in &members {
+                let sub = solve(mask & !(1 << r), n, memo,
+                                pair_inputs, pair_keys, chain_outputs, c);
+                let cand = Sol { leftover: Some(r), ..sub };
+                if best.as_ref().map_or(true, |s| cand.strength() > s.strength()) {
+                    best = Some(cand);
+                }
+            }
+            best.unwrap()
+        };
+        memo.insert(mask, sol.clone());
+        sol
+    }
+
+    let sol = solve(full, n, &mut memo, &pair_inputs, &pair_keys, &chain_outputs, c);
+    let mut order = Vec::with_capacity(n);
+    for (a, b) in sol.pairs {
+        order.push(a);
+        order.push(b);
+    }
+    if let Some(l) = sol.leftover {
+        order.push(l);
+    }
+    order
+}
+
+/// Greedy fallback for wide row sets: pair rows with identical normalized
+/// chain keys first (guaranteed dedup), then the rest in order.
+fn greedy_placement(rows: &Rows) -> Vec<usize> {
+    use std::collections::HashMap;
+    let n = rows.len();
+    let mut by_key: HashMap<Vec<(Lit, Lit)>, Vec<usize>> = HashMap::new();
+    // Normalized single-row signature: rows whose pairwise sums coincide
+    // pair best with rows of the same shape; approximate by grouping rows
+    // with equal trimmed content.
+    for (i, r) in rows.iter().enumerate() {
+        let key = pair_key(r, &vec![]);
+        by_key.entry(key).or_default().push(i);
+    }
+    let mut order = Vec::with_capacity(n);
+    let mut used = vec![false; n];
+    let mut groups: Vec<Vec<usize>> = by_key.into_values().collect();
+    groups.sort_by_key(|g| g[0]);
+    for g in &groups {
+        for &i in g {
+            if !used[i] {
+                order.push(i);
+                used[i] = true;
+            }
+        }
+    }
+    order
+}
+
+/// Compressor tree (carry-save) reduction. `dadda = false` is Wallace
+/// (maximal per-stage compression); `dadda = true` follows the Dadda
+/// height sequence (minimal per-stage work).  Final two rows are summed on
+/// one hard carry chain.
+fn compressor_tree(c: &mut Circuit, rows: Rows, dadda: bool) -> Row {
+    let width = rows.iter().map(|r| r.len()).max().unwrap_or(1) + rows.len();
+    // Column-major bit matrix.
+    let mut cols: Vec<Vec<Lit>> = vec![Vec::new(); width];
+    for r in &rows {
+        for (i, &b) in r.iter().enumerate() {
+            if b != Lit::FALSE {
+                cols[i].push(b);
+            }
+        }
+    }
+
+    // Dadda height targets: 2, 3, 4, 6, 9, 13, 19, ...
+    let dadda_seq = |max_h: usize| -> Vec<usize> {
+        let mut seq = vec![2usize];
+        while *seq.last().unwrap() < max_h {
+            let d = *seq.last().unwrap();
+            seq.push(d * 3 / 2);
+        }
+        seq
+    };
+
+    loop {
+        let max_h = cols.iter().map(|c| c.len()).max().unwrap_or(0);
+        if max_h <= 2 {
+            break;
+        }
+        let target = if dadda {
+            let seq = dadda_seq(max_h);
+            // Largest target strictly below the current max height.
+            *seq.iter().rev().find(|&&d| d < max_h).unwrap_or(&2)
+        } else {
+            // Wallace: compress everything maximally this stage.
+            2
+        };
+        let mut next: Vec<Vec<Lit>> = vec![Vec::new(); width + 1];
+        for i in 0..width {
+            let mut bits = std::mem::take(&mut cols[i]);
+            // Carry bits produced into this column during this stage are
+            // already in `next[i]`; account for them against the target.
+            let carried = next[i].len();
+            while bits.len() + carried > target && bits.len() >= 3 {
+                let (a, b, d) = (bits.pop().unwrap(), bits.pop().unwrap(), bits.pop().unwrap());
+                let s = c.aig.xor3(a, b, d);
+                let cy = c.aig.maj3(a, b, d);
+                bits.push(s);
+                // Full adder: 3 -> 1 here + carry into column i+1.
+                next[i + 1].push(cy);
+            }
+            if bits.len() + carried > target && bits.len() >= 2 {
+                let (a, b) = (bits.pop().unwrap(), bits.pop().unwrap());
+                let s = c.aig.xor(a, b);
+                let cy = c.aig.and(a, b);
+                bits.push(s);
+                next[i + 1].push(cy);
+            }
+            next[i].extend(bits);
+        }
+        next.truncate(width);
+        cols = next;
+    }
+
+    // Assemble the final two rows and sum them on a hard chain.
+    let mut r1 = vec![Lit::FALSE; width];
+    let mut r2 = vec![Lit::FALSE; width];
+    for (i, col) in cols.iter().enumerate() {
+        if let Some(&a) = col.first() {
+            r1[i] = a;
+        }
+        if let Some(&b) = col.get(1) {
+            r2[i] = b;
+        }
+    }
+    if popcount(&r2) == 0 {
+        return r1;
+    }
+    add_rows(c, &r1, &r2)
+}
+
+/// Unrolled multiplication by a compile-time constant: rows are shifted
+/// copies of `x` for each set bit of `konst` (selector-bit elision — zero
+/// bits contribute no row).
+pub fn unrolled_mul(c: &mut Circuit, x: &[Lit], konst: u64, kbits: usize,
+                    algo: AdderAlgo) -> Row {
+    let width = x.len() + kbits;
+    let mut rows: Rows = Vec::new();
+    for j in 0..kbits.min(64) {
+        if konst >> j & 1 == 1 {
+            let mut row = vec![Lit::FALSE; width];
+            for (i, &b) in x.iter().enumerate() {
+                row[i + j] = b;
+            }
+            rows.push(row);
+        }
+    }
+    if rows.is_empty() {
+        return vec![Lit::FALSE; width];
+    }
+    let mut out = reduce_rows(c, rows, algo);
+    out.truncate(width);
+    out
+}
+
+/// General soft multiplication `x * y` (both unknown): AND-gate partial
+/// products reduced with the chosen algorithm.
+pub fn soft_mul(c: &mut Circuit, x: &[Lit], y: &[Lit], algo: AdderAlgo) -> Row {
+    let width = x.len() + y.len();
+    let mut rows: Rows = Vec::new();
+    for (j, &yj) in y.iter().enumerate() {
+        let mut row = vec![Lit::FALSE; width];
+        for (i, &xi) in x.iter().enumerate() {
+            row[i + j] = c.aig.and(xi, yj);
+        }
+        rows.push(row);
+    }
+    let mut out = reduce_rows(c, rows, algo);
+    out.truncate(width);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const ALGOS: [AdderAlgo; 5] = [
+        AdderAlgo::VtrBaseline,
+        AdderAlgo::Cascade,
+        AdderAlgo::BinaryTree,
+        AdderAlgo::Wallace,
+        AdderAlgo::Dadda,
+    ];
+
+    fn check_soft_mul(algo: AdderAlgo, w: usize) {
+        let mut c = Circuit::new("mul");
+        let x = c.pi_bus("x", w);
+        let y = c.pi_bus("y", w);
+        let p = soft_mul(&mut c, &x, &y, algo);
+        c.po_bus("p", &p);
+        let cases: Vec<(u64, u64)> = vec![
+            (0, 0), (1, 1), (3, 5), ((1 << w) - 1, (1 << w) - 1),
+            (5, (1 << w) - 2), (2, 3),
+        ];
+        for (a, b) in cases {
+            let a = a & ((1 << w) - 1);
+            let b = b & ((1 << w) - 1);
+            let mut vals = vec![false; 2 * w];
+            for i in 0..w {
+                vals[i] = a >> i & 1 == 1;
+                vals[w + i] = b >> i & 1 == 1;
+            }
+            let out = c.simulate(&vals, &[]);
+            let got = out.iter().enumerate().fold(0u64, |acc, (i, &v)| acc | ((v as u64) << i));
+            assert_eq!(got, a * b, "{}x{}: {a}*{b} ({})", w, w, algo.name());
+        }
+    }
+
+    #[test]
+    fn soft_mul_all_algos_4bit() {
+        for algo in ALGOS {
+            check_soft_mul(algo, 4);
+        }
+    }
+
+    #[test]
+    fn soft_mul_all_algos_6bit() {
+        for algo in ALGOS {
+            check_soft_mul(algo, 6);
+        }
+    }
+
+    fn check_unrolled(algo: AdderAlgo, w: usize, k: u64) {
+        let mut c = Circuit::new("umul");
+        let x = c.pi_bus("x", w);
+        let p = unrolled_mul(&mut c, &x, k, w, algo);
+        c.po_bus("p", &p);
+        for a in [0u64, 1, 3, 7, (1 << w) - 1, 5] {
+            let a = a & ((1 << w) - 1);
+            let mut vals = vec![false; w];
+            for i in 0..w {
+                vals[i] = a >> i & 1 == 1;
+            }
+            let out = c.simulate(&vals, &[]);
+            let got = out.iter().enumerate().fold(0u64, |acc, (i, &v)| acc | ((v as u64) << i));
+            let mask = (1u64 << (w + w)) - 1;
+            assert_eq!(got, (a * k) & mask, "{a}*{k} ({})", algo.name());
+        }
+    }
+
+    #[test]
+    fn unrolled_mul_all_algos() {
+        for algo in ALGOS {
+            check_unrolled(algo, 6, 0b010101);
+            check_unrolled(algo, 6, 0b111111);
+            check_unrolled(algo, 4, 0b1001);
+        }
+    }
+
+    #[test]
+    fn unrolled_zero_constant() {
+        let mut c = Circuit::new("z");
+        let x = c.pi_bus("x", 4);
+        let p = unrolled_mul(&mut c, &x, 0, 4, AdderAlgo::Wallace);
+        assert!(p.iter().all(|&b| b == Lit::FALSE));
+    }
+
+    /// The paper's headline CAD example: an 8-bit multiply by 0b01010101
+    /// needs far fewer adders with dedup than the VTR baseline (2.85x).
+    #[test]
+    fn dedup_saves_adders_on_01010101() {
+        let mut base = Circuit::new("b");
+        base.disable_dedup();
+        let xb = base.pi_bus("x", 8);
+        let _ = unrolled_mul(&mut base, &xb, 0b01010101, 8, AdderAlgo::VtrBaseline);
+
+        let mut opt = Circuit::new("o");
+        let xo = opt.pi_bus("x", 8);
+        let _ = unrolled_mul(&mut opt, &xo, 0b01010101, 8, AdderAlgo::BinaryTree);
+
+        let nb = base.num_adder_bits();
+        let no = opt.num_adder_bits();
+        assert!(nb as f64 / no as f64 > 1.6,
+                "baseline {nb} vs optimized {no} adder bits");
+    }
+
+    /// Wallace minimizes stages aggressively; Dadda defers work. Both must
+    /// use fewer adder bits than cascade on wide reductions.
+    #[test]
+    fn compressor_trees_use_fewer_hard_adders_than_cascade() {
+        let count = |algo: AdderAlgo| {
+            let mut c = Circuit::new("m");
+            c.disable_dedup();
+            let x = c.pi_bus("x", 8);
+            let y = c.pi_bus("y", 8);
+            let _ = soft_mul(&mut c, &x, &y, algo);
+            c.num_adder_bits()
+        };
+        let cascade = count(AdderAlgo::Cascade);
+        let wallace = count(AdderAlgo::Wallace);
+        let dadda = count(AdderAlgo::Dadda);
+        assert!(wallace < cascade, "wallace {wallace} vs cascade {cascade}");
+        assert!(dadda < cascade, "dadda {dadda} vs cascade {cascade}");
+    }
+
+    /// Compressor trees shift work into LUT logic (AIG gates).
+    #[test]
+    fn compressor_trees_emit_soft_logic() {
+        let mut c = Circuit::new("m");
+        let x = c.pi_bus("x", 6);
+        let y = c.pi_bus("y", 6);
+        let before = c.aig.num_ands();
+        let _ = soft_mul(&mut c, &x, &y, AdderAlgo::Wallace);
+        assert!(c.aig.num_ands() > before + 20);
+    }
+
+    #[test]
+    fn strength_dp_handles_odd_row_counts() {
+        let mut c = Circuit::new("odd");
+        let x = c.pi_bus("x", 5);
+        // 5 set bits -> 5 rows.
+        let p = unrolled_mul(&mut c, &x, 0b11111, 5, AdderAlgo::BinaryTree);
+        c.po_bus("p", &p);
+        let mut vals = vec![false; 5];
+        vals[0] = true;
+        vals[2] = true; // x = 5
+        let out = c.simulate(&vals, &[]);
+        let got = out.iter().enumerate().fold(0u64, |acc, (i, &v)| acc | ((v as u64) << i));
+        assert_eq!(got, 5 * 0b11111);
+    }
+}

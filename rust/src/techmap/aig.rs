@@ -1,0 +1,336 @@
+//! And-Inverter Graph with structural hashing and constant folding.
+//!
+//! The pre-mapping logic representation (the ABC substitute's core).  All
+//! combinational logic — including the compressor-tree carry-save gates the
+//! arithmetic synthesis emits — lives here; hard carry-chain adders stay
+//! outside as macros whose operand inputs are [`Lit`]s into this graph and
+//! whose sum/cout outputs re-enter it as [`LeafKind`] leaf nodes.
+
+use std::collections::HashMap;
+
+/// Node index.
+pub type NodeId = u32;
+
+/// A literal: node id with a complement bit in the LSB.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Lit(pub u32);
+
+impl Lit {
+    pub const FALSE: Lit = Lit(0);
+    pub const TRUE: Lit = Lit(1);
+
+    #[inline]
+    pub fn new(node: NodeId, compl: bool) -> Lit {
+        Lit(node << 1 | compl as u32)
+    }
+
+    #[inline]
+    pub fn node(self) -> NodeId {
+        self.0 >> 1
+    }
+
+    #[inline]
+    pub fn is_compl(self) -> bool {
+        self.0 & 1 == 1
+    }
+
+    #[inline]
+    #[must_use]
+    pub fn compl(self) -> Lit {
+        Lit(self.0 ^ 1)
+    }
+
+    #[inline]
+    pub fn is_const(self) -> bool {
+        self.node() == 0
+    }
+}
+
+impl std::fmt::Debug for Lit {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.is_compl() {
+            write!(f, "!n{}", self.node())
+        } else {
+            write!(f, "n{}", self.node())
+        }
+    }
+}
+
+/// External leaf sources feeding the AIG.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LeafKind {
+    /// Primary input (index into the circuit's PI list).
+    Pi(u32),
+    /// Flip-flop output (index into the circuit's FF list).
+    FfQ(u32),
+    /// Sum output of carry-chain `chain`, bit `pos`.
+    AdderSum { chain: u32, pos: u32 },
+    /// Final carry-out of carry-chain `chain`.
+    AdderCout { chain: u32 },
+}
+
+/// AIG node.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Node {
+    /// Node 0 only: constant false.
+    Const0,
+    /// External source (PI, FF output, adder output).
+    Leaf(LeafKind),
+    /// Two-input AND of literals.
+    And(Lit, Lit),
+}
+
+/// The graph.
+#[derive(Clone, Debug, Default)]
+pub struct Aig {
+    pub nodes: Vec<Node>,
+    strash: HashMap<(Lit, Lit), NodeId>,
+    /// Reference (fanout) counts, maintained for mapped-area heuristics.
+    pub n_pis: u32,
+}
+
+impl Aig {
+    pub fn new() -> Self {
+        Aig { nodes: vec![Node::Const0], strash: HashMap::new(), n_pis: 0 }
+    }
+
+    /// Add a primary input leaf; returns its (positive) literal.
+    pub fn pi(&mut self) -> Lit {
+        let idx = self.n_pis;
+        self.n_pis += 1;
+        self.leaf(LeafKind::Pi(idx))
+    }
+
+    /// Add an arbitrary leaf node.
+    pub fn leaf(&mut self, kind: LeafKind) -> Lit {
+        let id = self.nodes.len() as NodeId;
+        self.nodes.push(Node::Leaf(kind));
+        Lit::new(id, false)
+    }
+
+    /// Structural-hashed AND with constant folding and trivial rules.
+    pub fn and(&mut self, a: Lit, b: Lit) -> Lit {
+        // Constant / trivial cases.
+        if a == Lit::FALSE || b == Lit::FALSE {
+            return Lit::FALSE;
+        }
+        if a == Lit::TRUE {
+            return b;
+        }
+        if b == Lit::TRUE {
+            return a;
+        }
+        if a == b {
+            return a;
+        }
+        if a == b.compl() {
+            return Lit::FALSE;
+        }
+        // Canonical order for hashing.
+        let (a, b) = if a.0 <= b.0 { (a, b) } else { (b, a) };
+        if let Some(&id) = self.strash.get(&(a, b)) {
+            return Lit::new(id, false);
+        }
+        let id = self.nodes.len() as NodeId;
+        self.nodes.push(Node::And(a, b));
+        self.strash.insert((a, b), id);
+        Lit::new(id, false)
+    }
+
+    pub fn or(&mut self, a: Lit, b: Lit) -> Lit {
+        self.and(a.compl(), b.compl()).compl()
+    }
+
+    pub fn xor(&mut self, a: Lit, b: Lit) -> Lit {
+        let n1 = self.and(a, b.compl());
+        let n2 = self.and(a.compl(), b);
+        self.or(n1, n2)
+    }
+
+    pub fn xor3(&mut self, a: Lit, b: Lit, c: Lit) -> Lit {
+        let ab = self.xor(a, b);
+        self.xor(ab, c)
+    }
+
+    /// Majority-of-three (full-adder carry).
+    pub fn maj3(&mut self, a: Lit, b: Lit, c: Lit) -> Lit {
+        let ab = self.and(a, b);
+        let ac = self.and(a, c);
+        let bc = self.and(b, c);
+        let t = self.or(ab, ac);
+        self.or(t, bc)
+    }
+
+    /// 2:1 mux: `s ? t : e`.
+    pub fn mux(&mut self, s: Lit, t: Lit, e: Lit) -> Lit {
+        let st = self.and(s, t);
+        let se = self.and(s.compl(), e);
+        self.or(st, se)
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id as usize]
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.len() <= 1
+    }
+
+    /// Count AND nodes (logic size).
+    pub fn num_ands(&self) -> usize {
+        self.nodes.iter().filter(|n| matches!(n, Node::And(..))).count()
+    }
+
+    /// Evaluate a literal under a leaf assignment (for tests/oracles).
+    /// `leaf_val(kind)` supplies values for leaves.
+    pub fn eval<F: Fn(LeafKind) -> bool + Copy>(&self, lit: Lit, leaf_val: F) -> bool {
+        // Iterative post-order evaluation with memoization.
+        let mut memo: HashMap<NodeId, bool> = HashMap::new();
+        let mut stack = vec![lit.node()];
+        while let Some(&id) = stack.last() {
+            if memo.contains_key(&id) {
+                stack.pop();
+                continue;
+            }
+            match self.nodes[id as usize] {
+                Node::Const0 => {
+                    memo.insert(id, false);
+                    stack.pop();
+                }
+                Node::Leaf(k) => {
+                    memo.insert(id, leaf_val(k));
+                    stack.pop();
+                }
+                Node::And(a, b) => {
+                    let need_a = !memo.contains_key(&a.node());
+                    let need_b = !memo.contains_key(&b.node());
+                    if need_a {
+                        stack.push(a.node());
+                    }
+                    if need_b {
+                        stack.push(b.node());
+                    }
+                    if !need_a && !need_b {
+                        let va = memo[&a.node()] ^ a.is_compl();
+                        let vb = memo[&b.node()] ^ b.is_compl();
+                        memo.insert(id, va && vb);
+                        stack.pop();
+                    }
+                }
+            }
+        }
+        memo[&lit.node()] ^ lit.is_compl()
+    }
+
+    /// Fanout counts of every node reachable from `roots` (and the roots'
+    /// own references), used by area-flow heuristics and absorption rules.
+    pub fn fanout_counts(&self, roots: &[Lit]) -> Vec<u32> {
+        let mut counts = vec![0u32; self.nodes.len()];
+        for r in roots {
+            counts[r.node() as usize] += 1;
+        }
+        // Count structural references from AND nodes (the whole graph).
+        for n in &self.nodes {
+            if let Node::And(a, b) = n {
+                counts[a.node() as usize] += 1;
+                counts[b.node() as usize] += 1;
+            }
+        }
+        counts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_folding() {
+        let mut g = Aig::new();
+        let a = g.pi();
+        assert_eq!(g.and(a, Lit::FALSE), Lit::FALSE);
+        assert_eq!(g.and(a, Lit::TRUE), a);
+        assert_eq!(g.and(a, a), a);
+        assert_eq!(g.and(a, a.compl()), Lit::FALSE);
+    }
+
+    #[test]
+    fn structural_hashing_dedups() {
+        let mut g = Aig::new();
+        let a = g.pi();
+        let b = g.pi();
+        let x = g.and(a, b);
+        let y = g.and(b, a);
+        assert_eq!(x, y);
+        assert_eq!(g.num_ands(), 1);
+    }
+
+    #[test]
+    fn xor_truth() {
+        let mut g = Aig::new();
+        let a = g.pi();
+        let b = g.pi();
+        let x = g.xor(a, b);
+        for (va, vb) in [(false, false), (false, true), (true, false), (true, true)] {
+            let got = g.eval(x, |k| match k {
+                LeafKind::Pi(0) => va,
+                LeafKind::Pi(1) => vb,
+                _ => unreachable!(),
+            });
+            assert_eq!(got, va ^ vb);
+        }
+    }
+
+    #[test]
+    fn maj_and_mux_truth() {
+        let mut g = Aig::new();
+        let a = g.pi();
+        let b = g.pi();
+        let c = g.pi();
+        let m = g.maj3(a, b, c);
+        let x = g.mux(a, b, c);
+        for i in 0..8u32 {
+            let v = [i & 1 == 1, i >> 1 & 1 == 1, i >> 2 & 1 == 1];
+            let leaf = |k: LeafKind| match k {
+                LeafKind::Pi(j) => v[j as usize],
+                _ => unreachable!(),
+            };
+            assert_eq!(g.eval(m, leaf),
+                       (v[0] & v[1]) | (v[0] & v[2]) | (v[1] & v[2]));
+            assert_eq!(g.eval(x, leaf), if v[0] { v[1] } else { v[2] });
+        }
+    }
+
+    #[test]
+    fn xor3_is_parity() {
+        let mut g = Aig::new();
+        let a = g.pi();
+        let b = g.pi();
+        let c = g.pi();
+        let s = g.xor3(a, b, c);
+        for i in 0..8u32 {
+            let v = [i & 1 == 1, i >> 1 & 1 == 1, i >> 2 & 1 == 1];
+            let got = g.eval(s, |k| match k {
+                LeafKind::Pi(j) => v[j as usize],
+                _ => unreachable!(),
+            });
+            assert_eq!(got, v[0] ^ v[1] ^ v[2]);
+        }
+    }
+
+    #[test]
+    fn fanout_counts() {
+        let mut g = Aig::new();
+        let a = g.pi();
+        let b = g.pi();
+        let x = g.and(a, b);
+        let y = g.and(x, b.compl());
+        let counts = g.fanout_counts(&[y]);
+        assert_eq!(counts[x.node() as usize], 1);
+        assert_eq!(counts[b.node() as usize], 2);
+    }
+}

@@ -1,0 +1,552 @@
+//! Priority-cuts K-LUT technology mapping (the ABC substitute).
+//!
+//! Depth-oriented cut-based mapping with area-flow tie-breaking, the
+//! standard FPGA mapping recipe: enumerate up to `cuts_per_node` K-feasible
+//! cuts per AND node (merging fanin cut sets), rank by (depth, area-flow),
+//! then select cuts top-down from the mapping roots (POs, FF data inputs,
+//! adder operands, chain carry-ins).  Selected cones become LUT cells whose
+//! truth tables are computed by simulating the cone over its cut leaves.
+
+use std::collections::HashMap;
+
+use crate::netlist::{CellKind, Netlist, NetId};
+use crate::synth::circuit::Circuit;
+
+use super::aig::{LeafKind, Lit, Node, NodeId};
+
+/// Mapping options.
+#[derive(Clone, Copy, Debug)]
+pub struct MapOpts {
+    /// Maximum LUT input count (6 for the fracturable Stratix ALM).
+    pub k: u8,
+    /// Priority cuts kept per node.
+    pub cuts_per_node: usize,
+}
+
+impl Default for MapOpts {
+    fn default() -> Self {
+        MapOpts { k: 6, cuts_per_node: 8 }
+    }
+}
+
+/// One cut: sorted leaf node ids (<= K of them).
+#[derive(Clone, Debug, PartialEq)]
+struct Cut {
+    leaves: Vec<NodeId>,
+    depth: u32,
+    area_flow: f64,
+}
+
+/// Merge two sorted leaf sets; None if the union exceeds `k`.
+fn merge_leaves(a: &[NodeId], b: &[NodeId], k: usize) -> Option<Vec<NodeId>> {
+    let mut out = Vec::with_capacity(k);
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() || j < b.len() {
+        let next = match (a.get(i), b.get(j)) {
+            (Some(&x), Some(&y)) if x == y => {
+                i += 1;
+                j += 1;
+                x
+            }
+            (Some(&x), Some(&y)) if x < y => {
+                i += 1;
+                x
+            }
+            (Some(_), Some(&y)) => {
+                j += 1;
+                y
+            }
+            (Some(&x), None) => {
+                i += 1;
+                x
+            }
+            (None, Some(&y)) => {
+                j += 1;
+                y
+            }
+            (None, None) => break,
+        };
+        if out.len() == k {
+            return None;
+        }
+        out.push(next);
+    }
+    Some(out)
+}
+
+/// Map a synthesized circuit to a technology-mapped netlist.
+pub fn map_circuit(circ: &Circuit, opts: &MapOpts) -> Netlist {
+    let aig = &circ.aig;
+    let k = opts.k as usize;
+    let n = aig.len();
+
+    // --- Mapping roots: every literal that must exist as a net. ---------
+    let mut roots: Vec<Lit> = Vec::new();
+    roots.extend(circ.pos.iter().map(|&(_, l)| l));
+    roots.extend(circ.ffs.iter().map(|&(d, _)| d));
+    for ch in &circ.chains {
+        roots.push(ch.cin);
+        for &(a, b) in &ch.ops {
+            roots.push(a);
+            roots.push(b);
+        }
+    }
+
+    let fanout = aig.fanout_counts(&roots);
+
+    // --- Cut enumeration in topological (index) order. ------------------
+    // nodes[i] only references nodes with smaller ids, so index order works.
+    let mut cuts: Vec<Vec<Cut>> = Vec::with_capacity(n);
+    let mut best_depth = vec![0u32; n];
+    let mut best_flow = vec![0.0f64; n];
+    for id in 0..n as NodeId {
+        match *aig.node(id) {
+            Node::Const0 | Node::Leaf(_) => {
+                cuts.push(vec![Cut { leaves: vec![id], depth: 0, area_flow: 0.0 }]);
+            }
+            Node::And(a, b) => {
+                let mut cand: Vec<Cut> = Vec::with_capacity(opts.cuts_per_node * 4);
+                for ca in &cuts[a.node() as usize] {
+                    for cb in &cuts[b.node() as usize] {
+                        if let Some(leaves) = merge_leaves(&ca.leaves, &cb.leaves, k) {
+                            let depth = 1 + leaves
+                                .iter()
+                                .map(|&l| best_depth[l as usize])
+                                .max()
+                                .unwrap_or(0);
+                            let flow_sum: f64 = leaves
+                                .iter()
+                                .map(|&l| best_flow[l as usize])
+                                .sum();
+                            let fo = fanout[id as usize].max(1) as f64;
+                            cand.push(Cut {
+                                leaves,
+                                depth,
+                                area_flow: (1.0 + flow_sum) / fo,
+                            });
+                        }
+                    }
+                }
+                // The {a, b} fanin cut is always 2-feasible and guarantees
+                // a non-empty candidate set even when all merges overflow K.
+                {
+                    let mut leaves = vec![a.node(), b.node()];
+                    leaves.sort_unstable();
+                    leaves.dedup();
+                    let depth = 1 + leaves
+                        .iter()
+                        .map(|&l| best_depth[l as usize])
+                        .max()
+                        .unwrap_or(0);
+                    let flow_sum: f64 =
+                        leaves.iter().map(|&l| best_flow[l as usize]).sum();
+                    let fo = fanout[id as usize].max(1) as f64;
+                    cand.push(Cut { leaves, depth, area_flow: (1.0 + flow_sum) / fo });
+                }
+                cand.sort_by(|x, y| {
+                    x.depth
+                        .cmp(&y.depth)
+                        .then(x.area_flow.partial_cmp(&y.area_flow).unwrap())
+                        .then(x.leaves.len().cmp(&y.leaves.len()))
+                });
+                cand.dedup_by(|a, b| a.leaves == b.leaves);
+                cand.truncate(opts.cuts_per_node);
+                best_depth[id as usize] = cand[0].depth;
+                best_flow[id as usize] = cand[0].area_flow;
+                cuts.push(cand);
+            }
+        }
+    }
+
+    // --- Top-down cut selection. -----------------------------------------
+    let mut selected: HashMap<NodeId, Vec<NodeId>> = HashMap::new();
+    let mut stack: Vec<NodeId> = roots
+        .iter()
+        .map(|l| l.node())
+        .filter(|&id| matches!(aig.node(id), Node::And(..)))
+        .collect();
+    while let Some(id) = stack.pop() {
+        if selected.contains_key(&id) {
+            continue;
+        }
+        let leaves = cuts[id as usize][0].leaves.clone();
+        for &l in &leaves {
+            if matches!(aig.node(l), Node::And(..)) {
+                stack.push(l);
+            }
+        }
+        selected.insert(id, leaves);
+    }
+
+    // --- Netlist construction. -------------------------------------------
+    let mut nl = Netlist::new(&circ.name);
+
+    let mut node_net: HashMap<NodeId, NetId> = HashMap::new();
+    let mut const0_net: Option<NetId> = None;
+    let mut const1_net: Option<NetId> = None;
+    let mut inv_net: HashMap<NodeId, NetId> = HashMap::new();
+
+    // Primary inputs.
+    let mut pi_nets: Vec<NetId> = Vec::with_capacity(circ.pis.len());
+    for name in &circ.pis {
+        pi_nets.push(nl.add_input(name));
+    }
+    // FF outputs.
+    let mut ff_q_nets: Vec<NetId> = Vec::with_capacity(circ.ffs.len());
+    for i in 0..circ.ffs.len() {
+        ff_q_nets.push(nl.add_net(format!("ff{}__q", i)));
+    }
+    // Chain outputs.
+    let mut chain_sum_nets: Vec<Vec<NetId>> = Vec::with_capacity(circ.chains.len());
+    let mut chain_cout_nets: Vec<NetId> = Vec::with_capacity(circ.chains.len());
+    for (ci, ch) in circ.chains.iter().enumerate() {
+        chain_sum_nets.push(
+            (0..ch.ops.len())
+                .map(|p| nl.add_net(format!("ch{}_s{}", ci, p)))
+                .collect(),
+        );
+        chain_cout_nets.push(nl.add_net(format!("ch{}_cout", ci)));
+    }
+
+    for id in 0..n as NodeId {
+        if let Node::Leaf(kind) = *aig.node(id) {
+            let net = match kind {
+                LeafKind::Pi(i) => pi_nets[i as usize],
+                LeafKind::FfQ(i) => ff_q_nets[i as usize],
+                LeafKind::AdderSum { chain, pos } => {
+                    chain_sum_nets[chain as usize][pos as usize]
+                }
+                LeafKind::AdderCout { chain } => chain_cout_nets[chain as usize],
+            };
+            node_net.insert(id, net);
+        }
+    }
+
+    // Polarity analysis: a selected node needs its positive net when it is
+    // a cut leaf of another cone or a positive root; a complemented root
+    // usage gets a dedicated LUT with the complemented truth table (ABC's
+    // polarity-aware mapping), not an inverter chain.
+    let mut pos_need: std::collections::HashSet<NodeId> = std::collections::HashSet::new();
+    let mut neg_need: std::collections::HashSet<NodeId> = std::collections::HashSet::new();
+    for leaves in selected.values() {
+        for &l in leaves {
+            if matches!(aig.node(l), Node::And(..)) {
+                pos_need.insert(l);
+            }
+        }
+    }
+    for r in &roots {
+        if matches!(aig.node(r.node()), Node::And(..)) {
+            if r.is_compl() {
+                neg_need.insert(r.node());
+            } else {
+                pos_need.insert(r.node());
+            }
+        }
+    }
+
+    // Selected AND nodes in topological order get LUT cells.
+    let mut order: Vec<NodeId> = selected.keys().copied().collect();
+    order.sort_unstable();
+    let mut neg_net: HashMap<NodeId, NetId> = HashMap::new();
+    for &id in &order {
+        if pos_need.contains(&id) {
+            let net = nl.add_net(format!("n{}", id));
+            node_net.insert(id, net);
+        }
+        if neg_need.contains(&id) {
+            let net = nl.add_net(format!("n{}_neg", id));
+            neg_net.insert(id, net);
+        }
+    }
+    for &id in &order {
+        let leaves = &selected[&id];
+        let kk = leaves.len();
+        let truth = cone_truth(aig, id, leaves);
+        let rows = 1u32 << kk;
+        let tmask: u64 = if rows == 64 { u64::MAX } else { (1u64 << rows) - 1 };
+        let ins: Vec<NetId> = leaves.iter().map(|l| node_net[l]).collect();
+        if let Some(&out) = node_net.get(&id).filter(|_| pos_need.contains(&id)) {
+            nl.add_cell(
+                CellKind::Lut { k: kk as u8, truth },
+                format!("lut_n{}", id),
+                ins.clone(),
+                vec![out],
+            );
+        }
+        if let Some(&out) = neg_net.get(&id) {
+            nl.add_cell(
+                CellKind::Lut { k: kk as u8, truth: !truth & tmask },
+                format!("lut_n{}_neg", id),
+                ins,
+                vec![out],
+            );
+        }
+    }
+
+    // Materialize a net for an arbitrary literal.
+    let mut net_of_lit = |nl: &mut Netlist, lit: Lit| -> NetId {
+        if lit == Lit::FALSE {
+            return *const0_net.get_or_insert_with(|| {
+                let net = nl.add_net("const0");
+                nl.add_cell(CellKind::Const(false), "gnd", vec![], vec![net]);
+                net
+            });
+        }
+        if lit == Lit::TRUE {
+            return *const1_net.get_or_insert_with(|| {
+                let net = nl.add_net("const1");
+                nl.add_cell(CellKind::Const(true), "vcc", vec![], vec![net]);
+                net
+            });
+        }
+        if !lit.is_compl() {
+            return node_net[&lit.node()];
+        }
+        // Complemented AND-node roots have a dedicated complement LUT.
+        if let Some(&net) = neg_net.get(&lit.node()) {
+            return net;
+        }
+        let base = node_net[&lit.node()];
+        *inv_net.entry(lit.node()).or_insert_with(|| {
+            let net = nl.add_net(format!("n{}_inv", lit.node()));
+            nl.add_cell(
+                CellKind::Lut { k: 1, truth: 0b01 },
+                format!("inv_n{}", lit.node()),
+                vec![base],
+                vec![net],
+            );
+            net
+        })
+    };
+
+    // Adder chains.
+    for (ci, ch) in circ.chains.iter().enumerate() {
+        let mut carry = net_of_lit(&mut nl, ch.cin);
+        for (pos, &(a, b)) in ch.ops.iter().enumerate() {
+            let a_net = net_of_lit(&mut nl, a);
+            let b_net = net_of_lit(&mut nl, b);
+            let sum = chain_sum_nets[ci][pos];
+            let cout = if pos + 1 == ch.ops.len() {
+                chain_cout_nets[ci]
+            } else {
+                nl.add_net(format!("ch{}_c{}", ci, pos))
+            };
+            nl.add_cell(
+                CellKind::AdderBit { chain: ci as u32, pos: pos as u32 },
+                format!("fa_{}_{}", ci, pos),
+                vec![a_net, b_net, carry],
+                vec![sum, cout],
+            );
+            carry = cout;
+        }
+    }
+    nl.num_chains = circ.chains.len() as u32;
+
+    // FFs.
+    for (i, &(d, _)) in circ.ffs.iter().enumerate() {
+        let d_net = net_of_lit(&mut nl, d);
+        nl.add_cell(CellKind::Ff, format!("ff{}", i), vec![d_net], vec![ff_q_nets[i]]);
+    }
+
+    // POs.
+    for (name, lit) in &circ.pos {
+        let net = net_of_lit(&mut nl, *lit);
+        nl.add_output(name, net);
+    }
+
+    nl
+}
+
+/// Truth table of the cone rooted at `root` over ordered cut `leaves`
+/// (up to 6 leaves -> u64 truth table, leaf i = variable i).
+fn cone_truth(aig: &super::aig::Aig, root: NodeId, leaves: &[NodeId]) -> u64 {
+    let k = leaves.len();
+    debug_assert!(k <= 6);
+    let rows = 1usize << k;
+    let mask: u64 = if rows == 64 { u64::MAX } else { (1u64 << rows) - 1 };
+    let mut memo: HashMap<NodeId, u64> = HashMap::new();
+    for (i, &l) in leaves.iter().enumerate() {
+        let mut t = 0u64;
+        for r in 0..rows {
+            if r >> i & 1 == 1 {
+                t |= 1 << r;
+            }
+        }
+        memo.insert(l, t);
+    }
+    fn eval(aig: &super::super::techmap::aig::Aig, id: NodeId,
+            memo: &mut HashMap<NodeId, u64>, mask: u64) -> u64 {
+        if let Some(&t) = memo.get(&id) {
+            return t;
+        }
+        let t = match *aig.node(id) {
+            Node::Const0 => 0,
+            Node::Leaf(_) => panic!("cone escapes its cut leaves"),
+            Node::And(a, b) => {
+                let ta = eval(aig, a.node(), memo, mask);
+                let tb = eval(aig, b.node(), memo, mask);
+                let ta = if a.is_compl() { !ta & mask } else { ta };
+                let tb = if b.is_compl() { !tb & mask } else { tb };
+                ta & tb
+            }
+        };
+        memo.insert(id, t);
+        t
+    }
+    eval(aig, root, &mut memo, mask) & mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::synth::multiplier::{soft_mul, AdderAlgo};
+    use crate::util::Rng;
+
+    /// Evaluate a mapped netlist combinationally (FF-free test circuits).
+    fn netlist_eval(nl: &Netlist, pi_vals: &HashMap<NetId, bool>) -> Vec<bool> {
+        let mut vals: HashMap<NetId, bool> = pi_vals.clone();
+        loop {
+            let mut progress = false;
+            let mut all_done = true;
+            for cell in &nl.cells {
+                if cell.outs.iter().all(|n| vals.contains_key(n)) {
+                    continue;
+                }
+                all_done = false;
+                let ins: Option<Vec<bool>> =
+                    cell.ins.iter().map(|n| vals.get(n).copied()).collect();
+                let Some(ins) = ins else { continue };
+                match cell.kind {
+                    CellKind::Lut { truth, .. } => {
+                        let idx = ins
+                            .iter()
+                            .enumerate()
+                            .fold(0usize, |acc, (i, &b)| acc | ((b as usize) << i));
+                        vals.insert(cell.outs[0], truth >> idx & 1 == 1);
+                    }
+                    CellKind::AdderBit { .. } => {
+                        let (a, b, c) = (ins[0], ins[1], ins[2]);
+                        vals.insert(cell.outs[0], a ^ b ^ c);
+                        vals.insert(cell.outs[1], (a & b) | (a & c) | (b & c));
+                    }
+                    CellKind::Const(v) => {
+                        vals.insert(cell.outs[0], v);
+                    }
+                    CellKind::Input | CellKind::Output | CellKind::Ff => continue,
+                }
+                progress = true;
+            }
+            if all_done {
+                break;
+            }
+            assert!(progress, "netlist evaluation stuck (combinational loop?)");
+        }
+        nl.outputs
+            .iter()
+            .map(|&c| vals[&nl.cells[c as usize].ins[0]])
+            .collect()
+    }
+
+    fn check_equiv(circ: &Circuit, nl: &Netlist, samples: usize, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let n_pi = circ.pis.len();
+        for _ in 0..samples {
+            let pi_vals: Vec<bool> = (0..n_pi).map(|_| rng.chance(0.5)).collect();
+            let want = circ.simulate(&pi_vals, &[]);
+            let mut net_vals = HashMap::new();
+            for (i, &c) in nl.inputs.iter().enumerate() {
+                net_vals.insert(nl.cells[c as usize].outs[0], pi_vals[i]);
+            }
+            let got = netlist_eval(nl, &net_vals);
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn maps_xor_tree() {
+        let mut c = Circuit::new("xt");
+        let xs = c.pi_bus("x", 9);
+        let mut acc = xs[0];
+        for &x in &xs[1..] {
+            acc = c.aig.xor(acc, x);
+        }
+        c.po("parity", acc);
+        let nl = map_circuit(&c, &MapOpts::default());
+        assert!(nl.check().is_empty(), "{:?}", nl.check());
+        // 9-input parity in 6-LUTs: 2 LUTs.
+        assert!(nl.num_luts() <= 3, "{} luts", nl.num_luts());
+        check_equiv(&c, &nl, 40, 1);
+    }
+
+    #[test]
+    fn maps_multiplier_all_algos() {
+        for algo in [AdderAlgo::Cascade, AdderAlgo::Wallace, AdderAlgo::Dadda,
+                     AdderAlgo::BinaryTree] {
+            let mut c = Circuit::new("m");
+            let x = c.pi_bus("x", 4);
+            let y = c.pi_bus("y", 4);
+            let p = soft_mul(&mut c, &x, &y, algo);
+            c.po_bus("p", &p);
+            let nl = map_circuit(&c, &MapOpts::default());
+            assert!(nl.check().is_empty(), "{:?} ({})", nl.check(), algo.name());
+            check_equiv(&c, &nl, 60, 7);
+        }
+    }
+
+    #[test]
+    fn respects_k_limit() {
+        let mut c = Circuit::new("wide");
+        let xs = c.pi_bus("x", 16);
+        let mut acc = xs[0];
+        for &x in &xs[1..] {
+            acc = c.aig.or(acc, x);
+        }
+        c.po("any", acc);
+        for k in [4u8, 5, 6] {
+            let nl = map_circuit(&c, &MapOpts { k, cuts_per_node: 8 });
+            for cell in &nl.cells {
+                if let CellKind::Lut { k: kk, .. } = cell.kind {
+                    assert!(kk <= k);
+                }
+            }
+            check_equiv(&c, &nl, 20, 3);
+        }
+    }
+
+    #[test]
+    fn inverted_po_gets_inverter() {
+        let mut c = Circuit::new("inv");
+        let a = c.pi("a");
+        c.po("na", a.compl());
+        let nl = map_circuit(&c, &MapOpts::default());
+        assert_eq!(nl.num_luts(), 1);
+        check_equiv(&c, &nl, 4, 5);
+    }
+
+    #[test]
+    fn shared_logic_is_not_duplicated() {
+        let mut c = Circuit::new("share");
+        let a = c.pi("a");
+        let b = c.pi("b");
+        let x = c.aig.xor(a, b);
+        c.po("o1", x);
+        c.po("o2", x);
+        let nl = map_circuit(&c, &MapOpts::default());
+        assert_eq!(nl.num_luts(), 1);
+    }
+
+    #[test]
+    fn ff_boundary_maps() {
+        let mut c = Circuit::new("ffb");
+        let a = c.pi("a");
+        let q = c.ff();
+        let d = c.aig.xor(a, q);
+        c.set_ff_d(q, d);
+        c.po("o", q);
+        let nl = map_circuit(&c, &MapOpts::default());
+        assert!(nl.check().is_empty());
+        assert_eq!(nl.num_ffs(), 1);
+        assert_eq!(nl.num_luts(), 1);
+    }
+}

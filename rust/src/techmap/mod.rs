@@ -1,0 +1,6 @@
+//! Technology mapping: AIG -> K-LUT netlist (the ABC substitute).
+
+pub mod aig;
+pub mod mapper;
+
+pub use mapper::{map_circuit, MapOpts};

@@ -1,0 +1,12 @@
+//! Small shared utilities: deterministic PRNG, statistics, table printing.
+//!
+//! The offline environment has no `rand`/`criterion`/`prettytable`; these
+//! replacements are tiny, deterministic, and dependency-free.
+
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+pub use rng::Rng;
+pub use stats::{geomean, mean};
+pub use table::Table;

@@ -1,0 +1,73 @@
+//! Statistics helpers: geometric mean (the paper's summary statistic),
+//! arithmetic mean, normalization.
+
+/// Geometric mean of positive values. Returns 1.0 on an empty slice so that
+/// normalized "no data" rows print as the identity.
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 1.0;
+    }
+    let s: f64 = xs.iter().map(|&x| x.max(1e-12).ln()).sum();
+    (s / xs.len() as f64).exp()
+}
+
+/// Arithmetic mean. Returns 0.0 on an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Element-wise ratio `num[i] / den[i]`, the "normalized to baseline" series
+/// used by every figure in the paper.
+pub fn normalize(num: &[f64], den: &[f64]) -> Vec<f64> {
+    assert_eq!(num.len(), den.len());
+    num.iter()
+        .zip(den)
+        .map(|(&n, &d)| if d.abs() < 1e-12 { 1.0 } else { n / d })
+        .collect()
+}
+
+/// Population standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|&x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geomean_basic() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean(&[2.0, 2.0, 2.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn geomean_empty_is_identity() {
+        assert_eq!(geomean(&[]), 1.0);
+    }
+
+    #[test]
+    fn mean_basic() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert_eq!(mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn normalize_guards_zero_denominator() {
+        let r = normalize(&[2.0, 3.0], &[4.0, 0.0]);
+        assert_eq!(r, vec![0.5, 1.0]);
+    }
+
+    #[test]
+    fn stddev_basic() {
+        assert!(stddev(&[1.0, 1.0, 1.0]) < 1e-12);
+        assert!((stddev(&[1.0, 3.0]) - 1.0).abs() < 1e-12);
+    }
+}

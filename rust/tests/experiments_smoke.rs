@@ -1,0 +1,76 @@
+//! Smoke tests over the experiment harness: every table/figure function
+//! runs end to end in quick mode and produces sane, paper-shaped output.
+//! (The full runs live in `cargo bench`; these keep `cargo test` fast.)
+
+use double_duty::report::{self, ExpOpts};
+
+#[test]
+fn table1_and_2_shape() {
+    let t1 = report::table1().render();
+    // Calibrated model sits next to the paper anchors.
+    assert!(t1.contains("Baseline Crossbar"));
+    assert!(t1.contains("AddMux"));
+    let t2 = report::table2().render();
+    assert!(t2.contains("Double-Duty"));
+}
+
+#[test]
+fn fig5_improved_algos_beat_vtr_baseline() {
+    let (_, series) = report::fig5(&ExpOpts::quick());
+    let base = series["vtr-baseline"];
+    assert!((base[0] - 1.0).abs() < 1e-9, "baseline normalizes to 1");
+    // Every improved algorithm uses fewer adders than stock VTR.
+    for algo in ["cascade", "binary-tree", "wallace", "dadda"] {
+        assert!(series[algo][0] < 1.0, "{algo} adders {}", series[algo][0]);
+    }
+    // Compressor trees reduce hard-adder usage the most (paper Fig. 5).
+    assert!(series["wallace"][0] <= series["cascade"][0] + 0.05);
+    // ADP improves for the best algorithm.
+    let best_adp = ["cascade", "binary-tree", "wallace", "dadda"]
+        .iter()
+        .map(|a| series[a][3])
+        .fold(f64::INFINITY, f64::min);
+    assert!(best_adp < 1.0, "best ADP {best_adp}");
+}
+
+#[test]
+fn fig6_dd5_saves_area_where_it_matters() {
+    let (_, rows) = report::fig6(&ExpOpts::quick());
+    use double_duty::bench_suites::Suite;
+    let geo = |suite: Suite, f: &dyn Fn(&(String, Suite, f64, f64, f64)) -> f64| {
+        let v: Vec<f64> = rows.iter().filter(|r| r.1 == suite).map(f).collect();
+        double_duty::util::stats::geomean(&v)
+    };
+    let kr_area = geo(Suite::Kratos, &|r| r.2);
+    let all_area: Vec<f64> = rows.iter().map(|r| r.2).collect();
+    let avg = double_duty::util::stats::geomean(&all_area);
+    // Paper shape: Kratos benefits most; overall area improves.
+    assert!(kr_area < 1.0, "kratos area ratio {kr_area}");
+    assert!(avg < 1.0, "overall area ratio {avg}");
+    assert!(kr_area <= avg + 0.02, "kratos ({kr_area}) should lead ({avg})");
+}
+
+#[test]
+fn fig8_histogram_shifts_right_under_dd5() {
+    let (_, hb, hd) = report::fig8(&ExpOpts::quick());
+    let mean_bin = |h: &[f64]| -> f64 {
+        h.iter().enumerate().map(|(i, &v)| v * (i as f64 + 0.5) / 10.0).sum()
+    };
+    // Denser packing -> higher average channel utilization (paper Fig. 8).
+    assert!(mean_bin(&hd) >= mean_bin(&hb) * 0.95,
+            "dd5 {:.3} vs base {:.3}", mean_bin(&hd), mean_bin(&hb));
+}
+
+#[test]
+fn fig9_saturation_behaviour() {
+    let (_, rows) = report::fig9();
+    // DD5 area stays ~flat while LUTs are absorbed: area at K=250 within
+    // 12% of area at K=0.
+    let a0 = rows.iter().find(|r| r.0 == 0).unwrap().2;
+    let a250 = rows.iter().find(|r| r.0 == 250).unwrap().2;
+    assert!(a250 < a0 * 1.12, "dd5 area grew {a0} -> {a250}");
+    // Baseline grows markedly by K=500.
+    let b0 = rows.iter().find(|r| r.0 == 0).unwrap().1;
+    let b500 = rows.iter().find(|r| r.0 == 500).unwrap().1;
+    assert!(b500 > b0 * 1.25, "baseline area {b0} -> {b500}");
+}

@@ -1,0 +1,224 @@
+//! Integration tests: cross-module behaviour over the whole flow,
+//! equivalence through synth -> map, BLIF round trips on real benchmark
+//! netlists, and the paper's architectural invariants end to end.
+
+use std::collections::HashMap;
+
+use double_duty::arch::{Arch, ArchVariant};
+use double_duty::bench_suites::{all_suites, kratos_suite, vtr_suite, BenchParams};
+use double_duty::flow::{run_flow, FlowOpts};
+use double_duty::netlist::{blif, CellKind, Netlist, NetId};
+use double_duty::pack::{pack, PackOpts, Unrelated};
+use double_duty::place::{place, PlaceOpts};
+use double_duty::report::stress_circuit;
+use double_duty::synth::multiplier::{soft_mul, unrolled_mul, AdderAlgo};
+use double_duty::synth::Circuit;
+use double_duty::techmap::{map_circuit, MapOpts};
+use double_duty::util::Rng;
+
+/// Evaluate a combinational mapped netlist (oracle used across tests).
+fn netlist_eval(nl: &Netlist, pi_vals: &HashMap<NetId, bool>) -> Vec<bool> {
+    let mut vals: HashMap<NetId, bool> = pi_vals.clone();
+    loop {
+        let mut progress = false;
+        let mut all_done = true;
+        for cell in &nl.cells {
+            if cell.outs.iter().all(|n| vals.contains_key(n)) {
+                continue;
+            }
+            all_done = false;
+            let ins: Option<Vec<bool>> = cell.ins.iter().map(|n| vals.get(n).copied()).collect();
+            let Some(ins) = ins else { continue };
+            match cell.kind {
+                CellKind::Lut { truth, .. } => {
+                    let idx = ins
+                        .iter()
+                        .enumerate()
+                        .fold(0usize, |acc, (i, &b)| acc | ((b as usize) << i));
+                    vals.insert(cell.outs[0], truth >> idx & 1 == 1);
+                }
+                CellKind::AdderBit { .. } => {
+                    let (a, b, c) = (ins[0], ins[1], ins[2]);
+                    vals.insert(cell.outs[0], a ^ b ^ c);
+                    vals.insert(cell.outs[1], (a & b) | (a & c) | (b & c));
+                }
+                CellKind::Const(v) => {
+                    vals.insert(cell.outs[0], v);
+                }
+                CellKind::Input | CellKind::Output | CellKind::Ff => continue,
+            }
+            progress = true;
+        }
+        if all_done {
+            break;
+        }
+        assert!(progress, "stuck evaluation");
+    }
+    nl.outputs.iter().map(|&c| vals[&nl.cells[c as usize].ins[0]]).collect()
+}
+
+/// Property: synth -> map preserves function for every reduction algorithm
+/// on randomized multiplier shapes.
+#[test]
+fn property_mapping_preserves_multiplier_function() {
+    let mut rng = Rng::new(99);
+    for trial in 0..6 {
+        let w = 3 + (trial % 3);
+        let algo = *rng.choose(&[
+            AdderAlgo::Cascade,
+            AdderAlgo::BinaryTree,
+            AdderAlgo::Wallace,
+            AdderAlgo::Dadda,
+        ]);
+        let mut c = Circuit::new("m");
+        let x = c.pi_bus("x", w);
+        let konst = 1 + rng.below((1 << w) - 1) as u64;
+        let p = unrolled_mul(&mut c, &x, konst, w, algo);
+        c.po_bus("p", &p);
+        let nl = map_circuit(&c, &MapOpts::default());
+        for _ in 0..16 {
+            let a = rng.below(1 << w) as u64;
+            let mut pis = HashMap::new();
+            for (i, &cell) in nl.inputs.iter().enumerate() {
+                pis.insert(nl.cells[cell as usize].outs[0], a >> i & 1 == 1);
+            }
+            let out = netlist_eval(&nl, &pis);
+            let got = out.iter().enumerate().fold(0u64, |acc, (i, &v)| acc | ((v as u64) << i));
+            let mask = (1u64 << (2 * w)) - 1;
+            assert_eq!(got, (a * konst) & mask, "{a}*{konst} algo {}", algo.name());
+        }
+    }
+}
+
+/// Property: the baseline packer never exposes LUT outputs from adder ALMs;
+/// DD5 ALM resources stay within budget on every suite circuit.
+#[test]
+fn property_packing_legality_across_suites() {
+    let params = BenchParams::default();
+    for b in all_suites(&params).into_iter().take(10) {
+        let nl = map_circuit(&b.generate(), &MapOpts::default());
+        for v in [ArchVariant::Baseline, ArchVariant::Dd5, ArchVariant::Dd6] {
+            let p = pack(&nl, &Arch::paper(v), &PackOpts::default());
+            for alm in &p.alms {
+                assert!(alm.gen_inputs.len() <= 8, "{}: inputs", b.name);
+                assert!(alm.z_inputs.len() <= 4, "{}: z inputs", b.name);
+                assert!(alm.lut_units() <= 4, "{}: units", b.name);
+                if v == ArchVariant::Baseline && alm.uses_adders() {
+                    assert!(alm.logic_luts.is_empty(),
+                            "{}: baseline concurrent LUT", b.name);
+                }
+                if v == ArchVariant::Dd5 {
+                    for lut in &alm.logic_luts {
+                        if let CellKind::Lut { k, .. } = nl.cells[*lut as usize].kind {
+                            assert!(k <= 5 || !alm.uses_adders(),
+                                    "{}: 6-LUT concurrent on DD5", b.name);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// BLIF round trip over a real benchmark netlist.
+#[test]
+fn blif_round_trip_on_benchmark() {
+    let params = BenchParams::default();
+    let b = &vtr_suite(&params)[1]; // alu-like
+    let nl = map_circuit(&b.generate(), &MapOpts::default());
+    let text = blif::write_blif(&nl);
+    let back = blif::read_blif(&text).unwrap();
+    assert_eq!(back.num_luts(), nl.num_luts());
+    assert_eq!(back.num_adders(), nl.num_adders());
+    assert_eq!(back.num_chains, nl.num_chains);
+    assert!(back.check().is_empty(), "{:?}", back.check());
+}
+
+/// Functional equivalence through Circuit::absorb (Table IV construction).
+#[test]
+fn absorb_preserves_function() {
+    let params = BenchParams::default();
+    let mut host = Circuit::new("host");
+    let x = host.pi_bus("x", 3);
+    let y = host.pi_bus("y", 3);
+    let p = soft_mul(&mut host, &x, &y, AdderAlgo::Wallace);
+    host.po_bus("p", &p);
+    let n_host_pis = host.pis.len();
+    let n_host_pos = host.pos.len();
+
+    let sha = double_duty::bench_suites::vtr::sha_rounds(&params);
+    let sha_pos = sha.pos.len();
+    host.absorb(&sha, "sha_");
+    assert_eq!(host.pos.len(), n_host_pos + sha_pos);
+
+    // Host part still multiplies correctly with absorbed SHA present.
+    let mut rng = Rng::new(5);
+    for _ in 0..8 {
+        let a = rng.below(8) as u64;
+        let b = rng.below(8) as u64;
+        let mut vals = vec![false; host.pis.len()];
+        for i in 0..3 {
+            vals[i] = a >> i & 1 == 1;
+            vals[3 + i] = b >> i & 1 == 1;
+        }
+        for v in vals.iter_mut().skip(n_host_pis) {
+            *v = rng.chance(0.5);
+        }
+        let out = host.simulate(&vals, &vec![false; host.ffs.len()]);
+        let got = out[..n_host_pos]
+            .iter()
+            .enumerate()
+            .fold(0u64, |acc, (i, &v)| acc | ((v as u64) << i));
+        assert_eq!(got, a * b);
+    }
+}
+
+/// Full-flow invariant: DD5 never *increases* ALM count, and concurrent
+/// LUTs appear only on DD variants.
+#[test]
+fn flow_dd5_never_worse_in_alms() {
+    let params = BenchParams::default();
+    let opts = FlowOpts { seeds: vec![1], place_effort: 0.1, route: false, ..Default::default() };
+    for b in kratos_suite(&params).iter().take(3) {
+        let circ = b.generate();
+        let base = run_flow(&circ, &Arch::coffe(ArchVariant::Baseline), &opts);
+        let dd5 = run_flow(&circ, &Arch::coffe(ArchVariant::Dd5), &opts);
+        assert!(dd5.alms <= base.alms, "{}: {} vs {}", b.name, dd5.alms, base.alms);
+        assert_eq!(base.concurrent_luts, 0);
+    }
+}
+
+/// Failure injection: placement on a device with exactly-capacity LBs must
+/// still be legal; chain macros taller than the device must panic cleanly.
+#[test]
+fn placement_edge_devices() {
+    let circ = stress_circuit(40, 10);
+    let nl = map_circuit(&circ, &MapOpts::default());
+    let arch = Arch::paper(ArchVariant::Dd5);
+    let packing = pack(&nl, &arch, &PackOpts { unrelated: Unrelated::On });
+    // Exact-fit-ish device.
+    let dev = double_duty::arch::Device::auto_size(packing.lbs.len(), packing.ios.len(), 1.0);
+    let pl = place(&nl, &packing, &arch, &PlaceOpts {
+        effort: 0.05,
+        device: Some(dev),
+        ..Default::default()
+    });
+    let mut seen = std::collections::HashSet::new();
+    for &loc in &pl.lb_loc {
+        assert!(seen.insert(loc));
+    }
+}
+
+/// Determinism: identical flow options give identical results.
+#[test]
+fn flow_deterministic() {
+    let params = BenchParams::default();
+    let b = &vtr_suite(&params)[0];
+    let opts = FlowOpts { seeds: vec![7], place_effort: 0.1, ..Default::default() };
+    let circ = b.generate();
+    let r1 = run_flow(&circ, &Arch::coffe(ArchVariant::Dd5), &opts);
+    let r2 = run_flow(&circ, &Arch::coffe(ArchVariant::Dd5), &opts);
+    assert_eq!(r1.alms, r2.alms);
+    assert_eq!(r1.cpd_ns, r2.cpd_ns);
+    assert_eq!(r1.adp, r2.adp);
+}
