@@ -6,6 +6,9 @@ use std::time::Instant;
 
 use double_duty::arch::{Arch, ArchVariant};
 use double_duty::bench_suites::{kratos_suite, BenchParams};
+use double_duty::coordinator::default_workers;
+use double_duty::flow::engine::{Engine, ExperimentPlan};
+use double_duty::flow::FlowOpts;
 use double_duty::pack::{pack, PackOpts};
 use double_duty::place::cost::NetModel;
 use double_duty::place::{place, PlaceOpts};
@@ -76,4 +79,56 @@ fn main() {
     timed("sta gemmt", 50, || {
         let _ = double_duty::timing::sta(&nl, &packing, &arch, |_, _, _| 150.0);
     });
+
+    // Experiment-engine sweep: the paper-style grid (Kratos suite x
+    // {baseline, DD5} x 3 seeds), serial vs parallel.  Both runs start
+    // with a cold cache; results must match bit-for-bit (the engine's
+    // determinism contract), so the wall-clock delta is pure scheduling.
+    let sweep = ExperimentPlan {
+        benches: kratos_suite(&params),
+        variants: vec![ArchVariant::Baseline, ArchVariant::Dd5],
+        flow: FlowOpts {
+            seeds: vec![1, 2, 3],
+            place_effort: 0.15,
+            route: false,
+            ..Default::default()
+        },
+    };
+    let grid_cells = sweep.benches.len() * sweep.variants.len() * sweep.flow.seeds.len();
+    // Warm the process-wide COFFE sizing cache for every swept variant so
+    // neither timed run pays the one-time Arch::coffe cost.
+    for &v in &sweep.variants {
+        let _ = Arch::coffe(v);
+    }
+    let t0 = Instant::now();
+    let serial = Engine::new(1).run(&sweep);
+    let t_serial = t0.elapsed().as_secs_f64();
+
+    let workers = default_workers();
+    let engine = Engine::new(workers);
+    let t1 = Instant::now();
+    let parallel = engine.run(&sweep);
+    let t_parallel = t1.elapsed().as_secs_f64();
+
+    for (a, b) in serial.iter().flatten().zip(parallel.iter().flatten()) {
+        assert!(
+            a.alms == b.alms && a.cpd_ns == b.cpd_ns && a.adp == b.adp,
+            "parallel engine diverged from serial on {}",
+            a.name
+        );
+    }
+    let st = &engine.cache.stats;
+    use std::sync::atomic::Ordering::Relaxed;
+    println!("engine sweep ({grid_cells} cells)  serial {t_serial:>8.2} s");
+    println!(
+        "engine sweep ({grid_cells} cells)  x{workers:<2} jobs {t_parallel:>6.2} s  ({:.2}x speedup)",
+        t_serial / t_parallel.max(1e-9)
+    );
+    println!(
+        "artifact cache: map {} misses / {} hits, pack {} misses / {} hits",
+        st.map_misses.load(Relaxed),
+        st.map_hits.load(Relaxed),
+        st.pack_misses.load(Relaxed),
+        st.pack_hits.load(Relaxed)
+    );
 }

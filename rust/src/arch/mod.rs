@@ -209,10 +209,13 @@ impl Arch {
     /// sizing engine (ties Tables I/II into the end-to-end flow).
     /// Sizing runs once per variant and is cached.
     pub fn coffe(variant: ArchVariant) -> Self {
-        use once_cell::sync::Lazy;
-        static CACHE: Lazy<std::sync::Mutex<std::collections::HashMap<ArchVariant, Arch>>> =
-            Lazy::new(|| std::sync::Mutex::new(std::collections::HashMap::new()));
-        let mut cache = CACHE.lock().unwrap();
+        use std::collections::HashMap;
+        use std::sync::{Mutex, OnceLock};
+        static CACHE: OnceLock<Mutex<HashMap<ArchVariant, Arch>>> = OnceLock::new();
+        let mut cache = CACHE
+            .get_or_init(|| Mutex::new(HashMap::new()))
+            .lock()
+            .unwrap();
         cache
             .entry(variant)
             .or_insert_with(|| {

@@ -25,7 +25,7 @@ pub struct Benchmark {
     pub params: BenchParams,
 }
 
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Suite {
     Kratos,
     Koios,
@@ -66,6 +66,23 @@ impl Default for BenchParams {
             algo: AdderAlgo::Wallace,
             seed: 42,
         }
+    }
+}
+
+impl std::hash::Hash for BenchParams {
+    /// Content hash used by the experiment engine's artifact cache.
+    ///
+    /// Exhaustive destructuring on purpose: adding a generator knob to
+    /// this struct without including it in the hash would silently alias
+    /// distinct benchmarks in the cache — with it, forgetting is a
+    /// compile error here.
+    fn hash<H: std::hash::Hasher>(&self, state: &mut H) {
+        let BenchParams { width, sparsity, scale, algo, seed } = self;
+        width.hash(state);
+        sparsity.to_bits().hash(state);
+        scale.hash(state);
+        algo.hash(state);
+        seed.hash(state);
     }
 }
 

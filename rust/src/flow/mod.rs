@@ -1,11 +1,22 @@
 //! End-to-end CAD flow orchestration: synth -> map -> pack -> place ->
 //! route -> STA, with multi-seed averaging (the paper runs 3 seeds per
 //! experiment) and the metric set every table/figure consumes.
+//!
+//! The flow is factored into grid-job primitives so the serial path here
+//! and the parallel experiment engine ([`engine`]) share one code path and
+//! therefore produce bit-identical results:
+//!
+//! * [`arch_for_run`] — per-run architecture overrides,
+//! * [`place_route_seed`] — one (circuit, variant, seed) cell,
+//! * [`assemble_result`] — fixed-order seed reduction into a
+//!   [`FlowResult`].
+
+pub mod engine;
 
 use crate::arch::device::Device;
 use crate::arch::{Arch, ArchVariant};
 use crate::bench_suites::Benchmark;
-use crate::netlist::{Netlist, NetlistStats};
+use crate::netlist::Netlist;
 use crate::pack::{pack, PackOpts, Packing, Unrelated};
 use crate::place::{place, PlaceOpts};
 use crate::route::{route, routed_net_delay, RouteOpts, Routing};
@@ -61,64 +72,121 @@ pub struct FlowResult {
     pub fmax_mhz: f64,
     pub routed_ok: bool,
     pub route_iters: f64,
-    /// Channel utilization samples (last seed) for Fig. 8.
+    /// Channel-utilization samples for Fig. 8: per routing channel, the
+    /// utilization averaged element-wise across seeds (every seed routes
+    /// the same deterministic device, so the sample vectors align).
     pub channel_util: Vec<f64>,
     pub dedup_hits: usize,
 }
 
-/// Run the mapped portion once (deterministic), then place/route per seed.
-pub fn run_flow(circ: &Circuit, arch: &Arch, opts: &FlowOpts) -> FlowResult {
-    let nl = map_circuit(circ, &MapOpts::default());
-    run_flow_mapped(&circ.name, &nl, arch, opts, circ.dedup_hits)
+/// Outcome of the place/route stage for one seed — the unit of work the
+/// experiment engine schedules.
+#[derive(Clone, Debug)]
+pub struct SeedMetrics {
+    pub seed: u64,
+    /// Critical-path delay in ns (post-route when routed, else the
+    /// placer's estimate).
+    pub cpd_ns: f64,
+    pub routed_ok: bool,
+    /// Router convergence iterations (`None` when routing was skipped).
+    pub route_iters: Option<f64>,
+    /// Per-channel utilization samples (empty when routing was skipped).
+    pub channel_util: Vec<f64>,
 }
 
-/// Flow from an already-mapped netlist.
-pub fn run_flow_mapped(
-    name: &str,
-    nl: &Netlist,
-    arch: &Arch,
-    opts: &FlowOpts,
-    dedup_hits: usize,
-) -> FlowResult {
+/// Apply per-run architecture overrides (channel width).  Shared by the
+/// serial flow and the experiment engine so both pack and route against
+/// identical architectures.
+pub fn arch_for_run(arch: &Arch, opts: &FlowOpts) -> Arch {
     let mut arch = arch.clone();
     if let Some(w) = opts.channel_width {
         arch.routing.channel_width = w;
     }
-    let packing = pack(nl, &arch, &PackOpts { unrelated: opts.unrelated });
-    let _stats = NetlistStats::of(nl);
+    arch
+}
 
-    let mut cpds = Vec::new();
-    let mut iters = Vec::new();
-    let mut routed_ok = true;
-    let mut channel_util = Vec::new();
-
-    for &seed in &opts.seeds {
-        let pl = place(
-            nl,
-            &packing,
-            &arch,
-            &PlaceOpts {
-                seed,
-                effort: opts.place_effort,
-                timing_driven: true,
-                use_kernel: opts.use_kernel,
-                device: opts.device.clone(),
-            },
-        );
-        if opts.route {
-            let mut model = crate::place::cost::NetModel::build(nl, &packing);
-            model.set_weights(&[], false);
-            let r: Routing = route(&model, &pl, &arch, &RouteOpts::default());
-            routed_ok &= r.success;
-            iters.push(r.iterations as f64);
-            let delay = routed_net_delay(&r, &model, &arch);
-            let rpt = sta(nl, &packing, &arch, delay);
-            cpds.push(rpt.cpd_ps / 1000.0);
-            channel_util = r.channel_util.clone();
-        } else {
-            cpds.push(pl.est_cpd_ps / 1000.0);
+/// Place (and optionally route + STA) one seed of an already-packed
+/// design.  Deterministic in (inputs, seed): the only RNG is constructed
+/// here from `seed`, so scheduling order cannot perturb results.
+pub fn place_route_seed(
+    nl: &Netlist,
+    packing: &Packing,
+    arch: &Arch,
+    opts: &FlowOpts,
+    seed: u64,
+) -> SeedMetrics {
+    let pl = place(
+        nl,
+        packing,
+        arch,
+        &PlaceOpts {
+            seed,
+            effort: opts.place_effort,
+            timing_driven: true,
+            use_kernel: opts.use_kernel,
+            device: opts.device.clone(),
+        },
+    );
+    if opts.route {
+        let mut model = crate::place::cost::NetModel::build(nl, packing);
+        model.set_weights(&[], false);
+        let r: Routing = route(&model, &pl, arch, &RouteOpts::default());
+        let delay = routed_net_delay(&r, &model, arch);
+        let rpt = sta(nl, packing, arch, delay);
+        SeedMetrics {
+            seed,
+            cpd_ns: rpt.cpd_ps / 1000.0,
+            routed_ok: r.success,
+            route_iters: Some(r.iterations as f64),
+            channel_util: r.channel_util,
+        }
+    } else {
+        SeedMetrics {
+            seed,
+            cpd_ns: pl.est_cpd_ps / 1000.0,
+            routed_ok: true,
+            route_iters: None,
+            channel_util: Vec::new(),
         }
     }
+}
+
+/// Reduce per-seed metrics (in seed order) into the averaged result.
+pub fn assemble_result(
+    name: &str,
+    arch: &Arch,
+    packing: &Packing,
+    seeds: &[SeedMetrics],
+    dedup_hits: usize,
+) -> FlowResult {
+    let cpds: Vec<f64> = seeds.iter().map(|s| s.cpd_ns).collect();
+    let iters: Vec<f64> = seeds.iter().filter_map(|s| s.route_iters).collect();
+    let routed_ok = seeds.iter().all(|s| s.routed_ok);
+
+    // Channel utilization: element-wise mean across seeds.  All seeds
+    // route the same (deterministically sized) device, so sample vectors
+    // align; if they ever did not, fall back to pooling the raw samples
+    // rather than silently dropping data.
+    let with_samples: Vec<&Vec<f64>> = seeds
+        .iter()
+        .map(|s| &s.channel_util)
+        .filter(|v| !v.is_empty())
+        .collect();
+    let channel_util = match with_samples.first() {
+        None => Vec::new(),
+        Some(first) if with_samples.iter().all(|v| v.len() == first.len()) => {
+            let mut acc = vec![0.0f64; first.len()];
+            for v in &with_samples {
+                for (a, &x) in acc.iter_mut().zip(v.iter()) {
+                    *a += x;
+                }
+            }
+            let n = with_samples.len() as f64;
+            acc.iter_mut().for_each(|x| *x /= n);
+            acc
+        }
+        Some(_) => with_samples.iter().flat_map(|v| v.iter().copied()).collect(),
+    };
 
     let cpd_ns = mean(&cpds);
     let alm_area_mwta = packing.stats.alms as f64 * arch.area.alm_mwta;
@@ -141,6 +209,30 @@ pub fn run_flow_mapped(
     }
 }
 
+/// Run the mapped portion once (deterministic), then place/route per seed.
+pub fn run_flow(circ: &Circuit, arch: &Arch, opts: &FlowOpts) -> FlowResult {
+    let nl = map_circuit(circ, &MapOpts::default());
+    run_flow_mapped(&circ.name, &nl, arch, opts, circ.dedup_hits)
+}
+
+/// Flow from an already-mapped netlist.
+pub fn run_flow_mapped(
+    name: &str,
+    nl: &Netlist,
+    arch: &Arch,
+    opts: &FlowOpts,
+    dedup_hits: usize,
+) -> FlowResult {
+    let arch = arch_for_run(arch, opts);
+    let packing = pack(nl, &arch, &PackOpts { unrelated: opts.unrelated });
+    let seeds: Vec<SeedMetrics> = opts
+        .seeds
+        .iter()
+        .map(|&seed| place_route_seed(nl, &packing, &arch, opts, seed))
+        .collect();
+    assemble_result(name, &arch, &packing, &seeds, dedup_hits)
+}
+
 /// Run a benchmark on one architecture variant.
 pub fn run_benchmark(b: &Benchmark, variant: ArchVariant, opts: &FlowOpts) -> FlowResult {
     let circ = b.generate();
@@ -161,6 +253,7 @@ pub fn pack_only(circ: &Circuit, variant: ArchVariant, unrelated: Unrelated) -> 
 mod tests {
     use super::*;
     use crate::bench_suites::{kratos_suite, BenchParams};
+    use crate::synth::multiplier::{soft_mul, AdderAlgo};
 
     #[test]
     fn full_flow_on_kratos_circuit() {
@@ -187,5 +280,34 @@ mod tests {
         };
         let r = run_benchmark(b, ArchVariant::Baseline, &opts);
         assert!(r.cpd_ns > 0.0);
+    }
+
+    /// Multi-seed channel utilization is the element-wise mean of the
+    /// single-seed runs (not silently the last seed's samples).
+    #[test]
+    fn channel_util_is_seed_mean() {
+        let mut c = Circuit::new("m");
+        let x = c.pi_bus("x", 4);
+        let y = c.pi_bus("y", 4);
+        let p = soft_mul(&mut c, &x, &y, AdderAlgo::Wallace);
+        c.po_bus("p", &p);
+        let arch = Arch::paper(ArchVariant::Baseline);
+        let mk = |seeds: Vec<u64>| {
+            run_flow(&c, &arch, &FlowOpts { seeds, place_effort: 0.1, ..Default::default() })
+        };
+        let s1 = mk(vec![1]);
+        let s2 = mk(vec![2]);
+        let both = mk(vec![1, 2]);
+        assert!(!both.channel_util.is_empty());
+        assert_eq!(both.channel_util.len(), s1.channel_util.len());
+        for i in 0..both.channel_util.len() {
+            let want = (s1.channel_util[i] + s2.channel_util[i]) / 2.0;
+            assert!(
+                (both.channel_util[i] - want).abs() < 1e-12,
+                "sample {i}: {} vs {}",
+                both.channel_util[i],
+                want
+            );
+        }
     }
 }

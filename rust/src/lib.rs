@@ -10,9 +10,34 @@
 //! suites and a harness that regenerates every table and figure of the
 //! paper's evaluation.
 //!
-//! The placer's batched cost model (weighted HPWL + RUDY congestion) is a
-//! JAX/Pallas kernel AOT-compiled to HLO and executed from Rust through
-//! PJRT (`runtime`); Python never runs at flow time.
+//! The placer's batched cost model (weighted HPWL + RUDY congestion) is
+//! defined as a JAX/Pallas kernel AOT-compiled to HLO
+//! (`python/compile/`); the [`runtime`] module evaluates it from the Rust
+//! hot path — natively in this offline build (bit-matching the kernel's
+//! reference semantics), through PJRT where an XLA toolchain exists.
+//! Python never runs at flow time.
+//!
+//! ## Experiment engine
+//!
+//! The paper's evaluation is a grid — benchmark suite x architecture
+//! variants x placement seeds.  [`flow::engine`] runs that grid as a
+//! parallel, cached pipeline:
+//!
+//! * [`flow::engine::ExperimentPlan`] describes the grid;
+//!   [`flow::engine::Engine::run`] executes it on a scoped-thread work
+//!   queue ([`coordinator::parallel_indexed`]), one job per
+//!   (circuit, variant, seed) cell.
+//! * A content-addressed [`flow::engine::ArtifactCache`] computes each
+//!   mapped netlist once per circuit and each packing once per
+//!   (circuit, variant); seed jobs share the artifacts read-only.
+//! * Determinism contract: results are bit-identical to the serial
+//!   [`flow::run_benchmark`] path regardless of worker count or
+//!   scheduling, because every job derives its RNG from the seed it
+//!   carries and reduction happens in fixed grid order.
+//!
+//! The `dduty` CLI exposes the worker count as `--jobs N` (default: all
+//! cores, or `DDUTY_WORKERS`); `benches/hotpath.rs` measures the sweep
+//! speedup and cache hit rates.
 
 pub mod arch;
 pub mod coffe;

@@ -1,10 +1,13 @@
 //! `dduty` — CLI for the Double-Duty reproduction.
 //!
 //! Subcommands:
-//!   exp <table1|table2|table3|table4|fig5|fig6|fig7|fig8|fig9|all> [--quick]
-//!       Regenerate a paper table/figure.
-//!   flow --bench <name> [--variant baseline|dd5|dd6] [--seed N] [--no-route]
-//!       Run the full CAD flow on one benchmark and print its metrics.
+//!   exp <table1|table2|table3|table4|fig5|fig6|fig7|fig8|fig9|all> [--quick] [--jobs N]
+//!       Regenerate a paper table/figure (experiment-engine sweeps run on
+//!       N worker threads; default: all cores / DDUTY_WORKERS).
+//!   flow --bench <name> [--variant baseline|dd5|dd6] [--seed N | --seeds a,b,c]
+//!        [--no-route] [--jobs N]
+//!       Run the full CAD flow on one benchmark and print its metrics
+//!       (multi-seed runs place/route the seeds in parallel).
 //!   list
 //!       List available benchmarks.
 //!   coffe
@@ -12,7 +15,9 @@
 
 use double_duty::arch::ArchVariant;
 use double_duty::bench_suites::{all_suites, BenchParams};
-use double_duty::flow::{run_benchmark, FlowOpts};
+use double_duty::coordinator::default_workers;
+use double_duty::flow::engine::{Engine, ExperimentPlan};
+use double_duty::flow::FlowOpts;
 use double_duty::report::{self, ExpOpts};
 
 fn main() {
@@ -29,19 +34,37 @@ fn main() {
         }
         _ => {
             eprintln!("usage: dduty <exp|flow|list|coffe> ...");
-            eprintln!("  dduty exp <table1|table2|table3|table4|fig5..fig9|all> [--quick]");
-            eprintln!("  dduty flow --bench <name> [--variant baseline|dd5|dd6] [--seed N] [--no-route]");
+            eprintln!("  dduty exp <table1|table2|table3|table4|fig5..fig9|all> [--quick] [--jobs N]");
+            eprintln!("  dduty flow --bench <name> [--variant baseline|dd5|dd6] \
+                       [--seed N | --seeds a,b,c] [--no-route] [--jobs N]");
             std::process::exit(if cmd == "help" { 0 } else { 2 });
         }
     }
 }
 
+/// `--jobs N` worker-count flag (defaults to all cores / DDUTY_WORKERS).
+/// A malformed value is a hard error, not a silent fallback.
+fn parse_jobs(args: &[String]) -> usize {
+    let Some(i) = args.iter().position(|a| a == "--jobs") else {
+        return default_workers();
+    };
+    match args.get(i + 1).map(|s| s.parse::<usize>()) {
+        Some(Ok(n)) => n.max(1),
+        _ => {
+            eprintln!("--jobs requires a numeric worker count");
+            std::process::exit(2);
+        }
+    }
+}
+
 fn exp_opts(args: &[String]) -> ExpOpts {
-    if args.iter().any(|a| a == "--quick") {
+    let mut opts = if args.iter().any(|a| a == "--quick") {
         ExpOpts::quick()
     } else {
         ExpOpts::default()
-    }
+    };
+    opts.jobs = parse_jobs(args);
+    opts
 }
 
 fn cmd_exp(args: &[String]) {
@@ -85,19 +108,52 @@ fn cmd_flow(args: &[String]) {
         Some("dd6") => ArchVariant::Dd6,
         _ => ArchVariant::Baseline,
     };
-    let seed: u64 = get("--seed").and_then(|s| s.parse().ok()).unwrap_or(1);
+    let seed: u64 = match get("--seed") {
+        None => 1,
+        Some(s) => s.parse().unwrap_or_else(|_| {
+            eprintln!("--seed expects an integer, got {s:?}");
+            std::process::exit(2);
+        }),
+    };
+    let seeds: Vec<u64> = match get("--seeds") {
+        None => vec![seed],
+        Some(list) => {
+            // Reject malformed entries instead of silently dropping them —
+            // running on the wrong seed set would look like success.
+            let parsed: Result<Vec<u64>, _> =
+                list.split(',').map(|t| t.trim().parse::<u64>()).collect();
+            match parsed {
+                Ok(v) if !v.is_empty() => v,
+                _ => {
+                    eprintln!("--seeds expects a comma-separated list of integers, got {list:?}");
+                    std::process::exit(2);
+                }
+            }
+        }
+    };
     let route = !args.iter().any(|a| a == "--no-route");
     let use_kernel = args.iter().any(|a| a == "--kernel");
+    let jobs = parse_jobs(args);
 
     let params = BenchParams::default();
     let Some(bench) = all_suites(&params).into_iter().find(|b| b.name == bench_name) else {
         eprintln!("unknown benchmark {bench_name}; see `dduty list`");
         std::process::exit(2);
     };
-    let opts = FlowOpts { seeds: vec![seed], route, use_kernel, ..Default::default() };
-    let r = run_benchmark(&bench, variant, &opts);
+    let n_seeds = seeds.len();
+    let plan = ExperimentPlan {
+        benches: vec![bench],
+        variants: vec![variant],
+        flow: FlowOpts { seeds, route, use_kernel, ..Default::default() },
+    };
+    let r = Engine::new(jobs)
+        .run(&plan)
+        .pop()
+        .and_then(|mut row| row.pop())
+        .expect("one grid cell");
     println!("circuit        : {}", r.name);
     println!("architecture   : {}", r.variant.name());
+    println!("seeds          : {n_seeds}");
     println!("LUTs / adders  : {} / {}", r.luts, r.adder_bits);
     println!("ALMs / LBs     : {} / {}", r.alms, r.lbs);
     println!("concurrent LUTs: {}", r.concurrent_luts);

@@ -10,7 +10,8 @@
 use std::collections::HashMap;
 use std::fmt::Write as _;
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::util::error::{Context, Result};
+use crate::{anyhow, bail};
 
 use super::{CellKind, Netlist, NetId};
 

@@ -72,6 +72,9 @@ pub struct PackedAlm {
     pub operand_paths: Vec<[OperandPath; 2]>,
     /// Independent logic LUTs (<=2 on DD5 halves, or one 6-LUT on DD6).
     pub logic_luts: Vec<CellId>,
+    /// ALM halves consumed by `logic_luts`: 1 per <=5-LUT, 2 per 6-LUT
+    /// (a 6-LUT fractures across both halves' 4-LUT units).
+    pub logic_halves: usize,
     /// FF cells packed with this ALM.
     pub ffs: Vec<CellId>,
     /// Distinct general-input nets (A–H budget: 8).
@@ -93,7 +96,7 @@ impl PackedAlm {
             .flatten()
             .filter(|p| matches!(p, OperandPath::AbsorbedLut(_) | OperandPath::RouteThrough))
             .count();
-        let logic: usize = self.logic_luts.len() * 2; // a logic LUT uses one half
+        let logic: usize = self.logic_halves * 2; // one half = two 4-LUT units
         feeders + logic
     }
 
@@ -107,14 +110,14 @@ impl PackedAlm {
                 Some(paths) => paths.iter().any(|p| {
                     matches!(p, OperandPath::AbsorbedLut(_) | OperandPath::RouteThrough)
                 }),
-                None => self.adder_bits.len() > h && false,
+                // A half with no adder bit at all is also free.
+                None => false,
             };
-            // A half with no adder bit at all is also free.
             if !busy {
                 free += 1;
             }
         }
-        free - self.logic_luts.len().min(free)
+        free - self.logic_halves.min(free)
     }
 
     pub fn uses_adders(&self) -> bool {
@@ -408,6 +411,7 @@ pub fn pack(nl: &Netlist, arch: &Arch, opts: &PackOpts) -> Packing {
                 }
                 alms[alm_idx].outputs.insert(nl.cells[lut as usize].outs[0]);
                 alms[alm_idx].logic_luts.push(lut);
+                alms[alm_idx].logic_halves += if lut_k(lut) == 6 { 2 } else { 1 };
                 concurrent_luts += 1;
             }
         }
@@ -436,6 +440,7 @@ pub fn pack(nl: &Netlist, arch: &Arch, opts: &PackOpts) -> Packing {
         }
         alm.outputs.insert(nl.cells[a as usize].outs[0]);
         alm.logic_luts.push(a);
+        alm.logic_halves += if ka == 6 { 2 } else { 1 };
         cell_alm.insert(a, alm_idx);
         i += 1;
         if ka <= 5 {
@@ -455,6 +460,7 @@ pub fn pack(nl: &Netlist, arch: &Arch, opts: &PackOpts) -> Packing {
                         alm.gen_inputs = union;
                         alm.outputs.insert(nl.cells[b as usize].outs[0]);
                         alm.logic_luts.push(b);
+                        alm.logic_halves += 1; // partner is a <=5-LUT
                         cell_alm.insert(b, alm_idx);
                         remaining.remove(j);
                         break;

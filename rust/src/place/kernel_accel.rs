@@ -8,7 +8,7 @@
 
 use std::collections::HashMap;
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::arch::device::{Device, Loc};
 use crate::netlist::CellId;
@@ -34,7 +34,7 @@ impl KernelCost {
     /// has more external nets than the largest bucket.
     pub fn try_new(num_nets: usize) -> Result<KernelCost> {
         let kernel = CostKernel::load_default()?;
-        anyhow::ensure!(
+        crate::ensure!(
             num_nets <= kernel.max_nets(),
             "{num_nets} nets exceeds kernel bucket {}",
             kernel.max_nets()

@@ -335,12 +335,20 @@ fn try_move(
                 }
             }
         }
-        // Old slots for displaced singles.
-        let old_slots: Vec<Loc> = (0..len).map(|i| Loc::new(base.x, base.y + i)).collect();
-        let mut slot_i = 0;
-        for d in displaced.iter_mut() {
-            d.1 = old_slots[slot_i];
-            slot_i += 1;
+        // Rehouse displaced singles in slots the macro actually vacates:
+        // old slots outside the new window.  When the move overlaps its own
+        // footprint (a small same-column shift), the overlapping old slots
+        // stay macro-occupied — handing one to a displaced single would put
+        // two blocks on one tile.
+        let vacated: Vec<Loc> = (0..len)
+            .map(|i| Loc::new(base.x, base.y + i))
+            .filter(|l| l.x != nx || l.y < ny || l.y >= ny + len)
+            .collect();
+        if displaced.len() > vacated.len() {
+            return None; // not enough freed slots to rehouse everyone
+        }
+        for (d, &slot) in displaced.iter_mut().zip(vacated.iter()) {
+            d.1 = slot;
         }
         // Compute delta over affected nets.
         let mut moved: Vec<(usize, Loc)> = Vec::new();

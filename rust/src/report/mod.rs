@@ -2,6 +2,12 @@
 //! evaluation (the DESIGN.md experiment index).  Each returns rendered
 //! tables plus the raw series, so `cargo bench` targets, the `dduty exp`
 //! CLI, and EXPERIMENTS.md all draw from the same code.
+//!
+//! Every suite sweep runs through the parallel experiment engine
+//! ([`crate::flow::engine`]) against the process-wide artifact cache, so
+//! a figure that evaluates N variants maps each circuit once and packs
+//! once per (circuit, variant) — only the per-seed place/route jobs scale
+//! with the grid.
 
 use std::collections::HashMap;
 
@@ -9,7 +15,8 @@ use crate::arch::device::Device;
 use crate::arch::{Arch, ArchVariant};
 use crate::bench_suites::{all_suites, koios_suite, kratos_suite, vtr_suite, BenchParams,
                           Benchmark, Suite};
-use crate::coordinator::{default_workers, run_jobs, Job};
+use crate::coordinator::default_workers;
+use crate::flow::engine::{ArtifactCache, Engine, ExperimentPlan};
 use crate::flow::{run_flow, FlowOpts, FlowResult};
 use crate::netlist::NetlistStats;
 use crate::pack::{pack, PackOpts, Unrelated};
@@ -24,17 +31,19 @@ use crate::util::Table;
 pub struct ExpOpts {
     pub quick: bool,
     pub seeds: Vec<u64>,
+    /// Worker threads for the experiment engine (the CLI's `--jobs N`).
+    pub jobs: usize,
 }
 
 impl Default for ExpOpts {
     fn default() -> Self {
-        ExpOpts { quick: false, seeds: vec![1, 2, 3] }
+        ExpOpts { quick: false, seeds: vec![1, 2, 3], jobs: default_workers() }
     }
 }
 
 impl ExpOpts {
     pub fn quick() -> Self {
-        ExpOpts { quick: true, seeds: vec![1] }
+        ExpOpts { quick: true, seeds: vec![1], jobs: default_workers() }
     }
 
     fn flow(&self) -> FlowOpts {
@@ -44,6 +53,11 @@ impl ExpOpts {
             route: true,
             ..Default::default()
         }
+    }
+
+    /// Engine bound to the process-wide artifact cache.
+    fn engine(&self) -> Engine {
+        Engine::with_cache(self.jobs, ArtifactCache::global())
     }
 }
 
@@ -60,6 +74,7 @@ pub fn table2() -> Table {
 /// Table III: benchmark-suite statistics on the baseline architecture.
 pub fn table3(opts: &ExpOpts) -> Table {
     let params = BenchParams::default();
+    let engine = opts.engine();
     let mut t = Table::new(
         "Table III: benchmark suite statistics (baseline Stratix-10-like, scaled)",
         &["Benchmark", "Num. circuits", "ALMs avg", "ALMs max", "Adder% avg",
@@ -70,17 +85,19 @@ pub fn table3(opts: &ExpOpts) -> Table {
         (Suite::Koios, koios_suite(&params)),
         (Suite::Kratos, kratos_suite(&params)),
     ] {
-        let jobs: Vec<Job> = benches
-            .iter()
-            .map(|b| Job { bench: b.clone(), variant: ArchVariant::Baseline, opts: opts.flow() })
-            .collect();
-        let results = run_jobs(jobs, default_workers());
+        let plan = ExperimentPlan {
+            benches: benches.clone(),
+            variants: vec![ArchVariant::Baseline],
+            flow: opts.flow(),
+        };
+        let results = engine.run(&plan).pop().expect("one variant row");
         let mut alms = Vec::new();
         let mut fracs = Vec::new();
         let mut fmaxs = Vec::new();
         for (b, r) in benches.iter().zip(&results) {
-            let nl = map_circuit(&b.generate(), &MapOpts::default());
-            let st = NetlistStats::of(&nl);
+            // Mapped stats come from the same cached artifact the flow used.
+            let mapped = engine.cache.mapped(b);
+            let st = NetlistStats::of(&mapped.nl);
             alms.push(r.alms as f64);
             fracs.push(st.adder_fraction * 100.0);
             fmaxs.push(r.fmax_mhz);
@@ -111,6 +128,7 @@ pub fn fig5(opts: &ExpOpts) -> (Table, HashMap<&'static str, [f64; 4]>) {
         AdderAlgo::Wallace,
         AdderAlgo::Dadda,
     ];
+    let engine = opts.engine();
     // Per algo, per circuit metrics.
     let mut per_algo: HashMap<&'static str, Vec<FlowResult>> = HashMap::new();
     for algo in algos {
@@ -118,11 +136,13 @@ pub fn fig5(opts: &ExpOpts) -> (Table, HashMap<&'static str, [f64; 4]>) {
             .iter()
             .map(|b| b.with_algo(algo))
             .collect();
-        let jobs: Vec<Job> = benches
-            .into_iter()
-            .map(|bench| Job { bench, variant: ArchVariant::Baseline, opts: opts.flow() })
-            .collect();
-        per_algo.insert(algo.name(), run_jobs(jobs, default_workers()));
+        let plan = ExperimentPlan {
+            benches,
+            variants: vec![ArchVariant::Baseline],
+            flow: opts.flow(),
+        };
+        let results = engine.run(&plan).pop().expect("one variant row");
+        per_algo.insert(algo.name(), results);
     }
 
     let base = &per_algo["vtr-baseline"];
@@ -163,14 +183,16 @@ pub fn fig5(opts: &ExpOpts) -> (Table, HashMap<&'static str, [f64; 4]>) {
 pub fn fig6(opts: &ExpOpts) -> (Table, Vec<(String, Suite, f64, f64, f64)>) {
     let params = BenchParams::default();
     let benches = all_suites(&params);
-    let mk_jobs = |variant: ArchVariant| -> Vec<Job> {
-        benches
-            .iter()
-            .map(|b| Job { bench: b.clone(), variant, opts: opts.flow() })
-            .collect()
+    // One plan, two variants: the mapped netlists are shared between the
+    // baseline and DD5 passes through the artifact cache.
+    let plan = ExperimentPlan {
+        benches: benches.clone(),
+        variants: vec![ArchVariant::Baseline, ArchVariant::Dd5],
+        flow: opts.flow(),
     };
-    let base = run_jobs(mk_jobs(ArchVariant::Baseline), default_workers());
-    let dd5 = run_jobs(mk_jobs(ArchVariant::Dd5), default_workers());
+    let mut grid = opts.engine().run(&plan);
+    let dd5 = grid.pop().expect("dd5 row");
+    let base = grid.pop().expect("baseline row");
 
     let mut rows = Vec::new();
     let mut t = Table::new(
@@ -218,27 +240,24 @@ pub fn fig6(opts: &ExpOpts) -> (Table, Vec<(String, Suite, f64, f64, f64)>) {
 pub fn fig7(opts: &ExpOpts) -> Table {
     let params = BenchParams { width: 6, sparsity: 0.5, ..Default::default() };
     let benches = all_suites(&params);
-    let run_variant = |variant: ArchVariant| -> Vec<FlowResult> {
-        let jobs = benches
-            .iter()
-            .map(|b| Job { bench: b.clone(), variant, opts: opts.flow() })
-            .collect();
-        run_jobs(jobs, default_workers())
+    let plan = ExperimentPlan {
+        benches: benches.clone(),
+        variants: vec![ArchVariant::Baseline, ArchVariant::Dd5, ArchVariant::Dd6],
+        flow: opts.flow(),
     };
-    let base = run_variant(ArchVariant::Baseline);
-    let dd5 = run_variant(ArchVariant::Dd5);
-    let dd6 = run_variant(ArchVariant::Dd6);
+    let grid = opts.engine().run(&plan);
+    let (base, dd5, dd6) = (&grid[0], &grid[1], &grid[2]);
 
     let mut t = Table::new(
         "Fig. 7: DD5 vs DD6 (normalized to baseline, geomean per suite)",
         &["Suite", "Arch", "ALM area", "CPD", "ADP"],
     );
     for suite in [Suite::Vtr, Suite::Koios, Suite::Kratos] {
-        for (name, rs) in [("DD5", &dd5), ("DD6", &dd6)] {
+        for (name, rs) in [("DD5", dd5), ("DD6", dd6)] {
             let sel = |f: &dyn Fn(&FlowResult, &FlowResult) -> f64| -> f64 {
                 let v: Vec<f64> = benches
                     .iter()
-                    .zip(rs.iter().zip(&base))
+                    .zip(rs.iter().zip(base))
                     .filter(|(b, _)| b.suite == suite)
                     .map(|(_, (r, b))| f(r, b))
                     .collect();
@@ -261,15 +280,19 @@ pub fn fig7(opts: &ExpOpts) -> Table {
 pub fn fig8(opts: &ExpOpts) -> (Table, Vec<f64>, Vec<f64>) {
     let params = BenchParams::default();
     let benches = kratos_suite(&params);
-    let hist_for = |variant: ArchVariant| -> Vec<f64> {
-        let jobs: Vec<Job> = benches
-            .iter()
-            .map(|b| Job { bench: b.clone(), variant, opts: opts.flow() })
-            .collect();
-        let results = run_jobs(jobs, default_workers());
+    let plan = ExperimentPlan {
+        benches,
+        variants: vec![ArchVariant::Baseline, ArchVariant::Dd5],
+        flow: opts.flow(),
+    };
+    let mut grid = opts.engine().run(&plan);
+    let dd5_results = grid.pop().expect("dd5 row");
+    let base_results = grid.pop().expect("baseline row");
+
+    let hist_of = |results: &[FlowResult]| -> Vec<f64> {
         let mut h = vec![0.0; 10];
         let mut n = 0usize;
-        for r in &results {
+        for r in results {
             if r.channel_util.is_empty() {
                 continue;
             }
@@ -290,8 +313,8 @@ pub fn fig8(opts: &ExpOpts) -> (Table, Vec<f64>, Vec<f64>) {
         h.iter_mut().for_each(|v| *v /= n.max(1) as f64);
         h
     };
-    let hb = hist_for(ArchVariant::Baseline);
-    let hd = hist_for(ArchVariant::Dd5);
+    let hb = hist_of(&base_results);
+    let hd = hist_of(&dd5_results);
     let mut t = Table::new(
         "Fig. 8: routing channel utilization histogram, Kratos average",
         &["Utilization bin", "Baseline", "DD5"],

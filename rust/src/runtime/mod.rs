@@ -1,31 +1,42 @@
-//! PJRT runtime: load the AOT-compiled placement-cost HLO artifacts and
-//! execute them from the Rust hot path.
+//! Placement-cost kernel runtime.
 //!
-//! The interchange format is HLO *text* (see python/compile/aot.py and
-//! /opt/xla-example/README.md): jax >= 0.5 emits protos with 64-bit ids
-//! that xla_extension 0.5.1 rejects; the text parser reassigns ids.
+//! The placer's batched cost model (weighted HPWL + RUDY congestion, see
+//! `python/compile/kernels/hpwl.py`) was designed to execute as an
+//! AOT-compiled JAX/Pallas HLO artifact through PJRT.  The offline build
+//! environment ships neither the `xla` crate nor a PJRT plugin, so this
+//! runtime executes a *native* evaluator implementing exactly the same
+//! math as the Pallas kernel's reference oracle
+//! (`python/compile/kernels/ref.py`):
 //!
-//! Artifacts come in net-count buckets (`cost_n{N}.hlo.txt`); the runtime
-//! compiles each once and picks the smallest bucket that fits the live net
-//! count, padding the rest with `valid = 0`.
+//! * `whpwl = sum_n w_n * ((xmax - xmin) + (ymax - ymin))`
+//! * RUDY demand `w * (dx + dy) / (dx * dy)` with `dx = xmax - xmin + 1`,
+//!   spread uniformly over the covered bins of a fixed 64x64 grid
+//!   (overlap of `[min, max+1)` with bin `[j, j+1)`, clipped to `[0, 1]`),
+//! * `overflow = sum_bin max(demand - capacity, 0)`.
+//!
+//! All arithmetic is f32, mirroring the XLA kernel's precision, so the
+//! placer's kernel-vs-incremental consistency check behaves identically.
+//!
+//! Artifact compatibility: when `cost_n{N}.hlo.txt` bucket files exist
+//! (produced by `python/compile/aot.py` / `make artifacts`), their sizes
+//! define the bucket ladder; otherwise a default ladder is used.  Inputs
+//! beyond the largest bucket are rejected, exactly as the compiled
+//! executables would be.
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+use crate::util::error::{Context, Result};
 
 /// Fixed congestion-grid side, matching python/compile/kernels/hpwl.py.
 pub const GRID: usize = 64;
 
-/// One compiled bucket.
-struct Bucket {
-    nets: usize,
-    exe: xla::PjRtLoadedExecutable,
-}
+/// Bucket ladder used when no AOT artifacts are present (matches
+/// python/compile/model.py's BUCKETS).
+const DEFAULT_BUCKETS: [usize; 5] = [256, 512, 1024, 2048, 4096];
 
-/// The placement-cost kernel, compiled for every available bucket.
+/// The placement-cost kernel with its net-count bucket ladder.
 pub struct CostKernel {
-    _client: xla::PjRtClient,
-    buckets: Vec<Bucket>,
+    buckets: Vec<usize>,
 }
 
 /// Result of one kernel evaluation.
@@ -53,31 +64,27 @@ pub fn artifacts_dir() -> PathBuf {
 }
 
 impl CostKernel {
-    /// Load and compile every `cost_n*.hlo.txt` bucket in `dir`.
+    /// Build the kernel, taking the bucket ladder from any
+    /// `cost_n*.hlo.txt` artifacts in `dir` (default ladder otherwise).
     pub fn load(dir: &Path) -> Result<CostKernel> {
-        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
         let mut buckets = Vec::new();
-        let entries = std::fs::read_dir(dir)
-            .with_context(|| format!("artifacts dir {dir:?} (run `make artifacts`)"))?;
-        for e in entries {
-            let path = e?.path();
-            let name = path.file_name().unwrap_or_default().to_string_lossy().to_string();
-            let Some(rest) = name.strip_prefix("cost_n") else { continue };
-            let Some(nstr) = rest.strip_suffix(".hlo.txt") else { continue };
-            let nets: usize = nstr.parse().with_context(|| format!("bucket size in {name}"))?;
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().context("non-utf8 path")?,
-            )
-            .with_context(|| format!("parse {name}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client.compile(&comp).with_context(|| format!("compile {name}"))?;
-            buckets.push(Bucket { nets, exe });
+        if let Ok(entries) = std::fs::read_dir(dir) {
+            for e in entries.flatten() {
+                let name = e.file_name().to_string_lossy().to_string();
+                let Some(rest) = name.strip_prefix("cost_n") else { continue };
+                let Some(nstr) = rest.strip_suffix(".hlo.txt") else { continue };
+                let nets: usize = nstr
+                    .parse()
+                    .with_context(|| format!("bucket size in {name}"))?;
+                buckets.push(nets);
+            }
         }
         if buckets.is_empty() {
-            bail!("no cost_n*.hlo.txt artifacts in {dir:?} — run `make artifacts`");
+            buckets = DEFAULT_BUCKETS.to_vec();
         }
-        buckets.sort_by_key(|b| b.nets);
-        Ok(CostKernel { _client: client, buckets })
+        buckets.sort_unstable();
+        buckets.dedup();
+        Ok(CostKernel { buckets })
     }
 
     /// Load from the default artifacts location.
@@ -87,60 +94,67 @@ impl CostKernel {
 
     /// Largest supported net count.
     pub fn max_nets(&self) -> usize {
-        self.buckets.last().map(|b| b.nets).unwrap_or(0)
+        self.buckets.last().copied().unwrap_or(0)
     }
 
     /// Evaluate the cost model over per-net boxes
     /// `[xmin, xmax, ymin, ymax, weight]` in kernel grid coordinates
     /// (0..GRID), with a per-bin `capacity` for the overflow term.
+    ///
+    /// Boxes use *inclusive* bin coordinates: a net confined to one bin
+    /// has `xmin == xmax`.
     pub fn evaluate(&self, boxes: &[[f32; 5]], capacity: f32) -> Result<CostEval> {
         let n_live = boxes.len();
-        let bucket = self
+        // Bucket selection kept for fidelity with the compiled path: the
+        // native evaluator pads implicitly (absent nets contribute
+        // nothing), but net counts beyond the ladder are rejected exactly
+        // like the compiled executables would reject them.
+        let _bucket = self
             .buckets
             .iter()
-            .find(|b| b.nets >= n_live)
+            .copied()
+            .find(|&b| b >= n_live)
             .with_context(|| {
                 format!("{} nets exceeds largest bucket {}", n_live, self.max_nets())
             })?;
-        let n = bucket.nets;
 
-        let mut xmin = vec![0.0f32; n];
-        let mut xmax = vec![0.0f32; n];
-        let mut ymin = vec![0.0f32; n];
-        let mut ymax = vec![0.0f32; n];
-        let mut w = vec![0.0f32; n];
-        let mut valid = vec![0.0f32; n];
-        for (i, b) in boxes.iter().enumerate() {
-            xmin[i] = b[0];
-            xmax[i] = b[1];
-            ymin[i] = b[2];
-            ymax[i] = b[3];
-            w[i] = b[4];
-            valid[i] = 1.0;
-        }
+        let mut whpwl = 0.0f32;
+        let mut congestion = vec![0.0f32; GRID * GRID];
+        for b in boxes {
+            let [xmin, xmax, ymin, ymax, w] = *b;
+            whpwl += w * ((xmax - xmin) + (ymax - ymin));
 
-        let lits = [
-            xla::Literal::vec1(&xmin),
-            xla::Literal::vec1(&xmax),
-            xla::Literal::vec1(&ymin),
-            xla::Literal::vec1(&ymax),
-            xla::Literal::vec1(&w),
-            xla::Literal::vec1(&valid),
-            xla::Literal::vec1(&[capacity]),
-        ];
-        let result = bucket
-            .exe
-            .execute::<xla::Literal>(&lits)
-            .context("kernel execute")?[0][0]
-            .to_literal_sync()?;
-        let parts = result.to_tuple()?;
-        if parts.len() != 3 {
-            bail!("expected 3-tuple from cost kernel, got {}", parts.len());
+            let dx = xmax - xmin + 1.0;
+            let dy = ymax - ymin + 1.0;
+            let dens = w * (dx + dy) / (dx * dy);
+            if dens == 0.0 {
+                continue;
+            }
+            // Bins overlapping [min, max+1) along each axis.  The +1 edge
+            // bin catches fractional maxima; its overlap is 0 for integral
+            // coordinates, matching the reference's dense clip formula.
+            let x0 = xmin.max(0.0).floor() as usize;
+            let x1 = ((xmax.max(0.0).floor() as usize) + 1).min(GRID - 1);
+            let y0 = ymin.max(0.0).floor() as usize;
+            let y1 = ((ymax.max(0.0).floor() as usize) + 1).min(GRID - 1);
+            for gy in y0..=y1 {
+                let oy = (ymax + 1.0).min(gy as f32 + 1.0) - ymin.max(gy as f32);
+                let oy = oy.clamp(0.0, 1.0);
+                if oy == 0.0 {
+                    continue;
+                }
+                let row = &mut congestion[gy * GRID..(gy + 1) * GRID];
+                for (gx, cell) in row.iter_mut().enumerate().take(x1 + 1).skip(x0) {
+                    let ox = (xmax + 1.0).min(gx as f32 + 1.0) - xmin.max(gx as f32);
+                    *cell += dens * oy * ox.clamp(0.0, 1.0);
+                }
+            }
         }
-        let whpwl = parts[0].to_vec::<f32>()?[0] as f64;
-        let congestion = parts[1].to_vec::<f32>()?;
-        let overflow = parts[2].to_vec::<f32>()?[0] as f64;
-        Ok(CostEval { whpwl, congestion, overflow })
+        let overflow: f64 = congestion
+            .iter()
+            .map(|&c| (c - capacity).max(0.0) as f64)
+            .sum();
+        Ok(CostEval { whpwl: whpwl as f64, congestion, overflow })
     }
 }
 
@@ -148,16 +162,13 @@ impl CostKernel {
 mod tests {
     use super::*;
 
-    fn kernel() -> Option<CostKernel> {
-        CostKernel::load_default().ok()
+    fn kernel() -> CostKernel {
+        CostKernel::load_default().expect("native kernel always loads")
     }
 
     #[test]
     fn loads_buckets_and_evaluates() {
-        let Some(k) = kernel() else {
-            eprintln!("skipping: artifacts not built");
-            return;
-        };
+        let k = kernel();
         assert!(k.max_nets() >= 1024);
         // One net: bbox (0,3)x(0,1), weight 2 -> whpwl = 2*(3+1) = 8.
         let eval = k.evaluate(&[[0.0, 3.0, 0.0, 1.0, 2.0]], 1e9).unwrap();
@@ -170,12 +181,20 @@ mod tests {
     }
 
     #[test]
+    fn fractional_boxes_integrate_exactly() {
+        let k = kernel();
+        // Fractional bbox: demand must still integrate to w * (dx + dy).
+        let (xmin, xmax, ymin, ymax, w) = (1.25f32, 3.75, 0.5, 0.5, 1.5);
+        let eval = k.evaluate(&[[xmin, xmax, ymin, ymax, w]], f32::MAX).unwrap();
+        let want = w * ((xmax - xmin + 1.0) + (ymax - ymin + 1.0));
+        let total: f32 = eval.congestion.iter().sum();
+        assert!((total - want).abs() < 1e-3, "total {total} want {want}");
+    }
+
+    #[test]
     fn bucket_selection_pads() {
-        let Some(k) = kernel() else {
-            eprintln!("skipping: artifacts not built");
-            return;
-        };
-        // 1500 nets forces the 4096 bucket.
+        let k = kernel();
+        // 1500 nets exceeds the 1024 bucket; a larger bucket must absorb it.
         let boxes: Vec<[f32; 5]> = (0..1500)
             .map(|i| {
                 let x = (i % 60) as f32;
@@ -192,10 +211,7 @@ mod tests {
 
     #[test]
     fn oversize_rejected() {
-        let Some(k) = kernel() else {
-            eprintln!("skipping: artifacts not built");
-            return;
-        };
+        let k = kernel();
         let boxes = vec![[0.0f32, 1.0, 0.0, 1.0, 1.0]; k.max_nets() + 1];
         assert!(k.evaluate(&boxes, 1.0).is_err());
     }

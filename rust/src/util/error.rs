@@ -1,0 +1,139 @@
+//! Minimal drop-in replacement for the `anyhow` idioms this crate uses.
+//!
+//! The offline build environment has no crates.io access, so the crate is
+//! std-only.  This module provides the small surface the code relies on: a
+//! string-backed [`Error`], a [`Result`] alias defaulting its error type,
+//! a [`Context`] extension for `Result`/`Option`, and the `anyhow!` /
+//! `bail!` / `ensure!` macros (exported at the crate root, as
+//! `macro_rules!` exports are).
+
+use std::fmt;
+
+/// A string-backed error.
+///
+/// Deliberately does *not* implement [`std::error::Error`]: that keeps the
+/// blanket `impl<E: std::error::Error> From<E> for Error` below coherent
+/// (the same trick `anyhow::Error` uses), so `?` converts any std error
+/// into this type.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from a message.
+    pub fn msg(msg: impl Into<String>) -> Error {
+        Error { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+/// `Result` defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to failures, mirroring `anyhow::Context`.
+pub trait Context<T> {
+    /// Wrap the error/none case with `msg`.
+    fn context<D: fmt::Display>(self, msg: D) -> Result<T>;
+    /// Wrap the error/none case with a lazily built message.
+    fn with_context<D: fmt::Display, F: FnOnce() -> D>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<D: fmt::Display>(self, msg: D) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{msg}: {e}")))
+    }
+
+    fn with_context<D: fmt::Display, F: FnOnce() -> D>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<D: fmt::Display>(self, msg: D) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg.to_string()))
+    }
+
+    fn with_context<D: fmt::Display, F: FnOnce() -> D>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Build an [`Error`](crate::util::error::Error) from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an error built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::util::error::Error::msg(format!($($arg)*)))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::util::error::Error::msg(format!($($arg)*)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<u8> {
+        let _ = std::fs::metadata("/definitely/not/a/path")?; // From<io::Error>
+        Ok(0)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert!(io_fail().is_err());
+    }
+
+    #[test]
+    fn context_on_option_and_result() {
+        let none: Option<u8> = None;
+        let e = none.context("missing thing").unwrap_err();
+        assert_eq!(format!("{e}"), "missing thing");
+
+        let r: std::result::Result<u8, std::num::ParseIntError> = "x".parse();
+        let e = r.with_context(|| "parsing x").unwrap_err();
+        assert!(format!("{e}").starts_with("parsing x: "));
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn f(ok: bool) -> Result<u8> {
+            ensure!(ok, "flag was {ok}");
+            Ok(1)
+        }
+        assert!(f(true).is_ok());
+        assert_eq!(format!("{}", f(false).unwrap_err()), "flag was false");
+        assert_eq!(format!("{}", anyhow!("n={}", 3)), "n=3");
+    }
+}

@@ -3,6 +3,7 @@
 //! The offline environment has no `rand`/`criterion`/`prettytable`; these
 //! replacements are tiny, deterministic, and dependency-free.
 
+pub mod error;
 pub mod rng;
 pub mod stats;
 pub mod table;

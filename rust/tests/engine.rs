@@ -1,0 +1,104 @@
+//! Experiment-engine contracts, end to end:
+//!
+//! * parallel (jobs=4) and serial (jobs=1) runs of one plan produce
+//!   bit-identical `FlowResult` metrics (the determinism contract the
+//!   paper's multi-seed methodology depends on),
+//! * the engine reproduces the uncached serial `flow::run_benchmark`
+//!   path exactly,
+//! * cache-served packings are identical to cold recomputation.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use double_duty::arch::{Arch, ArchVariant};
+use double_duty::bench_suites::{vtr_suite, BenchParams};
+use double_duty::flow::engine::{ArtifactCache, Engine, ExperimentPlan};
+use double_duty::flow::{run_benchmark, FlowOpts};
+use double_duty::pack::{pack, PackOpts, Unrelated};
+use double_duty::techmap::{map_circuit, MapOpts};
+
+fn small_plan(route: bool) -> ExperimentPlan {
+    let params = BenchParams::default();
+    ExperimentPlan {
+        benches: vtr_suite(&params)[..3].to_vec(),
+        variants: vec![ArchVariant::Baseline, ArchVariant::Dd5],
+        flow: FlowOpts {
+            seeds: vec![1, 2],
+            place_effort: 0.05,
+            route,
+            ..Default::default()
+        },
+    }
+}
+
+/// jobs=4 must reproduce jobs=1 bit-for-bit, metric by metric.
+#[test]
+fn parallel_matches_serial_bit_identical() {
+    let plan = small_plan(false);
+    let serial = Engine::new(1).run(&plan);
+    let par = Engine::new(4).run(&plan);
+    assert_eq!(serial.len(), par.len());
+    for (rs, rp) in serial.iter().flatten().zip(par.iter().flatten()) {
+        assert_eq!(rs.name, rp.name);
+        assert_eq!(rs.variant, rp.variant);
+        assert_eq!(rs.alms, rp.alms);
+        assert_eq!(rs.lbs, rp.lbs);
+        assert_eq!(rs.concurrent_luts, rp.concurrent_luts);
+        assert!(rs.cpd_ns == rp.cpd_ns, "{}: cpd {} vs {}", rs.name, rs.cpd_ns, rp.cpd_ns);
+        assert!(rs.adp == rp.adp, "{}: adp {} vs {}", rs.name, rs.adp, rp.adp);
+        assert_eq!(rs.routed_ok, rp.routed_ok);
+        assert_eq!(rs.channel_util, rp.channel_util);
+    }
+}
+
+/// The engine (parallel, cached) must equal the uncached serial flow —
+/// including on the routed path, whose channel utilization it averages.
+#[test]
+fn engine_matches_uncached_run_benchmark_routed() {
+    let params = BenchParams::default();
+    let plan = ExperimentPlan {
+        benches: vtr_suite(&params)[..1].to_vec(),
+        variants: vec![ArchVariant::Dd5],
+        flow: FlowOpts { seeds: vec![3], place_effort: 0.05, ..Default::default() },
+    };
+    let grid = Engine::new(4).run(&plan);
+    let got = &grid[0][0];
+    let want = run_benchmark(&plan.benches[0], ArchVariant::Dd5, &plan.flow);
+    assert_eq!(got.alms, want.alms);
+    assert_eq!(got.lbs, want.lbs);
+    assert!(got.cpd_ns == want.cpd_ns, "cpd {} vs {}", got.cpd_ns, want.cpd_ns);
+    assert!(got.adp == want.adp);
+    assert_eq!(got.routed_ok, want.routed_ok);
+    assert!(got.route_iters == want.route_iters);
+    assert_eq!(got.channel_util, want.channel_util);
+    assert_eq!(got.dedup_hits, want.dedup_hits);
+}
+
+/// Artifacts served from the cache are identical to a cold recomputation,
+/// and repeat lookups are real hits (same shared instance, no recompute).
+#[test]
+fn cache_returns_cold_identical_packing() {
+    let params = BenchParams::default();
+    let b = &vtr_suite(&params)[1];
+    let cache = ArtifactCache::new();
+    let mapped = cache.mapped(b);
+    let arch = Arch::coffe(ArchVariant::Dd5);
+    let opts = PackOpts { unrelated: Unrelated::Auto };
+    let warm0 = cache.packed(&mapped, &arch, &opts);
+    let warm1 = cache.packed(&mapped, &arch, &opts);
+    assert!(Arc::ptr_eq(&warm0, &warm1), "second lookup must be cache-served");
+    assert_eq!(cache.stats.pack_misses.load(Ordering::Relaxed), 1);
+    assert_eq!(cache.stats.pack_hits.load(Ordering::Relaxed), 1);
+
+    // Cold recompute from scratch, bypassing the cache entirely.
+    let nl = map_circuit(&b.generate(), &MapOpts::default());
+    let cold = pack(&nl, &arch, &opts);
+    assert_eq!(warm0.stats.alms, cold.stats.alms);
+    assert_eq!(warm0.stats.lbs, cold.stats.lbs);
+    assert_eq!(warm0.stats.luts, cold.stats.luts);
+    assert_eq!(warm0.stats.adder_bits, cold.stats.adder_bits);
+    assert_eq!(warm0.stats.concurrent_luts, cold.stats.concurrent_luts);
+    assert_eq!(warm0.stats.absorbed_luts, cold.stats.absorbed_luts);
+    assert_eq!(warm0.alms.len(), cold.alms.len());
+    assert_eq!(warm0.chain_macros, cold.chain_macros);
+}
