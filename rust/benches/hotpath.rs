@@ -1,7 +1,11 @@
 //! Hot-path microbenchmarks for the perf pass (EXPERIMENTS.md §Perf):
-//! placer move evaluation, router A*, packer, mapper, and the PJRT kernel
-//! evaluation latency. No criterion offline — simple timed loops with
-//! enough iterations for stable medians.
+//! placer move evaluation (incremental cost cache), router A* (serial vs
+//! sharded PathFinder), packer, mapper, and the PJRT kernel evaluation
+//! latency. No criterion offline — simple timed loops with enough
+//! iterations for stable medians.
+//!
+//! `--quick` runs a CI-smoke subset: single iterations, the router
+//! determinism check, no engine sweep.
 use std::time::Instant;
 
 use double_duty::arch::{Arch, ArchVariant};
@@ -10,9 +14,9 @@ use double_duty::coordinator::default_workers;
 use double_duty::flow::engine::{Engine, ExperimentPlan};
 use double_duty::flow::FlowOpts;
 use double_duty::pack::{pack, PackOpts};
-use double_duty::place::cost::NetModel;
+use double_duty::place::cost::{IncrementalCost, NetModel};
 use double_duty::place::{place, PlaceOpts};
-use double_duty::route::{route, RouteOpts};
+use double_duty::route::{route, RouteOpts, Routing};
 use double_duty::techmap::{map_circuit, MapOpts};
 
 fn timed<F: FnMut()>(name: &str, iters: usize, mut f: F) {
@@ -30,24 +34,36 @@ fn timed<F: FnMut()>(name: &str, iters: usize, mut f: F) {
     }
 }
 
+fn routing_identical(a: &Routing, b: &Routing) -> bool {
+    a.success == b.success
+        && a.iterations == b.iterations
+        && a.wirelength == b.wirelength
+        && a.sink_hops == b.sink_hops
+        && a.net_nodes == b.net_nodes
+        && a.channel_util == b.channel_util
+}
+
 fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
     let params = BenchParams::default();
-    let bench = &kratos_suite(&params)[2];
+    let suite = kratos_suite(&params);
+    let bench = &suite[2]; // gemmt: the hotpath representative
     let circ = bench.generate();
     let arch = Arch::coffe(ArchVariant::Dd5);
+    let reps = |full: usize| if quick { 1 } else { full };
 
-    timed("synth+map gemmt", 5, || {
+    timed("synth+map gemmt", reps(5), || {
         let c = bench.generate();
         let _ = map_circuit(&c, &MapOpts::default());
     });
 
     let nl = map_circuit(&circ, &MapOpts::default());
-    timed("pack gemmt", 10, || {
+    timed("pack gemmt", reps(10), || {
         let _ = pack(&nl, &arch, &PackOpts::default());
     });
 
     let packing = pack(&nl, &arch, &PackOpts::default());
-    timed("place gemmt (effort 0.3)", 3, || {
+    timed("place gemmt (effort 0.3)", reps(3), || {
         let _ = place(&nl, &packing, &arch,
                       &PlaceOpts { effort: 0.3, ..Default::default() });
     });
@@ -55,30 +71,82 @@ fn main() {
     let pl = place(&nl, &packing, &arch, &PlaceOpts { effort: 0.3, ..Default::default() });
     let mut model = NetModel::build(&nl, &packing);
     model.set_weights(&[], false);
-    timed("route gemmt", 3, || {
-        let _ = route(&model, &pl, &arch, &RouteOpts::default());
-    });
 
-    timed("full_cost (rust)", 200, || {
+    timed("full_cost (rust)", reps(200), || {
         let _ = model.full_cost(&pl.lb_loc, &pl.io_loc);
     });
     let moved = [(0usize, double_duty::arch::device::Loc::new(2, 2))];
-    timed("move_delta (rust)", 20_000, || {
+    timed("move_delta (scratch)", reps(20_000), || {
         let _ = model.move_delta(&pl.lb_loc, &pl.io_loc, &moved);
+    });
+    let inc = IncrementalCost::new(&model, &pl.lb_loc, &pl.io_loc);
+    timed("move_delta (incremental)", reps(20_000), || {
+        let _ = inc.move_delta(&model, &pl.lb_loc, &pl.io_loc, &moved);
     });
 
     match double_duty::place::kernel_accel::KernelCost::try_new(model.num_nets()) {
         Ok(mut k) => {
-            timed("full_cost+congestion (PJRT)", 50, || {
-                let _ = k.evaluate(&model, &pl.lb_loc, &pl.io_loc, &pl.device).unwrap();
+            timed("full_cost+congestion (PJRT)", reps(50), || {
+                let _ = k.evaluate_cached(&model, &inc, &pl.device).unwrap();
             });
         }
         Err(e) => println!("PJRT kernel unavailable: {e}"),
     }
 
-    timed("sta gemmt", 50, || {
+    timed("sta gemmt", reps(50), || {
         let _ = double_duty::timing::sta(&nl, &packing, &arch, |_, _, _| 150.0);
     });
+
+    // --- Router: serial vs sharded PathFinder on the largest Kratos
+    // circuit (by mapped cell count).  The ISSUE-2 acceptance bar is
+    // >1.5x at 4 jobs; results must be bit-identical (the rrg
+    // snapshot/reduce determinism contract).
+    let (big_nl, big_name) = if quick {
+        (nl.clone(), bench.name.clone())
+    } else {
+        suite
+            .iter()
+            .map(|b| (map_circuit(&b.generate(), &MapOpts::default()), b.name.clone()))
+            .max_by_key(|(nl, _)| nl.cells.len())
+            .expect("non-empty suite")
+    };
+    let big_pack = pack(&big_nl, &arch, &PackOpts::default());
+    let big_pl = place(&big_nl, &big_pack, &arch,
+                       &PlaceOpts { effort: 0.3, ..Default::default() });
+    let mut big_model = NetModel::build(&big_nl, &big_pack);
+    big_model.set_weights(&[], false);
+
+    let route_jobs = if quick { 2 } else { 4 };
+    let route_reps = reps(3);
+    let mut serial_route = None;
+    let t0 = Instant::now();
+    for _ in 0..route_reps {
+        serial_route = Some(route(&big_model, &big_pl, &arch,
+                                  &RouteOpts { jobs: 1, ..Default::default() }));
+    }
+    let t_serial = t0.elapsed().as_secs_f64() / route_reps as f64;
+    let mut sharded_route = None;
+    let t1 = Instant::now();
+    for _ in 0..route_reps {
+        sharded_route = Some(route(&big_model, &big_pl, &arch,
+                                   &RouteOpts { jobs: route_jobs, ..Default::default() }));
+    }
+    let t_sharded = t1.elapsed().as_secs_f64() / route_reps as f64;
+    let (sr, pr) = (serial_route.unwrap(), sharded_route.unwrap());
+    assert!(routing_identical(&sr, &pr),
+            "sharded router diverged from serial on {big_name}");
+    println!("route {big_name:<18} jobs=1 {:>8.1} ms", t_serial * 1e3);
+    println!(
+        "route {big_name:<18} jobs={route_jobs} {:>7.1} ms  ({:.2}x speedup, {} iters, bit-identical)",
+        t_sharded * 1e3,
+        t_serial / t_sharded.max(1e-9),
+        sr.iterations
+    );
+
+    if quick {
+        println!("--quick: skipping engine sweep");
+        return;
+    }
 
     // Experiment-engine sweep: the paper-style grid (Kratos suite x
     // {baseline, DD5} x 3 seeds), serial vs parallel.  Both runs start

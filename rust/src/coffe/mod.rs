@@ -118,6 +118,18 @@ pub fn model_variant(variant: ArchVariant) -> CoffeReport {
         components.push(("AddMux".to_string(), am_a, am_d));
         components.push(("AddMux Crossbar".to_string(), ax_a, ax_d));
     }
+    if matches!(variant, ArchVariant::Dd6) {
+        // The paper gives only DD6's output-mux delay penalty; the sized
+        // 6:1 / 4:1 mux pair predicts the matching area cost (the delay
+        // delta is reported for diagnosis, the STA keeps the published
+        // `dd6_outmux_extra`).
+        let (m4, m6) = subcircuits::output_mux_pair(&tech);
+        components.push((
+            "DD6 OutMux upgrade".to_string(),
+            (m6.area_mwta - m4.area_mwta) * cal.a_alm,
+            (m6.delay_ps - m4.delay_ps) * cal.d_alm,
+        ));
+    }
     components.push((format!("{} ALM", variant.name()), alm_mwta, f64::NAN));
 
     CoffeReport { variant, delays, area, components }
@@ -218,6 +230,24 @@ mod tests {
         let ax = dd5.components.iter().find(|(n, _, _)| n == "AddMux Crossbar").unwrap();
         assert!(ax.1 < 0.5 * bx_a);
         assert!(ax.2 > *bx_d);
+    }
+
+    /// DD6's refined output-mux modeling: the sized-mux area/delay deltas
+    /// are reported as a component, at DD5's level of detail.
+    #[test]
+    fn dd6_outmux_component_reported() {
+        let dd6 = model_variant(ArchVariant::Dd6);
+        let c = dd6
+            .components
+            .iter()
+            .find(|(n, _, _)| n == "DD6 OutMux upgrade")
+            .expect("DD6 reports its output-mux upgrade");
+        assert!(c.1 > 0.0, "area delta {}", c.1);
+        assert!(c.2 > 0.0, "delay delta {}", c.2);
+        let dd5 = model_variant(ArchVariant::Dd5);
+        assert!(dd5.components.iter().all(|(n, _, _)| n != "DD6 OutMux upgrade"));
+        // DD6's ALM stays bigger than DD5's under the refined model.
+        assert!(dd6.area.alm_mwta > dd5.area.alm_mwta);
     }
 
     #[test]

@@ -102,18 +102,49 @@ pub fn addmux(tech: &Tech) -> SizedComponent {
     SizedComponent { delay_ps: d, area_mwta: a, widths: vec![wp] }
 }
 
+/// ALM output multiplexing, sized like every other component rather than
+/// hand-widthed: the baseline pin mux is 4:1; the DD-widened pins (two on
+/// DD5, all four on DD6) grow to 6:1 to expose LUT outputs concurrently
+/// with the adders.  The 6:1 mux sits on every ALM output path and is
+/// sized for delay; the 4:1 baseline is evaluated at the *same* widths —
+/// the upgrade adds pass inputs to an existing mux whose drive sizing is
+/// shared — so the returned pair's area/delay deltas isolate exactly the
+/// cost of the extra inputs.  Driver: the ALM-internal output node; load:
+/// the LB output driver gate plus local wire.  Returns `(4:1, 6:1)`.
+pub fn output_mux_pair(tech: &Tech) -> (SizedComponent, SizedComponent) {
+    let r_drv = tech.r_inv(2.0);
+    let c_load = tech.c_inv_in(4.0) + 4.0 * tech.c_wire;
+    let eval6 = |w: &[f64]| {
+        let mut m = Mux::new(6);
+        m.w = [w[0], w[1], w[2], w[3]];
+        (m.delay_ps(tech, r_drv, c_load), m.area_mwta(tech))
+    };
+    let w = size_circuit(4, Objective::Delay, eval6);
+    let (d6, a6) = eval6(&w);
+    let mut m4 = Mux::new(4);
+    m4.w = [w[0], w[1], w[2], w[3]];
+    let d4 = m4.delay_ps(tech, r_drv, c_load);
+    let a4 = m4.area_mwta(tech);
+    (
+        SizedComponent { delay_ps: d4, area_mwta: a4, widths: w.clone() },
+        SizedComponent { delay_ps: d6, area_mwta: a6, widths: w },
+    )
+}
+
 /// Raw area of the DD-variant additions *other than* the AddMux and its
 /// crossbar: Z-wire restoring drivers and the reworked output muxes.
-/// DD6 widens all four output muxes instead of two.
+/// DD6 widens all four output muxes instead of two.  The paper publishes
+/// only DD6's output-mux *delay* cost; its area contribution here is
+/// derived from the sized 6:1-vs-4:1 mux pair ([`output_mux_pair`]) at
+/// the same modeling detail as the DD5 components.
 pub fn dd_extra_area(tech: &Tech, variant: ArchVariant) -> f64 {
     if matches!(variant, ArchVariant::Baseline) {
         return 0.0;
     }
     let t2 = transistor_area_mwta(2.0);
     let z_wiring = 4.0 * (t2 + transistor_area_mwta(tech.beta * 2.0));
-    let m4 = Mux { n_inputs: 4, n_per_group: 2, n_groups: 2, w: [1.0, 1.0, 2.0, 4.0] };
-    let m6 = Mux { n_inputs: 6, n_per_group: 3, n_groups: 2, w: [1.0, 1.0, 2.0, 4.0] };
-    let per_upgrade = m6.area_mwta(tech) - m4.area_mwta(tech);
+    let (m4, m6) = output_mux_pair(tech);
+    let per_upgrade = m6.area_mwta - m4.area_mwta;
     let n_upgrades = if matches!(variant, ArchVariant::Dd6) { 4.0 } else { 2.0 };
     z_wiring + n_upgrades * per_upgrade
 }
@@ -222,6 +253,25 @@ mod tests {
         let d5 = alm_area(&t, ArchVariant::Dd5).area_mwta;
         let d6 = alm_area(&t, ArchVariant::Dd6).area_mwta;
         assert!(b < d5 && d5 < d6);
+    }
+
+    /// DD6 derives its output-mux area from the sized 6:1 / 4:1 pair: the
+    /// wider mux must cost both area and delay, and the DD6 upgrade (4
+    /// muxes) must cost exactly twice the DD5 upgrade (2 muxes) on top of
+    /// the shared Z wiring.
+    #[test]
+    fn dd6_output_mux_sized_area_and_delay() {
+        let t = Tech::n20();
+        let (m4, m6) = output_mux_pair(&t);
+        assert_eq!(m4.widths, m6.widths, "pair shares one drive sizing");
+        assert!(m6.area_mwta > m4.area_mwta,
+                "6:1 {} vs 4:1 {}", m6.area_mwta, m4.area_mwta);
+        assert!(m6.delay_ps > m4.delay_ps,
+                "6:1 {} ps vs 4:1 {} ps", m6.delay_ps, m4.delay_ps);
+        let d5 = dd_extra_area(&t, ArchVariant::Dd5);
+        let d6 = dd_extra_area(&t, ArchVariant::Dd6);
+        let per_upgrade = m6.area_mwta - m4.area_mwta;
+        assert!((d6 - d5 - 2.0 * per_upgrade).abs() < 1e-9);
     }
 
     #[test]

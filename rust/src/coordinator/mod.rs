@@ -37,21 +37,41 @@ where
     T: Send,
     F: Fn(usize) -> T + Sync,
 {
+    parallel_indexed_with(n, workers, || (), |_state, i| f(i))
+}
+
+/// [`parallel_indexed`] with per-worker scratch state: each worker builds
+/// one `S` via `init` and reuses it across every job it pulls (the router
+/// reuses A* search arrays this way instead of reallocating per net).
+/// Jobs must not let results depend on the scratch's history — `f` has to
+/// be a pure function of `i` once the scratch is reset — so that which
+/// worker runs a job is unobservable and results stay deterministic for
+/// any worker count.
+pub fn parallel_indexed_with<S, T, I, F>(n: usize, workers: usize, init: I, f: F) -> Vec<T>
+where
+    T: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize) -> T + Sync,
+{
     let workers = workers.max(1).min(n.max(1));
     if workers <= 1 {
-        return (0..n).map(f).collect();
+        let mut state = init();
+        return (0..n).map(|i| f(&mut state, i)).collect();
     }
     let next = AtomicUsize::new(0);
     let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
     thread::scope(|s| {
         for _ in 0..workers {
-            s.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
+            s.spawn(|| {
+                let mut state = init();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let r = f(&mut state, i);
+                    *slots[i].lock().unwrap() = Some(r);
                 }
-                let r = f(i);
-                *slots[i].lock().unwrap() = Some(r);
             });
         }
     });
@@ -120,6 +140,29 @@ mod tests {
         }];
         let results = run_jobs(jobs, 1);
         assert_eq!(results.len(), 1);
+    }
+
+    #[test]
+    fn parallel_indexed_with_reuses_worker_state() {
+        // Scratch counts jobs per worker; results must not depend on it.
+        let out = parallel_indexed_with(
+            50,
+            3,
+            || 0usize,
+            |seen, i| {
+                *seen += 1;
+                i * 2
+            },
+        );
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * 2);
+        }
+        // Serial path shares one state across all jobs.
+        let serial = parallel_indexed_with(4, 1, || Vec::new(), |s: &mut Vec<usize>, i| {
+            s.push(i);
+            s.len()
+        });
+        assert_eq!(serial, vec![1, 2, 3, 4]);
     }
 
     #[test]

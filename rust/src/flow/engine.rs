@@ -44,6 +44,7 @@ use crate::netlist::{CellKind, Netlist};
 use crate::pack::{pack, PackOpts, Packing, Unrelated};
 use crate::techmap::{map_circuit, MapOpts};
 
+use super::diskcache::DiskCache;
 use super::{arch_for_run, assemble_result, place_route_seed, FlowOpts, FlowResult, SeedMetrics};
 
 /// A mapped circuit artifact: the netlist plus generation metadata.
@@ -56,12 +57,16 @@ pub struct MappedCircuit {
     pub fingerprint: u64,
 }
 
-/// Cache hit/miss counters (observability for the perf pass).
+/// Cache hit/miss counters (observability for the perf pass).  `*_hits`
+/// count in-memory hits; `*_disk_hits` count artifacts revived from the
+/// persistent store; `*_misses` count actual recomputations.
 #[derive(Debug, Default)]
 pub struct CacheStats {
     pub map_hits: AtomicUsize,
+    pub map_disk_hits: AtomicUsize,
     pub map_misses: AtomicUsize,
     pub pack_hits: AtomicUsize,
+    pub pack_disk_hits: AtomicUsize,
     pub pack_misses: AtomicUsize,
 }
 
@@ -81,12 +86,23 @@ impl CacheStats {
 pub struct ArtifactCache {
     mapped: Mutex<HashMap<u64, Arc<MappedCircuit>>>,
     packed: Mutex<HashMap<u64, Arc<Packing>>>,
+    /// Optional persistent store under the in-memory maps: a memory miss
+    /// consults the disk before recomputing, and fresh computations are
+    /// written back (same content-hash keys, so entries survive across
+    /// processes).  `None` keeps the cache memory-only.
+    disk: Option<DiskCache>,
     pub stats: CacheStats,
 }
 
 impl ArtifactCache {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Memory cache backed by a persistent store (the CLI roots it at
+    /// [`DiskCache::default_root`], `target/dd-cache`).
+    pub fn with_disk(disk: DiskCache) -> Self {
+        ArtifactCache { disk: Some(disk), ..Default::default() }
     }
 
     /// Process-wide cache shared by the legacy `coordinator::run_jobs`
@@ -96,6 +112,16 @@ impl ArtifactCache {
     pub fn global() -> Arc<ArtifactCache> {
         static G: OnceLock<Arc<ArtifactCache>> = OnceLock::new();
         Arc::clone(G.get_or_init(|| Arc::new(ArtifactCache::new())))
+    }
+
+    /// Process-wide cache with the default persistent store attached —
+    /// what the CLI uses unless `--no-disk-cache` is passed, so repeated
+    /// invocations skip the map and pack stages.
+    pub fn global_disk() -> Arc<ArtifactCache> {
+        static G: OnceLock<Arc<ArtifactCache>> = OnceLock::new();
+        Arc::clone(G.get_or_init(|| {
+            Arc::new(ArtifactCache::with_disk(DiskCache::new(DiskCache::default_root())))
+        }))
     }
 
     /// Identity of a benchmark instance: name, suite, and every generator
@@ -166,6 +192,15 @@ impl ArtifactCache {
             CacheStats::bump(&self.stats.map_hits);
             return Arc::clone(m);
         }
+        // Memory miss: revive from disk (integrity-checked) before paying
+        // for a recompute.
+        if let Some(d) = &self.disk {
+            if let Some(m) = d.load_mapped(key) {
+                CacheStats::bump(&self.stats.map_disk_hits);
+                let art = Arc::new(m);
+                return Arc::clone(self.mapped.lock().unwrap().entry(key).or_insert(art));
+            }
+        }
         // Compute outside the lock; racing workers may both compute, in
         // which case the first insert wins (identical content, so which
         // Arc survives is unobservable).
@@ -174,6 +209,9 @@ impl ArtifactCache {
         let nl = map_circuit(&circ, &MapOpts::default());
         let fingerprint = Self::netlist_fingerprint(&nl);
         let art = Arc::new(MappedCircuit { nl, dedup_hits: circ.dedup_hits, fingerprint });
+        if let Some(d) = &self.disk {
+            d.store_mapped(key, &art);
+        }
         Arc::clone(self.mapped.lock().unwrap().entry(key).or_insert(art))
     }
 
@@ -184,8 +222,18 @@ impl ArtifactCache {
             CacheStats::bump(&self.stats.pack_hits);
             return Arc::clone(p);
         }
+        if let Some(d) = &self.disk {
+            if let Some(p) = d.load_packing(key) {
+                CacheStats::bump(&self.stats.pack_disk_hits);
+                let p = Arc::new(p);
+                return Arc::clone(self.packed.lock().unwrap().entry(key).or_insert(p));
+            }
+        }
         CacheStats::bump(&self.stats.pack_misses);
         let p = Arc::new(pack(&mapped.nl, arch, opts));
+        if let Some(d) = &self.disk {
+            d.store_packing(key, &p);
+        }
         Arc::clone(self.packed.lock().unwrap().entry(key).or_insert(p))
     }
 }
@@ -346,6 +394,38 @@ mod tests {
         assert_eq!(s.pack_misses.load(Ordering::Relaxed), 4);
         assert!(s.map_hits.load(Ordering::Relaxed) >= 2);
         assert!(s.pack_hits.load(Ordering::Relaxed) >= 4);
+    }
+
+    /// A second cache instance sharing the same disk root revives both
+    /// artifacts without recomputing, and they match the cold versions.
+    #[test]
+    fn disk_cache_revives_artifacts_across_instances() {
+        let root = std::env::temp_dir()
+            .join(format!("dd-cache-engine-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        let params = BenchParams::default();
+        let b = &vtr_suite(&params)[0];
+        let arch = Arch::coffe(ArchVariant::Dd5);
+        let opts = crate::pack::PackOpts::default();
+
+        let cold = ArtifactCache::with_disk(DiskCache::new(&root));
+        let m0 = cold.mapped(b);
+        let p0 = cold.packed(&m0, &arch, &opts);
+        assert_eq!(cold.stats.map_misses.load(Ordering::Relaxed), 1);
+        assert_eq!(cold.stats.map_disk_hits.load(Ordering::Relaxed), 0);
+
+        let warm = ArtifactCache::with_disk(DiskCache::new(&root));
+        let m1 = warm.mapped(b);
+        let p1 = warm.packed(&m1, &arch, &opts);
+        assert_eq!(warm.stats.map_misses.load(Ordering::Relaxed), 0);
+        assert_eq!(warm.stats.map_disk_hits.load(Ordering::Relaxed), 1);
+        assert_eq!(warm.stats.pack_misses.load(Ordering::Relaxed), 0);
+        assert_eq!(warm.stats.pack_disk_hits.load(Ordering::Relaxed), 1);
+        assert_eq!(m0.fingerprint, m1.fingerprint);
+        assert_eq!(m0.dedup_hits, m1.dedup_hits);
+        assert_eq!(p0.stats.alms, p1.stats.alms);
+        assert_eq!(p0.chain_macros, p1.chain_macros);
+        let _ = std::fs::remove_dir_all(&root);
     }
 
     #[test]

@@ -11,6 +11,7 @@
 //! * [`assemble_result`] — fixed-order seed reduction into a
 //!   [`FlowResult`].
 
+pub mod diskcache;
 pub mod engine;
 
 use crate::arch::device::Device;
@@ -19,10 +20,10 @@ use crate::bench_suites::Benchmark;
 use crate::netlist::Netlist;
 use crate::pack::{pack, PackOpts, Packing, Unrelated};
 use crate::place::{place, PlaceOpts};
-use crate::route::{route, routed_net_delay, RouteOpts, Routing};
+use crate::route::{route, RouteOpts, Routing};
 use crate::synth::Circuit;
 use crate::techmap::{map_circuit, MapOpts};
-use crate::timing::sta;
+use crate::timing::sta_routed;
 use crate::util::stats::mean;
 
 /// Flow options.
@@ -32,6 +33,9 @@ pub struct FlowOpts {
     pub place_effort: f64,
     pub unrelated: Unrelated,
     pub route: bool,
+    /// Worker threads inside each PathFinder run (`--route-jobs`; results
+    /// are bit-identical for any value — see `rust/tests/route_parallel.rs`).
+    pub route_jobs: usize,
     pub use_kernel: bool,
     /// Fixed device (Table IV stress); `None` auto-sizes per design.
     pub device: Option<Device>,
@@ -45,6 +49,7 @@ impl Default for FlowOpts {
             place_effort: 0.5,
             unrelated: Unrelated::Auto,
             route: true,
+            route_jobs: 1,
             use_kernel: false,
             device: None,
             channel_width: None,
@@ -130,9 +135,9 @@ pub fn place_route_seed(
     if opts.route {
         let mut model = crate::place::cost::NetModel::build(nl, packing);
         model.set_weights(&[], false);
-        let r: Routing = route(&model, &pl, arch, &RouteOpts::default());
-        let delay = routed_net_delay(&r, &model, arch);
-        let rpt = sta(nl, packing, arch, delay);
+        let ropts = RouteOpts { jobs: opts.route_jobs.max(1), ..RouteOpts::default() };
+        let r: Routing = route(&model, &pl, arch, &ropts);
+        let rpt = sta_routed(nl, packing, arch, &r, &model);
         SeedMetrics {
             seed,
             cpd_ns: rpt.cpd_ps / 1000.0,

@@ -38,6 +38,27 @@
 //! The `dduty` CLI exposes the worker count as `--jobs N` (default: all
 //! cores, or `DDUTY_WORKERS`); `benches/hotpath.rs` measures the sweep
 //! speedup and cache hit rates.
+//!
+//! ## Intra-cell parallelism
+//!
+//! Inside one grid cell the two hot loops are themselves sharded and
+//! incremental:
+//!
+//! * [`rrg`] is the shared routing-resource graph (node arena, CSR
+//!   adjacency, PathFinder cost state); [`route`] runs deterministic
+//!   parallel negotiated congestion over it — per-net A* in fixed waves
+//!   against frozen cost snapshots on `--route-jobs N` workers, with
+//!   fixed-order rip-up and commits, so `Routing` is bit-identical for
+//!   any job count (`rust/tests/route_parallel.rs`).
+//! * The annealing placer evaluates batched move proposals against an
+//!   incremental per-net bounding-box cost cache
+//!   ([`place::cost::IncrementalCost`]); the PJRT kernel consumes the
+//!   cached boxes directly.
+//!
+//! A persistent artifact cache ([`flow::diskcache`]) serializes mapped
+//! netlists and packings under `target/dd-cache` keyed by the same
+//! content hashes, so repeated CLI invocations skip the map/pack stages
+//! (`--no-disk-cache` opts out).
 
 pub mod arch;
 pub mod coffe;
@@ -53,6 +74,8 @@ pub mod timing;
 
 pub mod place;
 pub mod runtime;
+
+pub mod rrg;
 
 pub mod route;
 

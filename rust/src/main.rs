@@ -2,21 +2,27 @@
 //!
 //! Subcommands:
 //!   exp <table1|table2|table3|table4|fig5|fig6|fig7|fig8|fig9|all> [--quick] [--jobs N]
+//!       [--route-jobs N] [--no-disk-cache]
 //!       Regenerate a paper table/figure (experiment-engine sweeps run on
 //!       N worker threads; default: all cores / DDUTY_WORKERS).
 //!   flow --bench <name> [--variant baseline|dd5|dd6] [--seed N | --seeds a,b,c]
-//!        [--no-route] [--jobs N]
+//!        [--no-route] [--jobs N] [--route-jobs N] [--no-disk-cache]
 //!       Run the full CAD flow on one benchmark and print its metrics
-//!       (multi-seed runs place/route the seeds in parallel).
+//!       (multi-seed runs place/route the seeds in parallel; --route-jobs
+//!       shards each PathFinder run with bit-identical results).
 //!   list
 //!       List available benchmarks.
 //!   coffe
 //!       Print the COFFE component report (Tables I & II).
+//!
+//! Mapped netlists and packings persist under `target/dd-cache` so
+//! repeated invocations skip the map/pack stages; `--no-disk-cache`
+//! keeps a run memory-only.
 
 use double_duty::arch::ArchVariant;
 use double_duty::bench_suites::{all_suites, BenchParams};
 use double_duty::coordinator::default_workers;
-use double_duty::flow::engine::{Engine, ExperimentPlan};
+use double_duty::flow::engine::{ArtifactCache, Engine, ExperimentPlan};
 use double_duty::flow::FlowOpts;
 use double_duty::report::{self, ExpOpts};
 
@@ -34,27 +40,37 @@ fn main() {
         }
         _ => {
             eprintln!("usage: dduty <exp|flow|list|coffe> ...");
-            eprintln!("  dduty exp <table1|table2|table3|table4|fig5..fig9|all> [--quick] [--jobs N]");
+            eprintln!("  dduty exp <table1|table2|table3|table4|fig5..fig9|all> [--quick] \
+                       [--jobs N] [--route-jobs N] [--no-disk-cache]");
             eprintln!("  dduty flow --bench <name> [--variant baseline|dd5|dd6] \
-                       [--seed N | --seeds a,b,c] [--no-route] [--jobs N]");
+                       [--seed N | --seeds a,b,c] [--no-route] [--jobs N] \
+                       [--route-jobs N] [--no-disk-cache]");
             std::process::exit(if cmd == "help" { 0 } else { 2 });
         }
     }
 }
 
-/// `--jobs N` worker-count flag (defaults to all cores / DDUTY_WORKERS).
-/// A malformed value is a hard error, not a silent fallback.
-fn parse_jobs(args: &[String]) -> usize {
-    let Some(i) = args.iter().position(|a| a == "--jobs") else {
-        return default_workers();
+/// Numeric worker-count flag (`--jobs` / `--route-jobs`).  A malformed
+/// value is a hard error, not a silent fallback.
+fn parse_count_flag(args: &[String], flag: &str, default: usize) -> usize {
+    let Some(i) = args.iter().position(|a| a == flag) else {
+        return default;
     };
     match args.get(i + 1).map(|s| s.parse::<usize>()) {
         Some(Ok(n)) => n.max(1),
         _ => {
-            eprintln!("--jobs requires a numeric worker count");
+            eprintln!("{flag} requires a numeric worker count");
             std::process::exit(2);
         }
     }
+}
+
+fn parse_jobs(args: &[String]) -> usize {
+    parse_count_flag(args, "--jobs", default_workers())
+}
+
+fn parse_route_jobs(args: &[String]) -> usize {
+    parse_count_flag(args, "--route-jobs", 1)
 }
 
 fn exp_opts(args: &[String]) -> ExpOpts {
@@ -64,6 +80,8 @@ fn exp_opts(args: &[String]) -> ExpOpts {
         ExpOpts::default()
     };
     opts.jobs = parse_jobs(args);
+    opts.route_jobs = parse_route_jobs(args);
+    opts.disk_cache = !args.iter().any(|a| a == "--no-disk-cache");
     opts
 }
 
@@ -134,6 +152,7 @@ fn cmd_flow(args: &[String]) {
     let route = !args.iter().any(|a| a == "--no-route");
     let use_kernel = args.iter().any(|a| a == "--kernel");
     let jobs = parse_jobs(args);
+    let route_jobs = parse_route_jobs(args);
 
     let params = BenchParams::default();
     let Some(bench) = all_suites(&params).into_iter().find(|b| b.name == bench_name) else {
@@ -144,9 +163,14 @@ fn cmd_flow(args: &[String]) {
     let plan = ExperimentPlan {
         benches: vec![bench],
         variants: vec![variant],
-        flow: FlowOpts { seeds, route, use_kernel, ..Default::default() },
+        flow: FlowOpts { seeds, route, route_jobs, use_kernel, ..Default::default() },
     };
-    let r = Engine::new(jobs)
+    let cache = if args.iter().any(|a| a == "--no-disk-cache") {
+        std::sync::Arc::new(ArtifactCache::new())
+    } else {
+        ArtifactCache::global_disk()
+    };
+    let r = Engine::with_cache(jobs, cache)
         .run(&plan)
         .pop()
         .and_then(|mut row| row.pop())

@@ -1,11 +1,23 @@
 //! BLIF-subset reader/writer for mapped netlists.
 //!
-//! Supports `.model/.inputs/.outputs/.names/.latch/.subckt adder/.end`.
-//! `.names` blocks become LUT cells (truth table parsed from the SOP cover);
-//! `.subckt adder a=.. b=.. cin=.. sum=.. cout=..` becomes an adder bit —
-//! the same convention VTR's architecture files use for carry-chain
-//! primitives.  This is interchange + golden-file tooling, not a general
-//! BLIF implementation (no multi-model hierarchies, no don't-cares).
+//! Supports `.model/.inputs/.outputs/.names/.latch/.subckt adder/.param
+//! chain_break/.end`.  `.names` blocks become LUT cells (truth table parsed
+//! from the SOP cover); `.subckt adder a=.. b=.. cin=.. sum=.. cout=..`
+//! becomes an adder bit — the same convention VTR's architecture files use
+//! for carry-chain primitives.  This is interchange + golden-file tooling,
+//! not a general BLIF implementation (no multi-model hierarchies, no
+//! don't-cares).
+//!
+//! ## Chain-boundary annotation
+//!
+//! Chain membership is reconstructed from carry connectivity: an adder bit
+//! whose `cin` is driven by an existing bit's `cout` joins that chain.
+//! That rule is ambiguous for *cascaded* chains — a chain whose bit 0
+//! takes its carry-in from another chain's final `cout` would silently
+//! merge into it on re-read.  The writer therefore emits a
+//! `.param chain_break` marker before each such boundary bit, and the
+//! reader starts a fresh chain when it sees one, so cascades round-trip
+//! without merging.
 
 use std::collections::HashMap;
 use std::fmt::Write as _;
@@ -50,8 +62,21 @@ pub fn write_blif(nl: &Netlist) -> String {
                     }
                 }
             }
-            CellKind::AdderBit { .. } => {
+            CellKind::AdderBit { pos, .. } => {
                 let n = |id: NetId| nl.nets[id as usize].name.as_str();
+                // Chain-boundary annotation: a chain head whose carry-in is
+                // itself another chain's cout is ambiguous to the
+                // connectivity-based reader — mark it so cascaded chains
+                // round-trip without merging.
+                let cascaded_head = pos == 0
+                    && matches!(
+                        nl.nets[cell.ins[2] as usize].driver,
+                        Some((drv, 1)) if matches!(nl.cells[drv as usize].kind,
+                                                   CellKind::AdderBit { .. })
+                    );
+                if cascaded_head {
+                    let _ = writeln!(s, ".param chain_break");
+                }
                 let _ = writeln!(
                     s,
                     ".subckt adder a={} b={} cin={} sumout={} cout={}",
@@ -110,6 +135,9 @@ pub fn read_blif(text: &str) -> Result<Netlist> {
 
     let mut i = 0usize;
     let mut pending_outputs: Vec<String> = Vec::new();
+    // Set by `.param chain_break`: the next adder bit starts a new chain
+    // even if its cin is driven by an existing chain's cout.
+    let mut force_chain_break = false;
     while i < lines.len() {
         let line = lines[i].clone();
         let mut tok = line.split_whitespace();
@@ -222,9 +250,12 @@ pub fn read_blif(text: &str) -> Result<Netlist> {
                 let cout = get_net(&mut nl, &mut nets, pin("cout")?);
                 // Chain reconstruction: a bit whose cin is driven by an
                 // existing bit's cout joins that chain; otherwise new chain.
+                // A preceding `.param chain_break` overrides the join — the
+                // cin is a cascade from another chain's final cout.
                 let (chain, pos) = match nl.nets[cin as usize].driver {
-                    Some((c, 1)) if matches!(nl.cells[c as usize].kind,
-                                             CellKind::AdderBit { .. }) => {
+                    Some((c, 1)) if !force_chain_break
+                        && matches!(nl.cells[c as usize].kind,
+                                    CellKind::AdderBit { .. }) => {
                         match nl.cells[c as usize].kind {
                             CellKind::AdderBit { chain, pos } => (chain, pos + 1),
                             _ => unreachable!(),
@@ -236,9 +267,17 @@ pub fn read_blif(text: &str) -> Result<Netlist> {
                         (ch, 0)
                     }
                 };
+                force_chain_break = false;
                 nl.add_cell(CellKind::AdderBit { chain, pos },
                             format!("fa_{chain}_{pos}"),
                             vec![a, b, cin], vec![sum, cout]);
+                i += 1;
+            }
+            Some(".param") => {
+                match tok.next() {
+                    Some("chain_break") => force_chain_break = true,
+                    other => bail!("unsupported .param {}", other.unwrap_or("<none>")),
+                }
                 i += 1;
             }
             Some(".end") => break,
@@ -337,6 +376,57 @@ mod tests {
     #[test]
     fn rejects_unknown_directive() {
         assert!(read_blif(".model x\n.gate foo\n.end\n").is_err());
+        assert!(read_blif(".model x\n.param frobnicate\n.end\n").is_err());
+    }
+
+    /// Two chains where the second's carry-in cascades from the first's
+    /// final cout.  Without the `.param chain_break` marker the reader
+    /// would merge them into one chain (the latent ambiguity from the
+    /// ROADMAP); with it the chain structure round-trips.
+    #[test]
+    fn cascaded_chains_round_trip_without_merging() {
+        let mut nl = Netlist::new("casc");
+        let a0 = nl.add_input("a0");
+        let b0 = nl.add_input("b0");
+        let a1 = nl.add_input("a1");
+        let b1 = nl.add_input("b1");
+        let a2 = nl.add_input("a2");
+        let b2 = nl.add_input("b2");
+        let gnd = nl.add_net("gnd");
+        nl.add_cell(CellKind::Const(false), "gnd", vec![], vec![gnd]);
+        let s0 = nl.add_net("s0");
+        let c0 = nl.add_net("c0");
+        let s1 = nl.add_net("s1");
+        let c1 = nl.add_net("c1");
+        nl.add_cell(CellKind::AdderBit { chain: 0, pos: 0 }, "fa0",
+                    vec![a0, b0, gnd], vec![s0, c0]);
+        nl.add_cell(CellKind::AdderBit { chain: 0, pos: 1 }, "fa1",
+                    vec![a1, b1, c0], vec![s1, c1]);
+        // Chain 1's bit 0 takes chain 0's final cout as carry-in.
+        let s2 = nl.add_net("s2");
+        let c2 = nl.add_net("c2");
+        nl.add_cell(CellKind::AdderBit { chain: 1, pos: 0 }, "fa2",
+                    vec![a2, b2, c1], vec![s2, c2]);
+        nl.num_chains = 2;
+        nl.add_output("o0", s0);
+        nl.add_output("o1", s1);
+        nl.add_output("o2", s2);
+        assert!(nl.check().is_empty(), "{:?}", nl.check());
+
+        let text = write_blif(&nl);
+        assert!(text.contains(".param chain_break"), "marker missing:\n{text}");
+        let back = read_blif(&text).unwrap();
+        assert!(back.check().is_empty(), "{:?}", back.check());
+        assert_eq!(back.num_chains, 2, "cascaded chains merged on re-read");
+        let lens: Vec<usize> = (0..back.num_chains)
+            .map(|ch| back.chain_cells(ch).len())
+            .collect();
+        let mut sorted_lens = lens.clone();
+        sorted_lens.sort_unstable();
+        assert_eq!(sorted_lens, vec![1, 2]);
+        // The marker only fires on cascades: a plain netlist stays clean.
+        let plain = write_blif(&sample());
+        assert!(!plain.contains("chain_break"));
     }
 
     #[test]

@@ -153,22 +153,11 @@ impl NetModel {
         }
     }
 
-    /// Weighted HPWL of one net.
+    /// Weighted HPWL of one net (single source of the cost formula:
+    /// [`net_bbox`] + [`bbox_cost`], shared with [`IncrementalCost`]).
     #[inline]
     pub fn net_cost(&self, en: &ExtNet, lb_loc: &[Loc], io_loc: &HashMap<CellId, Loc>) -> f64 {
-        let mut xmin = u16::MAX;
-        let mut xmax = 0u16;
-        let mut ymin = u16::MAX;
-        let mut ymax = 0u16;
-        for &t in &en.terms {
-            let l = self.term_loc(t, lb_loc, io_loc);
-            xmin = xmin.min(l.x);
-            xmax = xmax.max(l.x);
-            ymin = ymin.min(l.y);
-            ymax = ymax.max(l.y);
-        }
-        let span = (xmax - xmin) as f64 + (ymax - ymin) as f64;
-        en.weight * q_factor(en.terms.len()) * span
+        bbox_cost(en, net_bbox(en, lb_loc, io_loc, &[]))
     }
 
     /// Total cost from scratch.
@@ -183,7 +172,19 @@ impl NetModel {
         io_loc: &HashMap<CellId, Loc>,
         moved: &[(usize, Loc)],
     ) -> f64 {
-        // Affected nets (dedup).
+        let mut delta = 0.0;
+        for ni in self.affected_nets(moved) {
+            let en = &self.nets[ni];
+            let before = bbox_cost(en, net_bbox(en, lb_loc, io_loc, &[]));
+            let after = bbox_cost(en, net_bbox(en, lb_loc, io_loc, moved));
+            delta += after - before;
+        }
+        delta
+    }
+
+    /// Indices of the nets touching any moved block, deduped, in first-seen
+    /// order (deterministic).
+    fn affected_nets(&self, moved: &[(usize, Loc)]) -> Vec<usize> {
         let mut affected: Vec<usize> = Vec::with_capacity(16);
         for &(lb, _) in moved {
             for &ni in &self.lb_nets[lb] {
@@ -192,39 +193,7 @@ impl NetModel {
                 }
             }
         }
-        let mut delta = 0.0;
-        // Temporary location override.
-        let loc_of = |lb: usize| -> Loc {
-            for &(m, l) in moved {
-                if m == lb {
-                    return l;
-                }
-            }
-            lb_loc[lb]
-        };
-        for &ni in &affected {
-            let en = &self.nets[ni];
-            let before = self.net_cost(en, lb_loc, io_loc);
-            // After: recompute bbox with overrides.
-            let mut xmin = u16::MAX;
-            let mut xmax = 0u16;
-            let mut ymin = u16::MAX;
-            let mut ymax = 0u16;
-            for &t in &en.terms {
-                let l = match t {
-                    Term::Lb(i) => loc_of(i),
-                    Term::Io(c) => io_loc[&c],
-                };
-                xmin = xmin.min(l.x);
-                xmax = xmax.max(l.x);
-                ymin = ymin.min(l.y);
-                ymax = ymax.max(l.y);
-            }
-            let span = (xmax - xmin) as f64 + (ymax - ymin) as f64;
-            let after = en.weight * q_factor(en.terms.len()) * span;
-            delta += after - before;
-        }
-        delta
+        affected
     }
 
     /// The placeable terminal a cell belongs to (LB or its own IO pad).
@@ -292,6 +261,152 @@ impl NetModel {
     }
 }
 
+/// Bounding box `[xmin, xmax, ymin, ymax]` of one net, with optional
+/// pending-location overrides for moved blocks.
+fn net_bbox(
+    en: &ExtNet,
+    lb_loc: &[Loc],
+    io_loc: &HashMap<CellId, Loc>,
+    moved: &[(usize, Loc)],
+) -> [u16; 4] {
+    let mut xmin = u16::MAX;
+    let mut xmax = 0u16;
+    let mut ymin = u16::MAX;
+    let mut ymax = 0u16;
+    for &t in &en.terms {
+        let l = match t {
+            Term::Lb(i) => moved
+                .iter()
+                .find(|&&(m, _)| m == i)
+                .map(|&(_, l)| l)
+                .unwrap_or(lb_loc[i]),
+            Term::Io(c) => io_loc[&c],
+        };
+        xmin = xmin.min(l.x);
+        xmax = xmax.max(l.x);
+        ymin = ymin.min(l.y);
+        ymax = ymax.max(l.y);
+    }
+    [xmin, xmax, ymin, ymax]
+}
+
+/// Weighted HPWL of a net given its bounding box.
+#[inline]
+fn bbox_cost(en: &ExtNet, bb: [u16; 4]) -> f64 {
+    let span = (bb[1] - bb[0]) as f64 + (bb[3] - bb[2]) as f64;
+    en.weight * q_factor(en.terms.len()) * span
+}
+
+/// Incrementally maintained placement cost.
+///
+/// Caches every net's bounding box and weighted cost so a move proposal
+/// evaluates only the *after* state of its affected nets against the cache
+/// — [`NetModel::move_delta`] recomputes both sides per proposal, which
+/// doubles the work on the (dominant at low temperature) rejected moves.
+/// The cache also feeds the PJRT kernel's batched evaluation
+/// ([`crate::place::kernel_accel`]) without a per-call bbox rebuild.
+///
+/// Contract: [`Self::total`] equals [`NetModel::full_cost`] up to f64
+/// accumulation order; [`Self::refresh`] re-sums from scratch (run it
+/// after weight changes, and periodically to cap drift).  Enforced by the
+/// `incremental_matches_scratch_after_many_moves` test below.
+#[derive(Clone, Debug)]
+pub struct IncrementalCost {
+    bbox: Vec<[u16; 4]>,
+    cost: Vec<f64>,
+    total: f64,
+}
+
+impl IncrementalCost {
+    pub fn new(model: &NetModel, lb_loc: &[Loc], io_loc: &HashMap<CellId, Loc>) -> Self {
+        let n = model.nets.len();
+        let mut ic = IncrementalCost { bbox: vec![[0; 4]; n], cost: vec![0.0; n], total: 0.0 };
+        ic.refresh(model, lb_loc, io_loc);
+        ic
+    }
+
+    /// Current total weighted HPWL.
+    #[inline]
+    pub fn total(&self) -> f64 {
+        self.total
+    }
+
+    /// Recompute every net from scratch; returns the new total.  Needed
+    /// after [`NetModel::set_weights`] (cached costs embed the weights).
+    pub fn refresh(
+        &mut self,
+        model: &NetModel,
+        lb_loc: &[Loc],
+        io_loc: &HashMap<CellId, Loc>,
+    ) -> f64 {
+        self.total = 0.0;
+        for (ni, en) in model.nets.iter().enumerate() {
+            let bb = net_bbox(en, lb_loc, io_loc, &[]);
+            let c = bbox_cost(en, bb);
+            self.bbox[ni] = bb;
+            self.cost[ni] = c;
+            self.total += c;
+        }
+        self.total
+    }
+
+    /// Cost delta if `moved` blocks relocate (positions not yet applied):
+    /// affected nets' new cost against the cached current cost.
+    pub fn move_delta(
+        &self,
+        model: &NetModel,
+        lb_loc: &[Loc],
+        io_loc: &HashMap<CellId, Loc>,
+        moved: &[(usize, Loc)],
+    ) -> f64 {
+        let mut delta = 0.0;
+        for ni in model.affected_nets(moved) {
+            let en = &model.nets[ni];
+            delta += bbox_cost(en, net_bbox(en, lb_loc, io_loc, moved)) - self.cost[ni];
+        }
+        delta
+    }
+
+    /// Commit an accepted move.  `lb_loc` must already hold the new
+    /// positions; `moved` identifies which blocks changed (their stored
+    /// locations are ignored — positions are read from `lb_loc`).
+    pub fn apply_move(
+        &mut self,
+        model: &NetModel,
+        lb_loc: &[Loc],
+        io_loc: &HashMap<CellId, Loc>,
+        moved: &[(usize, Loc)],
+    ) {
+        for ni in model.affected_nets(moved) {
+            let en = &model.nets[ni];
+            let bb = net_bbox(en, lb_loc, io_loc, &[]);
+            let c = bbox_cost(en, bb);
+            self.total += c - self.cost[ni];
+            self.bbox[ni] = bb;
+            self.cost[ni] = c;
+        }
+    }
+
+    /// Per-net kernel boxes from the cache (bin coordinates scaled to the
+    /// kernel's fixed grid) — the batched-evaluation feed.
+    pub fn export_bboxes(&self, model: &NetModel, scale: f64, grid_max: f64) -> Vec<[f32; 5]> {
+        model
+            .nets
+            .iter()
+            .zip(self.bbox.iter())
+            .map(|(en, bb)| {
+                [
+                    ((bb[0] as f64 * scale).min(grid_max)) as f32,
+                    ((bb[1] as f64 * scale).min(grid_max)) as f32,
+                    ((bb[2] as f64 * scale).min(grid_max)) as f32,
+                    ((bb[3] as f64 * scale).min(grid_max)) as f32,
+                    (en.weight * q_factor(en.terms.len())) as f32,
+                ]
+            })
+            .collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -346,6 +461,82 @@ mod tests {
             assert!((before + delta - after).abs() < 1e-9,
                     "delta {delta} vs {}", after - before);
         }
+    }
+
+    /// The cached kernel-box export must match the from-scratch export the
+    /// PJRT bridge used before the incremental cache existed.
+    #[test]
+    fn cached_bbox_export_matches_scratch() {
+        let (mut m, n_lbs) = model();
+        m.set_weights(&[], false);
+        let lb_loc: Vec<Loc> = (0..n_lbs)
+            .map(|i| Loc::new((i % 4 + 1) as u16, (i / 4 + 1) as u16))
+            .collect();
+        let mut io_loc = HashMap::new();
+        for en in &m.nets {
+            for &t in &en.terms {
+                if let Term::Io(c) = t {
+                    io_loc.insert(c, Loc::new(0, (c % 5 + 1) as u16));
+                }
+            }
+        }
+        let inc = IncrementalCost::new(&m, &lb_loc, &io_loc);
+        let a = m.export_bboxes(&lb_loc, &io_loc, 1.5, 63.0);
+        let b = inc.export_bboxes(&m, 1.5, 63.0);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b.iter()) {
+            for k in 0..5 {
+                assert!((x[k] - y[k]).abs() < 1e-6, "box field {k}: {} vs {}", x[k], y[k]);
+            }
+        }
+    }
+
+    /// The incremental cache must track a from-scratch recompute through a
+    /// long random move sequence (the placer's correctness backbone).
+    #[test]
+    fn incremental_matches_scratch_after_many_moves() {
+        let (mut m, n_lbs) = model();
+        m.set_weights(&[], false);
+        let mut lb_loc: Vec<Loc> = (0..n_lbs)
+            .map(|i| Loc::new((i % 5 + 1) as u16, (i / 5 + 1) as u16))
+            .collect();
+        let mut io_loc = HashMap::new();
+        for en in &m.nets {
+            for &t in &en.terms {
+                if let Term::Io(c) = t {
+                    io_loc.insert(c, Loc::new(0, (c % 7 + 1) as u16));
+                }
+            }
+        }
+        let mut inc = IncrementalCost::new(&m, &lb_loc, &io_loc);
+        assert!((inc.total() - m.full_cost(&lb_loc, &io_loc)).abs() < 1e-9);
+        if n_lbs == 0 {
+            return;
+        }
+        let mut rng = crate::util::Rng::new(42);
+        let mut predicted = inc.total();
+        for step in 0..10_000 {
+            let lb = rng.below(n_lbs);
+            let to = Loc::new(rng.below(9) as u16 + 1, rng.below(9) as u16 + 1);
+            let moved = [(lb, to)];
+            let delta = inc.move_delta(&m, &lb_loc, &io_loc, &moved);
+            lb_loc[lb] = to;
+            inc.apply_move(&m, &lb_loc, &io_loc, &moved);
+            predicted += delta;
+            if step % 1000 == 0 {
+                let scratch = m.full_cost(&lb_loc, &io_loc);
+                let tol = 1e-6 * scratch.abs().max(1.0);
+                assert!((inc.total() - scratch).abs() < tol,
+                        "step {step}: incremental {} vs scratch {scratch}", inc.total());
+                assert!((predicted - scratch).abs() < tol,
+                        "step {step}: summed deltas {predicted} vs scratch {scratch}");
+            }
+        }
+        let scratch = m.full_cost(&lb_loc, &io_loc);
+        assert!((inc.total() - scratch).abs() < 1e-6 * scratch.abs().max(1.0));
+        // refresh() lands on the exact scratch sum.
+        let refreshed = inc.refresh(&m, &lb_loc, &io_loc);
+        assert_eq!(refreshed, scratch);
     }
 
     #[test]

@@ -14,7 +14,7 @@ use crate::arch::device::{Device, Loc};
 use crate::netlist::CellId;
 use crate::runtime::{CostEval, CostKernel, GRID};
 
-use super::cost::NetModel;
+use super::cost::{IncrementalCost, NetModel};
 
 /// Kernel-backed cost evaluator.
 pub struct KernelCost {
@@ -55,6 +55,24 @@ impl KernelCost {
         let boxes = model.export_bboxes(lb_loc, io_loc, scale, GRID as f64 - 1.0);
         // Per-bin capacity scaled with channel demand density; for the
         // consistency/diagnostic path an uncapped evaluation is fine.
+        let CostEval { whpwl, congestion, overflow } =
+            self.kernel.evaluate(&boxes, f32::MAX)?;
+        Ok(KernelPlacementEval { whpwl: whpwl / scale, congestion, overflow })
+    }
+
+    /// Batched evaluation from the placer's incremental cost cache: the
+    /// per-net boxes come straight out of [`IncrementalCost`] (no bbox
+    /// rebuild over every terminal), so the kernel consistency check and
+    /// congestion signal cost one device call per batch.
+    pub fn evaluate_cached(
+        &mut self,
+        model: &NetModel,
+        inc: &IncrementalCost,
+        device: &Device,
+    ) -> Result<KernelPlacementEval> {
+        let extent = device.width().max(device.height()) as f64;
+        let scale = (GRID as f64 - 1.0) / extent.max(1.0);
+        let boxes = inc.export_bboxes(model, scale, GRID as f64 - 1.0);
         let CostEval { whpwl, congestion, overflow } =
             self.kernel.evaluate(&boxes, f32::MAX)?;
         Ok(KernelPlacementEval { whpwl: whpwl / scale, congestion, overflow })

@@ -2,10 +2,14 @@
 //!
 //! Blocks are packed LBs plus I/O pads; carry chains spanning multiple LBs
 //! are vertical macros that move as units.  Cost is criticality-weighted
-//! HPWL (the classic VPR formulation); criticalities refresh from STA at
-//! every temperature.  The batched full-cost + congestion evaluation runs
-//! through the AOT-compiled JAX/Pallas kernel via PJRT
-//! ([`kernel_accel`]) — python never executes at placement time.
+//! HPWL (the classic VPR formulation); criticalities refresh from STA
+//! periodically.  Moves flow through a batched proposal pipeline —
+//! randomness is drawn per batch, then each candidate is scored against
+//! the incremental per-net bounding-box cost cache
+//! ([`cost::IncrementalCost`]) and committed in order.  The batched
+//! full-cost + congestion evaluation runs through the AOT-compiled
+//! JAX/Pallas kernel via PJRT ([`kernel_accel`]), fed straight from the
+//! cached boxes — python never executes at placement time.
 
 pub mod cost;
 pub mod kernel_accel;
@@ -14,12 +18,12 @@ use std::collections::HashMap;
 
 use crate::arch::device::{Device, Loc};
 use crate::arch::Arch;
-use crate::netlist::{CellId, CellKind, Netlist, NetId};
+use crate::netlist::{CellId, Netlist, NetId};
 use crate::pack::Packing;
 use crate::timing;
 use crate::util::Rng;
 
-pub use cost::{NetModel, PlacementCost};
+pub use cost::{IncrementalCost, NetModel, PlacementCost};
 
 /// Placement result: locations for every LB and I/O cell.
 #[derive(Clone, Debug)]
@@ -188,7 +192,9 @@ pub fn place(nl: &Netlist, packing: &Packing, arch: &Arch, opts: &PlaceOpts) -> 
         crit = rpt.net_crit;
     }
     model.set_weights(&crit, opts.timing_driven);
-    let mut cur_cost = model.full_cost(&lb_loc, &io_loc);
+    // Incremental cost cache: per-net bbox + weighted cost, refreshed per
+    // temperature (after weight updates) and updated per accepted move.
+    let mut inc = cost::IncrementalCost::new(&model, &lb_loc, &io_loc);
 
     // Optional PJRT kernel evaluator.
     let mut kernel = if opts.use_kernel {
@@ -199,38 +205,58 @@ pub fn place(nl: &Netlist, packing: &Packing, arch: &Arch, opts: &PlaceOpts) -> 
 
     // --- Annealing schedule (VPR-style adaptive). -------------------------------
     let n_blocks = packing.lbs.len().max(2);
+    let n_lb = lb_loc.len();
     let moves_per_t = ((opts.effort * (n_blocks as f64).powf(4.0 / 3.0)) as usize).max(64);
     // Initial temperature: 20x the std-dev of random move deltas.
     let mut t = {
         let mut deltas = Vec::with_capacity(64);
-        for _ in 0..64 {
-            let save_loc = lb_loc.clone();
-            let save_grid = grid.clone();
-            if let Some(dc) = try_move(&mut rng, &device, &mut grid, &mut lb_loc,
-                                       &lb_macro, &macros, &model, &io_loc,
-                                       device.lb_cols.max(device.lb_rows), f64::INFINITY)
-            {
-                deltas.push(dc.abs());
-                cur_cost += dc;
+        if n_lb >= 2 {
+            let rmax = device.lb_cols.max(device.lb_rows);
+            for _ in 0..64 {
+                let p = propose_move(&mut rng, n_lb, rmax);
+                if let Some(dc) = apply_proposal(&p, &device, &mut grid, &mut lb_loc,
+                                                 &lb_macro, &macros, &model, &mut inc,
+                                                 &io_loc, f64::INFINITY)
+                {
+                    deltas.push(dc.abs());
+                }
             }
-            let _ = (save_loc, save_grid);
         }
         let m = crate::util::stats::mean(&deltas);
         (20.0 * m).max(1.0)
     };
     let mut rlim = device.lb_cols.max(device.lb_rows);
     let mut temp_idx = 0usize;
-    let t_min = 0.005 * cur_cost.max(1.0) / model.num_nets().max(1) as f64;
+    let t_min = 0.005 * inc.total().max(1.0) / model.num_nets().max(1) as f64;
+
+    // Batched move-proposal pipeline: each batch draws all its randomness
+    // up front, then evaluates the candidates against the incremental cost
+    // cache and commits them in order.  Today the evaluation stage scores
+    // candidates one at a time (bit-identical to an interleaved loop); the
+    // split exists so a batch evaluator — e.g. scoring a whole batch
+    // through the PJRT kernel — can replace the inner stage without
+    // touching proposal generation or the RNG stream.
+    const MOVE_BATCH: usize = 32;
+    let mut batch: Vec<MoveProposal> = Vec::with_capacity(MOVE_BATCH);
 
     while t > t_min {
         let mut accepted = 0usize;
-        for _ in 0..moves_per_t {
-            if let Some(dc) = try_move(&mut rng, &device, &mut grid, &mut lb_loc,
-                                       &lb_macro, &macros, &model, &io_loc, rlim, t)
-            {
-                cur_cost += dc;
-                accepted += 1;
+        let mut done = 0usize;
+        while done < moves_per_t && n_lb >= 2 {
+            let take = MOVE_BATCH.min(moves_per_t - done);
+            batch.clear();
+            for _ in 0..take {
+                batch.push(propose_move(&mut rng, n_lb, rlim));
             }
+            for p in &batch {
+                if apply_proposal(p, &device, &mut grid, &mut lb_loc, &lb_macro,
+                                  &macros, &model, &mut inc, &io_loc, t)
+                    .is_some()
+                {
+                    accepted += 1;
+                }
+            }
+            done += take;
         }
         let alpha = {
             let r = accepted as f64 / moves_per_t as f64;
@@ -242,10 +268,10 @@ pub fn place(nl: &Netlist, packing: &Packing, arch: &Arch, opts: &PlaceOpts) -> 
         let r = accepted as f64 / moves_per_t as f64;
         let new_rlim = (rlim as f64 * (1.0 - 0.44 + r)).clamp(1.0, device.lb_cols.max(device.lb_rows) as f64);
         rlim = new_rlim.round() as u16;
-        // Refresh criticalities + full cost (guards incremental drift).
-        // STA is the placer's most expensive periodic step; every 4th
-        // temperature tracks criticality closely enough (perf pass, see
-        // EXPERIMENTS.md §Perf).
+        // Refresh criticalities + rebuild the cost cache (weights feed the
+        // cached per-net costs, and the re-sum caps f64 drift).  STA is the
+        // placer's most expensive periodic step; every 4th temperature
+        // tracks criticality closely enough (perf pass, EXPERIMENTS.md §Perf).
         temp_idx += 1;
         if opts.timing_driven && temp_idx % 4 == 0 {
             let rpt = timing::sta(nl, packing, arch, |net, sink, _| {
@@ -253,10 +279,11 @@ pub fn place(nl: &Netlist, packing: &Packing, arch: &Arch, opts: &PlaceOpts) -> 
             });
             model.set_weights(&rpt.net_crit, true);
         }
-        cur_cost = model.full_cost(&lb_loc, &io_loc);
-        // Kernel-evaluated full cost: consistency check + congestion signal.
+        let cur_cost = inc.refresh(&model, &lb_loc, &io_loc);
+        // Kernel-evaluated full cost from the cached boxes: consistency
+        // check + congestion signal.
         if let Some(k) = kernel.as_mut() {
-            if let Ok(kc) = k.evaluate(&model, &lb_loc, &io_loc, &device) {
+            if let Ok(kc) = k.evaluate_cached(&model, &inc, &device) {
                 // Within float tolerance of the Rust cost.
                 debug_assert!((kc.whpwl - cur_cost).abs() <= 1e-3 * cur_cost.max(1.0) + 1.0,
                               "kernel {} vs rust {}", kc.whpwl, cur_cost);
@@ -269,7 +296,8 @@ pub fn place(nl: &Netlist, packing: &Packing, arch: &Arch, opts: &PlaceOpts) -> 
         net_endpoint_delay(&model, &lb_loc, &io_loc, arch, net, sink)
     });
 
-    Placement { device, lb_loc, io_loc, cost: cur_cost, est_cpd_ps: rpt.cpd_ps }
+    let cost = inc.refresh(&model, &lb_loc, &io_loc);
+    Placement { device, lb_loc, io_loc, cost, est_cpd_ps: rpt.cpd_ps }
 }
 
 /// Estimated interconnect delay for one net sink given current locations.
@@ -287,34 +315,62 @@ pub fn net_endpoint_delay(
     est_net_delay(arch, src, dst)
 }
 
-/// One SA move: pick a block (macro or single LB), propose a relocation
-/// within `rlim`, accept by Metropolis. Returns the accepted cost delta.
+/// One pre-drawn SA move candidate: a block pick, a displacement, and the
+/// Metropolis uniform.  All randomness is drawn at proposal time so
+/// evaluation/commit is a deterministic pipeline over the batch.
+#[derive(Clone, Copy, Debug)]
+struct MoveProposal {
+    block: usize,
+    dx: i32,
+    dy: i32,
+    accept_draw: f64,
+}
+
+/// Draw one move proposal within range limit `rlim`.
+fn propose_move(rng: &mut Rng, n_blocks: usize, rlim: u16) -> MoveProposal {
+    MoveProposal {
+        block: rng.below(n_blocks),
+        dx: rng.range(-(rlim as i64), rlim as i64) as i32,
+        dy: rng.range(-(rlim as i64), rlim as i64) as i32,
+        accept_draw: rng.f64(),
+    }
+}
+
+/// Metropolis acceptance with a pre-drawn uniform.
+#[inline]
+fn accepts(p: &MoveProposal, delta: f64, t: f64) -> bool {
+    delta <= 0.0 || (t > 0.0 && p.accept_draw < (-delta / t).exp())
+}
+
+/// Evaluate and (maybe) commit one proposal: resolve the target window for
+/// the picked block (macro or single LB), score the affected nets against
+/// the incremental cost cache, accept by Metropolis, and on acceptance
+/// update grid/locations and the cache. Returns the accepted cost delta.
 #[allow(clippy::too_many_arguments)]
-fn try_move(
-    rng: &mut Rng,
+fn apply_proposal(
+    p: &MoveProposal,
     device: &Device,
     grid: &mut HashMap<Loc, usize>,
     lb_loc: &mut Vec<Loc>,
     lb_macro: &[Option<usize>],
     macros: &[Vec<usize>],
     model: &cost::NetModel,
+    inc: &mut cost::IncrementalCost,
     io_loc: &HashMap<CellId, Loc>,
-    rlim: u16,
     t: f64,
 ) -> Option<f64> {
     let n = lb_loc.len();
     if n < 2 {
         return None;
     }
-    let a = rng.below(n);
+    let a = p.block;
     let a_loc = lb_loc[a];
+    let (dx, dy) = (p.dx, p.dy);
 
     if let Some(mid) = lb_macro[a] {
         // Macro move: shift the whole vertical run to a new column window.
         let m = &macros[mid];
         let len = m.len() as u16;
-        let dx = rng.range(-(rlim as i64), rlim as i64) as i32;
-        let dy = rng.range(-(rlim as i64), rlim as i64) as i32;
         let base = lb_loc[m[0]];
         let nx = (base.x as i32 + dx).clamp(1, device.lb_cols as i32) as u16;
         let ny = (base.y as i32 + dy).clamp(1, (device.lb_rows - len + 1).max(1) as i32) as u16;
@@ -358,8 +414,8 @@ fn try_move(
         for &(lb, loc) in &displaced {
             moved.push((lb, loc));
         }
-        let delta = model.move_delta(lb_loc, io_loc, &moved);
-        if accept(rng, delta, t) {
+        let delta = inc.move_delta(model, lb_loc, io_loc, &moved);
+        if accepts(p, delta, t) {
             for &(lb, _) in &moved {
                 grid.remove(&lb_loc[lb]);
             }
@@ -367,14 +423,13 @@ fn try_move(
                 grid.insert(loc, lb);
                 lb_loc[lb] = loc;
             }
+            inc.apply_move(model, lb_loc, io_loc, &moved);
             return Some(delta);
         }
         return None;
     }
 
     // Single LB: swap with another location (occupied by single or empty).
-    let dx = rng.range(-(rlim as i64), rlim as i64) as i32;
-    let dy = rng.range(-(rlim as i64), rlim as i64) as i32;
     let nx = (a_loc.x as i32 + dx).clamp(1, device.lb_cols as i32) as u16;
     let ny = (a_loc.y as i32 + dy).clamp(1, device.lb_rows as i32) as u16;
     let b_loc = Loc::new(nx, ny);
@@ -387,30 +442,27 @@ fn try_move(
             return None;
         }
         let moved = [(a, b_loc), (b, a_loc)];
-        let delta = model.move_delta(lb_loc, io_loc, &moved);
-        if accept(rng, delta, t) {
+        let delta = inc.move_delta(model, lb_loc, io_loc, &moved);
+        if accepts(p, delta, t) {
             grid.insert(a_loc, b);
             grid.insert(b_loc, a);
             lb_loc[a] = b_loc;
             lb_loc[b] = a_loc;
+            inc.apply_move(model, lb_loc, io_loc, &moved);
             return Some(delta);
         }
     } else {
         let moved = [(a, b_loc)];
-        let delta = model.move_delta(lb_loc, io_loc, &moved);
-        if accept(rng, delta, t) {
+        let delta = inc.move_delta(model, lb_loc, io_loc, &moved);
+        if accepts(p, delta, t) {
             grid.remove(&a_loc);
             grid.insert(b_loc, a);
             lb_loc[a] = b_loc;
+            inc.apply_move(model, lb_loc, io_loc, &moved);
             return Some(delta);
         }
     }
     None
-}
-
-#[inline]
-fn accept(rng: &mut Rng, delta: f64, t: f64) -> bool {
-    delta <= 0.0 || (t > 0.0 && rng.f64() < (-delta / t).exp())
 }
 
 #[cfg(test)]

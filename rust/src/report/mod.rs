@@ -33,17 +33,30 @@ pub struct ExpOpts {
     pub seeds: Vec<u64>,
     /// Worker threads for the experiment engine (the CLI's `--jobs N`).
     pub jobs: usize,
+    /// Worker threads inside each PathFinder run (`--route-jobs N`;
+    /// bit-identical results for any value).
+    pub route_jobs: usize,
+    /// Back the artifact cache with `target/dd-cache` so repeated CLI
+    /// invocations skip map/pack (the CLI enables this unless
+    /// `--no-disk-cache`; programmatic/test callers default to off).
+    pub disk_cache: bool,
 }
 
 impl Default for ExpOpts {
     fn default() -> Self {
-        ExpOpts { quick: false, seeds: vec![1, 2, 3], jobs: default_workers() }
+        ExpOpts {
+            quick: false,
+            seeds: vec![1, 2, 3],
+            jobs: default_workers(),
+            route_jobs: 1,
+            disk_cache: false,
+        }
     }
 }
 
 impl ExpOpts {
     pub fn quick() -> Self {
-        ExpOpts { quick: true, seeds: vec![1], jobs: default_workers() }
+        ExpOpts { quick: true, seeds: vec![1], ..Default::default() }
     }
 
     fn flow(&self) -> FlowOpts {
@@ -51,13 +64,20 @@ impl ExpOpts {
             seeds: self.seeds.clone(),
             place_effort: if self.quick { 0.15 } else { 0.5 },
             route: true,
+            route_jobs: self.route_jobs,
             ..Default::default()
         }
     }
 
-    /// Engine bound to the process-wide artifact cache.
+    /// Engine bound to the process-wide artifact cache (disk-backed when
+    /// requested).
     fn engine(&self) -> Engine {
-        Engine::with_cache(self.jobs, ArtifactCache::global())
+        let cache = if self.disk_cache {
+            ArtifactCache::global_disk()
+        } else {
+            ArtifactCache::global()
+        };
+        Engine::with_cache(self.jobs, cache)
     }
 }
 
@@ -459,6 +479,7 @@ pub fn table4(opts: &ExpOpts) -> Table {
                 let fo = FlowOpts {
                     seeds: vec![opts.seeds[0]],
                     place_effort: if opts.quick { 0.1 } else { 0.3 },
+                    route_jobs: opts.route_jobs,
                     device: Some(device.clone()),
                     // The paper's W=400 leaves routing headroom so *logic*
                     // capacity binds; at our scale that corresponds to a

@@ -1,25 +1,49 @@
-//! PathFinder negotiated-congestion routing on a grid routing-resource
-//! graph.
+//! PathFinder negotiated-congestion routing over the shared
+//! routing-resource graph ([`crate::rrg`]).
 //!
-//! The RR abstraction: every grid corner (x, y) carries `W` horizontal and
-//! `W` vertical track nodes.  Horizontal tracks chain along x, vertical
-//! along y; turns connect track `t` to `t` and `(t+1) % W` (a Wilton-like
-//! twist, so planes are not isolated).  Block output pins reach an
-//! `fc_out` fraction of the adjacent tracks, input pins an `fc_in`
-//! fraction (selection hashed per block so pins spread over the channel).
+//! The RR abstraction (node layout, CSR adjacency, pin connectivity, the
+//! congestion cost formula) lives in [`crate::rrg`]; this module owns the
+//! negotiation loop.  Each iteration is *deterministic parallel
+//! negotiated congestion* in three phases:
 //!
-//! Classic PathFinder: route every net by A*, then re-route while any node
-//! is overused, inflating present-congestion cost and accumulating history
-//! cost each iteration.  Produces per-sink routed path lengths (for the
-//! post-route STA) and the channel-utilization histogram of Fig. 8.
+//! 1. rip up every congested net in fixed net order (serial),
+//! 2. re-route the ripped-up nets by A*, in fixed contiguous *waves* of
+//!    [`WAVE`] nets: each wave routes against a read-only snapshot of the
+//!    cost state, sharded across `RouteOpts::jobs` workers
+//!    ([`crate::coordinator::parallel_indexed_with`], each worker reusing
+//!    one set of search arrays), then commits its occupancy in net order
+//!    before the next wave starts,
+//! 3. bump history costs on overused nodes (serial reduction).
+//!
+//! Wave boundaries depend only on the work list — never on the worker
+//! count — and routing a net is a pure function of (wave snapshot, net),
+//! so results are bit-identical for any `jobs` value — see
+//! `rust/tests/route_parallel.rs`.  The wave size trades negotiation
+//! fidelity (small waves see fresher occupancy, converging in fewer
+//! iterations, like VPR's sequential router) against available
+//! parallelism; measurements on synthetic instances put the total-work
+//! overhead of 32-net waves at ~1.5x the sequential router versus ~3x for
+//! whole-iteration snapshots.  Produces per-sink routed path lengths (for
+//! the post-route STA) and the channel-utilization histogram of Fig. 8.
 
-use std::collections::{BinaryHeap, HashMap};
+use std::collections::{BinaryHeap, HashMap, HashSet};
 
-use crate::arch::device::{Device, Loc};
+use crate::arch::device::Loc;
 use crate::arch::Arch;
+use crate::coordinator::parallel_indexed_with;
 use crate::netlist::{CellId, NetId};
 use crate::place::cost::{NetModel, Term};
 use crate::place::Placement;
+use crate::rrg::{self, CostState, RrGraph, NODE_CAP};
+
+/// VPR's astar_fac: inflate the admissible heuristic for a large
+/// search-space cut at bounded routing-cost suboptimality.
+const ASTAR_FAC: f64 = 1.3;
+
+/// Nets routed per negotiation wave (see module docs).  Fixed — never
+/// derived from the worker count — so wave composition, and therefore the
+/// routing result, is identical for any `RouteOpts::jobs`.
+pub const WAVE: usize = 32;
 
 /// Router options.
 #[derive(Clone, Copy, Debug)]
@@ -30,11 +54,19 @@ pub struct RouteOpts {
     pub pres_mult: f64,
     /// History cost increment per overused node per iteration.
     pub hist_fac: f64,
+    /// Worker threads sharding the per-net A* searches (1 = serial; the
+    /// result is bit-identical for any value).
+    pub jobs: usize,
 }
 
 impl Default for RouteOpts {
     fn default() -> Self {
-        RouteOpts { max_iters: 45, pres_fac0: 0.5, pres_mult: 1.6, hist_fac: 0.5 }
+        // Snapshot-based negotiation (all ripped-up nets re-route against
+        // the frozen iteration-start costs, as in the original PathFinder
+        // formulation) can take a few more iterations than VPR's
+        // sequential-commit variant to shake out symmetric conflicts, so
+        // the cap carries headroom; converged runs exit early regardless.
+        RouteOpts { max_iters: 64, pres_fac0: 0.5, pres_mult: 1.6, hist_fac: 0.5, jobs: 1 }
     }
 }
 
@@ -72,50 +104,6 @@ impl Routing {
         h.iter_mut().for_each(|v| *v /= total);
         h
     }
-
-    /// Routed interconnect delay for a sink with `hops` wire segments.
-    pub fn hop_delay(arch: &Arch, hops: usize) -> f64 {
-        arch.delays.conn_block
-            + (hops as f64 / arch.routing.segment_len as f64).ceil().max(1.0)
-                * arch.delays.wire_segment
-    }
-}
-
-/// Node indexing: dir (0 = H, 1 = V) x width x height x W tracks.
-#[derive(Clone, Copy)]
-struct Geometry {
-    w: usize,
-    h: usize,
-    tracks: usize,
-}
-
-impl Geometry {
-    #[inline]
-    fn id(&self, dir: usize, x: usize, y: usize, t: usize) -> usize {
-        ((dir * self.h + y) * self.w + x) * self.tracks + t
-    }
-
-    #[inline]
-    fn decode(&self, id: usize) -> (usize, usize, usize, usize) {
-        let t = id % self.tracks;
-        let rest = id / self.tracks;
-        let x = rest % self.w;
-        let rest = rest / self.w;
-        let y = rest % self.h;
-        let dir = rest / self.h;
-        (dir, x, y, t)
-    }
-
-    fn num_nodes(&self) -> usize {
-        2 * self.w * self.h * self.tracks
-    }
-
-    /// Manhattan distance heuristic from node to target location.
-    #[inline]
-    fn heur(&self, id: usize, tx: usize, ty: usize) -> f64 {
-        let (_, x, y, _) = self.decode(id);
-        ((x as i64 - tx as i64).abs() + (y as i64 - ty as i64).abs()) as f64
-    }
 }
 
 #[derive(PartialEq)]
@@ -136,37 +124,166 @@ impl PartialOrd for QItem {
     }
 }
 
-/// Channel nodes a block pin can reach: a hashed `frac` subset of the
-/// tracks, spread over the four channel corners adjacent to the block
-/// (blocks have pins on all sides, so their taps must not pile onto a
-/// single grid point).
-fn pin_nodes(geo: &Geometry, loc: Loc, frac: f64, salt: u64) -> Vec<usize> {
-    let tracks = geo.tracks;
-    let n = ((tracks as f64 * frac).ceil() as usize).clamp(2, tracks) * 2;
-    let mut v = Vec::with_capacity(n);
-    let mut x = (loc.x as u64)
-        .wrapping_mul(0x9E3779B97F4A7C15)
-        .wrapping_add((loc.y as u64).wrapping_mul(0xBF58476D1CE4E5B9))
-        .wrapping_add(salt);
-    let corners = [
-        (loc.x as usize, loc.y as usize),
-        (loc.x.saturating_sub(1) as usize, loc.y as usize),
-        (loc.x as usize, loc.y.saturating_sub(1) as usize),
-        (loc.x.saturating_sub(1) as usize, loc.y.saturating_sub(1) as usize),
-    ];
-    for _ in 0..n {
-        x ^= x >> 27;
-        x = x.wrapping_mul(0x94D049BB133111EB);
-        let t = (x % tracks as u64) as usize;
-        let (cx, cy) = corners[((x >> 17) % 4) as usize];
-        let dir = ((x >> 33) & 1) as usize;
-        if cx < geo.w && cy < geo.h {
-            v.push(geo.id(dir, cx, cy, t));
+/// Per-worker A* search state, reused across the nets a worker routes.
+/// Reset between searches via the `touched` list, so a search's outcome
+/// never depends on which worker (or in which order) it ran.
+struct AStarScratch {
+    cost: Vec<f64>,
+    prev: Vec<usize>,
+    touched: Vec<usize>,
+}
+
+impl AStarScratch {
+    fn new(n_nodes: usize) -> AStarScratch {
+        AStarScratch {
+            cost: vec![f64::INFINITY; n_nodes],
+            prev: vec![usize::MAX; n_nodes],
+            touched: Vec::new(),
         }
     }
-    v.sort_unstable();
-    v.dedup();
-    v
+}
+
+/// Checks a scratch out of a shared pool for the duration of one wave and
+/// returns it on drop, so the O(n_nodes) arrays are allocated at most
+/// `jobs` times per `route()` call instead of per wave.  Reuse is safe
+/// because every search resets exactly the entries its predecessors
+/// touched before reading them.
+struct ScratchLease<'a> {
+    pool: &'a std::sync::Mutex<Vec<AStarScratch>>,
+    scratch: Option<AStarScratch>,
+}
+
+impl<'a> ScratchLease<'a> {
+    fn take(pool: &'a std::sync::Mutex<Vec<AStarScratch>>, n_nodes: usize) -> ScratchLease<'a> {
+        let s = pool
+            .lock()
+            .unwrap()
+            .pop()
+            .unwrap_or_else(|| AStarScratch::new(n_nodes));
+        ScratchLease { pool, scratch: Some(s) }
+    }
+}
+
+impl Drop for ScratchLease<'_> {
+    fn drop(&mut self) {
+        if let Some(s) = self.scratch.take() {
+            self.pool.lock().unwrap().push(s);
+        }
+    }
+}
+
+/// Route one net against a frozen cost snapshot.  Pure in
+/// (graph, snapshot, pres_fac, net): no shared mutable state.
+/// Returns the net's committed node set (sorted, deduped) and per-sink
+/// hop counts.
+#[allow(clippy::too_many_arguments)]
+fn route_net<F: Fn(Term) -> Loc>(
+    graph: &RrGraph,
+    costs: &CostState,
+    pres_fac: f64,
+    ni: usize,
+    terms: &[Term],
+    term_loc: &F,
+    arch: &Arch,
+    scratch: &mut AStarScratch,
+) -> (Vec<usize>, Vec<(Term, usize)>) {
+    let src_loc = term_loc(terms[0]);
+    let src_nodes = graph.pin_nodes(src_loc, arch.routing.fc_out, 17 + 131 * ni as u64);
+
+    // Route tree as a set of nodes with hop-distance from source.  Seeds
+    // (source track taps) are search entry points but only nodes actually
+    // used by a sink path get committed.
+    let mut tree: HashMap<usize, usize> = HashMap::new(); // node -> hops
+    let mut used: Vec<usize> = Vec::new();
+    for &id in &src_nodes {
+        tree.insert(id, 0);
+    }
+    let mut sink_hops: Vec<(Term, usize)> = Vec::with_capacity(terms.len().saturating_sub(1));
+
+    for &sink in &terms[1..] {
+        let dst_loc = term_loc(sink);
+        let dst_nodes = graph.pin_nodes(dst_loc, arch.routing.fc_in, 71 + 131 * ni as u64);
+        let is_target: HashSet<usize> = dst_nodes.iter().copied().collect();
+        let (tx, ty) = (dst_loc.x as usize, dst_loc.y as usize);
+
+        // Reset the search arrays from the previous sink.
+        for &n in &scratch.touched {
+            scratch.cost[n] = f64::INFINITY;
+            scratch.prev[n] = usize::MAX;
+        }
+        scratch.touched.clear();
+
+        // A* from the current tree.
+        let mut heap: BinaryHeap<QItem> = BinaryHeap::new();
+        let mut seeds: Vec<(usize, usize)> = tree.iter().map(|(&n, &h)| (n, h)).collect();
+        seeds.sort_unstable(); // deterministic A* tie-breaking
+        for (n, hops) in seeds {
+            // Fresh source taps pay their own congestion cost (otherwise a
+            // net would happily start on an occupied tap it never
+            // perceives); nodes already on this net's tree re-enter free.
+            let entry = if hops == 0 { costs.node_cost(n, pres_fac) } else { 0.0 };
+            scratch.cost[n] = entry;
+            scratch.prev[n] = usize::MAX;
+            scratch.touched.push(n);
+            heap.push(QItem { prio: entry + graph.heur(n, tx, ty), cost: entry, node: n });
+        }
+
+        let mut found = usize::MAX;
+        while let Some(QItem { cost, node, .. }) = heap.pop() {
+            if cost > scratch.cost[node] {
+                continue;
+            }
+            if is_target.contains(&node) {
+                found = node;
+                break;
+            }
+            for &nb in graph.neighbors(node) {
+                let nid = nb as usize;
+                let nc = cost + costs.node_cost(nid, pres_fac);
+                if nc < scratch.cost[nid] {
+                    if scratch.cost[nid].is_infinite() && scratch.prev[nid] == usize::MAX {
+                        scratch.touched.push(nid);
+                    }
+                    scratch.cost[nid] = nc;
+                    scratch.prev[nid] = node;
+                    heap.push(QItem {
+                        prio: nc + ASTAR_FAC * graph.heur(nid, tx, ty),
+                        cost: nc,
+                        node: nid,
+                    });
+                }
+            }
+        }
+
+        if found == usize::MAX {
+            // Unroutable sink this iteration; count a distance estimate and
+            // keep going (pressure will reshape other nets).
+            sink_hops.push((sink, (src_loc.dist(dst_loc) as usize).max(1)));
+            continue;
+        }
+        // Walk back, add path to tree.
+        let mut path = Vec::new();
+        let mut cur = found;
+        while cur != usize::MAX && !tree.contains_key(&cur) {
+            path.push(cur);
+            cur = scratch.prev[cur];
+        }
+        let base_hops = if cur == usize::MAX { 0 } else { tree[&cur] };
+        // The attachment node is used (it may be a fresh seed tap).
+        if cur != usize::MAX {
+            used.push(cur);
+        }
+        let hops = base_hops + path.len();
+        sink_hops.push((sink, hops));
+        for (off, &n) in path.iter().rev().enumerate() {
+            tree.insert(n, base_hops + off + 1);
+            used.push(n);
+        }
+    }
+
+    used.sort_unstable();
+    used.dedup();
+    (used, sink_hops)
 }
 
 /// Route a placed design.
@@ -177,12 +294,8 @@ pub fn route(
     opts: &RouteOpts,
 ) -> Routing {
     let device = &placement.device;
-    let geo = Geometry {
-        w: device.width() as usize,
-        h: device.height() as usize,
-        tracks: arch.routing.channel_width as usize,
-    };
-    let n_nodes = geo.num_nodes();
+    let graph = RrGraph::build(device, arch);
+    let n_nodes = graph.num_nodes();
 
     let term_loc = |t: Term| -> Loc {
         match t {
@@ -198,8 +311,7 @@ pub fn route(
         .map(|en| (en.net, en.terms.clone()))
         .collect();
 
-    let mut occ = vec![0u16; n_nodes];
-    let mut hist = vec![0.0f32; n_nodes];
+    let mut costs = CostState::new(n_nodes);
     // Per net: routed node set (tree) and per-sink paths.
     let mut net_nodes: Vec<Vec<usize>> = vec![Vec::new(); nets.len()];
     let mut sink_hops: Vec<Vec<(Term, usize)>> = vec![Vec::new(); nets.len()];
@@ -208,189 +320,75 @@ pub fn route(
     let mut iterations = 0;
     let mut success = false;
 
-    // A* state arrays, reused across searches.
-    let mut cost_arr = vec![f64::INFINITY; n_nodes];
-    let mut prev = vec![usize::MAX; n_nodes];
-    let mut touched: Vec<usize> = Vec::new();
+    // Shared A* scratch pool: at most `jobs` sets of search arrays are
+    // ever allocated, leased per wave and reused across waves/iterations.
+    let scratch_pool: std::sync::Mutex<Vec<AStarScratch>> = std::sync::Mutex::new(Vec::new());
 
     for iter in 0..opts.max_iters {
         iterations = iter + 1;
-        // First iteration routes everything; later iterations rip up and
-        // re-route only nets touching overused nodes (VPR's incremental
-        // rip-up — the bulk of nets keep their legal routes).
-        let congested: Vec<bool> = if iter == 0 {
-            vec![true; nets.len()]
+        // Phase 1 — rip-up (serial, fixed order).  First iteration routes
+        // everything; later iterations rip up and re-route only nets
+        // touching overused nodes (VPR's incremental rip-up — the bulk of
+        // nets keep their legal routes).
+        let work: Vec<usize> = if iter == 0 {
+            (0..nets.len()).collect()
         } else {
-            net_nodes
-                .iter()
-                .map(|ns| ns.iter().any(|&n| occ[n] as f64 > arch_cap()))
+            (0..nets.len())
+                .filter(|&ni| net_nodes[ni].iter().any(|&n| costs.overused(n)))
                 .collect()
         };
-        for (ni, (_, terms)) in nets.iter().enumerate() {
-            if !congested[ni] {
-                continue;
-            }
-            // Rip up.
+        for &ni in &work {
             for &n in &net_nodes[ni] {
-                occ[n] = occ[n].saturating_sub(1);
+                costs.occ[n] = costs.occ[n].saturating_sub(1);
             }
             net_nodes[ni].clear();
             sink_hops[ni].clear();
+        }
 
-            let src_loc = term_loc(terms[0]);
-            let src_nodes = pin_nodes(&geo, src_loc, arch.routing.fc_out,
-                                      17 + 131 * ni as u64);
-
-            // Route tree as a set of nodes with hop-distance from source.
-            // Seeds (source track taps) are search entry points but only
-            // nodes actually used by a sink path get committed.
-            let mut tree: HashMap<usize, usize> = HashMap::new(); // node -> hops
-            let mut used: Vec<usize> = Vec::new();
-            for &id in &src_nodes {
-                tree.insert(id, 0);
-            }
-
-            for &sink in &terms[1..] {
-                let dst_loc = term_loc(sink);
-                let dst_nodes = pin_nodes(&geo, dst_loc, arch.routing.fc_in,
-                                          71 + 131 * ni as u64);
-                // Target node set.
-                let mut is_target = HashMap::new();
-                for &id in &dst_nodes {
-                    is_target.insert(id, ());
+        // Phase 2 — route the ripped-up nets in fixed waves: each wave
+        // runs against the frozen cost snapshot (sharded across workers
+        // with per-worker search scratch), then commits occupancy in net
+        // order before the next wave sees the graph.
+        for wave in work.chunks(WAVE) {
+            let costs_ref = &costs;
+            let graph_ref = &graph;
+            let nets_ref = &nets;
+            let term_loc_ref = &term_loc;
+            let pool_ref = &scratch_pool;
+            // Small waves (the long tail of late, lightly-congested
+            // iterations) run on the calling thread: spawning workers for
+            // a handful of nets costs more than it saves, and the result
+            // is identical either way (worker count is unobservable).
+            let wave_jobs = if wave.len() < 8 { 1 } else { opts.jobs.max(1) };
+            let routed: Vec<(Vec<usize>, Vec<(Term, usize)>)> = parallel_indexed_with(
+                wave.len(),
+                wave_jobs,
+                || ScratchLease::take(pool_ref, n_nodes),
+                |lease, wi| {
+                    let ni = wave[wi];
+                    route_net(
+                        graph_ref,
+                        costs_ref,
+                        pres_fac,
+                        ni,
+                        &nets_ref[ni].1,
+                        term_loc_ref,
+                        arch,
+                        lease.scratch.as_mut().expect("scratch held for lease lifetime"),
+                    )
+                },
+            );
+            for ((used, hops), &ni) in routed.into_iter().zip(wave.iter()) {
+                for &n in &used {
+                    costs.occ[n] += 1;
                 }
-
-                // A* from the current tree.
-                let mut heap: BinaryHeap<QItem> = BinaryHeap::new();
-                for &n in touched.iter() {
-                    cost_arr[n] = f64::INFINITY;
-                    prev[n] = usize::MAX;
-                }
-                touched.clear();
-                let mut seeds: Vec<(usize, usize)> =
-                    tree.iter().map(|(&n, &h)| (n, h)).collect();
-                seeds.sort_unstable(); // deterministic A* tie-breaking
-                for (n, hops) in seeds {
-                    // Fresh source taps pay their own congestion cost
-                    // (otherwise a net would happily start on an occupied
-                    // tap it never perceives); nodes already on this net's
-                    // committed tree re-enter free.
-                    let entry = if hops == 0 && !net_nodes[ni].contains(&n) {
-                        let over = (occ[n] as f64 + 1.0 - arch_cap()).max(0.0);
-                        (1.0 + hist[n] as f64) * (1.0 + over * pres_fac)
-                    } else {
-                        0.0
-                    };
-                    cost_arr[n] = entry;
-                    prev[n] = usize::MAX;
-                    touched.push(n);
-                    heap.push(QItem {
-                        prio: entry + geo.heur(n, dst_loc.x as usize, dst_loc.y as usize),
-                        cost: entry,
-                        node: n,
-                    });
-                }
-                let mut found = usize::MAX;
-                while let Some(QItem { cost, node, .. }) = heap.pop() {
-                    if cost > cost_arr[node] {
-                        continue;
-                    }
-                    if is_target.contains_key(&node) {
-                        found = node;
-                        break;
-                    }
-                    let (dir, x, y, t) = geo.decode(node);
-                    let mut push = |nid: usize, heap: &mut BinaryHeap<QItem>,
-                                    cost_arr: &mut Vec<f64>, prev: &mut Vec<usize>,
-                                    touched: &mut Vec<usize>| {
-                        // PathFinder node cost.
-                        let over = (occ[nid] as f64 + 1.0
-                            - arch_cap())
-                            .max(0.0);
-                        let c_node = (1.0 + hist[nid] as f64) * (1.0 + over * pres_fac);
-                        let nc = cost + c_node;
-                        if nc < cost_arr[nid] {
-                            if cost_arr[nid].is_infinite() && prev[nid] == usize::MAX {
-                                touched.push(nid);
-                            }
-                            cost_arr[nid] = nc;
-                            prev[nid] = node;
-                            heap.push(QItem {
-                                // VPR's astar_fac: inflate the admissible
-                                // heuristic for a large search-space cut at
-                                // bounded routing-cost suboptimality.
-                                prio: nc + 1.3 * geo.heur(nid, dst_loc.x as usize,
-                                                          dst_loc.y as usize),
-                                cost: nc,
-                                node: nid,
-                            });
-                        }
-                    };
-                    if dir == 0 {
-                        // Horizontal: extend along x; turn onto V at (x, y).
-                        if x + 1 < geo.w {
-                            push(geo.id(0, x + 1, y, t), &mut heap, &mut cost_arr, &mut prev, &mut touched);
-                        }
-                        if x > 0 {
-                            push(geo.id(0, x - 1, y, t), &mut heap, &mut cost_arr, &mut prev, &mut touched);
-                        }
-                        push(geo.id(1, x, y, t), &mut heap, &mut cost_arr, &mut prev, &mut touched);
-                        push(geo.id(1, x, y, (t + 1) % geo.tracks), &mut heap, &mut cost_arr, &mut prev, &mut touched);
-                    } else {
-                        if y + 1 < geo.h {
-                            push(geo.id(1, x, y + 1, t), &mut heap, &mut cost_arr, &mut prev, &mut touched);
-                        }
-                        if y > 0 {
-                            push(geo.id(1, x, y - 1, t), &mut heap, &mut cost_arr, &mut prev, &mut touched);
-                        }
-                        push(geo.id(0, x, y, t), &mut heap, &mut cost_arr, &mut prev, &mut touched);
-                        push(geo.id(0, x, y, (t + 1) % geo.tracks), &mut heap, &mut cost_arr, &mut prev, &mut touched);
-                    }
-                }
-
-                if found == usize::MAX {
-                    // Unroutable sink this iteration; count as overuse and
-                    // keep going (pressure will reshape other nets).
-                    sink_hops[ni].push((sink, (src_loc.dist(dst_loc) as usize).max(1)));
-                    continue;
-                }
-                // Walk back, add path to tree.
-                let mut path = Vec::new();
-                let mut cur = found;
-                while cur != usize::MAX && !tree.contains_key(&cur) {
-                    path.push(cur);
-                    cur = prev[cur];
-                }
-                let base_hops = if cur == usize::MAX { 0 } else { tree[&cur] };
-                // The attachment node is used (it may be a fresh seed tap).
-                if cur != usize::MAX {
-                    used.push(cur);
-                }
-                let hops = base_hops + path.len();
-                sink_hops[ni].push((sink, hops));
-                for (off, &n) in path.iter().rev().enumerate() {
-                    tree.insert(n, base_hops + off + 1);
-                    used.push(n);
-                }
-            }
-
-            // Commit occupancy for path nodes only (dedup).
-            used.sort_unstable();
-            used.dedup();
-            for &n in &used {
-                occ[n] += 1;
-                net_nodes[ni].push(n);
+                net_nodes[ni] = used;
+                sink_hops[ni] = hops;
             }
         }
 
-        // Overuse accounting.
-        let mut overused = 0usize;
-        for n in 0..n_nodes {
-            if occ[n] as f64 > arch_cap() {
-                overused += 1;
-                hist[n] += opts.hist_fac as f32;
-            }
-        }
+        // Phase 3 — history accumulation on whatever is still overused.
+        let overused = costs.bump_history(opts.hist_fac);
         if overused == 0 {
             success = true;
             break;
@@ -398,40 +396,35 @@ pub fn route(
         pres_fac *= opts.pres_mult;
     }
 
-    let overused = occ.iter().filter(|&&o| o as f64 > arch_cap()).count();
-    let overused_nodes: Vec<(usize, usize, usize, usize, u16)> = occ
+    let overused = costs.occ.iter().filter(|&&o| o as f64 > NODE_CAP).count();
+    let overused_nodes: Vec<(usize, usize, usize, usize, u16)> = costs
+        .occ
         .iter()
         .enumerate()
-        .filter(|&(_, &o)| o as f64 > arch_cap())
+        .filter(|&(_, &o)| o as f64 > NODE_CAP)
         .map(|(id, &o)| {
-            let (d, x, y, t) = geo.decode(id);
+            let (d, x, y, t) = graph.decode(id);
             (d, x, y, t, o)
         })
         .collect();
 
     // Channel utilization: average occupancy per channel segment (all W
     // tracks of one direction at one grid point form a "channel").
-    let mut channel_util = Vec::with_capacity(2 * geo.w * geo.h);
+    let mut channel_util = Vec::with_capacity(2 * graph.width * graph.height);
     for dir in 0..2 {
-        for y in 0..geo.h {
-            for x in 0..geo.w {
-                let used: usize = (0..geo.tracks)
-                    .filter(|&t| occ[geo.id(dir, x, y, t)] > 0)
+        for y in 0..graph.height {
+            for x in 0..graph.width {
+                let used: usize = (0..graph.tracks)
+                    .filter(|&t| costs.occ[graph.node_id(dir, x, y, t)] > 0)
                     .count();
-                channel_util.push(used as f64 / geo.tracks as f64);
+                channel_util.push(used as f64 / graph.tracks as f64);
             }
         }
     }
 
-    let wirelength = occ.iter().map(|&o| o as usize).sum();
+    let wirelength = costs.occ.iter().map(|&o| o as usize).sum();
 
     Routing { success, iterations, sink_hops, channel_util, wirelength, overused, overused_nodes, net_nodes }
-}
-
-/// Per-track capacity (1 wire per track node).
-#[inline]
-fn arch_cap() -> f64 {
-    1.0
 }
 
 /// Per-net, per-sink routed delays for post-route STA.
@@ -463,7 +456,7 @@ pub fn routed_net_delay<'a>(
         if hops == 0 {
             return 0.0;
         }
-        Routing::hop_delay(arch, hops)
+        rrg::hop_delay(arch, hops)
     }
 }
 
@@ -513,12 +506,6 @@ mod tests {
         assert_eq!(h.len(), 10);
         let sum: f64 = h.iter().sum();
         assert!((sum - 1.0).abs() < 1e-9);
-    }
-
-    #[test]
-    fn hop_delay_monotone() {
-        let arch = Arch::paper(ArchVariant::Baseline);
-        assert!(Routing::hop_delay(&arch, 8) > Routing::hop_delay(&arch, 2));
     }
 
     #[test]

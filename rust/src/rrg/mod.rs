@@ -1,0 +1,321 @@
+//! Routing-resource graph (RRG): the shared substrate of the router and
+//! the post-route timing path.
+//!
+//! ## Node layout
+//!
+//! Every grid corner `(x, y)` of the device (including the I/O ring)
+//! carries `W` horizontal and `W` vertical track nodes, one per channel
+//! wire.  Node ids are a dense arena in
+//! `dir (0 = H, 1 = V) x height x width x W` order:
+//!
+//! ```text
+//! id(dir, x, y, t) = ((dir * H + y) * W_grid + x) * tracks + t
+//! ```
+//!
+//! so all tracks of one channel segment are contiguous (cache-friendly for
+//! the per-channel utilization reduction) and `decode` is three divisions.
+//! Adjacency is a CSR table built once per (device, channel width):
+//! horizontal tracks chain along x, vertical along y, and turns connect
+//! track `t` to tracks `t` and `(t + 1) % W` of the crossing direction (a
+//! Wilton-like twist, so track planes are not isolated).  Edge order in
+//! the CSR rows is fixed, which pins the A* tie-breaking order and hence
+//! the routed trees.
+//!
+//! Block pins are not materialized as nodes: [`RrGraph::pin_nodes`]
+//! hashes a deterministic `fc`-fraction subset of the adjacent channel
+//! corners per (location, salt), exactly like VPR's connection-block
+//! flexibility.
+//!
+//! ## Cost model and the snapshot/reduce negotiation scheme
+//!
+//! [`CostState`] holds the PathFinder arrays: per-node occupancy
+//! (`occ`), history cost (`hist`), and the congestion formula
+//! `(1 + hist) * (1 + overuse * pres_fac)` on top of a unit base cost.
+//! The parallel router treats one negotiation iteration as:
+//!
+//! 1. **rip-up** (serial, fixed net order): congested nets release their
+//!    occupancy;
+//! 2. **route** (parallel, in fixed waves of `route::WAVE` nets): each
+//!    wave's nets run A* against the *frozen* `CostState` snapshot taken
+//!    at wave start — workers never write shared state, so any shard
+//!    assignment computes identical per-net routes — and the wave's
+//!    occupancy commits in net order before the next wave;
+//! 3. **reduce** (serial): history costs bump on overused nodes.
+//!
+//! Because routing a net is a pure function of (wave snapshot, net), wave
+//! boundaries never depend on the worker count, and steps 1/3 plus every
+//! commit run in a fixed order on one thread, the result is bit-identical
+//! for any worker count — the contract `rust/tests/route_parallel.rs`
+//! enforces.  Wave size trades negotiation fidelity (fresh occupancy)
+//! against parallelism; see the `route` module docs for measurements.
+
+use crate::arch::device::Device;
+use crate::arch::device::Loc;
+use crate::arch::Arch;
+
+/// Per-track capacity (one wire per track node).
+pub const NODE_CAP: f64 = 1.0;
+
+/// The routing-resource graph: node arena + CSR adjacency.
+pub struct RrGraph {
+    /// Grid width including the I/O ring.
+    pub width: usize,
+    /// Grid height including the I/O ring.
+    pub height: usize,
+    /// Channel width W (tracks per direction per grid corner).
+    pub tracks: usize,
+    /// CSR row starts: `edge_start[id]..edge_start[id + 1]` indexes
+    /// `edges` for node `id`.
+    edge_start: Vec<u32>,
+    /// CSR edge targets.
+    edges: Vec<u32>,
+}
+
+impl RrGraph {
+    /// Build the graph for a device and architecture (channel width).
+    pub fn build(device: &Device, arch: &Arch) -> RrGraph {
+        let w = device.width() as usize;
+        let h = device.height() as usize;
+        let tracks = (arch.routing.channel_width as usize).max(1);
+        let n = 2 * w * h * tracks;
+        let id = |dir: usize, x: usize, y: usize, t: usize| -> u32 {
+            (((dir * h + y) * w + x) * tracks + t) as u32
+        };
+        let mut edge_start = Vec::with_capacity(n + 1);
+        let mut edges: Vec<u32> = Vec::with_capacity(4 * n);
+        edge_start.push(0u32);
+        for dir in 0..2 {
+            for y in 0..h {
+                for x in 0..w {
+                    for t in 0..tracks {
+                        if dir == 0 {
+                            // Horizontal: extend along x; turn onto V here.
+                            if x + 1 < w {
+                                edges.push(id(0, x + 1, y, t));
+                            }
+                            if x > 0 {
+                                edges.push(id(0, x - 1, y, t));
+                            }
+                            edges.push(id(1, x, y, t));
+                            edges.push(id(1, x, y, (t + 1) % tracks));
+                        } else {
+                            // Vertical: extend along y; turn onto H here.
+                            if y + 1 < h {
+                                edges.push(id(1, x, y + 1, t));
+                            }
+                            if y > 0 {
+                                edges.push(id(1, x, y - 1, t));
+                            }
+                            edges.push(id(0, x, y, t));
+                            edges.push(id(0, x, y, (t + 1) % tracks));
+                        }
+                        edge_start.push(edges.len() as u32);
+                    }
+                }
+            }
+        }
+        RrGraph { width: w, height: h, tracks, edge_start, edges }
+    }
+
+    #[inline]
+    pub fn node_id(&self, dir: usize, x: usize, y: usize, t: usize) -> usize {
+        ((dir * self.height + y) * self.width + x) * self.tracks + t
+    }
+
+    /// Inverse of [`node_id`](Self::node_id): `(dir, x, y, t)`.
+    #[inline]
+    pub fn decode(&self, id: usize) -> (usize, usize, usize, usize) {
+        let t = id % self.tracks;
+        let rest = id / self.tracks;
+        let x = rest % self.width;
+        let rest = rest / self.width;
+        let y = rest % self.height;
+        let dir = rest / self.height;
+        (dir, x, y, t)
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        2 * self.width * self.height * self.tracks
+    }
+
+    /// Fan-out of `id` in fixed CSR order.
+    #[inline]
+    pub fn neighbors(&self, id: usize) -> &[u32] {
+        let lo = self.edge_start[id] as usize;
+        let hi = self.edge_start[id + 1] as usize;
+        &self.edges[lo..hi]
+    }
+
+    /// Admissible A* heuristic: Manhattan distance to the target corner.
+    #[inline]
+    pub fn heur(&self, id: usize, tx: usize, ty: usize) -> f64 {
+        let (_, x, y, _) = self.decode(id);
+        ((x as i64 - tx as i64).abs() + (y as i64 - ty as i64).abs()) as f64
+    }
+
+    /// Channel nodes a block pin can reach: a hashed `frac` subset of the
+    /// tracks, spread over the four channel corners adjacent to the block
+    /// (blocks have pins on all sides, so their taps must not pile onto a
+    /// single grid point).  Deterministic in (location, salt).
+    pub fn pin_nodes(&self, loc: Loc, frac: f64, salt: u64) -> Vec<usize> {
+        let tracks = self.tracks;
+        let n = ((tracks as f64 * frac).ceil() as usize).clamp(2, tracks) * 2;
+        let mut v = Vec::with_capacity(n);
+        let mut x = (loc.x as u64)
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add((loc.y as u64).wrapping_mul(0xBF58476D1CE4E5B9))
+            .wrapping_add(salt);
+        let corners = [
+            (loc.x as usize, loc.y as usize),
+            (loc.x.saturating_sub(1) as usize, loc.y as usize),
+            (loc.x as usize, loc.y.saturating_sub(1) as usize),
+            (loc.x.saturating_sub(1) as usize, loc.y.saturating_sub(1) as usize),
+        ];
+        for _ in 0..n {
+            x ^= x >> 27;
+            x = x.wrapping_mul(0x94D049BB133111EB);
+            let t = (x % tracks as u64) as usize;
+            let (cx, cy) = corners[((x >> 17) % 4) as usize];
+            let dir = ((x >> 33) & 1) as usize;
+            if cx < self.width && cy < self.height {
+                v.push(self.node_id(dir, cx, cy, t));
+            }
+        }
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+}
+
+/// Routed interconnect delay for a sink whose path uses `hops` wire
+/// segments — the quantity post-route STA charges per net edge.
+pub fn hop_delay(arch: &Arch, hops: usize) -> f64 {
+    arch.delays.conn_block
+        + (hops as f64 / arch.routing.segment_len as f64).ceil().max(1.0)
+            * arch.delays.wire_segment
+}
+
+/// PathFinder negotiation state: per-node occupancy and history cost.
+///
+/// During the parallel routing phase this is a read-only snapshot; the
+/// serial reduce phase applies occupancy deltas and history bumps.
+#[derive(Clone, Debug)]
+pub struct CostState {
+    pub occ: Vec<u16>,
+    pub hist: Vec<f32>,
+}
+
+impl CostState {
+    pub fn new(n_nodes: usize) -> CostState {
+        CostState { occ: vec![0; n_nodes], hist: vec![0.0; n_nodes] }
+    }
+
+    /// PathFinder node cost: `(1 + hist) * (1 + overuse * pres_fac)` over
+    /// a unit base cost.
+    #[inline]
+    pub fn node_cost(&self, id: usize, pres_fac: f64) -> f64 {
+        let over = (self.occ[id] as f64 + 1.0 - NODE_CAP).max(0.0);
+        (1.0 + self.hist[id] as f64) * (1.0 + over * pres_fac)
+    }
+
+    /// Is node `id` currently over capacity?
+    #[inline]
+    pub fn overused(&self, id: usize) -> bool {
+        self.occ[id] as f64 > NODE_CAP
+    }
+
+    /// Accumulate history cost on every overused node; returns how many
+    /// nodes are overused (0 = the iteration converged).
+    pub fn bump_history(&mut self, hist_fac: f64) -> usize {
+        let mut overused = 0usize;
+        for id in 0..self.occ.len() {
+            if self.occ[id] as f64 > NODE_CAP {
+                overused += 1;
+                self.hist[id] += hist_fac as f32;
+            }
+        }
+        overused
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{Arch, ArchVariant};
+
+    fn graph() -> RrGraph {
+        let mut arch = Arch::paper(ArchVariant::Baseline);
+        arch.routing.channel_width = 6;
+        RrGraph::build(&Device::new(4, 4), &arch)
+    }
+
+    #[test]
+    fn id_decode_round_trip() {
+        let g = graph();
+        for id in 0..g.num_nodes() {
+            let (d, x, y, t) = g.decode(id);
+            assert_eq!(g.node_id(d, x, y, t), id);
+        }
+    }
+
+    #[test]
+    fn csr_covers_every_node_with_sane_degrees() {
+        let g = graph();
+        for id in 0..g.num_nodes() {
+            let nbrs = g.neighbors(id);
+            assert!((3..=4).contains(&nbrs.len()), "degree {} at {id}", nbrs.len());
+            for &nb in nbrs {
+                assert!((nb as usize) < g.num_nodes());
+                assert_ne!(nb as usize, id);
+            }
+        }
+    }
+
+    #[test]
+    fn edges_connect_adjacent_corners_only() {
+        let g = graph();
+        for id in 0..g.num_nodes() {
+            let (_, x, y, _) = g.decode(id);
+            for &nb in g.neighbors(id) {
+                let (_, nx, ny, _) = g.decode(nb as usize);
+                let d = (x as i64 - nx as i64).abs() + (y as i64 - ny as i64).abs();
+                assert!(d <= 1, "edge jumps {d} corners");
+            }
+        }
+    }
+
+    #[test]
+    fn pin_nodes_deterministic_and_in_range() {
+        let g = graph();
+        let a = g.pin_nodes(Loc::new(2, 2), 0.3, 99);
+        let b = g.pin_nodes(Loc::new(2, 2), 0.3, 99);
+        assert_eq!(a, b);
+        assert!(!a.is_empty());
+        assert!(a.iter().all(|&n| n < g.num_nodes()));
+        // Different salt spreads onto (generally) different taps.
+        let c = g.pin_nodes(Loc::new(2, 2), 0.3, 100);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn cost_state_congestion_formula() {
+        let mut cs = CostState::new(4);
+        assert_eq!(cs.node_cost(0, 2.0), 1.0); // free node, no history
+        cs.occ[1] = 1; // at capacity: no overuse yet
+        assert_eq!(cs.node_cost(1, 2.0), 1.0);
+        cs.occ[2] = 2; // one over
+        assert!(cs.node_cost(2, 2.0) > cs.node_cost(1, 2.0));
+        assert!(!cs.overused(1));
+        assert!(cs.overused(2));
+        let n = cs.bump_history(0.5);
+        assert_eq!(n, 1);
+        assert!(cs.node_cost(2, 2.0) > 3.0);
+    }
+
+    #[test]
+    fn hop_delay_monotone_in_hops() {
+        let arch = Arch::paper(ArchVariant::Baseline);
+        assert!(hop_delay(&arch, 9) > hop_delay(&arch, 2));
+        assert!(hop_delay(&arch, 1) > 0.0);
+    }
+}

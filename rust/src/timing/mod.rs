@@ -105,6 +105,21 @@ fn cell_output_delay(nl: &Netlist, arch: &Arch, cell: CellId, pin: u8) -> f64 {
     }
 }
 
+/// Post-route STA: net delays come from the routed trees over the
+/// routing-resource graph — each sink is charged for the wire hops of its
+/// branch ([`crate::rrg::hop_delay`]), so the critical path reflects the
+/// actual negotiated routes rather than placement distance estimates.
+pub fn sta_routed(
+    nl: &Netlist,
+    packing: &Packing,
+    arch: &Arch,
+    routing: &crate::route::Routing,
+    model: &crate::place::cost::NetModel,
+) -> TimingReport {
+    let delay = crate::route::routed_net_delay(routing, model, arch);
+    sta(nl, packing, arch, delay)
+}
+
 /// Run STA.  `net_delay(net, sink_cell, sink_pin)` gives the interconnect
 /// delay from the net's driver LB pin to the sink LB pin (0 for intra-LB
 /// feedback).

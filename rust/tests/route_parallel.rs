@@ -1,0 +1,116 @@
+//! Parallel-router determinism contract, end to end:
+//!
+//! * `Routing` is bit-identical across `--route-jobs 1/2/8` — the
+//!   snapshot/reduce negotiation scheme (`rrg` module docs) makes phase 2
+//!   a pure function of (snapshot, net), so shard assignment is
+//!   unobservable;
+//! * the contract holds through the flow layer (`FlowOpts::route_jobs`)
+//!   for multiple placement seeds;
+//! * the placer remains deterministic per seed under the incremental cost
+//!   cache and batched move pipeline.
+
+use double_duty::arch::{Arch, ArchVariant};
+use double_duty::bench_suites::{kratos_suite, BenchParams};
+use double_duty::flow::{place_route_seed, FlowOpts};
+use double_duty::pack::{pack, PackOpts, Packing};
+use double_duty::place::cost::NetModel;
+use double_duty::place::{place, PlaceOpts, Placement};
+use double_duty::route::{route, RouteOpts, Routing};
+use double_duty::synth::circuit::Circuit;
+use double_duty::synth::multiplier::{soft_mul, AdderAlgo};
+use double_duty::techmap::{map_circuit, MapOpts};
+use double_duty::netlist::Netlist;
+
+fn placed_mul(w: usize) -> (Netlist, Packing, Placement, NetModel, Arch) {
+    let mut c = Circuit::new("m");
+    let x = c.pi_bus("x", w);
+    let y = c.pi_bus("y", w);
+    let p = soft_mul(&mut c, &x, &y, AdderAlgo::Wallace);
+    c.po_bus("p", &p);
+    let nl = map_circuit(&c, &MapOpts::default());
+    let arch = Arch::paper(ArchVariant::Dd5);
+    let packing = pack(&nl, &arch, &PackOpts::default());
+    let pl = place(&nl, &packing, &arch,
+                   &PlaceOpts { effort: 0.3, ..Default::default() });
+    let mut model = NetModel::build(&nl, &packing);
+    model.set_weights(&[], false);
+    (nl, packing, pl, model, arch)
+}
+
+fn assert_routing_eq(a: &Routing, b: &Routing, tag: &str) {
+    assert_eq!(a.success, b.success, "{tag}: success");
+    assert_eq!(a.iterations, b.iterations, "{tag}: iterations");
+    assert_eq!(a.wirelength, b.wirelength, "{tag}: wirelength");
+    assert_eq!(a.overused, b.overused, "{tag}: overused");
+    assert_eq!(a.overused_nodes, b.overused_nodes, "{tag}: overused_nodes");
+    assert_eq!(a.sink_hops, b.sink_hops, "{tag}: sink_hops");
+    assert_eq!(a.net_nodes, b.net_nodes, "{tag}: net_nodes");
+    assert_eq!(a.channel_util, b.channel_util, "{tag}: channel_util");
+}
+
+/// The core contract: identical `Routing` for every job count.
+#[test]
+fn routing_bit_identical_across_job_counts() {
+    let (_nl, _packing, pl, model, arch) = placed_mul(6);
+    let base = route(&model, &pl, &arch, &RouteOpts { jobs: 1, ..Default::default() });
+    assert!(base.success, "baseline route failed ({} overused)", base.overused);
+    for jobs in [2, 8] {
+        let r = route(&model, &pl, &arch, &RouteOpts { jobs, ..Default::default() });
+        assert_routing_eq(&base, &r, &format!("jobs={jobs}"));
+    }
+}
+
+/// The contract survives congestion (narrow channel => many negotiation
+/// iterations with real rip-up/re-route churn).
+#[test]
+fn routing_bit_identical_under_congestion() {
+    let (_nl, _packing, pl, model, mut arch) = placed_mul(6);
+    arch.routing.channel_width = 14;
+    let base = route(&model, &pl, &arch, &RouteOpts { jobs: 1, ..Default::default() });
+    assert!(base.iterations > 1, "want real negotiation churn");
+    for jobs in [2, 8] {
+        let r = route(&model, &pl, &arch, &RouteOpts { jobs, ..Default::default() });
+        assert_routing_eq(&base, &r, &format!("congested jobs={jobs}"));
+    }
+}
+
+/// Flow-level: `route_jobs` does not perturb any reported metric, across
+/// placement seeds, on a real benchmark circuit.
+#[test]
+fn flow_metrics_identical_across_route_jobs() {
+    let params = BenchParams::default();
+    let b = &kratos_suite(&params)[0];
+    let circ = b.generate();
+    let nl = map_circuit(&circ, &MapOpts::default());
+    let arch = Arch::coffe(ArchVariant::Dd5);
+    let packing = pack(&nl, &arch, &PackOpts::default());
+    for seed in [1u64, 2] {
+        let mk = |route_jobs: usize| {
+            let opts = FlowOpts {
+                seeds: vec![seed],
+                place_effort: 0.1,
+                route_jobs,
+                ..Default::default()
+            };
+            place_route_seed(&nl, &packing, &arch, &opts, seed)
+        };
+        let serial = mk(1);
+        let parallel = mk(4);
+        assert!(serial.cpd_ns == parallel.cpd_ns,
+                "seed {seed}: cpd {} vs {}", serial.cpd_ns, parallel.cpd_ns);
+        assert_eq!(serial.routed_ok, parallel.routed_ok);
+        assert!(serial.route_iters == parallel.route_iters);
+        assert_eq!(serial.channel_util, parallel.channel_util);
+    }
+}
+
+/// Placer determinism under the incremental cost + batched pipeline.
+#[test]
+fn placer_deterministic_with_incremental_cost() {
+    let (nl, packing, _pl, _model, arch) = placed_mul(5);
+    let a = place(&nl, &packing, &arch, &PlaceOpts { effort: 0.4, seed: 11, ..Default::default() });
+    let b = place(&nl, &packing, &arch, &PlaceOpts { effort: 0.4, seed: 11, ..Default::default() });
+    assert_eq!(a.lb_loc, b.lb_loc);
+    assert_eq!(a.cost, b.cost);
+    assert_eq!(a.est_cpd_ps, b.est_cpd_ps);
+}
