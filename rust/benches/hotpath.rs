@@ -1,11 +1,16 @@
 //! Hot-path microbenchmarks for the perf pass (EXPERIMENTS.md §Perf):
 //! placer move evaluation (incremental cost cache), router A* (serial vs
-//! sharded PathFinder), packer, mapper, and the PJRT kernel evaluation
-//! latency. No criterion offline — simple timed loops with enough
-//! iterations for stable medians.
+//! sharded PathFinder), the levelized wave-parallel front-end (mapper /
+//! packer / STA, serial vs sharded — the PR-3 acceptance numbers), and
+//! the PJRT kernel evaluation latency. No criterion offline — simple
+//! timed loops with enough iterations for stable medians.
 //!
-//! `--quick` runs a CI-smoke subset: single iterations, the router
-//! determinism check, no engine sweep.
+//! Front-end medians are also emitted as machine-readable
+//! `BENCH_PR3.json` (stage, median seconds at jobs=1 / jobs=N, speedup)
+//! so CI can archive the perf trajectory across PRs.
+//!
+//! `--quick` runs a CI-smoke subset: single iterations, the router and
+//! front-end determinism checks, no engine sweep.
 use std::time::Instant;
 
 use double_duty::arch::{Arch, ArchVariant};
@@ -13,11 +18,13 @@ use double_duty::bench_suites::{kratos_suite, BenchParams};
 use double_duty::coordinator::default_workers;
 use double_duty::flow::engine::{Engine, ExperimentPlan};
 use double_duty::flow::FlowOpts;
-use double_duty::pack::{pack, PackOpts};
+use double_duty::netlist::{Netlist, NetlistIndex, PackIndex};
+use double_duty::pack::{pack, pack_with, PackOpts};
 use double_duty::place::cost::{IncrementalCost, NetModel};
 use double_duty::place::{place, PlaceOpts};
 use double_duty::route::{route, RouteOpts, Routing};
-use double_duty::techmap::{map_circuit, MapOpts};
+use double_duty::techmap::{map_circuit, map_circuit_with, MapOpts};
+use double_duty::timing::{sta_with, TimingReport};
 
 fn timed<F: FnMut()>(name: &str, iters: usize, mut f: F) {
     // Warmup.
@@ -32,6 +39,80 @@ fn timed<F: FnMut()>(name: &str, iters: usize, mut f: F) {
     } else {
         println!("{name:<28} {:>10.1} us/iter", per * 1e6);
     }
+}
+
+/// Median wall-clock seconds of `iters` runs (after one warmup).
+fn median_secs<F: FnMut()>(iters: usize, mut f: F) -> f64 {
+    f();
+    let mut ts = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        ts.push(t0.elapsed().as_secs_f64());
+    }
+    ts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    ts[ts.len() / 2]
+}
+
+fn netlists_identical(a: &Netlist, b: &Netlist) -> bool {
+    a.num_chains == b.num_chains
+        && a.inputs == b.inputs
+        && a.outputs == b.outputs
+        && a.cells.len() == b.cells.len()
+        && a.nets.len() == b.nets.len()
+        && a.cells.iter().zip(b.cells.iter()).all(|(x, y)| {
+            x.kind == y.kind && x.name == y.name && x.ins == y.ins && x.outs == y.outs
+        })
+        && a.nets.iter().zip(b.nets.iter()).all(|(x, y)| {
+            x.name == y.name && x.driver == y.driver && x.sinks == y.sinks
+        })
+}
+
+fn packings_identical(a: &double_duty::pack::Packing, b: &double_duty::pack::Packing) -> bool {
+    a.variant == b.variant
+        && a.chain_macros == b.chain_macros
+        && a.ios == b.ios
+        && a.alms.len() == b.alms.len()
+        && a.lbs.len() == b.lbs.len()
+        && a.alms.iter().zip(b.alms.iter()).all(|(x, y)| {
+            x.adder_bits == y.adder_bits
+                && x.operand_paths == y.operand_paths
+                && x.logic_luts == y.logic_luts
+                && x.logic_halves == y.logic_halves
+                && x.ffs == y.ffs
+                && x.gen_inputs == y.gen_inputs
+                && x.z_inputs == y.z_inputs
+                && x.outputs == y.outputs
+                && x.chain == y.chain
+        })
+        && a.lbs.iter().zip(b.lbs.iter()).all(|(x, y)| {
+            x.alms == y.alms
+                && x.inputs == y.inputs
+                && x.outputs == y.outputs
+                && x.chains == y.chains
+        })
+        && a.stats.alms == b.stats.alms
+        && a.stats.lbs == b.stats.lbs
+        && a.stats.adder_bits == b.stats.adder_bits
+        && a.stats.luts == b.stats.luts
+        && a.stats.absorbed_luts == b.stats.absorbed_luts
+        && a.stats.concurrent_luts == b.stats.concurrent_luts
+        && a.stats.ffs == b.stats.ffs
+        && a.stats.ios == b.stats.ios
+}
+
+fn reports_identical(a: &TimingReport, b: &TimingReport) -> bool {
+    a.cpd_ps.to_bits() == b.cpd_ps.to_bits()
+        && a.net_crit.len() == b.net_crit.len()
+        && a.arrival.len() == b.arrival.len()
+        && a.net_crit
+            .iter()
+            .zip(b.net_crit.iter())
+            .all(|(x, y)| x.to_bits() == y.to_bits())
+        && a.arrival
+            .iter()
+            .zip(b.arrival.iter())
+            .all(|(x, y)| x.to_bits() == y.to_bits())
 }
 
 fn routing_identical(a: &Routing, b: &Routing) -> bool {
@@ -101,13 +182,17 @@ fn main() {
     // circuit (by mapped cell count).  The ISSUE-2 acceptance bar is
     // >1.5x at 4 jobs; results must be bit-identical (the rrg
     // snapshot/reduce determinism contract).
-    let (big_nl, big_name) = if quick {
-        (nl.clone(), bench.name.clone())
+    let (big_circ, big_nl, big_name) = if quick {
+        (circ.clone(), nl.clone(), bench.name.clone())
     } else {
         suite
             .iter()
-            .map(|b| (map_circuit(&b.generate(), &MapOpts::default()), b.name.clone()))
-            .max_by_key(|(nl, _)| nl.cells.len())
+            .map(|b| {
+                let c = b.generate();
+                let n = map_circuit(&c, &MapOpts::default());
+                (c, n, b.name.clone())
+            })
+            .max_by_key(|(_, nl, _)| nl.cells.len())
             .expect("non-empty suite")
     };
     let big_pack = pack(&big_nl, &arch, &PackOpts::default());
@@ -142,6 +227,76 @@ fn main() {
         t_serial / t_sharded.max(1e-9),
         sr.iterations
     );
+
+    // --- Front-end: levelized wave-parallel mapper / packer / STA on the
+    // largest Kratos circuit, jobs=1 vs jobs=default_workers() (the PR-3
+    // acceptance comparison).  Every parallel artifact is checked
+    // bit-identical against its serial twin before any timing is
+    // reported; medians land in BENCH_PR3.json for the CI artifact.
+    let fe_jobs = default_workers().max(2);
+
+    let map_par = map_circuit_with(&big_circ, &MapOpts::default(), fe_jobs);
+    assert!(netlists_identical(&big_nl, &map_par),
+            "parallel mapper diverged from serial on {big_name}");
+    let map_s1 = median_secs(reps(3), || {
+        let _ = map_circuit_with(&big_circ, &MapOpts::default(), 1);
+    });
+    let map_sn = median_secs(reps(3), || {
+        let _ = map_circuit_with(&big_circ, &MapOpts::default(), fe_jobs);
+    });
+
+    let pack_par = pack_with(&big_nl, &arch, &PackOpts::default(), fe_jobs);
+    assert!(packings_identical(&big_pack, &pack_par),
+            "parallel packer diverged from serial on {big_name}");
+    let pack_s1 = median_secs(reps(5), || {
+        let _ = pack_with(&big_nl, &arch, &PackOpts::default(), 1);
+    });
+    let pack_sn = median_secs(reps(5), || {
+        let _ = pack_with(&big_nl, &arch, &PackOpts::default(), fe_jobs);
+    });
+
+    let idx = NetlistIndex::build(&big_nl);
+    let pidx = PackIndex::build(&big_nl, &big_pack);
+    let sta_delay = |net: u32, _c: u32, pin: u8| 120.0 + (net % 5) as f64 + pin as f64;
+    let sta_1 = sta_with(&big_nl, &idx, &pidx, &big_pack, &arch, sta_delay, 1);
+    let sta_n = sta_with(&big_nl, &idx, &pidx, &big_pack, &arch, sta_delay, fe_jobs);
+    assert!(reports_identical(&sta_1, &sta_n),
+            "parallel STA diverged from serial on {big_name}");
+    let sta_s1 = median_secs(reps(15), || {
+        let _ = sta_with(&big_nl, &idx, &pidx, &big_pack, &arch, sta_delay, 1);
+    });
+    let sta_sn = median_secs(reps(15), || {
+        let _ = sta_with(&big_nl, &idx, &pidx, &big_pack, &arch, sta_delay, fe_jobs);
+    });
+
+    let speedup = |s1: f64, sn: f64| s1 / sn.max(1e-12);
+    for (stage, s1, sn) in [
+        ("map", map_s1, map_sn),
+        ("pack", pack_s1, pack_sn),
+        ("sta", sta_s1, sta_sn),
+    ] {
+        println!(
+            "{stage:<5} {big_name:<18} jobs=1 {:>8.2} ms | jobs={fe_jobs} {:>8.2} ms  ({:.2}x, bit-identical)",
+            s1 * 1e3,
+            sn * 1e3,
+            speedup(s1, sn)
+        );
+    }
+
+    let json = format!(
+        "{{\n  \"bench\": \"{big_name}\",\n  \"cells\": {},\n  \"jobs\": {fe_jobs},\n  \"stages\": [\n    \
+         {{\"stage\": \"map\", \"median_s_jobs1\": {:.6}, \"median_s\": {:.6}, \"speedup\": {:.3}}},\n    \
+         {{\"stage\": \"pack\", \"median_s_jobs1\": {:.6}, \"median_s\": {:.6}, \"speedup\": {:.3}}},\n    \
+         {{\"stage\": \"sta\", \"median_s_jobs1\": {:.6}, \"median_s\": {:.6}, \"speedup\": {:.3}}}\n  ]\n}}\n",
+        big_nl.cells.len(),
+        map_s1, map_sn, speedup(map_s1, map_sn),
+        pack_s1, pack_sn, speedup(pack_s1, pack_sn),
+        sta_s1, sta_sn, speedup(sta_s1, sta_sn),
+    );
+    match std::fs::write("BENCH_PR3.json", &json) {
+        Ok(()) => println!("front-end medians written to BENCH_PR3.json"),
+        Err(e) => println!("could not write BENCH_PR3.json: {e}"),
+    }
 
     if quick {
         println!("--quick: skipping engine sweep");

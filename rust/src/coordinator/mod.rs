@@ -81,6 +81,99 @@ where
         .collect()
 }
 
+/// Run a *levelized* job schedule on persistent workers.  Wave `w`
+/// consists of the job indices `offsets[w]..offsets[w + 1]`; every job of
+/// a wave completes (and its writes become visible — the inter-wave
+/// barrier synchronizes) before any job of wave `w + 1` starts.  Jobs
+/// write their results themselves, through disjoint slots or atomics the
+/// caller owns — that is what lets one thread scope span all waves
+/// instead of paying a spawn/join per wave, which is the difference
+/// between profit and loss on the shallow-but-many levels of the STA and
+/// mapper schedules.
+///
+/// Determinism contract: `f(state, i)` must be a pure function of `i`
+/// (plus wave-ordered prior writes) once the scratch is reset, exactly as
+/// for [`parallel_indexed_with`] — which worker runs a job, and the order
+/// of jobs within one wave, are unobservable.
+///
+/// `workers <= 1` runs every wave serially on the calling thread.  A
+/// panicking job poisons the pool (remaining work is skipped, all workers
+/// drain their barriers) and the panic is re-raised on the caller.
+pub fn parallel_waves_with<S, I, F>(offsets: &[usize], workers: usize, init: I, f: F)
+where
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize) + Sync,
+{
+    let waves = offsets.len().saturating_sub(1);
+    if waves == 0 {
+        return;
+    }
+    let total = offsets[waves];
+    let workers = workers.max(1).min(total.max(1));
+    if workers <= 1 {
+        let mut state = init();
+        for w in 0..waves {
+            for i in offsets[w]..offsets[w + 1] {
+                f(&mut state, i);
+            }
+        }
+        return;
+    }
+    let counters: Vec<AtomicUsize> = (0..waves).map(|_| AtomicUsize::new(0)).collect();
+    let poisoned = std::sync::atomic::AtomicBool::new(false);
+    // First panic payload (from init or a job), re-raised on the caller.
+    let panic_payload: Mutex<Option<Box<dyn std::any::Any + Send>>> = Mutex::new(None);
+    let record_panic = |e: Box<dyn std::any::Any + Send>| {
+        poisoned.store(true, Ordering::Release);
+        let mut slot = panic_payload.lock().unwrap();
+        if slot.is_none() {
+            *slot = Some(e);
+        }
+    };
+    let barrier = std::sync::Barrier::new(workers);
+    thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| {
+                // Trap panics (from init and jobs alike) so no worker
+                // abandons the barrier protocol — a vanished participant
+                // would deadlock the rest.  The caller re-raises after
+                // the join.
+                let mut state =
+                    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(&init)) {
+                        Ok(st) => Some(st),
+                        Err(e) => {
+                            record_panic(e);
+                            None
+                        }
+                    };
+                for w in 0..waves {
+                    let (lo, hi) = (offsets[w], offsets[w + 1]);
+                    while let Some(st) = state.as_mut() {
+                        if poisoned.load(Ordering::Acquire) {
+                            break;
+                        }
+                        let i = lo + counters[w].fetch_add(1, Ordering::Relaxed);
+                        if i >= hi {
+                            break;
+                        }
+                        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                            f(st, i)
+                        }));
+                        if let Err(e) = r {
+                            record_panic(e);
+                            break;
+                        }
+                    }
+                    barrier.wait();
+                }
+            });
+        }
+    });
+    if let Some(e) = panic_payload.into_inner().unwrap() {
+        std::panic::resume_unwind(e);
+    }
+}
+
 /// Run all jobs on `workers` threads; results in submission order.
 /// Results are bit-identical to serial `flow::run_benchmark` calls.
 pub fn run_jobs(jobs: Vec<Job>, workers: usize) -> Vec<FlowResult> {
@@ -163,6 +256,76 @@ mod tests {
             s.len()
         });
         assert_eq!(serial, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn parallel_waves_respect_wave_barriers() {
+        use std::sync::atomic::AtomicU64;
+        // Job i of wave w doubles the value its wave-(w-1) counterpart
+        // wrote: any barrier violation would read a stale value.
+        let n = 40usize;
+        let slots: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(1)).collect();
+        let offsets = [0, n, 2 * n, 3 * n];
+        parallel_waves_with(&offsets, 4, || (), |_, i| {
+            let j = i % n;
+            if i < n {
+                slots[j].store(j as u64 + 1, Ordering::Relaxed);
+            } else {
+                let prev = slots[j].load(Ordering::Relaxed);
+                slots[j].store(prev * 2, Ordering::Relaxed);
+            }
+        });
+        for (j, s) in slots.iter().enumerate() {
+            assert_eq!(s.load(Ordering::Relaxed), (j as u64 + 1) * 4);
+        }
+        // Serial path gives the identical result.
+        let serial: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(1)).collect();
+        parallel_waves_with(&offsets, 1, || (), |_, i| {
+            let j = i % n;
+            if i < n {
+                serial[j].store(j as u64 + 1, Ordering::Relaxed);
+            } else {
+                let prev = serial[j].load(Ordering::Relaxed);
+                serial[j].store(prev * 2, Ordering::Relaxed);
+            }
+        });
+        for (a, b) in slots.iter().zip(serial.iter()) {
+            assert_eq!(a.load(Ordering::Relaxed), b.load(Ordering::Relaxed));
+        }
+        // Degenerate shapes are no-ops.
+        parallel_waves_with(&[], 4, || (), |_: &mut (), _| unreachable!());
+        parallel_waves_with(&[0], 4, || (), |_: &mut (), _| unreachable!());
+        parallel_waves_with(&[0, 0, 0], 4, || (), |_: &mut (), _| unreachable!());
+    }
+
+    /// A job panic propagates its original payload to the caller (no
+    /// deadlocked barrier, no swallowed message).
+    #[test]
+    #[should_panic(expected = "boom")]
+    fn parallel_waves_propagate_worker_panics() {
+        parallel_waves_with(&[0, 64], 4, || (), |_, i| {
+            if i == 13 {
+                panic!("boom");
+            }
+        });
+    }
+
+    /// An init() panic must not deadlock the barrier protocol either.
+    #[test]
+    #[should_panic(expected = "init boom")]
+    fn parallel_waves_propagate_init_panics() {
+        use std::sync::atomic::AtomicUsize;
+        static CALLS: AtomicUsize = AtomicUsize::new(0);
+        parallel_waves_with(
+            &[0, 64],
+            4,
+            || {
+                if CALLS.fetch_add(1, Ordering::Relaxed) == 1 {
+                    panic!("init boom");
+                }
+            },
+            |_, _| {},
+        );
     }
 
     #[test]

@@ -38,11 +38,26 @@ pub const CACHE_VERSION: u32 = 1;
 #[derive(Clone, Debug)]
 pub struct DiskCache {
     root: PathBuf,
+    /// Byte-size cap on the store; `None` = unbounded.  When set, every
+    /// store is followed by LRU-by-mtime eviction (see [`Self::with_cap_mb`]).
+    cap_bytes: Option<u64>,
 }
 
 impl DiskCache {
     pub fn new(root: impl Into<PathBuf>) -> DiskCache {
-        DiskCache { root: root.into() }
+        DiskCache { root: root.into(), cap_bytes: None }
+    }
+
+    /// Store with a byte-size cap (the CLI's `--cache-cap-mb N`): after
+    /// every write, `.dd` artifacts are evicted least-recently-*modified*
+    /// first until the store fits.  Loads do not refresh mtimes, so this
+    /// approximates LRU by write recency — cheap, filesystem-portable,
+    /// and deterministic (ties break on file name).
+    pub fn with_cap_mb(root: impl Into<PathBuf>, cap_mb: u64) -> DiskCache {
+        DiskCache {
+            root: root.into(),
+            cap_bytes: Some(cap_mb.saturating_mul(1024 * 1024)),
+        }
     }
 
     /// The CLI default: `target/dd-cache` under the working directory.
@@ -82,6 +97,7 @@ impl DiskCache {
             m.dedup_hits, m.fingerprint, body
         );
         write_atomic(&self.mapped_path(key), &text);
+        self.evict_to_cap();
     }
 
     /// Load a packing artifact; `None` on miss or malformed content.
@@ -93,6 +109,45 @@ impl DiskCache {
     /// Store a packing artifact (best-effort).
     pub fn store_packing(&self, key: u64, p: &Packing) {
         write_atomic(&self.packing_path(key), &packing_text(p));
+        self.evict_to_cap();
+    }
+
+    /// Enforce the byte cap: list this store's `.dd` artifacts and remove
+    /// them least-recently-modified first (file-name tie-break keeps the
+    /// order deterministic under coarse mtime granularity) until the total
+    /// fits.  Best-effort like the stores themselves — I/O errors are
+    /// skipped, never surfaced; the cache is an accelerator, not a
+    /// correctness dependency.
+    fn evict_to_cap(&self) {
+        let Some(cap) = self.cap_bytes else { return };
+        let Ok(rd) = fs::read_dir(&self.root) else { return };
+        let mut files: Vec<(std::time::SystemTime, PathBuf, u64)> = Vec::new();
+        let mut total = 0u64;
+        for e in rd.flatten() {
+            let path = e.path();
+            if path.extension().and_then(|x| x.to_str()) != Some("dd") {
+                continue;
+            }
+            let Ok(md) = e.metadata() else { continue };
+            if !md.is_file() {
+                continue;
+            }
+            let mtime = md.modified().unwrap_or(std::time::SystemTime::UNIX_EPOCH);
+            total += md.len();
+            files.push((mtime, path, md.len()));
+        }
+        if total <= cap {
+            return;
+        }
+        files.sort();
+        for (_, path, len) in files {
+            if total <= cap {
+                break;
+            }
+            if fs::remove_file(&path).is_ok() {
+                total -= len;
+            }
+        }
     }
 }
 
@@ -519,5 +574,61 @@ mod tests {
         .unwrap();
         assert!(cache.load_mapped(7).is_none());
         let _ = std::fs::remove_dir_all(&root);
+    }
+
+    fn store_bytes(root: &Path) -> u64 {
+        std::fs::read_dir(root)
+            .map(|rd| {
+                rd.flatten()
+                    .filter(|e| e.path().extension().and_then(|x| x.to_str()) == Some("dd"))
+                    .filter_map(|e| e.metadata().ok())
+                    .map(|m| m.len())
+                    .sum()
+            })
+            .unwrap_or(0)
+    }
+
+    #[test]
+    fn byte_cap_evicts_lru_by_mtime() {
+        let root = tmp_root("evict");
+        let _ = std::fs::remove_dir_all(&root);
+        let nl = mapped_mul();
+        let fingerprint = ArtifactCache::netlist_fingerprint(&nl);
+        let m = MappedCircuit { nl, dedup_hits: 0, fingerprint };
+
+        // Learn one artifact's size with an unbounded store.
+        let unbounded = DiskCache::new(&root);
+        unbounded.store_mapped(1, &m);
+        let one = store_bytes(&root);
+        assert!(one > 0);
+        let _ = std::fs::remove_dir_all(&root);
+
+        // Cap at ~2.5 artifacts: storing 4 must evict down to the cap.
+        let cap_bytes = one * 5 / 2;
+        let capped = DiskCache {
+            root: root.clone(),
+            cap_bytes: Some(cap_bytes),
+        };
+        for key in 1..=4u64 {
+            capped.store_mapped(key, &m);
+        }
+        let total = store_bytes(&root);
+        assert!(total <= cap_bytes, "store {total} bytes exceeds cap {cap_bytes}");
+        assert!(total >= one, "eviction deleted everything");
+        // Evicted keys read as clean misses; at least one key survives.
+        let alive = (1..=4u64).filter(|&k| capped.load_mapped(k).is_some()).count();
+        assert!((1..4).contains(&alive), "{alive} artifacts alive");
+        // The unbounded handle never evicts.
+        let _ = std::fs::remove_dir_all(&root);
+        let unbounded = DiskCache::new(&root);
+        for key in 1..=4u64 {
+            unbounded.store_mapped(key, &m);
+        }
+        assert_eq!(store_bytes(&root), 4 * one);
+        let _ = std::fs::remove_dir_all(&root);
+
+        // `with_cap_mb` wires megabytes through.
+        let c = DiskCache::with_cap_mb(&root, 3);
+        assert_eq!(c.cap_bytes, Some(3 * 1024 * 1024));
     }
 }

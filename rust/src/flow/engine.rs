@@ -41,8 +41,8 @@ use crate::arch::{Arch, ArchVariant};
 use crate::bench_suites::Benchmark;
 use crate::coordinator::parallel_indexed;
 use crate::netlist::{CellKind, Netlist};
-use crate::pack::{pack, PackOpts, Packing, Unrelated};
-use crate::techmap::{map_circuit, MapOpts};
+use crate::pack::{pack_with, PackOpts, Packing, Unrelated};
+use crate::techmap::{map_circuit_with, MapOpts};
 
 use super::diskcache::DiskCache;
 use super::{arch_for_run, assemble_result, place_route_seed, FlowOpts, FlowResult, SeedMetrics};
@@ -124,6 +124,21 @@ impl ArtifactCache {
         }))
     }
 
+    /// Cache selection for the CLI's shared flags (`exp` and `flow`):
+    /// `--no-disk-cache` keeps the process-wide memory cache; a
+    /// `--cache-cap-mb` cap gets its own disk-backed instance (the cap is
+    /// per-invocation policy, not process-global state); otherwise the
+    /// process-wide disk-backed cache.
+    pub fn for_cli(disk_cache: bool, cache_cap_mb: Option<u64>) -> Arc<ArtifactCache> {
+        match (disk_cache, cache_cap_mb) {
+            (false, _) => ArtifactCache::global(),
+            (true, None) => ArtifactCache::global_disk(),
+            (true, Some(mb)) => Arc::new(ArtifactCache::with_disk(
+                DiskCache::with_cap_mb(DiskCache::default_root(), mb),
+            )),
+        }
+    }
+
     /// Identity of a benchmark instance: name, suite, and every generator
     /// parameter that feeds the circuit (`BenchParams`' manual `Hash`
     /// impl destructures exhaustively, so new knobs can't silently alias
@@ -187,6 +202,14 @@ impl ArtifactCache {
 
     /// Generate + technology-map `b`, or return the shared artifact.
     pub fn mapped(&self, b: &Benchmark) -> Arc<MappedCircuit> {
+        self.mapped_with(b, 1)
+    }
+
+    /// [`Self::mapped`] with the mapper's cut enumeration sharded over
+    /// `jobs` workers.  `jobs` is deliberately *not* part of the cache
+    /// key: mapping is bit-identical for any worker count, so artifacts
+    /// computed at different job counts are interchangeable.
+    pub fn mapped_with(&self, b: &Benchmark, jobs: usize) -> Arc<MappedCircuit> {
         let key = Self::bench_key(b);
         if let Some(m) = self.mapped.lock().unwrap().get(&key) {
             CacheStats::bump(&self.stats.map_hits);
@@ -206,7 +229,7 @@ impl ArtifactCache {
         // Arc survives is unobservable).
         CacheStats::bump(&self.stats.map_misses);
         let circ = b.generate();
-        let nl = map_circuit(&circ, &MapOpts::default());
+        let nl = map_circuit_with(&circ, &MapOpts::default(), jobs);
         let fingerprint = Self::netlist_fingerprint(&nl);
         let art = Arc::new(MappedCircuit { nl, dedup_hits: circ.dedup_hits, fingerprint });
         if let Some(d) = &self.disk {
@@ -217,6 +240,19 @@ impl ArtifactCache {
 
     /// Pack `mapped` for `arch`, or return the shared packing.
     pub fn packed(&self, mapped: &MappedCircuit, arch: &Arch, opts: &PackOpts) -> Arc<Packing> {
+        self.packed_with(mapped, arch, opts, 1)
+    }
+
+    /// [`Self::packed`] with clustering's attraction scoring sharded over
+    /// `jobs` workers (not part of the cache key — bit-identical output
+    /// for any worker count).
+    pub fn packed_with(
+        &self,
+        mapped: &MappedCircuit,
+        arch: &Arch,
+        opts: &PackOpts,
+        jobs: usize,
+    ) -> Arc<Packing> {
         let key = Self::pack_key(mapped.fingerprint, arch, opts);
         if let Some(p) = self.packed.lock().unwrap().get(&key) {
             CacheStats::bump(&self.stats.pack_hits);
@@ -230,7 +266,7 @@ impl ArtifactCache {
             }
         }
         CacheStats::bump(&self.stats.pack_misses);
-        let p = Arc::new(pack(&mapped.nl, arch, opts));
+        let p = Arc::new(pack_with(&mapped.nl, arch, opts, jobs));
         if let Some(d) = &self.disk {
             d.store_packing(key, &p);
         }
@@ -277,17 +313,29 @@ impl Engine {
         let cache = &self.cache;
 
         // Phase 1: map every distinct circuit (variant-independent).
+        // When the grid has fewer circuits than workers, the leftover
+        // parallelism moves *inside* each mapping job (levelized cut
+        // enumeration waves); output is bit-identical either way, so the
+        // split is a pure scheduling decision.
+        let map_inner = (self.jobs / nb.max(1)).max(1);
         let mapped: Vec<Arc<MappedCircuit>> =
-            parallel_indexed(nb, self.jobs, |bi| cache.mapped(&benches[bi]));
+            parallel_indexed(nb, self.jobs, |bi| cache.mapped_with(&benches[bi], map_inner));
 
-        // Phase 2: pack every (circuit, variant) cell.
+        // Phase 2: pack every (circuit, variant) cell (same inner/outer
+        // parallelism split as phase 1).
         let archs: Vec<Arch> = variants
             .iter()
             .map(|&v| arch_for_run(&Arch::coffe(v), opts))
             .collect();
+        let pack_inner = (self.jobs / (nb * nv).max(1)).max(1);
         let packs: Vec<Arc<Packing>> = parallel_indexed(nb * nv, self.jobs, |i| {
             let (vi, bi) = (i / nb, i % nb);
-            cache.packed(&mapped[bi], &archs[vi], &PackOpts { unrelated: opts.unrelated })
+            cache.packed_with(
+                &mapped[bi],
+                &archs[vi],
+                &PackOpts { unrelated: opts.unrelated },
+                pack_inner,
+            )
         });
 
         // Phase 3: one place/route job per (circuit, variant, seed),

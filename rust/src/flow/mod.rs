@@ -36,6 +36,11 @@ pub struct FlowOpts {
     /// Worker threads inside each PathFinder run (`--route-jobs`; results
     /// are bit-identical for any value — see `rust/tests/route_parallel.rs`).
     pub route_jobs: usize,
+    /// Feed pre-route STA criticalities into the router's base cost
+    /// ([`RouteOpts::net_crit`]) so critical nets route more directly.
+    /// Off by default: figures are unchanged unless requested
+    /// (`--timing-route`).
+    pub route_timing_weights: bool,
     pub use_kernel: bool,
     /// Fixed device (Table IV stress); `None` auto-sizes per design.
     pub device: Option<Device>,
@@ -50,6 +55,7 @@ impl Default for FlowOpts {
             unrelated: Unrelated::Auto,
             route: true,
             route_jobs: 1,
+            route_timing_weights: false,
             use_kernel: false,
             device: None,
             channel_width: None,
@@ -135,7 +141,19 @@ pub fn place_route_seed(
     if opts.route {
         let mut model = crate::place::cost::NetModel::build(nl, packing);
         model.set_weights(&[], false);
-        let ropts = RouteOpts { jobs: opts.route_jobs.max(1), ..RouteOpts::default() };
+        // Optional timing-driven routing: pre-route STA over the placed
+        // distance estimates yields the per-net criticalities the router
+        // folds into its base cost (default off — empty weights multiply
+        // out to exactly the timing-oblivious router).
+        let net_crit = if opts.route_timing_weights {
+            crate::timing::sta(nl, packing, arch, |net, sink, _| {
+                crate::place::net_endpoint_delay(&model, &pl.lb_loc, &pl.io_loc, arch, net, sink)
+            })
+            .net_crit
+        } else {
+            Vec::new()
+        };
+        let ropts = RouteOpts { jobs: opts.route_jobs.max(1), net_crit, ..RouteOpts::default() };
         let r: Routing = route(&model, &pl, arch, &ropts);
         let rpt = sta_routed(nl, packing, arch, &r, &model);
         SeedMetrics {

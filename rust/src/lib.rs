@@ -54,11 +54,20 @@
 //!   incremental per-net bounding-box cost cache
 //!   ([`place::cost::IncrementalCost`]); the PJRT kernel consumes the
 //!   cached boxes directly.
+//! * The synth→map→pack→STA front-end runs on dense CSR index arenas
+//!   ([`netlist::index`]) and levelized wave schedules
+//!   ([`coordinator::parallel_waves_with`]): the mapper's cut
+//!   enumeration, the packer's attraction scoring, and STA's
+//!   forward/backward passes shard within each level/scan while
+//!   selection and commits stay serial in fixed order — `Netlist`,
+//!   `Packing` and `TimingReport` are bit-identical for any job count
+//!   (`rust/tests/frontend_parallel.rs`).
 //!
 //! A persistent artifact cache ([`flow::diskcache`]) serializes mapped
 //! netlists and packings under `target/dd-cache` keyed by the same
 //! content hashes, so repeated CLI invocations skip the map/pack stages
-//! (`--no-disk-cache` opts out).
+//! (`--no-disk-cache` opts out; `--cache-cap-mb N` bounds the store with
+//! LRU-by-mtime eviction).
 
 pub mod arch;
 pub mod coffe;

@@ -2,14 +2,17 @@
 //!
 //! Subcommands:
 //!   exp <table1|table2|table3|table4|fig5|fig6|fig7|fig8|fig9|all> [--quick] [--jobs N]
-//!       [--route-jobs N] [--no-disk-cache]
+//!       [--route-jobs N] [--no-disk-cache] [--cache-cap-mb N]
 //!       Regenerate a paper table/figure (experiment-engine sweeps run on
 //!       N worker threads; default: all cores / DDUTY_WORKERS).
 //!   flow --bench <name> [--variant baseline|dd5|dd6] [--seed N | --seeds a,b,c]
 //!        [--no-route] [--jobs N] [--route-jobs N] [--no-disk-cache]
+//!        [--cache-cap-mb N] [--timing-route]
 //!       Run the full CAD flow on one benchmark and print its metrics
-//!       (multi-seed runs place/route the seeds in parallel; --route-jobs
-//!       shards each PathFinder run with bit-identical results).
+//!       (multi-seed runs place/route the seeds in parallel; --jobs also
+//!       shards the mapper/packer front-end and --route-jobs each
+//!       PathFinder run, all with bit-identical results; --timing-route
+//!       feeds pre-route criticalities into the router's base cost).
 //!   list
 //!       List available benchmarks.
 //!   coffe
@@ -17,7 +20,8 @@
 //!
 //! Mapped netlists and packings persist under `target/dd-cache` so
 //! repeated invocations skip the map/pack stages; `--no-disk-cache`
-//! keeps a run memory-only.
+//! keeps a run memory-only, and `--cache-cap-mb N` bounds the store
+//! (least-recently-modified artifacts are evicted beyond N MiB).
 
 use double_duty::arch::ArchVariant;
 use double_duty::bench_suites::{all_suites, BenchParams};
@@ -41,10 +45,11 @@ fn main() {
         _ => {
             eprintln!("usage: dduty <exp|flow|list|coffe> ...");
             eprintln!("  dduty exp <table1|table2|table3|table4|fig5..fig9|all> [--quick] \
-                       [--jobs N] [--route-jobs N] [--no-disk-cache]");
+                       [--jobs N] [--route-jobs N] [--no-disk-cache] [--cache-cap-mb N]");
             eprintln!("  dduty flow --bench <name> [--variant baseline|dd5|dd6] \
                        [--seed N | --seeds a,b,c] [--no-route] [--jobs N] \
-                       [--route-jobs N] [--no-disk-cache]");
+                       [--route-jobs N] [--no-disk-cache] [--cache-cap-mb N] \
+                       [--timing-route]");
             std::process::exit(if cmd == "help" { 0 } else { 2 });
         }
     }
@@ -73,6 +78,19 @@ fn parse_route_jobs(args: &[String]) -> usize {
     parse_count_flag(args, "--route-jobs", 1)
 }
 
+/// `--cache-cap-mb N`: optional byte cap (in MiB) on the persistent
+/// artifact store.  Malformed values are hard errors.
+fn parse_cache_cap_mb(args: &[String]) -> Option<u64> {
+    let i = args.iter().position(|a| a == "--cache-cap-mb")?;
+    match args.get(i + 1).map(|s| s.parse::<u64>()) {
+        Some(Ok(n)) => Some(n.max(1)),
+        _ => {
+            eprintln!("--cache-cap-mb requires a numeric size in MiB");
+            std::process::exit(2);
+        }
+    }
+}
+
 fn exp_opts(args: &[String]) -> ExpOpts {
     let mut opts = if args.iter().any(|a| a == "--quick") {
         ExpOpts::quick()
@@ -82,6 +100,7 @@ fn exp_opts(args: &[String]) -> ExpOpts {
     opts.jobs = parse_jobs(args);
     opts.route_jobs = parse_route_jobs(args);
     opts.disk_cache = !args.iter().any(|a| a == "--no-disk-cache");
+    opts.cache_cap_mb = parse_cache_cap_mb(args);
     opts
 }
 
@@ -151,8 +170,10 @@ fn cmd_flow(args: &[String]) {
     };
     let route = !args.iter().any(|a| a == "--no-route");
     let use_kernel = args.iter().any(|a| a == "--kernel");
+    let route_timing_weights = args.iter().any(|a| a == "--timing-route");
     let jobs = parse_jobs(args);
     let route_jobs = parse_route_jobs(args);
+    let cache_cap_mb = parse_cache_cap_mb(args);
 
     let params = BenchParams::default();
     let Some(bench) = all_suites(&params).into_iter().find(|b| b.name == bench_name) else {
@@ -163,13 +184,17 @@ fn cmd_flow(args: &[String]) {
     let plan = ExperimentPlan {
         benches: vec![bench],
         variants: vec![variant],
-        flow: FlowOpts { seeds, route, route_jobs, use_kernel, ..Default::default() },
+        flow: FlowOpts {
+            seeds,
+            route,
+            route_jobs,
+            route_timing_weights,
+            use_kernel,
+            ..Default::default()
+        },
     };
-    let cache = if args.iter().any(|a| a == "--no-disk-cache") {
-        std::sync::Arc::new(ArtifactCache::new())
-    } else {
-        ArtifactCache::global_disk()
-    };
+    let disk_cache = !args.iter().any(|a| a == "--no-disk-cache");
+    let cache = ArtifactCache::for_cli(disk_cache, cache_cap_mb);
     let r = Engine::with_cache(jobs, cache)
         .run(&plan)
         .pop()

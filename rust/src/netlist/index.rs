@@ -1,0 +1,409 @@
+//! Dense, cache-friendly index arenas over a [`Netlist`] and a
+//! [`Packing`](crate::pack::Packing) — the netlist-layer analogue of the
+//! router's [`crate::rrg`] subsystem.
+//!
+//! The netlist IR itself stays pointer-rich and editable (`Vec<Cell>`,
+//! per-net `Vec<(CellId, u8)>` sink lists, name strings); every *hot*
+//! consumer — STA's forward/backward passes, the packer's attraction
+//! scoring, criticality extraction — used to chase those heap cells and
+//! rebuild `HashMap`s per call.  [`NetlistIndex`] flattens what they
+//! actually read into CSR arrays built once per netlist:
+//!
+//! * **CSR fanout**: per net, sink `(cell, pin)` pairs as two flat arrays
+//!   sliced by `sink_start` (stored sink order is preserved),
+//! * **dense drivers**: per net, driver cell/pin as flat arrays with a
+//!   [`NO_CELL`] sentinel (no `Option<(CellId, u8)>` unwrapping),
+//! * **combinational levelization**: per cell, its topological level over
+//!   combinational edges (FF outputs, primary inputs and constants are
+//!   level-0 sources; an edge whose driver is a FF is *not* combinational),
+//!   plus the cells grouped level-by-level (`level_start` / `order`, ids
+//!   ascending within a level).  Cells within one level have no
+//!   combinational dependencies on each other, so each level is a wave of
+//!   independent jobs — the schedule
+//!   [`coordinator::parallel_waves_with`](crate::coordinator::parallel_waves_with)
+//!   executes for the parallel STA and that the mapper mirrors over the AIG.
+//!
+//! [`PackIndex`] is the per-packing companion: dense cell→ALM and ALM→LB
+//! maps that replace the `HashMap`s STA used to rebuild on every call
+//! (they are now built once per packing and taken by reference).
+//!
+//! Both structures are immutable snapshots: rebuild after any netlist or
+//! packing edit.  Construction is deterministic (plain counting sorts, no
+//! hash iteration), so every derived schedule is too.
+
+use super::{CellId, CellKind, Netlist, NetId};
+use crate::pack::Packing;
+
+/// Sentinel for "no cell" in dense driver/owner arrays.
+pub const NO_CELL: CellId = CellId::MAX;
+
+/// Sentinel for "not packed / no owner" in [`PackIndex`] arrays.
+pub const NO_SLOT: u32 = u32::MAX;
+
+/// Flattened adjacency + levelization of one netlist (see module docs).
+#[derive(Clone, Debug)]
+pub struct NetlistIndex {
+    /// CSR offsets into `sink_cell` / `sink_pin`; length `nets + 1`.
+    sink_start: Vec<u32>,
+    sink_cell: Vec<CellId>,
+    sink_pin: Vec<u8>,
+    /// Per net: driving cell ([`NO_CELL`] for floating nets) and pin.
+    driver_cell: Vec<CellId>,
+    driver_pin: Vec<u8>,
+    /// Per cell: combinational topological level.
+    level_of: Vec<u32>,
+    /// CSR offsets into `order`; length `num_levels + 1`.
+    level_start: Vec<usize>,
+    /// Cells grouped by level, ids ascending within each level.
+    order: Vec<CellId>,
+}
+
+impl NetlistIndex {
+    /// Build the index.  O(cells + nets + pins); deterministic.
+    pub fn build(nl: &Netlist) -> NetlistIndex {
+        let nc = nl.cells.len();
+        let nn = nl.nets.len();
+
+        // --- CSR fanout + dense drivers. ---------------------------------
+        let mut sink_start = vec![0u32; nn + 1];
+        for (ni, net) in nl.nets.iter().enumerate() {
+            sink_start[ni + 1] = net.sinks.len() as u32;
+        }
+        for ni in 0..nn {
+            sink_start[ni + 1] += sink_start[ni];
+        }
+        let total_sinks = sink_start[nn] as usize;
+        let mut sink_cell = vec![0 as CellId; total_sinks];
+        let mut sink_pin = vec![0u8; total_sinks];
+        let mut driver_cell = vec![NO_CELL; nn];
+        let mut driver_pin = vec![0u8; nn];
+        for (ni, net) in nl.nets.iter().enumerate() {
+            let base = sink_start[ni] as usize;
+            for (si, &(c, p)) in net.sinks.iter().enumerate() {
+                sink_cell[base + si] = c;
+                sink_pin[base + si] = p;
+            }
+            if let Some((c, p)) = net.driver {
+                driver_cell[ni] = c;
+                driver_pin[ni] = p;
+            }
+        }
+
+        // --- Combinational levelization (Kahn over comb edges). ----------
+        // An input edge is combinational unless its driver is a FF; FFs
+        // themselves are level-0 sources (their data input is a timing
+        // endpoint, not a dependency).
+        let is_ff = |c: CellId| matches!(nl.cells[c as usize].kind, CellKind::Ff);
+        let mut indeg = vec![0u32; nc];
+        for (ci, cell) in nl.cells.iter().enumerate() {
+            if matches!(cell.kind, CellKind::Ff) {
+                continue;
+            }
+            let mut cnt = 0u32;
+            for &net in &cell.ins {
+                let drv = driver_cell[net as usize];
+                if drv != NO_CELL && !is_ff(drv) {
+                    cnt += 1;
+                }
+            }
+            indeg[ci] = cnt;
+        }
+        let mut level_of = vec![0u32; nc];
+        let mut queue: Vec<CellId> =
+            (0..nc as CellId).filter(|&c| indeg[c as usize] == 0).collect();
+        let mut head = 0usize;
+        while head < queue.len() {
+            let c = queue[head];
+            head += 1;
+            if is_ff(c) {
+                // FF fanouts are not combinational edges: consumers of the
+                // q output were never counted in `indeg`, so there is
+                // nothing to release and no level to propagate.
+                continue;
+            }
+            let lvl = level_of[c as usize];
+            for &net in &nl.cells[c as usize].outs {
+                let base = sink_start[net as usize] as usize;
+                let end = sink_start[net as usize + 1] as usize;
+                for &s in &sink_cell[base..end] {
+                    if is_ff(s) {
+                        continue;
+                    }
+                    let su = s as usize;
+                    if level_of[su] < lvl + 1 {
+                        level_of[su] = lvl + 1;
+                    }
+                    indeg[su] = indeg[su].saturating_sub(1);
+                    if indeg[su] == 0 {
+                        queue.push(s);
+                    }
+                }
+            }
+        }
+        debug_assert_eq!(queue.len(), nc, "combinational cycle in netlist");
+
+        // --- Group cells by level (counting sort keeps id order). --------
+        let num_levels = level_of.iter().copied().max().map_or(0, |m| m as usize + 1);
+        let mut level_start = vec![0usize; num_levels + 1];
+        for &l in &level_of {
+            level_start[l as usize + 1] += 1;
+        }
+        for l in 0..num_levels {
+            level_start[l + 1] += level_start[l];
+        }
+        let mut cursor = level_start.clone();
+        let mut order = vec![0 as CellId; nc];
+        for c in 0..nc {
+            let l = level_of[c] as usize;
+            order[cursor[l]] = c as CellId;
+            cursor[l] += 1;
+        }
+
+        NetlistIndex {
+            sink_start,
+            sink_cell,
+            sink_pin,
+            driver_cell,
+            driver_pin,
+            level_of,
+            level_start,
+            order,
+        }
+    }
+
+    /// Driver of `net`, or `None` for floating nets.
+    #[inline]
+    pub fn driver(&self, net: NetId) -> Option<(CellId, u8)> {
+        let c = self.driver_cell[net as usize];
+        if c == NO_CELL {
+            None
+        } else {
+            Some((c, self.driver_pin[net as usize]))
+        }
+    }
+
+    /// Sink cells of `net` (stored order).
+    #[inline]
+    pub fn sink_cells(&self, net: NetId) -> &[CellId] {
+        let (a, b) = self.sink_range(net);
+        &self.sink_cell[a..b]
+    }
+
+    /// Sink `(cell, pin)` pairs of `net` (stored order).
+    #[inline]
+    pub fn sinks(&self, net: NetId) -> impl Iterator<Item = (CellId, u8)> + '_ {
+        let (a, b) = self.sink_range(net);
+        self.sink_cell[a..b]
+            .iter()
+            .zip(self.sink_pin[a..b].iter())
+            .map(|(&c, &p)| (c, p))
+    }
+
+    #[inline]
+    fn sink_range(&self, net: NetId) -> (usize, usize) {
+        (
+            self.sink_start[net as usize] as usize,
+            self.sink_start[net as usize + 1] as usize,
+        )
+    }
+
+    /// Combinational level of `cell` (0 = source wave).
+    #[inline]
+    pub fn level(&self, cell: CellId) -> u32 {
+        self.level_of[cell as usize]
+    }
+
+    /// Number of levels (0 for an empty netlist).
+    #[inline]
+    pub fn num_levels(&self) -> usize {
+        self.level_start.len() - 1
+    }
+
+    /// Cells of level `l`, ids ascending.
+    #[inline]
+    pub fn level_cells(&self, l: usize) -> &[CellId] {
+        &self.order[self.level_start[l]..self.level_start[l + 1]]
+    }
+
+    /// All cells in (level, id) order — the forward wave schedule.
+    #[inline]
+    pub fn topo_order(&self) -> &[CellId] {
+        &self.order
+    }
+
+    /// Wave offsets into [`Self::topo_order`] (length `num_levels + 1`),
+    /// in the shape [`crate::coordinator::parallel_waves_with`] consumes.
+    #[inline]
+    pub fn wave_offsets(&self) -> &[usize] {
+        &self.level_start
+    }
+}
+
+/// Dense cell→ALM and ALM→LB ownership maps for one [`Packing`] — built
+/// once per packing instead of per `sta()` call.
+///
+/// `alm_of_cell` covers the cells a [`PackedAlm`](crate::pack::PackedAlm)
+/// *hosts* (adder bits, independent logic LUTs, FFs); absorbed feeder LUTs
+/// are intentionally not included, matching the lookup semantics STA has
+/// always used (a feeder's delay is charged on its adder operand path, not
+/// via its own ALM membership).
+#[derive(Clone, Debug)]
+pub struct PackIndex {
+    alm_of_cell: Vec<u32>,
+    lb_of_alm: Vec<u32>,
+}
+
+impl PackIndex {
+    /// Build the dense maps.  O(cells + alms).
+    pub fn build(nl: &Netlist, packing: &Packing) -> PackIndex {
+        let mut alm_of_cell = vec![NO_SLOT; nl.cells.len()];
+        for (ai, alm) in packing.alms.iter().enumerate() {
+            for &c in alm
+                .adder_bits
+                .iter()
+                .chain(alm.logic_luts.iter())
+                .chain(alm.ffs.iter())
+            {
+                alm_of_cell[c as usize] = ai as u32;
+            }
+        }
+        let mut lb_of_alm = vec![NO_SLOT; packing.alms.len()];
+        for (li, lb) in packing.lbs.iter().enumerate() {
+            for &ai in &lb.alms {
+                lb_of_alm[ai] = li as u32;
+            }
+        }
+        PackIndex { alm_of_cell, lb_of_alm }
+    }
+
+    /// ALM hosting `cell`, if any.
+    #[inline]
+    pub fn alm_of(&self, cell: CellId) -> Option<usize> {
+        let a = self.alm_of_cell[cell as usize];
+        (a != NO_SLOT).then_some(a as usize)
+    }
+
+    /// LB containing ALM `alm`, if any.
+    #[inline]
+    pub fn lb_of(&self, alm: usize) -> Option<usize> {
+        let l = self.lb_of_alm[alm];
+        (l != NO_SLOT).then_some(l as usize)
+    }
+
+    /// Do two cells sit in the same LB?  `true` when either side has no
+    /// ALM (the permissive default carry-hop classification STA uses).
+    #[inline]
+    pub fn same_lb(&self, a: CellId, b: CellId) -> bool {
+        match (self.alm_of(a), self.alm_of(b)) {
+            (Some(x), Some(y)) => self.lb_of(x) == self.lb_of(y),
+            _ => true,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// a, b -> LUT x; x, ff.q -> LUT y -> FF d; y also -> output.
+    fn leveled() -> Netlist {
+        let mut nl = Netlist::new("lv");
+        let a = nl.add_input("a");
+        let b = nl.add_input("b");
+        let x = nl.add_net("x");
+        nl.add_cell(CellKind::Lut { k: 2, truth: 0b1000 }, "lx", vec![a, b], vec![x]);
+        let q = nl.add_net("q");
+        let y = nl.add_net("y");
+        nl.add_cell(CellKind::Lut { k: 2, truth: 0b0110 }, "ly", vec![x, q], vec![y]);
+        nl.add_cell(CellKind::Ff, "ff", vec![y], vec![q]);
+        nl.add_output("o", y);
+        nl
+    }
+
+    #[test]
+    fn csr_matches_netlist() {
+        let nl = leveled();
+        let idx = NetlistIndex::build(&nl);
+        for (ni, net) in nl.nets.iter().enumerate() {
+            let ni = ni as NetId;
+            assert_eq!(idx.driver(ni), net.driver);
+            let got: Vec<(CellId, u8)> = idx.sinks(ni).collect();
+            assert_eq!(got, net.sinks);
+            assert_eq!(idx.sink_cells(ni).len(), net.sinks.len());
+        }
+    }
+
+    #[test]
+    fn levels_respect_comb_edges_and_ff_cuts() {
+        let nl = leveled();
+        let idx = NetlistIndex::build(&nl);
+        let by_name = |n: &str| -> CellId {
+            nl.cells.iter().position(|c| c.name == n).unwrap() as CellId
+        };
+        // PIs level 0; lx = 1; ly = 2 (x at 1, q edge cut by the FF);
+        // ff level 0 (source); output cell after ly.
+        assert_eq!(idx.level(by_name("a")), 0);
+        assert_eq!(idx.level(by_name("ff")), 0);
+        assert_eq!(idx.level(by_name("lx")), 1);
+        assert_eq!(idx.level(by_name("ly")), 2);
+        assert_eq!(idx.level(by_name("o")), 3);
+        // Schedule covers every cell exactly once, levels ascending.
+        assert_eq!(idx.topo_order().len(), nl.cells.len());
+        assert_eq!(idx.wave_offsets().len(), idx.num_levels() + 1);
+        let mut seen = vec![false; nl.cells.len()];
+        for l in 0..idx.num_levels() {
+            for &c in idx.level_cells(l) {
+                assert_eq!(idx.level(c) as usize, l);
+                assert!(!seen[c as usize]);
+                seen[c as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+        // Every comb edge goes strictly up-level.
+        for (ci, cell) in nl.cells.iter().enumerate() {
+            if matches!(cell.kind, CellKind::Ff) {
+                continue;
+            }
+            for &net in &cell.ins {
+                if let Some((drv, _)) = idx.driver(net) {
+                    if !matches!(nl.cells[drv as usize].kind, CellKind::Ff) {
+                        assert!(idx.level(drv) < idx.level(ci as CellId));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pack_index_matches_packing() {
+        use crate::arch::{Arch, ArchVariant};
+        use crate::pack::{pack, PackOpts};
+        use crate::synth::circuit::Circuit;
+        use crate::synth::multiplier::{soft_mul, AdderAlgo};
+        use crate::techmap::{map_circuit, MapOpts};
+
+        let mut c = Circuit::new("m");
+        let x = c.pi_bus("x", 5);
+        let y = c.pi_bus("y", 5);
+        let p = soft_mul(&mut c, &x, &y, AdderAlgo::Wallace);
+        c.po_bus("p", &p);
+        let nl = map_circuit(&c, &MapOpts::default());
+        let packing = pack(&nl, &Arch::paper(ArchVariant::Dd5), &PackOpts::default());
+        let pidx = PackIndex::build(&nl, &packing);
+        for (ai, alm) in packing.alms.iter().enumerate() {
+            for &cell in alm
+                .adder_bits
+                .iter()
+                .chain(alm.logic_luts.iter())
+                .chain(alm.ffs.iter())
+            {
+                assert_eq!(pidx.alm_of(cell), Some(ai));
+            }
+        }
+        for (li, lb) in packing.lbs.iter().enumerate() {
+            for &ai in &lb.alms {
+                assert_eq!(pidx.lb_of(ai), Some(li));
+            }
+        }
+    }
+}

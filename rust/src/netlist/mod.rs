@@ -5,13 +5,18 @@
 //! [`crate::place`], [`crate::route`], [`crate::timing`]).  Cells are LUTs,
 //! adder bits (1-bit full adders linked into carry chains), flip-flops, and
 //! I/Os; nets record their driver and sinks.  A BLIF-subset reader/writer
-//! ([`blif`]) provides external interchange.
+//! ([`blif`]) provides external interchange, and [`index`] flattens the
+//! hot-path views (CSR fanout, dense drivers, combinational levelization,
+//! cell→ALM/LB ownership) into cache-friendly arenas built once per
+//! netlist/packing.
 
 pub mod blif;
+pub mod index;
 pub mod stats;
 
 use std::collections::HashMap;
 
+pub use index::{NetlistIndex, PackIndex};
 pub use stats::NetlistStats;
 
 /// Index of a [`Cell`] in [`Netlist::cells`].

@@ -1,12 +1,29 @@
 //! Logic-block clustering: greedy seed-based ALM grouping under the LB
 //! external-input budget, with carry-chain macro handling.
+//!
+//! The expensive step is attraction scoring: for every candidate ALM the
+//! clusterer counts shared nets and simulates the LB's external-input set
+//! after absorption.  Candidates are gathered in a fixed deterministic
+//! order and scored independently (each score is a pure function of the
+//! frozen LB state), so wide scans shard across workers
+//! ([`crate::coordinator::parallel_indexed`]); the winner reduction and
+//! the commit stay serial and in fixed order, which keeps the clustering
+//! bit-identical for any worker count.
 
 use std::collections::{HashMap, HashSet};
 
 use crate::arch::Arch;
+use crate::coordinator::parallel_indexed;
 use crate::netlist::{Netlist, NetId};
 
 use super::{PackOpts, PackedAlm, Unrelated};
+
+/// Minimum candidate-scan width before the scorer spins up workers.
+/// Each growth step pays a scoped-thread spawn/join, so the bar is set
+/// where scoring work (a net-sharing count plus a simulated input-set
+/// union per candidate) clearly dwarfs thread startup; narrower scans run
+/// serially with identical results.
+const PAR_MIN_CANDS: usize = 256;
 
 /// One packed logic block.
 #[derive(Clone, Debug, Default)]
@@ -29,6 +46,7 @@ pub fn cluster_lbs(
     alms: &[PackedAlm],
     chain_alms: &[Vec<usize>],
     opts: &PackOpts,
+    jobs: usize,
 ) -> (Vec<PackedLb>, Vec<Vec<usize>>) {
     let cap = arch.lb.alms as usize;
     let pin_budget =
@@ -140,8 +158,10 @@ pub fn cluster_lbs(
                 alm_lb: &mut Vec<usize>| {
         let mut members: HashSet<usize> = lbs[lb_idx].alms.iter().copied().collect();
         while lbs[lb_idx].alms.len() < cap {
-            // Attracted candidates: consumers/drivers of nets in the LB.
-            let mut best: Option<(usize, usize)> = None; // (score, ai)
+            // Attracted candidates: consumers/drivers of nets in the LB,
+            // gathered in deterministic (net, consumers-then-driver) scan
+            // order, first occurrence kept (re-scoring a duplicate can
+            // never win the strict-improvement reduction below).
             let mut nets: Vec<NetId> = lbs[lb_idx]
                 .inputs
                 .iter()
@@ -149,31 +169,54 @@ pub fn cluster_lbs(
                 .copied()
                 .collect();
             nets.sort_unstable(); // deterministic scan order
-            let mut scan = |ai: usize, best: &mut Option<(usize, usize)>| {
-                if assigned[ai] || alms[ai].chain.is_some() {
-                    return;
-                }
-                let shared = alm_nets(ai)
-                    .iter()
-                    .filter(|n| lbs[lb_idx].inputs.contains(n) || lbs[lb_idx].outputs.contains(n))
-                    .count();
-                if shared == 0 {
-                    return;
-                }
-                if inputs_with(&lbs[lb_idx], &members, ai) <= pin_budget
-                    && best.map_or(true, |(s, _)| shared > s)
-                {
-                    *best = Some((shared, ai));
-                }
-            };
-            for &net in &nets {
-                if let Some(cs) = net_consumers.get(&net) {
-                    for &ai in cs {
-                        scan(ai, &mut best);
+            let mut cand: Vec<usize> = Vec::new();
+            {
+                let mut seen: HashSet<usize> = HashSet::new();
+                let mut push = |ai: usize| {
+                    if !assigned[ai] && alms[ai].chain.is_none() && seen.insert(ai) {
+                        cand.push(ai);
+                    }
+                };
+                for &net in &nets {
+                    if let Some(cs) = net_consumers.get(&net) {
+                        for &ai in cs {
+                            push(ai);
+                        }
+                    }
+                    if let Some(&d) = net_driver_alm.get(&net) {
+                        push(d);
                     }
                 }
-                if let Some(&d) = net_driver_alm.get(&net) {
-                    scan(d, &mut best);
+            }
+            // Score each candidate against the frozen LB state: shared-net
+            // count plus the external-input budget after absorption.  Pure
+            // per candidate, so wide scans shard across workers.
+            let lb_ref: &PackedLb = &lbs[lb_idx];
+            let members_ref = &members;
+            let score = |ai: usize| -> (usize, bool) {
+                let shared = alm_nets(ai)
+                    .iter()
+                    .filter(|n| lb_ref.inputs.contains(n) || lb_ref.outputs.contains(n))
+                    .count();
+                if shared == 0 {
+                    return (0, false);
+                }
+                (shared, inputs_with(lb_ref, members_ref, ai) <= pin_budget)
+            };
+            let scores: Vec<(usize, bool)> = if jobs > 1 && cand.len() >= PAR_MIN_CANDS {
+                parallel_indexed(cand.len(), jobs, |i| score(cand[i]))
+            } else {
+                cand.iter().map(|&ai| score(ai)).collect()
+            };
+            // Serial reduce in scan order: earliest candidate attaining
+            // the maximum shared count wins (the sequential tie-break).
+            let mut best: Option<(usize, usize)> = None; // (score, ai)
+            for (&ai, &(shared, ok)) in cand.iter().zip(scores.iter()) {
+                if shared == 0 || !ok {
+                    continue;
+                }
+                if best.map_or(true, |(s, _)| shared > s) {
+                    best = Some((shared, ai));
                 }
             }
             let Some((_, ai)) = best else { break };

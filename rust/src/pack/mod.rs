@@ -154,8 +154,17 @@ pub struct Packing {
     pub stats: PackStats,
 }
 
-/// Entry point: pack `nl` for `arch`.
+/// Entry point: pack `nl` for `arch` (serial convenience wrapper over
+/// [`pack_with`]).
 pub fn pack(nl: &Netlist, arch: &Arch, opts: &PackOpts) -> Packing {
+    pack_with(nl, arch, opts, 1)
+}
+
+/// [`pack`] with the clusterer's candidate-attraction scoring sharded over
+/// `jobs` workers (commits stay serial and in fixed order, so the packing
+/// is bit-identical for any `jobs` value — see
+/// [`cluster::cluster_lbs`]).
+pub fn pack_with(nl: &Netlist, arch: &Arch, opts: &PackOpts, jobs: usize) -> Packing {
     let dd = arch.variant.concurrent_lut5();
 
     // --- Identify absorbable feeder LUTs. --------------------------------
@@ -504,7 +513,7 @@ pub fn pack(nl: &Netlist, arch: &Arch, opts: &PackOpts) -> Packing {
     }
 
     // --- Cluster ALMs into LBs. -------------------------------------------
-    let (lbs, chain_macros) = cluster::cluster_lbs(nl, arch, &alms, &chain_alms, opts);
+    let (lbs, chain_macros) = cluster::cluster_lbs(nl, arch, &alms, &chain_alms, opts, jobs);
 
     // --- I/Os. -------------------------------------------------------------
     let ios: Vec<CellId> = nl

@@ -185,10 +185,16 @@ pub fn place(nl: &Netlist, packing: &Packing, arch: &Arch, opts: &PlaceOpts) -> 
     }
 
     // --- Net model. -----------------------------------------------------------
+    // STA runs repeatedly during annealing (initial, every 4th temperature,
+    // final); build the dense netlist/packing indexes once and share them
+    // across every call instead of paying per-call HashMap rebuilds.
+    let nl_index = crate::netlist::NetlistIndex::build(nl);
+    let pack_index = crate::netlist::PackIndex::build(nl, packing);
     let mut model = cost::NetModel::build(nl, packing);
     let mut crit = vec![0.0f64; nl.nets.len()];
     if opts.timing_driven {
-        let rpt = timing::sta(nl, packing, arch, |_, _, _| arch.delays.wire_segment * 2.0);
+        let rpt = timing::sta_with(nl, &nl_index, &pack_index, packing, arch,
+                                   |_, _, _| arch.delays.wire_segment * 2.0, 1);
         crit = rpt.net_crit;
     }
     model.set_weights(&crit, opts.timing_driven);
@@ -274,9 +280,10 @@ pub fn place(nl: &Netlist, packing: &Packing, arch: &Arch, opts: &PlaceOpts) -> 
         // tracks criticality closely enough (perf pass, EXPERIMENTS.md §Perf).
         temp_idx += 1;
         if opts.timing_driven && temp_idx % 4 == 0 {
-            let rpt = timing::sta(nl, packing, arch, |net, sink, _| {
+            let rpt = timing::sta_with(nl, &nl_index, &pack_index, packing, arch,
+                                       |net, sink, _| {
                 net_endpoint_delay(&model, &lb_loc, &io_loc, arch, net, sink)
-            });
+            }, 1);
             model.set_weights(&rpt.net_crit, true);
         }
         let cur_cost = inc.refresh(&model, &lb_loc, &io_loc);
@@ -292,9 +299,9 @@ pub fn place(nl: &Netlist, packing: &Packing, arch: &Arch, opts: &PlaceOpts) -> 
     }
 
     // Final STA with placed delays.
-    let rpt = timing::sta(nl, packing, arch, |net, sink, _| {
+    let rpt = timing::sta_with(nl, &nl_index, &pack_index, packing, arch, |net, sink, _| {
         net_endpoint_delay(&model, &lb_loc, &io_loc, arch, net, sink)
-    });
+    }, 1);
 
     let cost = inc.refresh(&model, &lb_loc, &io_loc);
     Placement { device, lb_loc, io_loc, cost, est_cpd_ps: rpt.cpd_ps }

@@ -40,6 +40,10 @@ pub struct ExpOpts {
     /// invocations skip map/pack (the CLI enables this unless
     /// `--no-disk-cache`; programmatic/test callers default to off).
     pub disk_cache: bool,
+    /// Byte-size cap on the persistent store in MiB (`--cache-cap-mb N`):
+    /// stores evict least-recently-modified artifacts beyond the cap.
+    /// `None` leaves the store unbounded.
+    pub cache_cap_mb: Option<u64>,
 }
 
 impl Default for ExpOpts {
@@ -50,6 +54,7 @@ impl Default for ExpOpts {
             jobs: default_workers(),
             route_jobs: 1,
             disk_cache: false,
+            cache_cap_mb: None,
         }
     }
 }
@@ -69,15 +74,10 @@ impl ExpOpts {
         }
     }
 
-    /// Engine bound to the process-wide artifact cache (disk-backed when
-    /// requested).
+    /// Engine bound to the artifact cache the CLI flags select
+    /// ([`ArtifactCache::for_cli`]).
     fn engine(&self) -> Engine {
-        let cache = if self.disk_cache {
-            ArtifactCache::global_disk()
-        } else {
-            ArtifactCache::global()
-        };
-        Engine::with_cache(self.jobs, cache)
+        Engine::with_cache(self.jobs, ArtifactCache::for_cli(self.disk_cache, self.cache_cap_mb))
     }
 }
 

@@ -45,8 +45,13 @@ const ASTAR_FAC: f64 = 1.3;
 /// routing result, is identical for any `RouteOpts::jobs`.
 pub const WAVE: usize = 32;
 
+/// Fraction of the base cost a fully critical net is forgiven (the
+/// timing-driven first step: critical nets see cheaper, therefore more
+/// direct, wiring while congestion and history terms stay shared).
+const CRIT_BASE_DISCOUNT: f64 = 0.5;
+
 /// Router options.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct RouteOpts {
     pub max_iters: usize,
     /// Initial present-congestion factor and its per-iteration growth.
@@ -57,6 +62,14 @@ pub struct RouteOpts {
     /// Worker threads sharding the per-net A* searches (1 = serial; the
     /// result is bit-identical for any value).
     pub jobs: usize,
+    /// Optional per-net criticality in [0, 1], indexed by [`NetId`]
+    /// (typically [`crate::timing::TimingReport::net_crit`]).  When
+    /// non-empty, a net's PathFinder *base* cost is scaled by
+    /// `1 - CRIT_BASE_DISCOUNT * crit`, so critical nets prefer direct
+    /// paths and concede congested ones to slack-rich nets.  Empty (the
+    /// default) multiplies by exactly 1.0 — bit-identical to the
+    /// timing-oblivious router.
+    pub net_crit: Vec<f64>,
 }
 
 impl Default for RouteOpts {
@@ -66,7 +79,14 @@ impl Default for RouteOpts {
         // formulation) can take a few more iterations than VPR's
         // sequential-commit variant to shake out symmetric conflicts, so
         // the cap carries headroom; converged runs exit early regardless.
-        RouteOpts { max_iters: 64, pres_fac0: 0.5, pres_mult: 1.6, hist_fac: 0.5, jobs: 1 }
+        RouteOpts {
+            max_iters: 64,
+            pres_fac0: 0.5,
+            pres_mult: 1.6,
+            hist_fac: 0.5,
+            jobs: 1,
+            net_crit: Vec::new(),
+        }
     }
 }
 
@@ -173,9 +193,10 @@ impl Drop for ScratchLease<'_> {
 }
 
 /// Route one net against a frozen cost snapshot.  Pure in
-/// (graph, snapshot, pres_fac, net): no shared mutable state.
-/// Returns the net's committed node set (sorted, deduped) and per-sink
-/// hop counts.
+/// (graph, snapshot, pres_fac, net, weight): no shared mutable state.
+/// `weight` scales the per-node cost this net perceives (1.0 = neutral;
+/// see [`RouteOpts::net_crit`]).  Returns the net's committed node set
+/// (sorted, deduped) and per-sink hop counts.
 #[allow(clippy::too_many_arguments)]
 fn route_net<F: Fn(Term) -> Loc>(
     graph: &RrGraph,
@@ -185,6 +206,7 @@ fn route_net<F: Fn(Term) -> Loc>(
     terms: &[Term],
     term_loc: &F,
     arch: &Arch,
+    weight: f64,
     scratch: &mut AStarScratch,
 ) -> (Vec<usize>, Vec<(Term, usize)>) {
     let src_loc = term_loc(terms[0]);
@@ -221,7 +243,7 @@ fn route_net<F: Fn(Term) -> Loc>(
             // Fresh source taps pay their own congestion cost (otherwise a
             // net would happily start on an occupied tap it never
             // perceives); nodes already on this net's tree re-enter free.
-            let entry = if hops == 0 { costs.node_cost(n, pres_fac) } else { 0.0 };
+            let entry = if hops == 0 { weight * costs.node_cost(n, pres_fac) } else { 0.0 };
             scratch.cost[n] = entry;
             scratch.prev[n] = usize::MAX;
             scratch.touched.push(n);
@@ -239,7 +261,7 @@ fn route_net<F: Fn(Term) -> Loc>(
             }
             for &nb in graph.neighbors(node) {
                 let nid = nb as usize;
-                let nc = cost + costs.node_cost(nid, pres_fac);
+                let nc = cost + weight * costs.node_cost(nid, pres_fac);
                 if nc < scratch.cost[nid] {
                     if scratch.cost[nid].is_infinite() && scratch.prev[nid] == usize::MAX {
                         scratch.touched.push(nid);
@@ -311,6 +333,22 @@ pub fn route(
         .map(|en| (en.net, en.terms.clone()))
         .collect();
 
+    // Optional timing-driven base-cost weights (see RouteOpts::net_crit).
+    // An empty criticality vector yields exactly 1.0 everywhere, which
+    // multiplies out bit-identically to the unweighted router.
+    let net_weight: Vec<f64> = nets
+        .iter()
+        .map(|&(nid, _)| {
+            let crit = opts
+                .net_crit
+                .get(nid as usize)
+                .copied()
+                .unwrap_or(0.0)
+                .clamp(0.0, 1.0);
+            1.0 - CRIT_BASE_DISCOUNT * crit
+        })
+        .collect();
+
     let mut costs = CostState::new(n_nodes);
     // Per net: routed node set (tree) and per-sink paths.
     let mut net_nodes: Vec<Vec<usize>> = vec![Vec::new(); nets.len()];
@@ -353,6 +391,7 @@ pub fn route(
             let costs_ref = &costs;
             let graph_ref = &graph;
             let nets_ref = &nets;
+            let weight_ref = &net_weight;
             let term_loc_ref = &term_loc;
             let pool_ref = &scratch_pool;
             // Small waves (the long tail of late, lightly-congested
@@ -374,6 +413,7 @@ pub fn route(
                         &nets_ref[ni].1,
                         term_loc_ref,
                         arch,
+                        weight_ref[ni],
                         lease.scratch.as_mut().expect("scratch held for lease lifetime"),
                     )
                 },
@@ -432,7 +472,7 @@ pub fn routed_net_delay<'a>(
     routing: &'a Routing,
     model: &'a NetModel,
     arch: &'a Arch,
-) -> impl Fn(NetId, CellId, u8) -> f64 + 'a {
+) -> impl Fn(NetId, CellId, u8) -> f64 + Sync + 'a {
     // net -> (ExtNet index) for lookup.
     let mut by_net: HashMap<NetId, usize> = HashMap::new();
     for (i, en) in model.nets.iter().enumerate() {
@@ -530,5 +570,40 @@ mod tests {
             r.channel_util.iter().sum::<f64>() / r.channel_util.len() as f64
         };
         assert!(mean_u(&narrow) > mean_u(&wide));
+    }
+
+    /// Timing-driven base-cost weights: zero criticalities are exactly the
+    /// unweighted router, and real criticalities still converge and stay
+    /// deterministic across worker counts.
+    #[test]
+    fn criticality_weights_neutral_and_deterministic() {
+        let (base, model, arch) = routed(5);
+        // All-zero criticality == weight 1.0 everywhere == baseline.
+        let zeros = RouteOpts { net_crit: vec![0.0; 4096], ..Default::default() };
+        // Re-derive placement identically to `routed` for the comparison.
+        let mut c = Circuit::new("m");
+        let x = c.pi_bus("x", 5);
+        let y = c.pi_bus("y", 5);
+        let p = soft_mul(&mut c, &x, &y, AdderAlgo::Wallace);
+        c.po_bus("p", &p);
+        let nl = map_circuit(&c, &MapOpts::default());
+        let packing = pack(&nl, &arch, &PackOpts::default());
+        let pl = place(&nl, &packing, &arch,
+                       &PlaceOpts { effort: 0.3, ..Default::default() });
+        let r0 = route(&model, &pl, &arch, &zeros);
+        assert_eq!(r0.wirelength, base.wirelength);
+        assert_eq!(r0.net_nodes, base.net_nodes);
+        // Weighted routing: deterministic for any job count and converges.
+        let rpt = crate::timing::sta(&nl, &packing, &arch, |_, _, _| 150.0);
+        let weighted = |jobs: usize| {
+            route(&model, &pl, &arch,
+                  &RouteOpts { jobs, net_crit: rpt.net_crit.clone(), ..Default::default() })
+        };
+        let w1 = weighted(1);
+        assert!(w1.success, "weighted routing failed to converge");
+        let w4 = weighted(4);
+        assert_eq!(w1.net_nodes, w4.net_nodes);
+        assert_eq!(w1.iterations, w4.iterations);
+        assert_eq!(w1.wirelength, w4.wirelength);
     }
 }

@@ -80,6 +80,29 @@ pub enum Node {
     And(Lit, Lit),
 }
 
+/// Result of [`Aig::levelize`]: per-node depth plus the nodes grouped
+/// level-by-level (ids ascending within a level).
+#[derive(Clone, Debug)]
+pub struct AigLevels {
+    /// Per node: its level (0 = constants and leaves).
+    pub level_of: Vec<u32>,
+    /// CSR wave offsets into `order`; length `num_levels + 1`.
+    pub offsets: Vec<usize>,
+    /// Nodes grouped by level, ids ascending within each level.
+    pub order: Vec<NodeId>,
+}
+
+impl AigLevels {
+    pub fn num_levels(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Nodes of level `l`, ids ascending.
+    pub fn level_nodes(&self, l: usize) -> &[NodeId] {
+        &self.order[self.offsets[l]..self.offsets[l + 1]]
+    }
+}
+
 /// The graph.
 #[derive(Clone, Debug, Default)]
 pub struct Aig {
@@ -226,6 +249,40 @@ impl Aig {
         memo[&lit.node()] ^ lit.is_compl()
     }
 
+    /// Topological levelization: level 0 holds `Const0` and every leaf;
+    /// an AND node sits one past its deepest fanin.  Nodes within one
+    /// level never reference each other, so the level groups are the wave
+    /// schedule the parallel cut enumeration runs on
+    /// ([`crate::coordinator::parallel_waves_with`]).  Node ids are
+    /// already topological (a node only references smaller ids), so this
+    /// is a single O(n) sweep plus a counting sort — fully deterministic.
+    pub fn levelize(&self) -> AigLevels {
+        let n = self.nodes.len();
+        let mut level_of = vec![0u32; n];
+        for id in 0..n {
+            if let Node::And(a, b) = self.nodes[id] {
+                level_of[id] =
+                    1 + level_of[a.node() as usize].max(level_of[b.node() as usize]);
+            }
+        }
+        let num_levels = level_of.iter().copied().max().map_or(0, |m| m as usize + 1);
+        let mut offsets = vec![0usize; num_levels + 1];
+        for &l in &level_of {
+            offsets[l as usize + 1] += 1;
+        }
+        for l in 0..num_levels {
+            offsets[l + 1] += offsets[l];
+        }
+        let mut cursor = offsets.clone();
+        let mut order = vec![0 as NodeId; n];
+        for id in 0..n {
+            let l = level_of[id] as usize;
+            order[cursor[l]] = id as NodeId;
+            cursor[l] += 1;
+        }
+        AigLevels { level_of, offsets, order }
+    }
+
     /// Fanout counts of every node reachable from `roots` (and the roots'
     /// own references), used by area-flow heuristics and absorption rules.
     pub fn fanout_counts(&self, roots: &[Lit]) -> Vec<u32> {
@@ -319,6 +376,44 @@ mod tests {
                 _ => unreachable!(),
             });
             assert_eq!(got, v[0] ^ v[1] ^ v[2]);
+        }
+    }
+
+    #[test]
+    fn levelize_groups_by_depth() {
+        let mut g = Aig::new();
+        let a = g.pi();
+        let b = g.pi();
+        let x = g.xor(a, b); // two level-1 ANDs under one level-2 AND
+        let y = g.and(x, a);
+        let lv = g.levelize();
+        assert_eq!(lv.level_of[0], 0); // Const0
+        assert_eq!(lv.level_of[a.node() as usize], 0);
+        assert_eq!(lv.level_of[b.node() as usize], 0);
+        assert_eq!(lv.level_of[x.node() as usize], 2);
+        assert_eq!(lv.level_of[y.node() as usize], 3);
+        assert_eq!(lv.num_levels(), 4);
+        // Order covers every node once, grouped by level, ascending ids.
+        assert_eq!(lv.order.len(), g.len());
+        let mut seen = vec![false; g.len()];
+        for l in 0..lv.num_levels() {
+            let nodes = lv.level_nodes(l);
+            for w in nodes.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+            for &id in nodes {
+                assert_eq!(lv.level_of[id as usize] as usize, l);
+                assert!(!seen[id as usize]);
+                seen[id as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+        // Every AND sits strictly above both fanins.
+        for (id, n) in g.nodes.iter().enumerate() {
+            if let Node::And(a, b) = n {
+                assert!(lv.level_of[id] > lv.level_of[a.node() as usize]);
+                assert!(lv.level_of[id] > lv.level_of[b.node() as usize]);
+            }
         }
     }
 

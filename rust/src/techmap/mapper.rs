@@ -6,13 +6,37 @@
 //! then select cuts top-down from the mapping roots (POs, FF data inputs,
 //! adder operands, chain carry-ins).  Selected cones become LUT cells whose
 //! truth tables are computed by simulating the cone over its cut leaves.
+//!
+//! ## Levelized wave-parallel cut enumeration
+//!
+//! Cut enumeration dominates mapping time and is embarrassingly parallel
+//! *within* an AIG level: a node's candidate cuts are a pure function of
+//! its fanins' cut sets, and fanins always sit at strictly lower levels
+//! ([`Aig::levelize`](super::aig::Aig::levelize)).  [`map_circuit_with`]
+//! therefore runs one wave per level on the shared worker pool
+//! ([`crate::coordinator::parallel_waves_with`]): each node merges, ranks
+//! and truncates its own cut set (writes go to per-node slots), and the
+//! inter-wave barrier publishes a level's results before the next level
+//! reads them.  Per-node work is deterministic (stable sort over a fixed
+//! candidate order), so the selected mapping — and hence the emitted
+//! [`Netlist`] — is bit-identical for any worker count (enforced by
+//! `rust/tests/frontend_parallel.rs`).  Cut *selection* and netlist
+//! construction stay serial: they are a small top-down sweep with
+//! order-dependent net numbering.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::OnceLock;
 
+use crate::coordinator::parallel_waves_with;
 use crate::netlist::{CellKind, Netlist, NetId};
 use crate::synth::circuit::Circuit;
 
 use super::aig::{LeafKind, Lit, Node, NodeId};
+
+/// Minimum AIG size before cut enumeration spins up worker threads;
+/// smaller graphs run the waves on the calling thread (identical result).
+const PAR_MIN_NODES: usize = 512;
 
 /// Mapping options.
 #[derive(Clone, Copy, Debug)]
@@ -74,8 +98,15 @@ fn merge_leaves(a: &[NodeId], b: &[NodeId], k: usize) -> Option<Vec<NodeId>> {
     Some(out)
 }
 
-/// Map a synthesized circuit to a technology-mapped netlist.
+/// Map a synthesized circuit to a technology-mapped netlist (serial
+/// convenience wrapper over [`map_circuit_with`]).
 pub fn map_circuit(circ: &Circuit, opts: &MapOpts) -> Netlist {
+    map_circuit_with(circ, opts, 1)
+}
+
+/// [`map_circuit`] with cut enumeration sharded over `jobs` workers in
+/// levelized waves.  Bit-identical output for any `jobs` value.
+pub fn map_circuit_with(circ: &Circuit, opts: &MapOpts, jobs: usize) -> Netlist {
     let aig = &circ.aig;
     let k = opts.k as usize;
     let n = aig.len();
@@ -94,30 +125,36 @@ pub fn map_circuit(circ: &Circuit, opts: &MapOpts) -> Netlist {
 
     let fanout = aig.fanout_counts(&roots);
 
-    // --- Cut enumeration in topological (index) order. ------------------
-    // nodes[i] only references nodes with smaller ids, so index order works.
-    let mut cuts: Vec<Vec<Cut>> = Vec::with_capacity(n);
-    let mut best_depth = vec![0u32; n];
-    let mut best_flow = vec![0.0f64; n];
-    for id in 0..n as NodeId {
+    // --- Cut enumeration in levelized waves (see module docs). -----------
+    // Per-node results live in dense slots: a OnceLock cut set plus the
+    // best (depth, area-flow) as atomics, written by the node's own job
+    // and read only by strictly later waves — the inter-wave barrier
+    // makes each level's writes visible before the next level runs.
+    let lv = aig.levelize();
+    let cuts: Vec<OnceLock<Vec<Cut>>> = (0..n).map(|_| OnceLock::new()).collect();
+    let best_depth: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
+    let best_flow: Vec<AtomicU64> =
+        (0..n).map(|_| AtomicU64::new(0.0f64.to_bits())).collect();
+    let depth_of = |l: NodeId| best_depth[l as usize].load(Ordering::Relaxed);
+    let flow_of = |l: NodeId| f64::from_bits(best_flow[l as usize].load(Ordering::Relaxed));
+    let workers = if n >= PAR_MIN_NODES { jobs.max(1) } else { 1 };
+    parallel_waves_with(&lv.offsets, workers, || (), |_, i| {
+        let id = lv.order[i];
         match *aig.node(id) {
             Node::Const0 | Node::Leaf(_) => {
-                cuts.push(vec![Cut { leaves: vec![id], depth: 0, area_flow: 0.0 }]);
+                let _ = cuts[id as usize]
+                    .set(vec![Cut { leaves: vec![id], depth: 0, area_flow: 0.0 }]);
             }
             Node::And(a, b) => {
+                let ca = cuts[a.node() as usize].get().expect("fanin cuts from lower wave");
+                let cb = cuts[b.node() as usize].get().expect("fanin cuts from lower wave");
                 let mut cand: Vec<Cut> = Vec::with_capacity(opts.cuts_per_node * 4);
-                for ca in &cuts[a.node() as usize] {
-                    for cb in &cuts[b.node() as usize] {
-                        if let Some(leaves) = merge_leaves(&ca.leaves, &cb.leaves, k) {
-                            let depth = 1 + leaves
-                                .iter()
-                                .map(|&l| best_depth[l as usize])
-                                .max()
-                                .unwrap_or(0);
-                            let flow_sum: f64 = leaves
-                                .iter()
-                                .map(|&l| best_flow[l as usize])
-                                .sum();
+                for cut_a in ca {
+                    for cut_b in cb {
+                        if let Some(leaves) = merge_leaves(&cut_a.leaves, &cut_b.leaves, k) {
+                            let depth =
+                                1 + leaves.iter().map(|&l| depth_of(l)).max().unwrap_or(0);
+                            let flow_sum: f64 = leaves.iter().map(|&l| flow_of(l)).sum();
                             let fo = fanout[id as usize].max(1) as f64;
                             cand.push(Cut {
                                 leaves,
@@ -133,13 +170,8 @@ pub fn map_circuit(circ: &Circuit, opts: &MapOpts) -> Netlist {
                     let mut leaves = vec![a.node(), b.node()];
                     leaves.sort_unstable();
                     leaves.dedup();
-                    let depth = 1 + leaves
-                        .iter()
-                        .map(|&l| best_depth[l as usize])
-                        .max()
-                        .unwrap_or(0);
-                    let flow_sum: f64 =
-                        leaves.iter().map(|&l| best_flow[l as usize]).sum();
+                    let depth = 1 + leaves.iter().map(|&l| depth_of(l)).max().unwrap_or(0);
+                    let flow_sum: f64 = leaves.iter().map(|&l| flow_of(l)).sum();
                     let fo = fanout[id as usize].max(1) as f64;
                     cand.push(Cut { leaves, depth, area_flow: (1.0 + flow_sum) / fo });
                 }
@@ -151,14 +183,14 @@ pub fn map_circuit(circ: &Circuit, opts: &MapOpts) -> Netlist {
                 });
                 cand.dedup_by(|a, b| a.leaves == b.leaves);
                 cand.truncate(opts.cuts_per_node);
-                best_depth[id as usize] = cand[0].depth;
-                best_flow[id as usize] = cand[0].area_flow;
-                cuts.push(cand);
+                best_depth[id as usize].store(cand[0].depth, Ordering::Relaxed);
+                best_flow[id as usize].store(cand[0].area_flow.to_bits(), Ordering::Relaxed);
+                let _ = cuts[id as usize].set(cand);
             }
         }
-    }
+    });
 
-    // --- Top-down cut selection. -----------------------------------------
+    // --- Top-down cut selection (serial: numbering is order-dependent). --
     let mut selected: HashMap<NodeId, Vec<NodeId>> = HashMap::new();
     let mut stack: Vec<NodeId> = roots
         .iter()
@@ -169,7 +201,8 @@ pub fn map_circuit(circ: &Circuit, opts: &MapOpts) -> Netlist {
         if selected.contains_key(&id) {
             continue;
         }
-        let leaves = cuts[id as usize][0].leaves.clone();
+        let leaves =
+            cuts[id as usize].get().expect("every node enumerated")[0].leaves.clone();
         for &l in &leaves {
             if matches!(aig.node(l), Node::And(..)) {
                 stack.push(l);

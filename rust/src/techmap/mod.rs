@@ -3,4 +3,4 @@
 pub mod aig;
 pub mod mapper;
 
-pub use mapper::{map_circuit, MapOpts};
+pub use mapper::{map_circuit, map_circuit_with, MapOpts};

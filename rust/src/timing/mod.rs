@@ -7,17 +7,44 @@
 //! the router passes actual per-sink routed-wire delays — so one STA
 //! serves both pre- and post-route analysis.
 //!
+//! ## Levelized wave-parallel passes
+//!
+//! Both passes run over the dense [`NetlistIndex`] arenas instead of
+//! per-call `HashMap`s, as *waves* of independent per-cell jobs on the
+//! shared worker pool ([`crate::coordinator::parallel_waves_with`]):
+//!
+//! * **forward** — cells within one combinational level have no arrival
+//!   dependencies on each other, so each level is one wave (ascending);
+//!   a cell reads only lower-level arrivals and writes its own slot,
+//! * **backward** — required times are computed per *cell* as the min
+//!   over that cell's consumers (not relaxed driver-by-driver), so levels
+//!   descend as waves; FF required times form one extra wave at the end
+//!   (an FF's consumers can share level 0 with it), and per-net
+//!   criticality extraction is a final wave of per-net jobs.
+//!
+//! **Determinism contract** (same as the router's): a cell's arrival /
+//! required value is a pure function of its fan-in/fan-out values from
+//! strictly earlier waves, and `max`/`min` reductions over a fixed
+//! operand set are order-independent for the NaN-free delays used here —
+//! so the [`TimingReport`] is bit-identical for any worker count
+//! (enforced by `rust/tests/frontend_parallel.rs`).
+//!
 //! Adder operand sinks are the paths that differentiate the
 //! architectures: on the baseline every operand takes
 //! `crossbar + (LUT ->) adder` (133.4 ps class); on DD variants a
 //! Z-bypassed operand takes `AddMux crossbar + AddMux` (77.05 + 68.77 ps)
 //! — the ~48% cut of Table II that shows up as the Table IV CPD gains.
 
-use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::arch::Arch;
-use crate::netlist::{CellId, CellKind, Netlist, NetId};
+use crate::coordinator::parallel_waves_with;
+use crate::netlist::{CellId, CellKind, Netlist, NetId, NetlistIndex, PackIndex};
 use crate::pack::{OperandPath, Packing};
+
+/// Minimum cell count before STA spins up worker threads; below this the
+/// waves run on the calling thread (identical results either way).
+const PAR_MIN_CELLS: usize = 128;
 
 /// STA result.
 #[derive(Clone, Debug)]
@@ -46,7 +73,7 @@ fn sink_input_delay(
     arch: &Arch,
     cell: CellId,
     pin: u8,
-    alm_of_cell: &HashMap<CellId, usize>,
+    pidx: &PackIndex,
 ) -> f64 {
     let d = &arch.delays;
     match nl.cells[cell as usize].kind {
@@ -61,9 +88,9 @@ fn sink_input_delay(
                 0.0
             } else {
                 // Operand entry: depends on the packed path.
-                let path = alm_of_cell
-                    .get(&cell)
-                    .and_then(|&ai| {
+                let path = pidx
+                    .alm_of(cell)
+                    .and_then(|ai| {
                         let alm = &packing.alms[ai];
                         alm.adder_bits
                             .iter()
@@ -122,119 +149,91 @@ pub fn sta_routed(
 
 /// Run STA.  `net_delay(net, sink_cell, sink_pin)` gives the interconnect
 /// delay from the net's driver LB pin to the sink LB pin (0 for intra-LB
-/// feedback).
+/// feedback).  Convenience wrapper that builds the dense indexes and runs
+/// serially; hot callers (the placer's periodic STA, benches) build the
+/// indexes once and call [`sta_with`].
 pub fn sta<F>(nl: &Netlist, packing: &Packing, arch: &Arch, net_delay: F) -> TimingReport
 where
-    F: Fn(NetId, CellId, u8) -> f64,
+    F: Fn(NetId, CellId, u8) -> f64 + Sync,
+{
+    let idx = NetlistIndex::build(nl);
+    let pidx = PackIndex::build(nl, packing);
+    sta_with(nl, &idx, &pidx, packing, arch, net_delay, 1)
+}
+
+#[inline]
+fn fget(slot: &AtomicU64) -> f64 {
+    f64::from_bits(slot.load(Ordering::Relaxed))
+}
+
+#[inline]
+fn fput(slot: &AtomicU64, v: f64) {
+    slot.store(v.to_bits(), Ordering::Relaxed);
+}
+
+/// [`sta`] over prebuilt indexes, with the levelized passes sharded over
+/// `jobs` workers.  Bit-identical for any `jobs` (see module docs).
+pub fn sta_with<F>(
+    nl: &Netlist,
+    idx: &NetlistIndex,
+    pidx: &PackIndex,
+    packing: &Packing,
+    arch: &Arch,
+    net_delay: F,
+    jobs: usize,
+) -> TimingReport
+where
+    F: Fn(NetId, CellId, u8) -> f64 + Sync,
 {
     let n = nl.cells.len();
-    // Map cells to ALMs for operand-path lookup.
-    let mut alm_of_cell: HashMap<CellId, usize> = HashMap::new();
-    for (ai, alm) in packing.alms.iter().enumerate() {
-        for &c in alm.adder_bits.iter().chain(alm.logic_luts.iter()).chain(alm.ffs.iter()) {
-            alm_of_cell.insert(c, ai);
-        }
-    }
+    let workers = if n >= PAR_MIN_CELLS { jobs.max(1) } else { 1 };
 
-    // Topological order over combinational edges (FF q and PI are sources;
-    // FF d and PO are sinks). Cells are already in a topological-ish order
-    // from construction, but chains and LUT interleavings make that
-    // unreliable -> Kahn.
-    let mut indeg = vec![0u32; n];
-    // Precompute ALM -> LB for carry-hop classification.
-    let mut alm_lb: HashMap<usize, usize> = HashMap::new();
-    for (li, lb) in packing.lbs.iter().enumerate() {
-        for &ai in &lb.alms {
-            alm_lb.insert(ai, li);
-        }
-    }
-    // indeg counts combinational fanins.
-    for (ci, cell) in nl.cells.iter().enumerate() {
-        if matches!(cell.kind, CellKind::Ff) {
-            continue;
-        }
-        let mut cnt = 0;
-        for &net in &cell.ins {
-            if let Some((drv, _)) = nl.nets[net as usize].driver {
-                if !matches!(nl.cells[drv as usize].kind, CellKind::Ff) {
-                    cnt += 1;
-                }
-            }
-        }
-        indeg[ci] = cnt;
-    }
-
-    let mut arrival = vec![0.0f64; n];
-    let mut queue: Vec<CellId> = (0..n as CellId)
-        .filter(|&c| indeg[c as usize] == 0 || matches!(nl.cells[c as usize].kind, CellKind::Ff))
-        .collect();
-    let mut head = 0;
-    let mut processed = vec![false; n];
-    while head < queue.len() {
-        let c = queue[head];
-        head += 1;
-        if processed[c as usize] {
-            continue;
-        }
-        processed[c as usize] = true;
-        let cell = &nl.cells[c as usize];
-        // Arrival at the cell's outputs.
-        let in_arr = if matches!(cell.kind, CellKind::Ff) {
+    // --- Forward pass: arrivals, one wave per level (ascending). ---------
+    let arrival: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+    parallel_waves_with(idx.wave_offsets(), workers, || (), |_, i| {
+        let c = idx.topo_order()[i];
+        let cu = c as usize;
+        let cell = &nl.cells[cu];
+        let a = if matches!(cell.kind, CellKind::Ff) {
             0.0 // launch from the clock edge
         } else {
             let mut a: f64 = 0.0;
             for (pin, &net) in cell.ins.iter().enumerate() {
-                if let Some((drv, dpin)) = nl.nets[net as usize].driver {
+                if let Some((drv, dpin)) = idx.driver(net) {
                     let src = if matches!(nl.cells[drv as usize].kind, CellKind::Ff) {
                         arch.delays.ff_clk_q
                     } else {
-                        arrival[drv as usize] + cell_output_delay(nl, arch, drv, dpin)
+                        fget(&arrival[drv as usize]) + cell_output_delay(nl, arch, drv, dpin)
                     };
                     let is_carry = matches!(cell.kind, CellKind::AdderBit { .. }) && pin == 2;
                     let wire = if is_carry {
                         // Carry chain: dedicated path; LB hop cost if the
                         // previous bit sits in another LB.
-                        let same_lb = alm_of_cell.get(&c).zip(alm_of_cell.get(&drv))
-                            .map(|(&x, &y)| alm_lb.get(&x) == alm_lb.get(&y))
-                            .unwrap_or(true);
-                        if same_lb { 0.0 } else { arch.delays.carry_lb_hop }
+                        if pidx.same_lb(c, drv) { 0.0 } else { arch.delays.carry_lb_hop }
                     } else {
                         net_delay(net, c, pin as u8)
                     };
-                    let input = sink_input_delay(nl, packing, arch, c, pin as u8, &alm_of_cell);
+                    let input = sink_input_delay(nl, packing, arch, c, pin as u8, pidx);
                     a = a.max(src + wire + input);
                 }
             }
             a
         };
-        arrival[c as usize] = in_arr;
-        // Release fanouts.
-        for &net in &cell.outs {
-            for &(sink, _) in &nl.nets[net as usize].sinks {
-                if matches!(nl.cells[sink as usize].kind, CellKind::Ff) {
-                    continue;
-                }
-                indeg[sink as usize] = indeg[sink as usize].saturating_sub(1);
-                if indeg[sink as usize] == 0 {
-                    queue.push(sink);
-                }
-            }
-        }
-    }
+        fput(&arrival[cu], a);
+    });
 
-    // CPD: max arrival at POs and FF d inputs (+ their sink input delays,
-    // already folded into `arrival` of Output cells and below for FFs).
+    // --- CPD: max arrival at POs and FF d inputs (serial reduction). -----
     let mut cpd = 0.0f64;
     for (ci, cell) in nl.cells.iter().enumerate() {
         match cell.kind {
-            CellKind::Output => cpd = cpd.max(arrival[ci]),
+            CellKind::Output => cpd = cpd.max(fget(&arrival[ci])),
             CellKind::Ff => {
                 let net = cell.ins[0];
-                if let Some((drv, dpin)) = nl.nets[net as usize].driver {
-                    let src = arrival[drv as usize] + cell_output_delay(nl, arch, drv, dpin);
+                if let Some((drv, dpin)) = idx.driver(net) {
+                    let src = fget(&arrival[drv as usize]) + cell_output_delay(nl, arch, drv, dpin);
                     let wire = net_delay(net, ci as CellId, 0);
                     let input =
-                        sink_input_delay(nl, packing, arch, ci as CellId, 0, &alm_of_cell);
+                        sink_input_delay(nl, packing, arch, ci as CellId, 0, pidx);
                     cpd = cpd.max(src + wire + input);
                 }
             }
@@ -245,48 +244,75 @@ where
         cpd = 1.0;
     }
 
-    // Backward pass: required times -> per-net criticality.
-    let mut required = vec![f64::INFINITY; n];
-    for (ci, cell) in nl.cells.iter().enumerate() {
-        if matches!(cell.kind, CellKind::Output | CellKind::Ff) {
-            required[ci] = cpd;
-        }
+    // --- Backward pass: required times per cell, levels descending. ------
+    // required(c) = min over c's non-FF consumers of (required(consumer)
+    // - wire - input), floored at `cpd` for timing endpoints (POs, FFs).
+    // A consumer always sits at a strictly higher level than its
+    // combinational driver, so descending level waves see final values;
+    // FFs get a dedicated wave after all levels (their consumers can share
+    // level 0), and per-net criticality extraction is the last wave.
+    let required: Vec<AtomicU64> =
+        (0..n).map(|_| AtomicU64::new(f64::INFINITY.to_bits())).collect();
+    let net_crit: Vec<AtomicU64> =
+        (0..nl.nets.len()).map(|_| AtomicU64::new(0)).collect();
+    let mut sched: Vec<CellId> = Vec::with_capacity(n);
+    let mut offs: Vec<usize> = Vec::with_capacity(idx.num_levels() + 3);
+    offs.push(0);
+    for l in (0..idx.num_levels()).rev() {
+        sched.extend(
+            idx.level_cells(l)
+                .iter()
+                .copied()
+                .filter(|&c| !matches!(nl.cells[c as usize].kind, CellKind::Ff)),
+        );
+        offs.push(sched.len());
     }
-    // Process in reverse topological order (queue order reversed).
-    for &c in queue.iter().rev() {
-        let cell = &nl.cells[c as usize];
-        if matches!(cell.kind, CellKind::Ff) {
-            continue;
-        }
-        for (pin, &net) in cell.ins.iter().enumerate() {
-            if let Some((drv, _)) = nl.nets[net as usize].driver {
-                let wire = net_delay(net, c, pin as u8);
-                let input = sink_input_delay(nl, packing, arch, c, pin as u8, &alm_of_cell);
-                let req_here = required[c as usize] - wire - input;
-                if req_here < required[drv as usize] {
-                    required[drv as usize] = req_here;
+    sched.extend((0..n as CellId).filter(|&c| matches!(nl.cells[c as usize].kind, CellKind::Ff)));
+    offs.push(sched.len());
+    let cell_jobs = sched.len();
+    offs.push(cell_jobs + nl.nets.len());
+
+    parallel_waves_with(&offs, workers, || (), |_, i| {
+        if i < cell_jobs {
+            let c = sched[i];
+            let cell = &nl.cells[c as usize];
+            let mut req = if matches!(cell.kind, CellKind::Output | CellKind::Ff) {
+                cpd
+            } else {
+                f64::INFINITY
+            };
+            for &net in &cell.outs {
+                for (s, pin) in idx.sinks(net) {
+                    if matches!(nl.cells[s as usize].kind, CellKind::Ff) {
+                        continue; // FF d inputs do not propagate required
+                    }
+                    let wire = net_delay(net, s, pin);
+                    let input = sink_input_delay(nl, packing, arch, s, pin, pidx);
+                    req = req.min(fget(&required[s as usize]) - wire - input);
                 }
             }
-        }
-    }
-
-    // Net criticality = max over sinks of (1 - slack/cpd).
-    let mut net_crit = vec![0.0f64; nl.nets.len()];
-    for (ni, net) in nl.nets.iter().enumerate() {
-        let Some((drv, dpin)) = net.driver else { continue };
-        let drv_arr = arrival[drv as usize] + cell_output_delay(nl, arch, drv, dpin);
-        for &(sink, pin) in &net.sinks {
-            let wire = net_delay(ni as NetId, sink, pin);
-            let input = sink_input_delay(nl, packing, arch, sink, pin, &alm_of_cell);
-            let slack = required[sink as usize] - (drv_arr + wire + input);
-            let crit = (1.0 - slack / cpd).clamp(0.0, 1.0);
-            if crit > net_crit[ni] {
-                net_crit[ni] = crit;
+            fput(&required[c as usize], req);
+        } else {
+            // Net criticality = max over sinks of (1 - slack/cpd).
+            let ni = (i - cell_jobs) as NetId;
+            let Some((drv, dpin)) = idx.driver(ni) else { return };
+            let drv_arr = fget(&arrival[drv as usize]) + cell_output_delay(nl, arch, drv, dpin);
+            let mut crit = 0.0f64;
+            for (sink, pin) in idx.sinks(ni) {
+                let wire = net_delay(ni, sink, pin);
+                let input = sink_input_delay(nl, packing, arch, sink, pin, pidx);
+                let slack = fget(&required[sink as usize]) - (drv_arr + wire + input);
+                crit = crit.max((1.0 - slack / cpd).clamp(0.0, 1.0));
             }
+            fput(&net_crit[ni as usize], crit);
         }
-    }
+    });
 
-    TimingReport { cpd_ps: cpd, net_crit, arrival }
+    TimingReport {
+        cpd_ps: cpd,
+        net_crit: net_crit.iter().map(fget).collect(),
+        arrival: arrival.iter().map(fget).collect(),
+    }
 }
 
 #[cfg(test)]
@@ -354,5 +380,26 @@ mod tests {
         let d5 = sta(&nl_d, &pk_d, &arch_d, |_, _, _| 200.0).cpd_ps;
         let d6 = sta(&nl_6, &pk_6, &arch_6, |_, _, _| 200.0).cpd_ps;
         assert!(d6 >= d5, "dd6 {d6} vs dd5 {d5}");
+    }
+
+    /// Parallel STA must equal the serial path bit-for-bit.
+    #[test]
+    fn sta_with_is_jobs_invariant() {
+        let (nl, packing, arch) = mul_setup(ArchVariant::Dd5);
+        let idx = NetlistIndex::build(&nl);
+        let pidx = PackIndex::build(&nl, &packing);
+        let delay = |net: NetId, _: CellId, pin: u8| 100.0 + (net % 7) as f64 + pin as f64;
+        let base = sta_with(&nl, &idx, &pidx, &packing, &arch, delay, 1);
+        for jobs in [2usize, 4, 8] {
+            let r = sta_with(&nl, &idx, &pidx, &packing, &arch, delay, jobs);
+            assert_eq!(r.cpd_ps.to_bits(), base.cpd_ps.to_bits(), "jobs={jobs}");
+            assert_eq!(r.arrival.len(), base.arrival.len());
+            for (a, b) in r.arrival.iter().zip(base.arrival.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "jobs={jobs}");
+            }
+            for (a, b) in r.net_crit.iter().zip(base.net_crit.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "jobs={jobs}");
+            }
+        }
     }
 }

@@ -1,0 +1,197 @@
+//! PR-3 determinism contract: the levelized wave-parallel front-end
+//! (mapper cut enumeration, packer attraction scoring, STA forward /
+//! backward passes) must produce bit-identical artifacts for any worker
+//! count — `--jobs` is a pure scheduling knob, never a result knob.
+//!
+//! Also covers the levelization primitives the waves are scheduled on:
+//! AIG depth grouping ([`Aig::levelize`]) and the netlist's combinational
+//! level index ([`NetlistIndex`]).
+
+use double_duty::arch::{Arch, ArchVariant};
+use double_duty::bench_suites::{kratos_suite, BenchParams};
+use double_duty::netlist::{Netlist, NetlistIndex, PackIndex};
+use double_duty::pack::{pack_with, PackOpts, Packing};
+use double_duty::synth::circuit::Circuit;
+use double_duty::techmap::aig::Node;
+use double_duty::techmap::{map_circuit_with, MapOpts};
+use double_duty::timing::sta_with;
+
+/// The mapped representative: a real Kratos circuit, large enough that
+/// the parallel paths actually engage their worker pools.
+fn big_kratos() -> (Circuit, Netlist) {
+    let params = BenchParams::default();
+    let suite = kratos_suite(&params);
+    let circ = suite[2].generate(); // gemmt
+    let nl = map_circuit_with(&circ, &MapOpts::default(), 1);
+    (circ, nl)
+}
+
+fn assert_netlists_identical(a: &Netlist, b: &Netlist, tag: &str) {
+    assert_eq!(a.num_chains, b.num_chains, "{tag}: num_chains");
+    assert_eq!(a.inputs, b.inputs, "{tag}: inputs");
+    assert_eq!(a.outputs, b.outputs, "{tag}: outputs");
+    assert_eq!(a.cells.len(), b.cells.len(), "{tag}: cell count");
+    assert_eq!(a.nets.len(), b.nets.len(), "{tag}: net count");
+    for (i, (x, y)) in a.cells.iter().zip(b.cells.iter()).enumerate() {
+        assert_eq!(x.kind, y.kind, "{tag}: cell {i} kind");
+        assert_eq!(x.name, y.name, "{tag}: cell {i} name");
+        assert_eq!(x.ins, y.ins, "{tag}: cell {i} ins");
+        assert_eq!(x.outs, y.outs, "{tag}: cell {i} outs");
+    }
+    for (i, (x, y)) in a.nets.iter().zip(b.nets.iter()).enumerate() {
+        assert_eq!(x.name, y.name, "{tag}: net {i} name");
+        assert_eq!(x.driver, y.driver, "{tag}: net {i} driver");
+        assert_eq!(x.sinks, y.sinks, "{tag}: net {i} sinks");
+    }
+}
+
+fn assert_packings_identical(a: &Packing, b: &Packing, tag: &str) {
+    assert_eq!(a.variant, b.variant, "{tag}: variant");
+    assert_eq!(a.chain_macros, b.chain_macros, "{tag}: chain_macros");
+    assert_eq!(a.ios, b.ios, "{tag}: ios");
+    assert_eq!(a.alms.len(), b.alms.len(), "{tag}: alm count");
+    assert_eq!(a.lbs.len(), b.lbs.len(), "{tag}: lb count");
+    for (i, (x, y)) in a.alms.iter().zip(b.alms.iter()).enumerate() {
+        assert_eq!(x.adder_bits, y.adder_bits, "{tag}: alm {i} adder_bits");
+        assert_eq!(x.operand_paths, y.operand_paths, "{tag}: alm {i} operand_paths");
+        assert_eq!(x.logic_luts, y.logic_luts, "{tag}: alm {i} logic_luts");
+        assert_eq!(x.logic_halves, y.logic_halves, "{tag}: alm {i} logic_halves");
+        assert_eq!(x.ffs, y.ffs, "{tag}: alm {i} ffs");
+        assert_eq!(x.gen_inputs, y.gen_inputs, "{tag}: alm {i} gen_inputs");
+        assert_eq!(x.z_inputs, y.z_inputs, "{tag}: alm {i} z_inputs");
+        assert_eq!(x.outputs, y.outputs, "{tag}: alm {i} outputs");
+        assert_eq!(x.chain, y.chain, "{tag}: alm {i} chain");
+    }
+    for (i, (x, y)) in a.lbs.iter().zip(b.lbs.iter()).enumerate() {
+        assert_eq!(x.alms, y.alms, "{tag}: lb {i} alms");
+        assert_eq!(x.inputs, y.inputs, "{tag}: lb {i} inputs");
+        assert_eq!(x.outputs, y.outputs, "{tag}: lb {i} outputs");
+        assert_eq!(x.chains, y.chains, "{tag}: lb {i} chains");
+    }
+    assert_eq!(a.stats.alms, b.stats.alms, "{tag}: stats.alms");
+    assert_eq!(a.stats.concurrent_luts, b.stats.concurrent_luts,
+               "{tag}: stats.concurrent_luts");
+    assert_eq!(a.stats.absorbed_luts, b.stats.absorbed_luts,
+               "{tag}: stats.absorbed_luts");
+}
+
+/// Mapper: bit-identical netlist for jobs = 1 / 2 / 8.
+#[test]
+fn mapper_is_jobs_invariant() {
+    let (circ, base) = big_kratos();
+    assert!(base.cells.len() > 128, "representative too small to exercise waves");
+    for jobs in [2usize, 8] {
+        let nl = map_circuit_with(&circ, &MapOpts::default(), jobs);
+        assert_netlists_identical(&base, &nl, &format!("map jobs={jobs}"));
+    }
+}
+
+/// Packer: bit-identical packing for jobs = 1 / 2 / 8 on every variant.
+#[test]
+fn packer_is_jobs_invariant() {
+    let (_, nl) = big_kratos();
+    for variant in [ArchVariant::Baseline, ArchVariant::Dd5, ArchVariant::Dd6] {
+        let arch = Arch::paper(variant);
+        let base = pack_with(&nl, &arch, &PackOpts::default(), 1);
+        for jobs in [2usize, 8] {
+            let p = pack_with(&nl, &arch, &PackOpts::default(), jobs);
+            assert_packings_identical(&base, &p, &format!("{variant:?} jobs={jobs}"));
+        }
+    }
+}
+
+/// STA: bit-identical report (cpd, arrivals, criticalities) for
+/// jobs = 1 / 2 / 8, both with a synthetic and a net-dependent delay model.
+#[test]
+fn sta_is_jobs_invariant() {
+    let (_, nl) = big_kratos();
+    let arch = Arch::paper(ArchVariant::Dd5);
+    let packing = pack_with(&nl, &arch, &PackOpts::default(), 1);
+    let idx = NetlistIndex::build(&nl);
+    let pidx = PackIndex::build(&nl, &packing);
+    let delay = |net: u32, sink: u32, pin: u8| {
+        90.0 + (net % 11) as f64 * 3.0 + (sink % 7) as f64 + pin as f64
+    };
+    let base = sta_with(&nl, &idx, &pidx, &packing, &arch, delay, 1);
+    assert!(base.cpd_ps > 0.0 && base.cpd_ps.is_finite());
+    for jobs in [2usize, 8] {
+        let r = sta_with(&nl, &idx, &pidx, &packing, &arch, delay, jobs);
+        assert_eq!(r.cpd_ps.to_bits(), base.cpd_ps.to_bits(), "cpd jobs={jobs}");
+        assert_eq!(r.arrival.len(), base.arrival.len());
+        for (i, (x, y)) in r.arrival.iter().zip(base.arrival.iter()).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "arrival {i} jobs={jobs}");
+        }
+        for (i, (x, y)) in r.net_crit.iter().zip(base.net_crit.iter()).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "net_crit {i} jobs={jobs}");
+        }
+    }
+}
+
+/// The serial `sta` convenience wrapper and the indexed path agree.
+#[test]
+fn sta_wrapper_matches_indexed_path() {
+    let (_, nl) = big_kratos();
+    let arch = Arch::paper(ArchVariant::Baseline);
+    let packing = pack_with(&nl, &arch, &PackOpts::default(), 1);
+    let idx = NetlistIndex::build(&nl);
+    let pidx = PackIndex::build(&nl, &packing);
+    let a = double_duty::timing::sta(&nl, &packing, &arch, |_, _, _| 175.0);
+    let b = sta_with(&nl, &idx, &pidx, &packing, &arch, |_, _, _| 175.0, 4);
+    assert_eq!(a.cpd_ps.to_bits(), b.cpd_ps.to_bits());
+    for (x, y) in a.net_crit.iter().zip(b.net_crit.iter()) {
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
+}
+
+/// Levelization on a known AIG: a 4-input xor tree has the textbook
+/// depth profile, and every wave only references strictly lower waves.
+#[test]
+fn levelization_on_known_aig() {
+    let mut c = Circuit::new("xt");
+    let pis = c.pi_bus("x", 4);
+    // Balanced tree: depth(xor) = 2 AND levels per stage.
+    let ab = c.aig.xor(pis[0], pis[1]);
+    let cd = c.aig.xor(pis[2], pis[3]);
+    let root = c.aig.xor(ab, cd);
+    c.po("parity", root);
+    let lv = c.aig.levelize();
+    // Const0 + 4 PIs at level 0.
+    assert_eq!(lv.level_nodes(0).len(), 5);
+    assert_eq!(lv.level_of[ab.node() as usize], 2);
+    assert_eq!(lv.level_of[cd.node() as usize], 2);
+    assert_eq!(lv.level_of[root.node() as usize], 4);
+    assert_eq!(lv.num_levels(), 5);
+    assert_eq!(lv.order.len(), c.aig.len());
+    // Wave soundness: an AND's fanins always sit in earlier waves.
+    for l in 0..lv.num_levels() {
+        for &id in lv.level_nodes(l) {
+            if let Node::And(a, b) = *c.aig.node(id) {
+                assert!((lv.level_of[a.node() as usize] as usize) < l);
+                assert!((lv.level_of[b.node() as usize] as usize) < l);
+            }
+        }
+    }
+    // And on the real representative: offsets are monotone and cover.
+    let (circ, nl) = big_kratos();
+    let lv = circ.aig.levelize();
+    assert_eq!(*lv.offsets.last().unwrap(), circ.aig.len());
+    for w in lv.offsets.windows(2) {
+        assert!(w[0] <= w[1]);
+    }
+    // Netlist-side levelization: comb edges strictly ascend.
+    let idx = NetlistIndex::build(&nl);
+    use double_duty::netlist::CellKind;
+    for (ci, cell) in nl.cells.iter().enumerate() {
+        if matches!(cell.kind, CellKind::Ff) {
+            continue;
+        }
+        for &net in &cell.ins {
+            if let Some((drv, _)) = idx.driver(net) {
+                if !matches!(nl.cells[drv as usize].kind, CellKind::Ff) {
+                    assert!(idx.level(drv) < idx.level(ci as u32),
+                            "comb edge {drv} -> {ci} does not ascend");
+                }
+            }
+        }
+    }
+}
