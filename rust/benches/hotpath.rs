@@ -5,9 +5,23 @@
 //! the PJRT kernel evaluation latency. No criterion offline — simple
 //! timed loops with enough iterations for stable medians.
 //!
-//! Front-end medians are also emitted as machine-readable
-//! `BENCH_PR3.json` (stage, median seconds at jobs=1 / jobs=N, speedup)
-//! so CI can archive the perf trajectory across PRs.
+//! Front-end medians are also emitted as machine-readable JSON (the
+//! versioned `BENCH.json` schema: version, bench, jobs, elapsed wall
+//! clock, and per stage the jobs=1 / jobs=N medians and speedup) so CI
+//! can archive and *gate* the perf trajectory across PRs:
+//!
+//! * `--out <path>` — where to write the JSON (default `BENCH.json` in
+//!   the CWD; CI passes an explicit path so the artifact upload never
+//!   depends on the invocation directory),
+//! * `--baseline <path>` — after writing, compare against a committed
+//!   baseline and exit non-zero on a perf regression,
+//! * `--compare <current> <baseline>` — compare two existing JSON files
+//!   without re-running anything (the CI gate step).
+//!
+//! The gate fails when any stage's `median_s` exceeds the baseline's by
+//! more than 25% (ignoring sub-[`NOISE_FLOOR_S`] medians, which are
+//! timer noise on shared runners) or when the run's wall clock exceeds
+//! the baseline's `wall_clock_budget_s`.
 //!
 //! `--quick` runs a CI-smoke subset: single iterations, the router and
 //! front-end determinism checks, no engine sweep.
@@ -102,17 +116,7 @@ fn packings_identical(a: &double_duty::pack::Packing, b: &double_duty::pack::Pac
 }
 
 fn reports_identical(a: &TimingReport, b: &TimingReport) -> bool {
-    a.cpd_ps.to_bits() == b.cpd_ps.to_bits()
-        && a.net_crit.len() == b.net_crit.len()
-        && a.arrival.len() == b.arrival.len()
-        && a.net_crit
-            .iter()
-            .zip(b.net_crit.iter())
-            .all(|(x, y)| x.to_bits() == y.to_bits())
-        && a.arrival
-            .iter()
-            .zip(b.arrival.iter())
-            .all(|(x, y)| x.to_bits() == y.to_bits())
+    a.bits_eq(b)
 }
 
 fn routing_identical(a: &Routing, b: &Routing) -> bool {
@@ -124,8 +128,113 @@ fn routing_identical(a: &Routing, b: &Routing) -> bool {
         && a.channel_util == b.channel_util
 }
 
+/// A stage median regression beyond this factor fails the perf gate.
+const REGRESS_FACTOR: f64 = 1.25;
+/// Absolute median growth below this (seconds) is timer noise on shared
+/// CI runners and never fails the gate on its own — the ratio check
+/// alone would go red on a few ms of jitter over a near-zero baseline.
+const NOISE_FLOOR_S: f64 = 0.02;
+/// Wall-clock budget written into every emitted BENCH.json, so a
+/// re-baselined file (`--out BENCH_BASELINE.json` or a copied CI
+/// artifact) keeps the gate's budget check armed.
+const WALL_BUDGET_S: f64 = 900.0;
+
+/// Extract the number following `"key":` at or after byte `from`.  Only
+/// good enough for the flat BENCH.json schema this bench itself emits —
+/// deliberately not a general JSON parser (the crate is std-only).
+fn json_num(text: &str, key: &str, from: usize) -> Option<f64> {
+    let pat = format!("\"{key}\":");
+    let at = text.get(from..)?.find(&pat)? + from + pat.len();
+    let rest = text[at..].trim_start();
+    let end = rest
+        .find(|ch: char| !(ch.is_ascii_digit() || "+-.eE".contains(ch)))
+        .unwrap_or(rest.len());
+    rest[..end].parse::<f64>().ok()
+}
+
+/// `median_s` of one stage entry in a BENCH.json document.
+fn stage_median(text: &str, stage: &str) -> Option<f64> {
+    let at = text.find(&format!("\"stage\": \"{stage}\""))?;
+    json_num(text, "median_s", at)
+}
+
+/// The CI perf-trajectory gate: compare a freshly produced BENCH.json
+/// against the committed baseline.  Returns the failure report, if any.
+fn compare_bench(cur_path: &str, base_path: &str) -> Result<(), String> {
+    let cur = std::fs::read_to_string(cur_path)
+        .map_err(|e| format!("cannot read current {cur_path}: {e}"))?;
+    let base = std::fs::read_to_string(base_path)
+        .map_err(|e| format!("cannot read baseline {base_path}: {e}"))?;
+    let mut failures: Vec<String> = Vec::new();
+    for stage in ["map", "pack", "sta"] {
+        match (stage_median(&cur, stage), stage_median(&base, stage)) {
+            (Some(c), Some(b)) => {
+                if c > b * REGRESS_FACTOR && c - b > NOISE_FLOOR_S {
+                    failures.push(format!(
+                        "stage {stage}: median {c:.4}s vs baseline {b:.4}s \
+                         (> {:.0}% regression)",
+                        (REGRESS_FACTOR - 1.0) * 100.0
+                    ));
+                } else {
+                    println!("perf gate: stage {stage:<4} ok ({c:.4}s vs baseline {b:.4}s)");
+                }
+            }
+            _ => failures.push(format!("stage {stage}: missing median_s in current or baseline")),
+        }
+    }
+    if let (Some(budget), Some(elapsed)) = (
+        json_num(&base, "wall_clock_budget_s", 0),
+        json_num(&cur, "elapsed_s", 0),
+    ) {
+        if elapsed > budget {
+            failures.push(format!(
+                "wall clock {elapsed:.1}s exceeds baseline budget {budget:.1}s"
+            ));
+        } else {
+            println!("perf gate: wall clock ok ({elapsed:.1}s within {budget:.1}s budget)");
+        }
+    }
+    if failures.is_empty() {
+        Ok(())
+    } else {
+        Err(failures.join("\n"))
+    }
+}
+
+/// Value of a `--flag <value>` pair, if present.
+fn flag_value(args: &[String], flag: &str) -> Option<String> {
+    args.iter().position(|a| a == flag).and_then(|i| args.get(i + 1).cloned())
+}
+
 fn main() {
-    let quick = std::env::args().any(|a| a == "--quick");
+    let t_start = Instant::now();
+    let args: Vec<String> = std::env::args().collect();
+
+    // Gate-only mode: compare two existing BENCH.json files and exit.
+    if let Some(i) = args.iter().position(|a| a == "--compare") {
+        let (Some(cur), Some(base)) = (args.get(i + 1), args.get(i + 2)) else {
+            eprintln!("--compare requires <current.json> <baseline.json>");
+            std::process::exit(2);
+        };
+        match compare_bench(cur, base) {
+            Ok(()) => {
+                println!("perf gate: no regression vs {base}");
+                return;
+            }
+            Err(msg) => {
+                eprintln!("perf gate FAILED:\n{msg}");
+                eprintln!(
+                    "(expected on intentional perf changes: re-baseline {base} \
+                     or apply the override label documented in README.md)"
+                );
+                std::process::exit(1);
+            }
+        }
+    }
+
+    let quick = args.iter().any(|a| a == "--quick");
+    let out_path = flag_value(&args, "--out").unwrap_or_else(|| "BENCH.json".to_string());
+    let baseline = flag_value(&args, "--baseline");
     let params = BenchParams::default();
     let suite = kratos_suite(&params);
     let bench = &suite[2]; // gemmt: the hotpath representative
@@ -232,7 +341,7 @@ fn main() {
     // largest Kratos circuit, jobs=1 vs jobs=default_workers() (the PR-3
     // acceptance comparison).  Every parallel artifact is checked
     // bit-identical against its serial twin before any timing is
-    // reported; medians land in BENCH_PR3.json for the CI artifact.
+    // reported; medians land in the BENCH.json perf record (--out).
     let fe_jobs = default_workers().max(2);
 
     let map_par = map_circuit_with(&big_circ, &MapOpts::default(), fe_jobs);
@@ -283,22 +392,46 @@ fn main() {
         );
     }
 
-    let json = format!(
-        "{{\n  \"bench\": \"{big_name}\",\n  \"cells\": {},\n  \"jobs\": {fe_jobs},\n  \"stages\": [\n    \
-         {{\"stage\": \"map\", \"median_s_jobs1\": {:.6}, \"median_s\": {:.6}, \"speedup\": {:.3}}},\n    \
-         {{\"stage\": \"pack\", \"median_s_jobs1\": {:.6}, \"median_s\": {:.6}, \"speedup\": {:.3}}},\n    \
-         {{\"stage\": \"sta\", \"median_s_jobs1\": {:.6}, \"median_s\": {:.6}, \"speedup\": {:.3}}}\n  ]\n}}\n",
-        big_nl.cells.len(),
-        map_s1, map_sn, speedup(map_s1, map_sn),
-        pack_s1, pack_sn, speedup(pack_s1, pack_sn),
-        sta_s1, sta_sn, speedup(sta_s1, sta_sn),
-    );
-    match std::fs::write("BENCH_PR3.json", &json) {
-        Ok(()) => println!("front-end medians written to BENCH_PR3.json"),
-        Err(e) => println!("could not write BENCH_PR3.json: {e}"),
-    }
+    // Versioned BENCH.json perf-trajectory record (see module docs).
+    // Written to --out so the CI artifact upload and the perf gate never
+    // depend on the invocation directory (the old BENCH_PR3.json landed
+    // in the CWD and silently vanished when run from rust/).  Emitted at
+    // the END of the run — quick or full — so elapsed_s covers
+    // everything that actually ran (a full run's wall clock is dominated
+    // by the engine sweep below), then gated against --baseline.
+    let emit_and_gate = |elapsed_s: f64| {
+        let json = format!(
+            "{{\n  \"version\": 1,\n  \"bench\": \"{big_name}\",\n  \"cells\": {},\n  \
+             \"jobs\": {fe_jobs},\n  \"elapsed_s\": {elapsed_s:.3},\n  \
+             \"wall_clock_budget_s\": {WALL_BUDGET_S:.1},\n  \"stages\": [\n    \
+             {{\"stage\": \"map\", \"median_s_jobs1\": {:.6}, \"median_s\": {:.6}, \"speedup\": {:.3}}},\n    \
+             {{\"stage\": \"pack\", \"median_s_jobs1\": {:.6}, \"median_s\": {:.6}, \"speedup\": {:.3}}},\n    \
+             {{\"stage\": \"sta\", \"median_s_jobs1\": {:.6}, \"median_s\": {:.6}, \"speedup\": {:.3}}}\n  ]\n}}\n",
+            big_nl.cells.len(),
+            map_s1, map_sn, speedup(map_s1, map_sn),
+            pack_s1, pack_sn, speedup(pack_s1, pack_sn),
+            sta_s1, sta_sn, speedup(sta_s1, sta_sn),
+        );
+        match std::fs::write(&out_path, &json) {
+            Ok(()) => println!("front-end medians written to {out_path}"),
+            Err(e) => {
+                eprintln!("could not write {out_path}: {e}");
+                std::process::exit(1);
+            }
+        }
+        // Inline perf gate (the CI runs it as a separate --compare step
+        // so an override label can skip it without skipping the bench).
+        if let Some(base) = &baseline {
+            if let Err(msg) = compare_bench(&out_path, base) {
+                eprintln!("perf gate FAILED:\n{msg}");
+                std::process::exit(1);
+            }
+            println!("perf gate: no regression vs {base}");
+        }
+    };
 
     if quick {
+        emit_and_gate(t_start.elapsed().as_secs_f64());
         println!("--quick: skipping engine sweep");
         return;
     }
@@ -354,4 +487,6 @@ fn main() {
         st.pack_misses.load(Relaxed),
         st.pack_hits.load(Relaxed)
     );
+
+    emit_and_gate(t_start.elapsed().as_secs_f64());
 }

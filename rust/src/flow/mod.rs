@@ -17,10 +17,12 @@ pub mod engine;
 use crate::arch::device::Device;
 use crate::arch::{Arch, ArchVariant};
 use crate::bench_suites::Benchmark;
-use crate::netlist::Netlist;
+use crate::netlist::{Netlist, NetlistIndex, PackIndex};
 use crate::pack::{pack, PackOpts, Packing, Unrelated};
 use crate::place::{place, PlaceOpts};
-use crate::route::{route, RouteOpts, Routing};
+use crate::route::{
+    route, route_timing, routed_net_delay, term_sink_crit, RouteOpts, TimingCtx,
+};
 use crate::synth::Circuit;
 use crate::techmap::{map_circuit, MapOpts};
 use crate::timing::sta_routed;
@@ -36,11 +38,19 @@ pub struct FlowOpts {
     /// Worker threads inside each PathFinder run (`--route-jobs`; results
     /// are bit-identical for any value — see `rust/tests/route_parallel.rs`).
     pub route_jobs: usize,
-    /// Feed pre-route STA criticalities into the router's base cost
-    /// ([`RouteOpts::net_crit`]) so critical nets route more directly.
-    /// Off by default: figures are unchanged unless requested
-    /// (`--timing-route`).
+    /// Timing-driven routing (`--timing-route`): seed the router with
+    /// per-sink criticalities from a pre-route STA and, with
+    /// [`FlowOpts::sta_every`] > 0, close the loop by re-running STA
+    /// against the evolving routing between PathFinder iterations.  Off
+    /// by default: figures are unchanged unless requested.
     pub route_timing_weights: bool,
+    /// With `route_timing_weights`: refresh criticalities from an STA
+    /// over the partial routing every this many PathFinder iterations
+    /// (`--sta-every K`; `0` keeps the static pre-route weights).
+    pub sta_every: usize,
+    /// Criticality smoothing factor for the closed loop
+    /// (`--crit-alpha A`; `crit' = A*new + (1-A)*old`).
+    pub crit_alpha: f64,
     pub use_kernel: bool,
     /// Fixed device (Table IV stress); `None` auto-sizes per design.
     pub device: Option<Device>,
@@ -56,6 +66,8 @@ impl Default for FlowOpts {
             route: true,
             route_jobs: 1,
             route_timing_weights: false,
+            sta_every: 4,
+            crit_alpha: 0.5,
             use_kernel: false,
             device: None,
             channel_width: None,
@@ -87,6 +99,12 @@ pub struct FlowResult {
     /// utilization averaged element-wise across seeds (every seed routes
     /// the same deterministic device, so the sample vectors align).
     pub channel_util: Vec<f64>,
+    /// Closed-loop timing trajectory (ns): achieved critical-path delay
+    /// at each inter-iteration STA refresh, with the final post-route CPD
+    /// appended — averaged element-wise across seeds when the per-seed
+    /// traces align, else the first seed's trace.  Empty unless
+    /// [`FlowOpts::route_timing_weights`] is on.
+    pub cpd_trace_ns: Vec<f64>,
     pub dedup_hits: usize,
 }
 
@@ -103,6 +121,9 @@ pub struct SeedMetrics {
     pub route_iters: Option<f64>,
     /// Per-channel utilization samples (empty when routing was skipped).
     pub channel_util: Vec<f64>,
+    /// Closed-loop CPD trajectory in ns (refresh points + final; empty
+    /// for timing-oblivious runs).
+    pub cpd_trace_ns: Vec<f64>,
 }
 
 /// Apply per-run architecture overrides (channel width).  Shared by the
@@ -141,27 +162,74 @@ pub fn place_route_seed(
     if opts.route {
         let mut model = crate::place::cost::NetModel::build(nl, packing);
         model.set_weights(&[], false);
-        // Optional timing-driven routing: pre-route STA over the placed
-        // distance estimates yields the per-net criticalities the router
-        // folds into its base cost (default off — empty weights multiply
-        // out to exactly the timing-oblivious router).
-        let net_crit = if opts.route_timing_weights {
-            crate::timing::sta(nl, packing, arch, |net, sink, _| {
-                crate::place::net_endpoint_delay(&model, &pl.lb_loc, &pl.io_loc, arch, net, sink)
-            })
-            .net_crit
+        let route_jobs = opts.route_jobs.max(1);
+        let (r, rpt) = if opts.route_timing_weights {
+            // Timing-driven: a pre-route STA over the placed distance
+            // estimates seeds per-sink criticality weights, and (with
+            // sta_every > 0) the router closes the loop by refreshing
+            // them from STA runs against the evolving routing.  The
+            // index arenas are built once and shared with every refresh.
+            let idx = NetlistIndex::build(nl);
+            let pidx = PackIndex::build(nl, packing);
+            let rpt = crate::timing::sta_with(
+                nl,
+                &idx,
+                &pidx,
+                packing,
+                arch,
+                |net, sink, _| {
+                    crate::place::net_endpoint_delay(
+                        &model, &pl.lb_loc, &pl.io_loc, arch, net, sink,
+                    )
+                },
+                route_jobs,
+            );
+            let sink_crit = term_sink_crit(&model, &idx, &rpt.sink_crit);
+            let ropts = RouteOpts { jobs: route_jobs, sink_crit, ..RouteOpts::default() };
+            let ctx = TimingCtx {
+                nl,
+                idx: &idx,
+                pidx: &pidx,
+                packing,
+                sta_every: opts.sta_every,
+                crit_alpha: opts.crit_alpha,
+                sta_jobs: route_jobs,
+            };
+            let r = route_timing(&model, &pl, arch, &ropts, &ctx);
+            // Final post-route report over the SAME prebuilt arenas (and
+            // sharded like the refreshes) — `sta_routed` would rebuild
+            // both indexes from scratch per seed.  Identical result: the
+            // index build is deterministic and STA is jobs-invariant.
+            let rpt = crate::timing::sta_with(
+                nl,
+                &idx,
+                &pidx,
+                packing,
+                arch,
+                routed_net_delay(&r, &model, arch),
+                route_jobs,
+            );
+            (r, rpt)
+        } else {
+            let ropts = RouteOpts { jobs: route_jobs, ..RouteOpts::default() };
+            let r = route(&model, &pl, arch, &ropts);
+            let rpt = sta_routed(nl, packing, arch, &r, &model);
+            (r, rpt)
+        };
+        let cpd_trace_ns = if opts.route_timing_weights {
+            let mut t: Vec<f64> = r.cpd_trace.iter().map(|c| c / 1000.0).collect();
+            t.push(rpt.cpd_ps / 1000.0);
+            t
         } else {
             Vec::new()
         };
-        let ropts = RouteOpts { jobs: opts.route_jobs.max(1), net_crit, ..RouteOpts::default() };
-        let r: Routing = route(&model, &pl, arch, &ropts);
-        let rpt = sta_routed(nl, packing, arch, &r, &model);
         SeedMetrics {
             seed,
             cpd_ns: rpt.cpd_ps / 1000.0,
             routed_ok: r.success,
             route_iters: Some(r.iterations as f64),
             channel_util: r.channel_util,
+            cpd_trace_ns,
         }
     } else {
         SeedMetrics {
@@ -170,6 +238,7 @@ pub fn place_route_seed(
             routed_ok: true,
             route_iters: None,
             channel_util: Vec::new(),
+            cpd_trace_ns: Vec::new(),
         }
     }
 }
@@ -211,6 +280,29 @@ pub fn assemble_result(
         Some(_) => with_samples.iter().flat_map(|v| v.iter().copied()).collect(),
     };
 
+    // Closed-loop CPD trajectory: element-wise mean across seeds when the
+    // per-seed traces align (same refresh count), else the first seed's.
+    let with_traces: Vec<&Vec<f64>> = seeds
+        .iter()
+        .map(|s| &s.cpd_trace_ns)
+        .filter(|v| !v.is_empty())
+        .collect();
+    let cpd_trace_ns = match with_traces.first() {
+        None => Vec::new(),
+        Some(first) if with_traces.iter().all(|v| v.len() == first.len()) => {
+            let mut acc = vec![0.0f64; first.len()];
+            for v in &with_traces {
+                for (a, &x) in acc.iter_mut().zip(v.iter()) {
+                    *a += x;
+                }
+            }
+            let n = with_traces.len() as f64;
+            acc.iter_mut().for_each(|x| *x /= n);
+            acc
+        }
+        Some(first) => (*first).clone(),
+    };
+
     let cpd_ns = mean(&cpds);
     let alm_area_mwta = packing.stats.alms as f64 * arch.area.alm_mwta;
     FlowResult {
@@ -228,6 +320,7 @@ pub fn assemble_result(
         routed_ok,
         route_iters: mean(&iters),
         channel_util,
+        cpd_trace_ns,
         dedup_hits,
     }
 }

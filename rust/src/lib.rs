@@ -49,7 +49,13 @@
 //!   parallel negotiated congestion over it — per-net A* in fixed waves
 //!   against frozen cost snapshots on `--route-jobs N` workers, with
 //!   fixed-order rip-up and commits, so `Routing` is bit-identical for
-//!   any job count (`rust/tests/route_parallel.rs`).
+//!   any job count (`rust/tests/route_parallel.rs`).  `--timing-route`
+//!   closes the timing loop ([`route::route_timing`]): per-*sink*
+//!   criticalities from the STA's [`timing::SinkCrit`] arena weigh each
+//!   A* target, and an STA re-run against the partial routing every
+//!   `--sta-every K` iterations refreshes them with exponential
+//!   smoothing (`--crit-alpha`), still bit-identical for any worker
+//!   count (`rust/tests/timing_route.rs`).
 //! * The annealing placer evaluates batched move proposals against an
 //!   incremental per-net bounding-box cost cache
 //!   ([`place::cost::IncrementalCost`]); the PJRT kernel consumes the

@@ -7,12 +7,15 @@
 //!       N worker threads; default: all cores / DDUTY_WORKERS).
 //!   flow --bench <name> [--variant baseline|dd5|dd6] [--seed N | --seeds a,b,c]
 //!        [--no-route] [--jobs N] [--route-jobs N] [--no-disk-cache]
-//!        [--cache-cap-mb N] [--timing-route]
+//!        [--cache-cap-mb N] [--timing-route] [--sta-every K] [--crit-alpha A]
 //!       Run the full CAD flow on one benchmark and print its metrics
 //!       (multi-seed runs place/route the seeds in parallel; --jobs also
 //!       shards the mapper/packer front-end and --route-jobs each
 //!       PathFinder run, all with bit-identical results; --timing-route
-//!       feeds pre-route criticalities into the router's base cost).
+//!       runs closed-loop timing-driven routing: per-sink criticalities
+//!       seed the router and are refreshed by an STA against the partial
+//!       routing every K PathFinder iterations with smoothing factor A —
+//!       --sta-every 0 keeps the static pre-route weights).
 //!   list
 //!       List available benchmarks.
 //!   coffe
@@ -49,7 +52,7 @@ fn main() {
             eprintln!("  dduty flow --bench <name> [--variant baseline|dd5|dd6] \
                        [--seed N | --seeds a,b,c] [--no-route] [--jobs N] \
                        [--route-jobs N] [--no-disk-cache] [--cache-cap-mb N] \
-                       [--timing-route]");
+                       [--timing-route] [--sta-every K] [--crit-alpha A]");
             std::process::exit(if cmd == "help" { 0 } else { 2 });
         }
     }
@@ -76,6 +79,36 @@ fn parse_jobs(args: &[String]) -> usize {
 
 fn parse_route_jobs(args: &[String]) -> usize {
     parse_count_flag(args, "--route-jobs", 1)
+}
+
+/// `--sta-every K`: closed-loop STA refresh interval for `--timing-route`
+/// (0 = static pre-route weights).  Malformed values are hard errors.
+fn parse_sta_every(args: &[String], default: usize) -> usize {
+    let Some(i) = args.iter().position(|a| a == "--sta-every") else {
+        return default;
+    };
+    match args.get(i + 1).map(|s| s.parse::<usize>()) {
+        Some(Ok(n)) => n,
+        _ => {
+            eprintln!("--sta-every requires a numeric iteration count (0 = static weights)");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// `--crit-alpha A`: criticality smoothing factor in [0, 1] for the
+/// closed timing loop.  Malformed or out-of-range values are hard errors.
+fn parse_crit_alpha(args: &[String], default: f64) -> f64 {
+    let Some(i) = args.iter().position(|a| a == "--crit-alpha") else {
+        return default;
+    };
+    match args.get(i + 1).map(|s| s.parse::<f64>()) {
+        Some(Ok(a)) if (0.0..=1.0).contains(&a) => a,
+        _ => {
+            eprintln!("--crit-alpha requires a smoothing factor in [0, 1]");
+            std::process::exit(2);
+        }
+    }
 }
 
 /// `--cache-cap-mb N`: optional byte cap (in MiB) on the persistent
@@ -171,6 +204,9 @@ fn cmd_flow(args: &[String]) {
     let route = !args.iter().any(|a| a == "--no-route");
     let use_kernel = args.iter().any(|a| a == "--kernel");
     let route_timing_weights = args.iter().any(|a| a == "--timing-route");
+    let flow_defaults = FlowOpts::default();
+    let sta_every = parse_sta_every(args, flow_defaults.sta_every);
+    let crit_alpha = parse_crit_alpha(args, flow_defaults.crit_alpha);
     let jobs = parse_jobs(args);
     let route_jobs = parse_route_jobs(args);
     let cache_cap_mb = parse_cache_cap_mb(args);
@@ -189,6 +225,8 @@ fn cmd_flow(args: &[String]) {
             route,
             route_jobs,
             route_timing_weights,
+            sta_every,
+            crit_alpha,
             use_kernel,
             ..Default::default()
         },
@@ -210,6 +248,11 @@ fn cmd_flow(args: &[String]) {
     println!("CPD            : {:.2} ns  (Fmax {:.1} MHz)", r.cpd_ns, r.fmax_mhz);
     println!("ADP            : {:.0}", r.adp);
     println!("routed         : {} (iters {:.0})", r.routed_ok, r.route_iters);
+    if !r.cpd_trace_ns.is_empty() {
+        // Closed-loop trajectory: CPD at each STA refresh, then final.
+        let trace: Vec<String> = r.cpd_trace_ns.iter().map(|c| format!("{c:.2}")).collect();
+        println!("CPD trajectory : {} ns", trace.join(" -> "));
+    }
     println!("chain dedup    : {} hits", r.dedup_hits);
 }
 

@@ -237,6 +237,21 @@ impl NetlistIndex {
     pub fn wave_offsets(&self) -> &[usize] {
         &self.level_start
     }
+
+    /// CSR sink offsets (length `nets + 1`): net `n`'s sinks occupy slots
+    /// `sink_offsets()[n] .. sink_offsets()[n + 1]` of the flat fanout
+    /// arena, in stored sink order.  Per-sink side arenas (e.g.
+    /// [`crate::timing::SinkCrit`]) mirror exactly this layout.
+    #[inline]
+    pub fn sink_offsets(&self) -> &[u32] {
+        &self.sink_start
+    }
+
+    /// Total sink slots across all nets (the fanout arena length).
+    #[inline]
+    pub fn num_sink_slots(&self) -> usize {
+        *self.sink_start.last().unwrap_or(&0) as usize
+    }
 }
 
 /// Dense cell→ALM and ALM→LB ownership maps for one [`Packing`] — built

@@ -8,7 +8,7 @@ use crate::netlist::{CellId, CellKind, Netlist, NetId};
 use crate::pack::Packing;
 
 /// A placeable terminal of a net.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Term {
     Lb(usize),
     Io(CellId),

@@ -25,16 +25,54 @@
 //! overhead of 32-net waves at ~1.5x the sequential router versus ~3x for
 //! whole-iteration snapshots.  Produces per-sink routed path lengths (for
 //! the post-route STA) and the channel-utilization histogram of Fig. 8.
+//!
+//! ## Closed-loop timing-driven routing
+//!
+//! [`route_timing`] layers a timing feedback loop over the negotiation:
+//!
+//! * **per-sink weights** — each sink terminal carries its own
+//!   criticality (from a [`crate::timing::SinkCrit`] arena folded onto
+//!   routing terminals by [`term_sink_crit`]); the A* toward that sink
+//!   prices every node at the blend `(1 - crit) * congestion_cost + crit`
+//!   (crit capped at [`CRIT_MAX`]), so a net's critical branch weighs
+//!   wire length over congestion while its slack-rich branches still
+//!   detour,
+//! * **inter-iteration STA** — every [`TimingCtx::sta_every`] iterations
+//!   the loop re-runs the wave-parallel STA
+//!   ([`crate::timing::sta_with`], over the shared PR-3
+//!   `NetlistIndex`/`PackIndex` arenas) against the *current* partial
+//!   routing ([`sink_hops_delay`]) and folds the fresh criticalities in
+//!   with exponential smoothing `crit' = α·new + (1-α)·old`
+//!   ([`TimingCtx::crit_alpha`]), so the weights track the evolving
+//!   congestion picture; achieved CPD per refresh lands in
+//!   [`Routing::cpd_trace`],
+//! * **criticality-weighted history** — the [`CostState`] criticality
+//!   lane (rebuilt per iteration from the committed trees) scales the
+//!   history bump so congestion parked on critical wiring resolves first,
+//! * **criticality rip-up** — a net whose max criticality rose by more
+//!   than [`CRIT_RIPUP_DELTA`] since its route was last computed is
+//!   ripped up with the congested nets, so refreshed weights re-route
+//!   stale legal paths instead of only steering congestion victims.
+//!
+//! The refresh happens strictly *between* negotiation iterations and the
+//! STA itself is bit-identical for any worker count, so the PR-2
+//! determinism contract extends to the closed loop: `Routing` (and the
+//! final post-route [`crate::timing::TimingReport`]) is bit-identical for
+//! any `jobs`/`sta_jobs` — enforced by `rust/tests/timing_route.rs`.
+//! With all criticalities zero the blend collapses to exactly the
+//! timing-oblivious cost, so untimed runs are unchanged bit-for-bit.
 
 use std::collections::{BinaryHeap, HashMap, HashSet};
 
 use crate::arch::device::Loc;
 use crate::arch::Arch;
 use crate::coordinator::parallel_indexed_with;
-use crate::netlist::{CellId, NetId};
+use crate::netlist::{CellId, NetId, Netlist, NetlistIndex, PackIndex};
+use crate::pack::Packing;
 use crate::place::cost::{NetModel, Term};
 use crate::place::Placement;
 use crate::rrg::{self, CostState, RrGraph, NODE_CAP};
+use crate::timing::SinkCrit;
 
 /// VPR's astar_fac: inflate the admissible heuristic for a large
 /// search-space cut at bounded routing-cost suboptimality.
@@ -45,10 +83,19 @@ const ASTAR_FAC: f64 = 1.3;
 /// routing result, is identical for any `RouteOpts::jobs`.
 pub const WAVE: usize = 32;
 
-/// Fraction of the base cost a fully critical net is forgiven (the
-/// timing-driven first step: critical nets see cheaper, therefore more
-/// direct, wiring while congestion and history terms stay shared).
-const CRIT_BASE_DISCOUNT: f64 = 0.5;
+/// Criticality cap for the router's cost blend (VPR's `max_criticality`):
+/// a sink prices nodes at `(1 - crit) * congestion_cost + crit`, so an
+/// uncapped fully-critical sink would ignore congestion entirely and
+/// never detour; the cap keeps every connection negotiable.
+pub const CRIT_MAX: f64 = 0.95;
+
+/// Criticality-rise rip-up threshold for the closed loop: a net whose max
+/// criticality grew by more than this since its route was last computed
+/// is ripped up alongside the congested nets, so refreshed weights act on
+/// *existing* legal routes too — without it the feedback could only steer
+/// nets that happened to be congestion-ripped anyway.  Criticalities
+/// change only at STA refreshes, so static-weight runs never trigger it.
+const CRIT_RIPUP_DELTA: f32 = 0.1;
 
 /// Router options.
 #[derive(Clone, Debug)]
@@ -63,13 +110,24 @@ pub struct RouteOpts {
     /// result is bit-identical for any value).
     pub jobs: usize,
     /// Optional per-net criticality in [0, 1], indexed by [`NetId`]
-    /// (typically [`crate::timing::TimingReport::net_crit`]).  When
-    /// non-empty, a net's PathFinder *base* cost is scaled by
-    /// `1 - CRIT_BASE_DISCOUNT * crit`, so critical nets prefer direct
-    /// paths and concede congested ones to slack-rich nets.  Empty (the
-    /// default) multiplies by exactly 1.0 — bit-identical to the
-    /// timing-oblivious router.
+    /// (typically [`crate::timing::TimingReport::net_crit`]).  Every sink
+    /// of the net prices nodes at the blend
+    /// `(1 - crit) * congestion_cost + crit` (crit capped at
+    /// [`CRIT_MAX`]), so critical nets weigh wire length over congestion
+    /// and concede contested nodes to slack-rich nets.  Empty (the
+    /// default) blends with 0.0 everywhere — bit-identical to the
+    /// timing-oblivious router.  [`RouteOpts::sink_crit`] entries, when
+    /// present, override this per-net value per sink.
     pub net_crit: Vec<f64>,
+    /// Optional per-*sink* criticality: `sink_crit[i][k]` drives the A*
+    /// toward sink terminal `terms[k + 1]` of the model's external net
+    /// `i` — the shape [`term_sink_crit`] produces from a per-sink STA
+    /// arena ([`crate::timing::SinkCrit`]).  Finer than [`net_crit`]: a
+    /// net's slack-rich branches still dodge congestion while its
+    /// critical branch routes direct.  Empty = fall back to `net_crit`.
+    ///
+    /// [`net_crit`]: RouteOpts::net_crit
+    pub sink_crit: Vec<Vec<f64>>,
 }
 
 impl Default for RouteOpts {
@@ -86,6 +144,7 @@ impl Default for RouteOpts {
             hist_fac: 0.5,
             jobs: 1,
             net_crit: Vec::new(),
+            sink_crit: Vec::new(),
         }
     }
 }
@@ -107,6 +166,11 @@ pub struct Routing {
     pub overused_nodes: Vec<(usize, usize, usize, usize, u16)>,
     /// Debug: per-net routed node ids.
     pub net_nodes: Vec<Vec<usize>>,
+    /// Achieved critical-path delay (ps) at each inter-iteration STA
+    /// refresh of the closed timing loop, in refresh order.  Empty for
+    /// timing-oblivious runs and when the router converges before the
+    /// first refresh.
+    pub cpd_trace: Vec<f64>,
 }
 
 impl Routing {
@@ -193,10 +257,12 @@ impl Drop for ScratchLease<'_> {
 }
 
 /// Route one net against a frozen cost snapshot.  Pure in
-/// (graph, snapshot, pres_fac, net, weight): no shared mutable state.
-/// `weight` scales the per-node cost this net perceives (1.0 = neutral;
-/// see [`RouteOpts::net_crit`]).  Returns the net's committed node set
-/// (sorted, deduped) and per-sink hop counts.
+/// (graph, snapshot, pres_fac, net, sink criticalities): no shared
+/// mutable state.  `sink_crit[k]` is the criticality of sink terminal
+/// `terms[k + 1]`; the A* toward that sink prices every node at
+/// `(1 - crit) * congestion_cost + crit` (0.0 = exactly the
+/// timing-oblivious cost; see [`RouteOpts::sink_crit`]).  Returns the
+/// net's committed node set (sorted, deduped) and per-sink hop counts.
 #[allow(clippy::too_many_arguments)]
 fn route_net<F: Fn(Term) -> Loc>(
     graph: &RrGraph,
@@ -206,7 +272,7 @@ fn route_net<F: Fn(Term) -> Loc>(
     terms: &[Term],
     term_loc: &F,
     arch: &Arch,
-    weight: f64,
+    sink_crit: &[f64],
     scratch: &mut AStarScratch,
 ) -> (Vec<usize>, Vec<(Term, usize)>) {
     let src_loc = term_loc(terms[0]);
@@ -222,7 +288,9 @@ fn route_net<F: Fn(Term) -> Loc>(
     }
     let mut sink_hops: Vec<(Term, usize)> = Vec::with_capacity(terms.len().saturating_sub(1));
 
-    for &sink in &terms[1..] {
+    for (si, &sink) in terms[1..].iter().enumerate() {
+        // This sink's criticality blend (0.0 when absent — neutral).
+        let c = sink_crit.get(si).copied().unwrap_or(0.0);
         let dst_loc = term_loc(sink);
         let dst_nodes = graph.pin_nodes(dst_loc, arch.routing.fc_in, 71 + 131 * ni as u64);
         let is_target: HashSet<usize> = dst_nodes.iter().copied().collect();
@@ -243,7 +311,8 @@ fn route_net<F: Fn(Term) -> Loc>(
             // Fresh source taps pay their own congestion cost (otherwise a
             // net would happily start on an occupied tap it never
             // perceives); nodes already on this net's tree re-enter free.
-            let entry = if hops == 0 { weight * costs.node_cost(n, pres_fac) } else { 0.0 };
+            let entry =
+                if hops == 0 { (1.0 - c) * costs.node_cost(n, pres_fac) + c } else { 0.0 };
             scratch.cost[n] = entry;
             scratch.prev[n] = usize::MAX;
             scratch.touched.push(n);
@@ -261,7 +330,7 @@ fn route_net<F: Fn(Term) -> Loc>(
             }
             for &nb in graph.neighbors(node) {
                 let nid = nb as usize;
-                let nc = cost + weight * costs.node_cost(nid, pres_fac);
+                let nc = cost + (1.0 - c) * costs.node_cost(nid, pres_fac) + c;
                 if nc < scratch.cost[nid] {
                     if scratch.cost[nid].is_infinite() && scratch.prev[nid] == usize::MAX {
                         scratch.touched.push(nid);
@@ -308,12 +377,66 @@ fn route_net<F: Fn(Term) -> Loc>(
     (used, sink_hops)
 }
 
-/// Route a placed design.
+/// Route a placed design (timing-oblivious unless `opts` carries static
+/// criticalities; see [`route_timing`] for the closed loop).
 pub fn route(
     model: &NetModel,
     placement: &Placement,
     arch: &Arch,
     opts: &RouteOpts,
+) -> Routing {
+    route_inner(model, placement, arch, opts, None)
+}
+
+/// Netlist-side context for [`route_timing`]: the dense arenas each STA
+/// refresh runs over, plus the feedback schedule.  The arenas are the
+/// same `NetlistIndex`/`PackIndex` the placer's periodic STA reuses —
+/// build them once per (netlist, packing) and share.
+pub struct TimingCtx<'a> {
+    pub nl: &'a Netlist,
+    pub idx: &'a NetlistIndex,
+    pub pidx: &'a PackIndex,
+    pub packing: &'a Packing,
+    /// Re-run STA against the evolving routing every this many PathFinder
+    /// iterations; `0` never refreshes, reproducing the static-weight
+    /// router ([`route`] with the same `opts`) bit-for-bit.
+    pub sta_every: usize,
+    /// Exponential smoothing factor `α` in
+    /// `crit' = α * crit_new + (1 - α) * crit_old`.
+    pub crit_alpha: f64,
+    /// Worker threads for each STA refresh (the report is bit-identical
+    /// for any value, so this never perturbs the routing).
+    pub sta_jobs: usize,
+}
+
+/// Closed-loop timing-driven routing: [`route`], plus an inter-iteration
+/// STA feedback that refreshes the per-sink criticality weights while the
+/// negotiation runs (see the module docs).  Deterministic: bit-identical
+/// `Routing` for any `opts.jobs` / `timing.sta_jobs`.
+pub fn route_timing(
+    model: &NetModel,
+    placement: &Placement,
+    arch: &Arch,
+    opts: &RouteOpts,
+    timing: &TimingCtx,
+) -> Routing {
+    route_inner(model, placement, arch, opts, Some(timing))
+}
+
+/// Per-net max criticality (the value the cost state's crit lane carries
+/// for every node of that net's tree).
+fn max_crit_per_net(crit: &[Vec<f64>]) -> Vec<f32> {
+    crit.iter()
+        .map(|v| v.iter().fold(0.0f64, |m, &c| m.max(c)) as f32)
+        .collect()
+}
+
+fn route_inner(
+    model: &NetModel,
+    placement: &Placement,
+    arch: &Arch,
+    opts: &RouteOpts,
+    timing: Option<&TimingCtx>,
 ) -> Routing {
     let device = &placement.device;
     let graph = RrGraph::build(device, arch);
@@ -333,23 +456,43 @@ pub fn route(
         .map(|en| (en.net, en.terms.clone()))
         .collect();
 
-    // Optional timing-driven base-cost weights (see RouteOpts::net_crit).
-    // An empty criticality vector yields exactly 1.0 everywhere, which
-    // multiplies out bit-identically to the unweighted router.
-    let net_weight: Vec<f64> = nets
+    // Per-(net, sink-terminal) criticality state feeding the A* cost
+    // blend.  Seeded from `opts` (the per-sink arena when present, else
+    // the per-net value for every sink of that net); refreshed in place
+    // by the closed timing loop.  All-zero criticality blends to exactly
+    // the timing-oblivious node cost (see `route_net`).
+    let mut crit: Vec<Vec<f64>> = nets
         .iter()
-        .map(|&(nid, _)| {
-            let crit = opts
+        .enumerate()
+        .map(|(i, (nid, terms))| {
+            let net_c = opts
                 .net_crit
-                .get(nid as usize)
+                .get(*nid as usize)
                 .copied()
                 .unwrap_or(0.0)
-                .clamp(0.0, 1.0);
-            1.0 - CRIT_BASE_DISCOUNT * crit
+                .clamp(0.0, CRIT_MAX);
+            (0..terms.len().saturating_sub(1))
+                .map(|k| {
+                    opts.sink_crit
+                        .get(i)
+                        .and_then(|v| v.get(k))
+                        .map_or(net_c, |&s| s.clamp(0.0, CRIT_MAX))
+                })
+                .collect()
         })
         .collect();
+    let mut net_max_crit: Vec<f32> = max_crit_per_net(&crit);
+    // Per net: its max criticality at the time its current route was
+    // computed — the rise `net_max_crit - routed_crit` triggers
+    // criticality rip-up (see [`CRIT_RIPUP_DELTA`]).
+    let mut routed_crit: Vec<f32> = net_max_crit.clone();
+    let mut cpd_trace: Vec<f64> = Vec::new();
 
     let mut costs = CostState::new(n_nodes);
+    // Does the cost state's crit lane hold stale notes from a previous
+    // iteration?  Lets the timing-oblivious path skip the O(n_nodes)
+    // clear + rebuild entirely.
+    let mut lane_dirty = false;
     // Per net: routed node set (tree) and per-sink paths.
     let mut net_nodes: Vec<Vec<usize>> = vec![Vec::new(); nets.len()];
     let mut sink_hops: Vec<Vec<(Term, usize)>> = vec![Vec::new(); nets.len()];
@@ -365,14 +508,19 @@ pub fn route(
     for iter in 0..opts.max_iters {
         iterations = iter + 1;
         // Phase 1 — rip-up (serial, fixed order).  First iteration routes
-        // everything; later iterations rip up and re-route only nets
-        // touching overused nodes (VPR's incremental rip-up — the bulk of
-        // nets keep their legal routes).
+        // everything; later iterations rip up and re-route nets touching
+        // overused nodes (VPR's incremental rip-up — the bulk of nets
+        // keep their legal routes) plus, in the closed loop, nets whose
+        // criticality rose materially since they were last routed — a
+        // refreshed weight is useless to a net that never re-routes.
         let work: Vec<usize> = if iter == 0 {
             (0..nets.len()).collect()
         } else {
             (0..nets.len())
-                .filter(|&ni| net_nodes[ni].iter().any(|&n| costs.overused(n)))
+                .filter(|&ni| {
+                    net_nodes[ni].iter().any(|&n| costs.overused(n))
+                        || net_max_crit[ni] - routed_crit[ni] > CRIT_RIPUP_DELTA
+                })
                 .collect()
         };
         for &ni in &work {
@@ -391,7 +539,7 @@ pub fn route(
             let costs_ref = &costs;
             let graph_ref = &graph;
             let nets_ref = &nets;
-            let weight_ref = &net_weight;
+            let crit_ref = &crit;
             let term_loc_ref = &term_loc;
             let pool_ref = &scratch_pool;
             // Small waves (the long tail of late, lightly-congested
@@ -413,7 +561,7 @@ pub fn route(
                         &nets_ref[ni].1,
                         term_loc_ref,
                         arch,
-                        weight_ref[ni],
+                        &crit_ref[ni],
                         lease.scratch.as_mut().expect("scratch held for lease lifetime"),
                     )
                 },
@@ -424,7 +572,28 @@ pub fn route(
                 }
                 net_nodes[ni] = used;
                 sink_hops[ni] = hops;
+                routed_crit[ni] = net_max_crit[ni];
             }
+        }
+
+        // Rebuild the criticality lane from the committed trees so phase 3
+        // weighs congestion on critical wiring more heavily.  Fixed net
+        // order + max-accumulate keeps it deterministic.  Guarded so the
+        // timing-oblivious path (all-zero criticality) never pays the
+        // O(n_nodes) clear/rebuild — its bump stays the classic one.
+        if lane_dirty {
+            costs.clear_crit();
+            lane_dirty = false;
+        }
+        if net_max_crit.iter().any(|&c| c > 0.0) {
+            for (ni, &c) in net_max_crit.iter().enumerate() {
+                if c > 0.0 {
+                    for &n in &net_nodes[ni] {
+                        costs.note_crit(n, c);
+                    }
+                }
+            }
+            lane_dirty = true;
         }
 
         // Phase 3 — history accumulation on whatever is still overused.
@@ -434,6 +603,31 @@ pub fn route(
             break;
         }
         pres_fac *= opts.pres_mult;
+
+        // Closed timing loop: every `sta_every` iterations, re-run STA
+        // against the current partial routing and fold the fresh per-sink
+        // criticalities in with exponential smoothing.  The refresh sits
+        // strictly between iterations, so every wave of the next
+        // iteration still routes against one frozen criticality snapshot
+        // and the determinism contract holds (the STA itself is
+        // bit-identical for any `sta_jobs`).
+        if let Some(tc) = timing {
+            if tc.sta_every > 0 && iterations % tc.sta_every == 0 {
+                let delay = sink_hops_delay(&sink_hops, model, arch);
+                let rpt = crate::timing::sta_with(
+                    tc.nl, tc.idx, tc.pidx, tc.packing, arch, delay, tc.sta_jobs,
+                );
+                cpd_trace.push(rpt.cpd_ps);
+                let fresh = term_sink_crit(model, tc.idx, &rpt.sink_crit);
+                let alpha = tc.crit_alpha.clamp(0.0, 1.0);
+                for (cur, new) in crit.iter_mut().zip(fresh.iter()) {
+                    for (cv, &nv) in cur.iter_mut().zip(new.iter()) {
+                        *cv = (alpha * nv + (1.0 - alpha) * *cv).clamp(0.0, CRIT_MAX);
+                    }
+                }
+                net_max_crit = max_crit_per_net(&crit);
+            }
+        }
     }
 
     let overused = costs.occ.iter().filter(|&&o| o as f64 > NODE_CAP).count();
@@ -464,12 +658,69 @@ pub fn route(
 
     let wirelength = costs.occ.iter().map(|&o| o as usize).sum();
 
-    Routing { success, iterations, sink_hops, channel_util, wirelength, overused, overused_nodes, net_nodes }
+    Routing {
+        success,
+        iterations,
+        sink_hops,
+        channel_util,
+        wirelength,
+        overused,
+        overused_nodes,
+        net_nodes,
+        cpd_trace,
+    }
 }
 
-/// Per-net, per-sink routed delays for post-route STA.
-pub fn routed_net_delay<'a>(
-    routing: &'a Routing,
+/// Fold a per-sink STA arena onto routing terminals: entry `[i][k]`
+/// aligns with `model.nets[i].terms[k + 1]` and is the max criticality
+/// over the netlist sinks riding that terminal (several cells in one LB
+/// can sink the same net).  This is the shape [`RouteOpts::sink_crit`]
+/// and the closed loop's refresh consume.  Intra-LB sinks (no routed
+/// wire) and sinks sharing the driver's terminal contribute nothing.
+pub fn term_sink_crit(
+    model: &NetModel,
+    idx: &NetlistIndex,
+    sc: &SinkCrit,
+) -> Vec<Vec<f64>> {
+    model
+        .nets
+        .iter()
+        .map(|en| {
+            let sinks = &en.terms[1..];
+            let mut out = vec![0.0f64; sinks.len()];
+            // Terminal-position lookup: linear scan for typical small
+            // nets, hashed for fanout-heavy ones (this runs on every
+            // closed-loop STA refresh, and a linear scan per netlist
+            // sink would be O(fanout^2) per net).  Terminal lists are
+            // deduped by `NetModel::build`, so the map is well-defined.
+            let by_term: Option<HashMap<Term, usize>> = if sinks.len() > 16 {
+                Some(sinks.iter().enumerate().map(|(k, &t)| (t, k)).collect())
+            } else {
+                None
+            };
+            for ((cell, _pin), &c) in idx.sinks(en.net).zip(sc.net(en.net).iter()) {
+                let term = model.term_of_cell(cell).unwrap_or(Term::Io(cell));
+                let k = match &by_term {
+                    Some(m) => m.get(&term).copied(),
+                    None => sinks.iter().position(|&t| t == term),
+                };
+                if let Some(k) = k {
+                    if c > out[k] {
+                        out[k] = c;
+                    }
+                }
+            }
+            out
+        })
+        .collect()
+}
+
+/// Per-net, per-sink interconnect delays from a set of routed sink paths
+/// — possibly still mid-negotiation: the closed timing loop runs STA
+/// against these between PathFinder iterations, and [`routed_net_delay`]
+/// wraps the final result for post-route STA.
+pub fn sink_hops_delay<'a>(
+    sink_hops: &'a [Vec<(Term, usize)>],
     model: &'a NetModel,
     arch: &'a Arch,
 ) -> impl Fn(NetId, CellId, u8) -> f64 + Sync + 'a {
@@ -484,20 +735,29 @@ pub fn routed_net_delay<'a>(
         // branch of the route tree it rides. Cells without a terminal
         // (intra-LB) and IO sinks fall back to the worst branch.
         let hops = match model.term_of_cell(sink) {
-            Some(t) => routing.sink_hops[i]
+            Some(t) => sink_hops[i]
                 .iter()
                 .find(|&&(st, _)| st == t)
                 .map(|&(_, h)| h)
                 .unwrap_or_else(|| {
-                    routing.sink_hops[i].iter().map(|&(_, h)| h).max().unwrap_or(0)
+                    sink_hops[i].iter().map(|&(_, h)| h).max().unwrap_or(0)
                 }),
-            None => routing.sink_hops[i].iter().map(|&(_, h)| h).max().unwrap_or(0),
+            None => sink_hops[i].iter().map(|&(_, h)| h).max().unwrap_or(0),
         };
         if hops == 0 {
             return 0.0;
         }
         rrg::hop_delay(arch, hops)
     }
+}
+
+/// Per-net, per-sink routed delays for post-route STA.
+pub fn routed_net_delay<'a>(
+    routing: &'a Routing,
+    model: &'a NetModel,
+    arch: &'a Arch,
+) -> impl Fn(NetId, CellId, u8) -> f64 + Sync + 'a {
+    sink_hops_delay(&routing.sink_hops, model, arch)
 }
 
 #[cfg(test)]
@@ -572,7 +832,35 @@ mod tests {
         assert!(mean_u(&narrow) > mean_u(&wide));
     }
 
-    /// Timing-driven base-cost weights: zero criticalities are exactly the
+    /// `term_sink_crit` aligns with the model's terminal lists and stays
+    /// within criticality bounds.
+    #[test]
+    fn term_sink_crit_shape_and_bounds() {
+        let mut c = Circuit::new("m");
+        let x = c.pi_bus("x", 5);
+        let y = c.pi_bus("y", 5);
+        let p = soft_mul(&mut c, &x, &y, AdderAlgo::Wallace);
+        c.po_bus("p", &p);
+        let nl = map_circuit(&c, &MapOpts::default());
+        let arch = Arch::paper(ArchVariant::Baseline);
+        let packing = pack(&nl, &arch, &PackOpts::default());
+        let mut model = NetModel::build(&nl, &packing);
+        model.set_weights(&[], false);
+        let idx = crate::netlist::NetlistIndex::build(&nl);
+        let pidx = crate::netlist::PackIndex::build(&nl, &packing);
+        let rpt =
+            crate::timing::sta_with(&nl, &idx, &pidx, &packing, &arch, |_, _, _| 150.0, 1);
+        let sc = term_sink_crit(&model, &idx, &rpt.sink_crit);
+        assert_eq!(sc.len(), model.num_nets());
+        for (en, v) in model.nets.iter().zip(sc.iter()) {
+            assert_eq!(v.len(), en.terms.len() - 1);
+            assert!(v.iter().all(|&x| (0.0..=1.0).contains(&x)));
+        }
+        // Some terminal is critical somewhere.
+        assert!(sc.iter().flatten().any(|&x| x > 0.5));
+    }
+
+    /// Timing-driven weights: zero criticalities are exactly the
     /// unweighted router, and real criticalities still converge and stay
     /// deterministic across worker counts.
     #[test]

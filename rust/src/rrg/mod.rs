@@ -29,8 +29,11 @@
 //! ## Cost model and the snapshot/reduce negotiation scheme
 //!
 //! [`CostState`] holds the PathFinder arrays: per-node occupancy
-//! (`occ`), history cost (`hist`), and the congestion formula
-//! `(1 + hist) * (1 + overuse * pres_fac)` on top of a unit base cost.
+//! (`occ`), history cost (`hist`), a timing-criticality lane (`crit`,
+//! rebuilt per iteration by the router; scales the history bump so
+//! congestion on critical wiring resolves first), and the congestion
+//! formula `(1 + hist) * (1 + overuse * pres_fac)` on top of a unit base
+//! cost.
 //! The parallel router treats one negotiation iteration as:
 //!
 //! 1. **rip-up** (serial, fixed net order): congested nets release their
@@ -195,19 +198,48 @@ pub fn hop_delay(arch: &Arch, hops: usize) -> f64 {
             * arch.delays.wire_segment
 }
 
-/// PathFinder negotiation state: per-node occupancy and history cost.
+/// PathFinder negotiation state: per-node occupancy, history cost, and a
+/// timing-criticality lane.
 ///
 /// During the parallel routing phase this is a read-only snapshot; the
 /// serial reduce phase applies occupancy deltas and history bumps.
+///
+/// The `crit` lane carries, per node, the max sink criticality of any net
+/// currently routed through it.  The router rebuilds it every negotiation
+/// iteration (clear + fixed-order max-accumulate over the committed
+/// trees), and [`CostState::bump_history`] scales its increment by
+/// `1 + crit` — congestion parked on timing-critical wiring accrues
+/// history faster, so the slack-rich competitors detour first.  With
+/// timing-driven routing off the lane stays all-zero and the bump reduces
+/// to the classic `hist += hist_fac` bit-exactly.
 #[derive(Clone, Debug)]
 pub struct CostState {
     pub occ: Vec<u16>,
     pub hist: Vec<f32>,
+    pub crit: Vec<f32>,
 }
 
 impl CostState {
     pub fn new(n_nodes: usize) -> CostState {
-        CostState { occ: vec![0; n_nodes], hist: vec![0.0; n_nodes] }
+        CostState {
+            occ: vec![0; n_nodes],
+            hist: vec![0.0; n_nodes],
+            crit: vec![0.0; n_nodes],
+        }
+    }
+
+    /// Reset the criticality lane (start of a negotiation iteration).
+    pub fn clear_crit(&mut self) {
+        self.crit.iter_mut().for_each(|c| *c = 0.0);
+    }
+
+    /// Max-accumulate criticality `c` onto node `id`.  Order-independent,
+    /// so fixed-order commits keep the lane deterministic.
+    #[inline]
+    pub fn note_crit(&mut self, id: usize, c: f32) {
+        if c > self.crit[id] {
+            self.crit[id] = c;
+        }
     }
 
     /// PathFinder node cost: `(1 + hist) * (1 + overuse * pres_fac)` over
@@ -225,13 +257,15 @@ impl CostState {
     }
 
     /// Accumulate history cost on every overused node; returns how many
-    /// nodes are overused (0 = the iteration converged).
+    /// nodes are overused (0 = the iteration converged).  The increment is
+    /// scaled by `1 + crit[id]` (exactly `hist_fac` while the criticality
+    /// lane is all-zero — see the struct docs).
     pub fn bump_history(&mut self, hist_fac: f64) -> usize {
         let mut overused = 0usize;
         for id in 0..self.occ.len() {
             if self.occ[id] as f64 > NODE_CAP {
                 overused += 1;
-                self.hist[id] += hist_fac as f32;
+                self.hist[id] += (hist_fac * (1.0 + self.crit[id] as f64)) as f32;
             }
         }
         overused
@@ -310,6 +344,27 @@ mod tests {
         let n = cs.bump_history(0.5);
         assert_eq!(n, 1);
         assert!(cs.node_cost(2, 2.0) > 3.0);
+    }
+
+    /// The criticality lane scales history accumulation and clears to the
+    /// neutral (classic PathFinder) bump.
+    #[test]
+    fn crit_lane_scales_history_bump() {
+        let mut cs = CostState::new(3);
+        cs.occ[0] = 2;
+        cs.occ[1] = 2;
+        cs.note_crit(1, 1.0);
+        cs.note_crit(1, 0.5); // max-accumulate keeps the larger value
+        assert_eq!(cs.crit[1], 1.0);
+        let n = cs.bump_history(0.5);
+        assert_eq!(n, 2);
+        assert_eq!(cs.hist[0], 0.5); // neutral node: classic bump
+        assert_eq!(cs.hist[1], 1.0); // fully critical node: doubled
+        cs.clear_crit();
+        assert!(cs.crit.iter().all(|&c| c == 0.0));
+        cs.bump_history(0.5);
+        assert_eq!(cs.hist[0], 1.0);
+        assert_eq!(cs.hist[1], 1.5);
     }
 
     #[test]

@@ -19,8 +19,19 @@
 //! * **backward** — required times are computed per *cell* as the min
 //!   over that cell's consumers (not relaxed driver-by-driver), so levels
 //!   descend as waves; FF required times form one extra wave at the end
-//!   (an FF's consumers can share level 0 with it), and per-net
-//!   criticality extraction is a final wave of per-net jobs.
+//!   (an FF's consumers can share level 0 with it), and criticality
+//!   extraction is a final wave of per-net jobs.
+//!
+//! ## Per-sink criticality
+//!
+//! Criticality is extracted at *sink* granularity: the final wave writes
+//! one `1 - slack/cpd` value per (net, sink) slot into a [`SinkCrit`]
+//! arena laid out exactly like the [`NetlistIndex`] CSR fanout
+//! (`sink_offsets()[n] .. sink_offsets()[n + 1]`, stored sink order), and
+//! `net_crit[n]` remains the max over net `n`'s slots.  The per-sink
+//! arena is what closed-loop timing-driven routing consumes
+//! ([`crate::route::term_sink_crit`] folds it onto routing terminals so
+//! the router's A* can weigh each sink target by its own slack).
 //!
 //! **Determinism contract** (same as the router's): a cell's arrival /
 //! required value is a pure function of its fan-in/fan-out values from
@@ -53,8 +64,47 @@ pub struct TimingReport {
     pub cpd_ps: f64,
     /// Per-net criticality in [0, 1] (max over the net's sinks).
     pub net_crit: Vec<f64>,
+    /// Per-sink criticality arena (see module docs and [`SinkCrit`]).
+    pub sink_crit: SinkCrit,
     /// Cell arrival times (at outputs), for debugging / reports.
     pub arrival: Vec<f64>,
+}
+
+/// Per-sink criticality in the CSR layout of the [`NetlistIndex`] fanout:
+/// `net(n)[si]` is the criticality in [0, 1] of sink `si` of net `n`, in
+/// the index's stored sink order (aligned with `NetlistIndex::sinks(n)`).
+#[derive(Clone, Debug, Default)]
+pub struct SinkCrit {
+    /// CSR offsets (length `nets + 1`), a copy of
+    /// [`NetlistIndex::sink_offsets`].
+    start: Vec<u32>,
+    /// One criticality per sink slot.
+    crit: Vec<f64>,
+}
+
+impl SinkCrit {
+    /// Criticalities of `net`'s sinks, in stored sink order.
+    #[inline]
+    pub fn net(&self, net: NetId) -> &[f64] {
+        let a = self.start[net as usize] as usize;
+        let b = self.start[net as usize + 1] as usize;
+        &self.crit[a..b]
+    }
+
+    /// The flat slot arena (all nets, CSR order).
+    #[inline]
+    pub fn values(&self) -> &[f64] {
+        &self.crit
+    }
+
+    /// Total sink slots.
+    pub fn len(&self) -> usize {
+        self.crit.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.crit.is_empty()
+    }
 }
 
 impl TimingReport {
@@ -63,6 +113,21 @@ impl TimingReport {
             return f64::INFINITY;
         }
         1e6 / self.cpd_ps
+    }
+
+    /// Bit-exact equality over every field — the single definition the
+    /// determinism suites (hotpath bench, `rust/tests/timing_route.rs`)
+    /// compare reports with, so a new field cannot be silently left out
+    /// of some checks.
+    pub fn bits_eq(&self, other: &TimingReport) -> bool {
+        let v = |a: &[f64], b: &[f64]| {
+            a.len() == b.len()
+                && a.iter().zip(b.iter()).all(|(x, y)| x.to_bits() == y.to_bits())
+        };
+        self.cpd_ps.to_bits() == other.cpd_ps.to_bits()
+            && v(&self.net_crit, &other.net_crit)
+            && v(self.sink_crit.values(), other.sink_crit.values())
+            && v(&self.arrival, &other.arrival)
     }
 }
 
@@ -255,6 +320,9 @@ where
         (0..n).map(|_| AtomicU64::new(f64::INFINITY.to_bits())).collect();
     let net_crit: Vec<AtomicU64> =
         (0..nl.nets.len()).map(|_| AtomicU64::new(0)).collect();
+    // Per-sink criticality slots, CSR-aligned with the index fanout.
+    let sink_slots: Vec<AtomicU64> =
+        (0..idx.num_sink_slots()).map(|_| AtomicU64::new(0)).collect();
     let mut sched: Vec<CellId> = Vec::with_capacity(n);
     let mut offs: Vec<usize> = Vec::with_capacity(idx.num_levels() + 3);
     offs.push(0);
@@ -293,16 +361,20 @@ where
             }
             fput(&required[c as usize], req);
         } else {
-            // Net criticality = max over sinks of (1 - slack/cpd).
+            // Criticality: one `1 - slack/cpd` per sink slot; the net's
+            // value is the max over its slots.
             let ni = (i - cell_jobs) as NetId;
             let Some((drv, dpin)) = idx.driver(ni) else { return };
             let drv_arr = fget(&arrival[drv as usize]) + cell_output_delay(nl, arch, drv, dpin);
+            let base = idx.sink_offsets()[ni as usize] as usize;
             let mut crit = 0.0f64;
-            for (sink, pin) in idx.sinks(ni) {
+            for (si, (sink, pin)) in idx.sinks(ni).enumerate() {
                 let wire = net_delay(ni, sink, pin);
                 let input = sink_input_delay(nl, packing, arch, sink, pin, pidx);
                 let slack = fget(&required[sink as usize]) - (drv_arr + wire + input);
-                crit = crit.max((1.0 - slack / cpd).clamp(0.0, 1.0));
+                let c = (1.0 - slack / cpd).clamp(0.0, 1.0);
+                fput(&sink_slots[base + si], c);
+                crit = crit.max(c);
             }
             fput(&net_crit[ni as usize], crit);
         }
@@ -311,6 +383,10 @@ where
     TimingReport {
         cpd_ps: cpd,
         net_crit: net_crit.iter().map(fget).collect(),
+        sink_crit: SinkCrit {
+            start: idx.sink_offsets().to_vec(),
+            crit: sink_slots.iter().map(fget).collect(),
+        },
         arrival: arrival.iter().map(fget).collect(),
     }
 }
@@ -351,6 +427,29 @@ mod tests {
         assert!(rpt.net_crit.iter().all(|&c| (0.0..=1.0).contains(&c)));
         // At least one net is fully critical.
         assert!(rpt.net_crit.iter().any(|&c| c > 0.99));
+    }
+
+    /// The per-sink arena is CSR-consistent with the netlist fanout, and
+    /// every net's criticality is exactly the max over its sink slots.
+    #[test]
+    fn sink_crit_consistent_with_net_crit() {
+        let (nl, packing, arch) = mul_setup(ArchVariant::Dd5);
+        let idx = NetlistIndex::build(&nl);
+        let rpt = sta(&nl, &packing, &arch, |net, _, pin| {
+            100.0 + (net % 9) as f64 + 3.0 * pin as f64
+        });
+        assert_eq!(rpt.sink_crit.len(), idx.num_sink_slots());
+        for (ni, net) in nl.nets.iter().enumerate() {
+            let slots = rpt.sink_crit.net(ni as NetId);
+            assert_eq!(slots.len(), net.sinks.len(), "net {ni}");
+            assert!(slots.iter().all(|&c| (0.0..=1.0).contains(&c)));
+            let max = slots.iter().fold(0.0f64, |m, &c| m.max(c));
+            assert_eq!(
+                max.to_bits(),
+                rpt.net_crit[ni].to_bits(),
+                "net {ni}: max sink crit vs net_crit"
+            );
+        }
     }
 
     #[test]
@@ -399,6 +498,10 @@ mod tests {
             }
             for (a, b) in r.net_crit.iter().zip(base.net_crit.iter()) {
                 assert_eq!(a.to_bits(), b.to_bits(), "jobs={jobs}");
+            }
+            assert_eq!(r.sink_crit.len(), base.sink_crit.len());
+            for (a, b) in r.sink_crit.values().iter().zip(base.sink_crit.values().iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "sink crit jobs={jobs}");
             }
         }
     }

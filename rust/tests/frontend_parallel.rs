@@ -124,6 +124,16 @@ fn sta_is_jobs_invariant() {
         for (i, (x, y)) in r.net_crit.iter().zip(base.net_crit.iter()).enumerate() {
             assert_eq!(x.to_bits(), y.to_bits(), "net_crit {i} jobs={jobs}");
         }
+        assert_eq!(r.sink_crit.len(), base.sink_crit.len());
+        for (i, (x, y)) in r
+            .sink_crit
+            .values()
+            .iter()
+            .zip(base.sink_crit.values().iter())
+            .enumerate()
+        {
+            assert_eq!(x.to_bits(), y.to_bits(), "sink_crit {i} jobs={jobs}");
+        }
     }
 }
 
