@@ -36,7 +36,8 @@ fn main() {
     let packing = pack(&nl, &arch, &PackOpts::default());
     let t0 = Instant::now();
     let pl = place(&nl, &packing, &arch,
-                   &PlaceOpts { effort: 0.3, use_kernel: true, ..Default::default() });
+                   &PlaceOpts { effort: 0.3, use_kernel: true, ..Default::default() })
+        .expect("placement");
     let place_ms = t0.elapsed().as_millis();
     let mut model = NetModel::build(&nl, &packing);
     model.set_weights(&[], false);

@@ -5,10 +5,11 @@
 //! the PJRT kernel evaluation latency. No criterion offline — simple
 //! timed loops with enough iterations for stable medians.
 //!
-//! Front-end medians are also emitted as machine-readable JSON (the
-//! versioned `BENCH.json` schema: version, bench, jobs, elapsed wall
-//! clock, and per stage the jobs=1 / jobs=N medians and speedup) so CI
-//! can archive and *gate* the perf trajectory across PRs:
+//! Stage medians — front-end (map / pack / sta) *and* back-end (place /
+//! route) — are also emitted as machine-readable JSON (the versioned
+//! `BENCH.json` schema: version, bench, jobs, elapsed wall clock, and per
+//! stage the jobs=1 / jobs=N medians and speedup) so CI can archive and
+//! *gate* the perf trajectory across PRs:
 //!
 //! * `--out <path>` — where to write the JSON (default `BENCH.json` in
 //!   the CWD; CI passes an explicit path so the artifact upload never
@@ -166,7 +167,7 @@ fn compare_bench(cur_path: &str, base_path: &str) -> Result<(), String> {
     let base = std::fs::read_to_string(base_path)
         .map_err(|e| format!("cannot read baseline {base_path}: {e}"))?;
     let mut failures: Vec<String> = Vec::new();
-    for stage in ["map", "pack", "sta"] {
+    for stage in ["map", "pack", "sta", "place", "route"] {
         match (stage_median(&cur, stage), stage_median(&base, stage)) {
             (Some(c), Some(b)) => {
                 if c > b * REGRESS_FACTOR && c - b > NOISE_FLOOR_S {
@@ -258,7 +259,8 @@ fn main() {
                       &PlaceOpts { effort: 0.3, ..Default::default() });
     });
 
-    let pl = place(&nl, &packing, &arch, &PlaceOpts { effort: 0.3, ..Default::default() });
+    let pl = place(&nl, &packing, &arch, &PlaceOpts { effort: 0.3, ..Default::default() })
+        .expect("placement");
     let mut model = NetModel::build(&nl, &packing);
     model.set_weights(&[], false);
 
@@ -306,26 +308,37 @@ fn main() {
     };
     let big_pack = pack(&big_nl, &arch, &PackOpts::default());
     let big_pl = place(&big_nl, &big_pack, &arch,
-                       &PlaceOpts { effort: 0.3, ..Default::default() });
+                       &PlaceOpts { effort: 0.3, ..Default::default() })
+        .expect("placement");
     let mut big_model = NetModel::build(&big_nl, &big_pack);
     big_model.set_weights(&[], false);
 
     let route_jobs = if quick { 2 } else { 4 };
     let route_reps = reps(3);
+    // Per-rep times -> median, matching the other gated stages (a mean
+    // would let one scheduler hiccup fail the perf gate).
+    let med = |ts: &mut Vec<f64>| {
+        ts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        ts[ts.len() / 2]
+    };
     let mut serial_route = None;
-    let t0 = Instant::now();
+    let mut ts = Vec::with_capacity(route_reps);
     for _ in 0..route_reps {
+        let t0 = Instant::now();
         serial_route = Some(route(&big_model, &big_pl, &arch,
                                   &RouteOpts { jobs: 1, ..Default::default() }));
+        ts.push(t0.elapsed().as_secs_f64());
     }
-    let t_serial = t0.elapsed().as_secs_f64() / route_reps as f64;
+    let t_serial = med(&mut ts);
     let mut sharded_route = None;
-    let t1 = Instant::now();
+    let mut ts = Vec::with_capacity(route_reps);
     for _ in 0..route_reps {
+        let t1 = Instant::now();
         sharded_route = Some(route(&big_model, &big_pl, &arch,
                                    &RouteOpts { jobs: route_jobs, ..Default::default() }));
+        ts.push(t1.elapsed().as_secs_f64());
     }
-    let t_sharded = t1.elapsed().as_secs_f64() / route_reps as f64;
+    let t_sharded = med(&mut ts);
     let (sr, pr) = (serial_route.unwrap(), sharded_route.unwrap());
     assert!(routing_identical(&sr, &pr),
             "sharded router diverged from serial on {big_name}");
@@ -378,11 +391,34 @@ fn main() {
         let _ = sta_with(&big_nl, &idx, &pidx, &big_pack, &arch, sta_delay, fe_jobs);
     });
 
+    // --- Placer stage (perf-gate entry): timing-driven annealing with
+    // the per-sink criticality lane, sta_jobs=1 vs sharded STA refreshes.
+    // The Placement must be bit-identical for any sta_jobs (the placer
+    // determinism contract, also pinned by rust/tests/place_timing.rs).
+    let place_popts = |sta_jobs: usize| PlaceOpts {
+        effort: 0.3,
+        sta_jobs,
+        ..Default::default()
+    };
+    let pl_s1 = place(&big_nl, &big_pack, &arch, &place_popts(1)).expect("placement");
+    let pl_sn = place(&big_nl, &big_pack, &arch, &place_popts(fe_jobs)).expect("placement");
+    assert!(
+        pl_s1.lb_loc == pl_sn.lb_loc && pl_s1.cost.to_bits() == pl_sn.cost.to_bits(),
+        "placer diverged across sta_jobs on {big_name}"
+    );
+    let place_s1 = median_secs(reps(3), || {
+        let _ = place(&big_nl, &big_pack, &arch, &place_popts(1));
+    });
+    let place_sn = median_secs(reps(3), || {
+        let _ = place(&big_nl, &big_pack, &arch, &place_popts(fe_jobs));
+    });
+
     let speedup = |s1: f64, sn: f64| s1 / sn.max(1e-12);
     for (stage, s1, sn) in [
         ("map", map_s1, map_sn),
         ("pack", pack_s1, pack_sn),
         ("sta", sta_s1, sta_sn),
+        ("place", place_s1, place_sn),
     ] {
         println!(
             "{stage:<5} {big_name:<18} jobs=1 {:>8.2} ms | jobs={fe_jobs} {:>8.2} ms  ({:.2}x, bit-identical)",
@@ -406,14 +442,18 @@ fn main() {
              \"wall_clock_budget_s\": {WALL_BUDGET_S:.1},\n  \"stages\": [\n    \
              {{\"stage\": \"map\", \"median_s_jobs1\": {:.6}, \"median_s\": {:.6}, \"speedup\": {:.3}}},\n    \
              {{\"stage\": \"pack\", \"median_s_jobs1\": {:.6}, \"median_s\": {:.6}, \"speedup\": {:.3}}},\n    \
-             {{\"stage\": \"sta\", \"median_s_jobs1\": {:.6}, \"median_s\": {:.6}, \"speedup\": {:.3}}}\n  ]\n}}\n",
+             {{\"stage\": \"sta\", \"median_s_jobs1\": {:.6}, \"median_s\": {:.6}, \"speedup\": {:.3}}},\n    \
+             {{\"stage\": \"place\", \"median_s_jobs1\": {:.6}, \"median_s\": {:.6}, \"speedup\": {:.3}}},\n    \
+             {{\"stage\": \"route\", \"median_s_jobs1\": {:.6}, \"median_s\": {:.6}, \"speedup\": {:.3}}}\n  ]\n}}\n",
             big_nl.cells.len(),
             map_s1, map_sn, speedup(map_s1, map_sn),
             pack_s1, pack_sn, speedup(pack_s1, pack_sn),
             sta_s1, sta_sn, speedup(sta_s1, sta_sn),
+            place_s1, place_sn, speedup(place_s1, place_sn),
+            t_serial, t_sharded, speedup(t_serial, t_sharded),
         );
         match std::fs::write(&out_path, &json) {
-            Ok(()) => println!("front-end medians written to {out_path}"),
+            Ok(()) => println!("stage medians written to {out_path}"),
             Err(e) => {
                 eprintln!("could not write {out_path}: {e}");
                 std::process::exit(1);

@@ -40,12 +40,14 @@ use std::sync::{Arc, Mutex, OnceLock};
 use crate::arch::{Arch, ArchVariant};
 use crate::bench_suites::Benchmark;
 use crate::coordinator::parallel_indexed;
-use crate::netlist::{CellKind, Netlist};
+use crate::netlist::{CellKind, Netlist, NetlistIndex, PackIndex};
 use crate::pack::{pack_with, PackOpts, Packing, Unrelated};
 use crate::techmap::{map_circuit_with, MapOpts};
 
 use super::diskcache::DiskCache;
-use super::{arch_for_run, assemble_result, place_route_seed, FlowOpts, FlowResult, SeedMetrics};
+use super::{
+    arch_for_run, assemble_result, place_route_seed, FlowOpts, FlowResult, SeedCtx, SeedMetrics,
+};
 
 /// A mapped circuit artifact: the netlist plus generation metadata.
 #[derive(Debug)]
@@ -55,6 +57,17 @@ pub struct MappedCircuit {
     pub dedup_hits: usize,
     /// Structural content hash of `nl` (the pack-cache key component).
     pub fingerprint: u64,
+}
+
+/// Dense index arenas derived from one (netlist, packing) pair — the
+/// `NetlistIndex`/`PackIndex` every STA consumer reads.  Cached by the
+/// [`ArtifactCache`] (keyed like packings) so seed jobs share them
+/// read-only instead of rebuilding both once per seed, which is what
+/// `place_route_seed`'s `--timing-route` branch used to do.
+#[derive(Debug)]
+pub struct IndexArenas {
+    pub idx: NetlistIndex,
+    pub pidx: PackIndex,
 }
 
 /// Cache hit/miss counters (observability for the perf pass).  `*_hits`
@@ -68,6 +81,8 @@ pub struct CacheStats {
     pub pack_hits: AtomicUsize,
     pub pack_disk_hits: AtomicUsize,
     pub pack_misses: AtomicUsize,
+    pub index_hits: AtomicUsize,
+    pub index_misses: AtomicUsize,
 }
 
 impl CacheStats {
@@ -86,6 +101,20 @@ impl CacheStats {
 pub struct ArtifactCache {
     mapped: Mutex<HashMap<u64, Arc<MappedCircuit>>>,
     packed: Mutex<HashMap<u64, Arc<Packing>>>,
+    /// Dense index arenas per (netlist, packing) — memory-only (derived
+    /// data; rebuilding is linear and the disk artifacts already capture
+    /// the inputs they derive from).
+    indexed: Mutex<HashMap<u64, Arc<IndexArenas>>>,
+    /// Achieved post-route CPD (ps) per chained seed of the closed
+    /// timing loop, keyed by [`Self::cpd_prior_key`].  This is a
+    /// *provenance record* of the cross-seed place↔route feedback — the
+    /// live chain flows through [`crate::flow::SeedCtx::cpd_prior_ps`];
+    /// the record exists so tests and tools can audit what prior each
+    /// seed ran under ([`Self::cpd_prior`] /
+    /// [`Self::cpd_priors_recorded`]), not to memoize work.  Values are
+    /// deterministic functions of their key, so reads can never change
+    /// results.
+    cpd_priors: Mutex<HashMap<u64, f64>>,
     /// Optional persistent store under the in-memory maps: a memory miss
     /// consults the disk before recomputing, and fresh computations are
     /// written back (same content-hash keys, so entries survive across
@@ -272,6 +301,84 @@ impl ArtifactCache {
         }
         Arc::clone(self.packed.lock().unwrap().entry(key).or_insert(p))
     }
+
+    /// Dense index arenas for `(mapped, packing)`, or the shared
+    /// instance.  Keyed like the packing (the arenas are a pure function
+    /// of netlist + packing), so every seed job of a grid cell — and
+    /// later plans sharing the cache — reads one read-only build.
+    pub fn indexed(
+        &self,
+        mapped: &MappedCircuit,
+        packing: &Packing,
+        arch: &Arch,
+        opts: &PackOpts,
+    ) -> Arc<IndexArenas> {
+        let key = Self::pack_key(mapped.fingerprint, arch, opts);
+        if let Some(a) = self.indexed.lock().unwrap().get(&key) {
+            CacheStats::bump(&self.stats.index_hits);
+            return Arc::clone(a);
+        }
+        CacheStats::bump(&self.stats.index_misses);
+        let a = Arc::new(IndexArenas {
+            idx: NetlistIndex::build(&mapped.nl),
+            pidx: PackIndex::build(&mapped.nl, packing),
+        });
+        Arc::clone(self.indexed.lock().unwrap().entry(key).or_insert(a))
+    }
+
+    /// Key of one chained seed's achieved-CPD record: netlist content,
+    /// variant, every flow knob that shapes a seed result, and the *seed
+    /// chain prefix* (a seed's result depends on every seed routed before
+    /// it in the cell, not just its own value).
+    pub fn cpd_prior_key(
+        fingerprint: u64,
+        arch: &Arch,
+        opts: &FlowOpts,
+        seed_prefix: &[u64],
+    ) -> u64 {
+        let mut h = DefaultHasher::new();
+        fingerprint.hash(&mut h);
+        arch.variant.hash(&mut h);
+        opts.place_effort.to_bits().hash(&mut h);
+        opts.route_timing_weights.hash(&mut h);
+        opts.sta_every.hash(&mut h);
+        opts.crit_alpha.to_bits().hash(&mut h);
+        opts.place_crit_alpha.to_bits().hash(&mut h);
+        opts.move_mix.to_bits().hash(&mut h);
+        opts.use_kernel.hash(&mut h);
+        // route_jobs is deliberately NOT keyed: results are bit-identical
+        // for any worker count, so records must match across job counts.
+        opts.channel_width.hash(&mut h);
+        if let Some(d) = &opts.device {
+            d.lb_cols.hash(&mut h);
+            d.lb_rows.hash(&mut h);
+            d.io_per_tile.hash(&mut h);
+        }
+        (match opts.unrelated {
+            Unrelated::Off => 0u8,
+            Unrelated::Auto => 1u8,
+            Unrelated::On => 2u8,
+        })
+        .hash(&mut h);
+        seed_prefix.hash(&mut h);
+        h.finish()
+    }
+
+    /// Recorded achieved CPD (ps) for a chained seed, if any run under
+    /// this cache has produced it.
+    pub fn cpd_prior(&self, key: u64) -> Option<f64> {
+        self.cpd_priors.lock().unwrap().get(&key).copied()
+    }
+
+    /// Record a chained seed's achieved CPD (ps).
+    pub fn record_cpd_prior(&self, key: u64, cpd_ps: f64) {
+        self.cpd_priors.lock().unwrap().insert(key, cpd_ps);
+    }
+
+    /// Number of recorded cross-seed CPD priors (observability).
+    pub fn cpd_priors_recorded(&self) -> usize {
+        self.cpd_priors.lock().unwrap().len()
+    }
 }
 
 /// The experiment grid: every benchmark on every variant, each averaged
@@ -338,20 +445,64 @@ impl Engine {
             )
         });
 
-        // Phase 3: one place/route job per (circuit, variant, seed),
-        // reading the packed artifacts through shared Arcs.
-        let seed_runs: Vec<SeedMetrics> = parallel_indexed(nb * nv * ns, self.jobs, |i| {
-            let si = i % ns;
-            let bi = (i / ns) % nb;
-            let vi = i / (ns * nb);
-            place_route_seed(
-                &mapped[bi].nl,
-                &packs[vi * nb + bi],
-                &archs[vi],
-                opts,
-                opts.seeds[si],
-            )
+        // Phase 3a: dense index arenas per (circuit, variant) cell —
+        // cached like packings, shared read-only by every seed job.
+        let pack_opts = PackOpts { unrelated: opts.unrelated };
+        let arenas: Vec<Arc<IndexArenas>> = parallel_indexed(nb * nv, self.jobs, |i| {
+            let (vi, bi) = (i / nb, i % nb);
+            cache.indexed(&mapped[bi], &packs[vi * nb + bi], &archs[vi], &pack_opts)
         });
+
+        // Phase 3b: place/route.  Timing-oblivious plans fan out one job
+        // per (circuit, variant, seed).  With the closed timing loop on,
+        // each cell's seeds are a *chain* — seed i's achieved CPD is seed
+        // i+1's criticality prior ([`crate::flow::chain_seeds`], shared
+        // with the serial path) — so the job unit becomes the cell (cells
+        // still run in parallel) and every achieved CPD is recorded in
+        // the artifact cache; fixed seed order keeps results
+        // bit-identical to the serial path.
+        let seed_runs: Vec<SeedMetrics> = if opts.route && opts.route_timing_weights {
+            let cells: Vec<Vec<SeedMetrics>> = parallel_indexed(nb * nv, self.jobs, |i| {
+                let (vi, bi) = (i / nb, i % nb);
+                let ar = &arenas[i];
+                super::chain_seeds(
+                    &mapped[bi].nl,
+                    &packs[vi * nb + bi],
+                    &archs[vi],
+                    opts,
+                    &ar.idx,
+                    &ar.pidx,
+                    |si, cpd_ps| {
+                        let key = ArtifactCache::cpd_prior_key(
+                            mapped[bi].fingerprint,
+                            &archs[vi],
+                            opts,
+                            &opts.seeds[..=si],
+                        );
+                        cache.record_cpd_prior(key, cpd_ps);
+                    },
+                )
+            });
+            // Cells are produced in (variant, bench) order; flattening
+            // yields exactly the (variant, bench, seed) layout phase 4
+            // reduces over.
+            cells.into_iter().flatten().collect()
+        } else {
+            parallel_indexed(nb * nv * ns, self.jobs, |i| {
+                let si = i % ns;
+                let bi = (i / ns) % nb;
+                let vi = i / (ns * nb);
+                let ar = &arenas[vi * nb + bi];
+                place_route_seed(
+                    &mapped[bi].nl,
+                    &packs[vi * nb + bi],
+                    &archs[vi],
+                    opts,
+                    opts.seeds[si],
+                    &SeedCtx::new(&ar.idx, &ar.pidx),
+                )
+            })
+        };
 
         // Phase 4: reduce per cell in fixed (variant, bench, seed) order.
         let mut out: Vec<Vec<FlowResult>> = Vec::with_capacity(nv);
@@ -374,7 +525,9 @@ impl Engine {
 }
 
 /// Cached equivalent of [`crate::flow::run_benchmark`]: identical results,
-/// but the mapped netlist and packing come from (and feed) `cache`.
+/// but the mapped netlist, packing, and index arenas come from (and feed)
+/// `cache` — including the chained cross-seed CPD priors of the closed
+/// timing loop.
 pub fn run_benchmark_cached(
     cache: &ArtifactCache,
     b: &Benchmark,
@@ -383,12 +536,26 @@ pub fn run_benchmark_cached(
 ) -> FlowResult {
     let mapped = cache.mapped(b);
     let arch = arch_for_run(&Arch::coffe(variant), opts);
-    let packing = cache.packed(&mapped, &arch, &PackOpts { unrelated: opts.unrelated });
-    let seeds: Vec<SeedMetrics> = opts
-        .seeds
-        .iter()
-        .map(|&seed| place_route_seed(&mapped.nl, &packing, &arch, opts, seed))
-        .collect();
+    let pack_opts = PackOpts { unrelated: opts.unrelated };
+    let packing = cache.packed(&mapped, &arch, &pack_opts);
+    let arenas = cache.indexed(&mapped, &packing, &arch, &pack_opts);
+    let seeds = super::chain_seeds(
+        &mapped.nl,
+        &packing,
+        &arch,
+        opts,
+        &arenas.idx,
+        &arenas.pidx,
+        |si, cpd_ps| {
+            let key = ArtifactCache::cpd_prior_key(
+                mapped.fingerprint,
+                &arch,
+                opts,
+                &opts.seeds[..=si],
+            );
+            cache.record_cpd_prior(key, cpd_ps);
+        },
+    );
     assemble_result(&b.name, &arch, &packing, &seeds, mapped.dedup_hits)
 }
 

@@ -7,9 +7,22 @@
 //! therefore produce bit-identical results:
 //!
 //! * [`arch_for_run`] — per-run architecture overrides,
-//! * [`place_route_seed`] — one (circuit, variant, seed) cell,
+//! * [`place_route_seed`] — one (circuit, variant, seed) cell, reading
+//!   the shared dense index arenas (and, in the closed timing loop, the
+//!   previous seed's achieved-CPD prior) through a [`SeedCtx`],
 //! * [`assemble_result`] — fixed-order seed reduction into a
 //!   [`FlowResult`].
+//!
+//! ## Cross-seed place↔route feedback
+//!
+//! With `--timing-route`, seeds of one (circuit, variant) cell form a
+//! chain: each seed's achieved post-route CPD feeds the *next* seed as a
+//! criticality prior ([`SeedCtx::cpd_prior_ps`] →
+//! [`crate::timing::rescale_crit`]), so both the placer's per-sink lane
+//! and the router's seed weights optimize toward the CPD routing actually
+//! delivers rather than the pre-route estimate.  The chain runs in fixed
+//! seed order in both the serial path and the engine, so results stay
+//! bit-identical between them.
 
 pub mod diskcache;
 pub mod engine;
@@ -19,7 +32,7 @@ use crate::arch::{Arch, ArchVariant};
 use crate::bench_suites::Benchmark;
 use crate::netlist::{Netlist, NetlistIndex, PackIndex};
 use crate::pack::{pack, PackOpts, Packing, Unrelated};
-use crate::place::{place, PlaceOpts};
+use crate::place::{place_with, PlaceOpts};
 use crate::route::{
     route, route_timing, routed_net_delay, term_sink_crit, RouteOpts, TimingCtx,
 };
@@ -51,6 +64,13 @@ pub struct FlowOpts {
     /// Criticality smoothing factor for the closed loop
     /// (`--crit-alpha A`; `crit' = A*new + (1-A)*old`).
     pub crit_alpha: f64,
+    /// Smoothing factor for the *placer's* per-sink criticality refresh
+    /// (`--place-crit-alpha`), matching the router's recurrence.
+    pub place_crit_alpha: f64,
+    /// Annealer move-type mix scale in [0, 1] (`--move-mix`): scales the
+    /// temperature-scheduled macro-shift / median-move probabilities;
+    /// `0.0` proposes uniform swaps only.
+    pub move_mix: f64,
     pub use_kernel: bool,
     /// Fixed device (Table IV stress); `None` auto-sizes per design.
     pub device: Option<Device>,
@@ -68,6 +88,8 @@ impl Default for FlowOpts {
             route_timing_weights: false,
             sta_every: 4,
             crit_alpha: 0.5,
+            place_crit_alpha: 0.5,
+            move_mix: 1.0,
             use_kernel: false,
             device: None,
             channel_width: None,
@@ -137,17 +159,41 @@ pub fn arch_for_run(arch: &Arch, opts: &FlowOpts) -> Arch {
     arch
 }
 
+/// Per-seed shared context: the dense index arenas (built once per
+/// (netlist, packing) and shared read-only across seeds — by the engine,
+/// through its artifact cache) plus the cross-seed feedback prior.
+pub struct SeedCtx<'a> {
+    pub idx: &'a NetlistIndex,
+    pub pidx: &'a PackIndex,
+    /// Achieved post-route CPD (ps) of the previous seed in the cell's
+    /// chain; `None` for the first seed or timing-oblivious runs.  Fed to
+    /// the placer ([`PlaceOpts::cpd_prior_ps`]) and into the router's
+    /// seed criticalities via [`crate::timing::rescale_crit`].
+    pub cpd_prior_ps: Option<f64>,
+}
+
+impl<'a> SeedCtx<'a> {
+    /// Context with no feedback prior.
+    pub fn new(idx: &'a NetlistIndex, pidx: &'a PackIndex) -> SeedCtx<'a> {
+        SeedCtx { idx, pidx, cpd_prior_ps: None }
+    }
+}
+
 /// Place (and optionally route + STA) one seed of an already-packed
-/// design.  Deterministic in (inputs, seed): the only RNG is constructed
-/// here from `seed`, so scheduling order cannot perturb results.
+/// design.  Deterministic in (inputs, seed, prior): the only RNG is
+/// constructed here from `seed`, so scheduling order cannot perturb
+/// results.  Panics if a caller-fixed device cannot fit the design — the
+/// placer's hardened sizing contract surfaces instead of quietly
+/// measuring a larger grid.
 pub fn place_route_seed(
     nl: &Netlist,
     packing: &Packing,
     arch: &Arch,
     opts: &FlowOpts,
     seed: u64,
+    ctx: &SeedCtx,
 ) -> SeedMetrics {
-    let pl = place(
+    let pl = place_with(
         nl,
         packing,
         arch,
@@ -155,26 +201,36 @@ pub fn place_route_seed(
             seed,
             effort: opts.place_effort,
             timing_driven: true,
+            crit_alpha: opts.place_crit_alpha,
+            move_mix: opts.move_mix,
+            cpd_prior_ps: ctx.cpd_prior_ps,
+            sta_jobs: opts.route_jobs.max(1),
             use_kernel: opts.use_kernel,
             device: opts.device.clone(),
+            ..Default::default()
         },
-    );
+        ctx.idx,
+        ctx.pidx,
+    )
+    .unwrap_or_else(|e| panic!("placement failed (seed {seed}): {e}"));
     if opts.route {
         let mut model = crate::place::cost::NetModel::build(nl, packing);
         model.set_weights(&[], false);
         let route_jobs = opts.route_jobs.max(1);
         let (r, rpt) = if opts.route_timing_weights {
             // Timing-driven: a pre-route STA over the placed distance
-            // estimates seeds per-sink criticality weights, and (with
-            // sta_every > 0) the router closes the loop by refreshing
-            // them from STA runs against the evolving routing.  The
-            // index arenas are built once and shared with every refresh.
-            let idx = NetlistIndex::build(nl);
-            let pidx = PackIndex::build(nl, packing);
+            // estimates seeds per-sink criticality weights — re-normalized
+            // against the previous seed's achieved CPD when the chain
+            // carries one — and (with sta_every > 0) the router closes the
+            // loop by refreshing them from STA runs against the evolving
+            // routing.  The index arenas come prebuilt through `ctx` and
+            // are shared with every refresh.
+            let idx = ctx.idx;
+            let pidx = ctx.pidx;
             let rpt = crate::timing::sta_with(
                 nl,
-                &idx,
-                &pidx,
+                idx,
+                pidx,
                 packing,
                 arch,
                 |net, sink, _| {
@@ -184,12 +240,13 @@ pub fn place_route_seed(
                 },
                 route_jobs,
             );
-            let sink_crit = term_sink_crit(&model, &idx, &rpt.sink_crit);
+            let mut sink_crit = term_sink_crit(&model, idx, &rpt.sink_crit);
+            crate::timing::rescale_crit(&mut sink_crit, rpt.cpd_ps, ctx.cpd_prior_ps);
             let ropts = RouteOpts { jobs: route_jobs, sink_crit, ..RouteOpts::default() };
             let ctx = TimingCtx {
                 nl,
-                idx: &idx,
-                pidx: &pidx,
+                idx,
+                pidx,
                 packing,
                 sta_every: opts.sta_every,
                 crit_alpha: opts.crit_alpha,
@@ -202,8 +259,8 @@ pub fn place_route_seed(
             // index build is deterministic and STA is jobs-invariant.
             let rpt = crate::timing::sta_with(
                 nl,
-                &idx,
-                &pidx,
+                idx,
+                pidx,
                 packing,
                 arch,
                 routed_net_delay(&r, &model, arch),
@@ -241,6 +298,46 @@ pub fn place_route_seed(
             cpd_trace_ns: Vec::new(),
         }
     }
+}
+
+/// Run every seed of one (netlist, packing, arch) cell in fixed seed
+/// order over shared index arenas, chaining each seed's achieved
+/// post-route CPD into the next seed's criticality prior when the closed
+/// timing loop is on (`route && route_timing_weights`; timing-oblivious
+/// runs carry no prior).  This is the single definition of the cross-seed
+/// feedback chain — the serial flow, the cached benchmark runner, and the
+/// engine's cell jobs all call it, so the bit-identity contract between
+/// them cannot drift.  `record(si, cpd_ps)` observes each *successfully
+/// routed* chained seed's achieved CPD (the engine writes these into its
+/// artifact cache as the provenance trail; pass a no-op elsewhere);
+/// failed routes neither feed the chain nor get recorded.
+pub fn chain_seeds(
+    nl: &Netlist,
+    packing: &Packing,
+    arch: &Arch,
+    opts: &FlowOpts,
+    idx: &NetlistIndex,
+    pidx: &PackIndex,
+    mut record: impl FnMut(usize, f64),
+) -> Vec<SeedMetrics> {
+    let chained = opts.route && opts.route_timing_weights;
+    let mut prior: Option<f64> = None;
+    let mut out = Vec::with_capacity(opts.seeds.len());
+    for (si, &seed) in opts.seeds.iter().enumerate() {
+        let ctx = SeedCtx { idx, pidx, cpd_prior_ps: prior };
+        let m = place_route_seed(nl, packing, arch, opts, seed, &ctx);
+        // Only a *legally routed* seed feeds the chain: a CPD measured
+        // over a failed (still-overused) routing is not an achieved
+        // result and must not poison the next seed's criticalities or
+        // the provenance record.
+        if chained && m.routed_ok {
+            let achieved = m.cpd_ns * 1000.0;
+            record(si, achieved);
+            prior = Some(achieved);
+        }
+        out.push(m);
+    }
+    out
 }
 
 /// Reduce per-seed metrics (in seed order) into the averaged result.
@@ -331,7 +428,9 @@ pub fn run_flow(circ: &Circuit, arch: &Arch, opts: &FlowOpts) -> FlowResult {
     run_flow_mapped(&circ.name, &nl, arch, opts, circ.dedup_hits)
 }
 
-/// Flow from an already-mapped netlist.
+/// Flow from an already-mapped netlist.  Builds the dense index arenas
+/// once and shares them across every seed; with the closed timing loop
+/// on, seeds chain their achieved CPDs (see the module docs).
 pub fn run_flow_mapped(
     name: &str,
     nl: &Netlist,
@@ -341,11 +440,9 @@ pub fn run_flow_mapped(
 ) -> FlowResult {
     let arch = arch_for_run(arch, opts);
     let packing = pack(nl, &arch, &PackOpts { unrelated: opts.unrelated });
-    let seeds: Vec<SeedMetrics> = opts
-        .seeds
-        .iter()
-        .map(|&seed| place_route_seed(nl, &packing, &arch, opts, seed))
-        .collect();
+    let idx = NetlistIndex::build(nl);
+    let pidx = PackIndex::build(nl, &packing);
+    let seeds = chain_seeds(nl, &packing, &arch, opts, &idx, &pidx, |_, _| {});
     assemble_result(name, &arch, &packing, &seeds, dedup_hits)
 }
 

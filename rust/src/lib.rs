@@ -56,10 +56,16 @@
 //!   `--sta-every K` iterations refreshes them with exponential
 //!   smoothing (`--crit-alpha`), still bit-identical for any worker
 //!   count (`rust/tests/timing_route.rs`).
-//! * The annealing placer evaluates batched move proposals against an
-//!   incremental per-net bounding-box cost cache
-//!   ([`place::cost::IncrementalCost`]); the PJRT kernel consumes the
-//!   cached boxes directly.
+//! * The annealing placer evaluates batched move proposals — uniform
+//!   swaps plus temperature-scheduled macro-column shifts and median
+//!   moves ([`place::MoveKind`]) — against an incremental two-lane cost
+//!   cache ([`place::cost::IncrementalCost`]): criticality-weighted HPWL
+//!   plus a per-sink timing lane fed from the same [`timing::SinkCrit`]
+//!   arena the router consumes, refreshed with exponential smoothing
+//!   (`--place-crit-alpha`) and re-normalized across seeds against the
+//!   previous seed's achieved routed CPD (the engine's cross-seed
+//!   place↔route feedback).  The PJRT kernel consumes the cached boxes
+//!   directly and validates the wirelength lane.
 //! * The synth→map→pack→STA front-end runs on dense CSR index arenas
 //!   ([`netlist::index`]) and levelized wave schedules
 //!   ([`coordinator::parallel_waves_with`]): the mapper's cut

@@ -8,6 +8,7 @@
 //!   flow --bench <name> [--variant baseline|dd5|dd6] [--seed N | --seeds a,b,c]
 //!        [--no-route] [--jobs N] [--route-jobs N] [--no-disk-cache]
 //!        [--cache-cap-mb N] [--timing-route] [--sta-every K] [--crit-alpha A]
+//!        [--place-crit-alpha A] [--move-mix F]
 //!       Run the full CAD flow on one benchmark and print its metrics
 //!       (multi-seed runs place/route the seeds in parallel; --jobs also
 //!       shards the mapper/packer front-end and --route-jobs each
@@ -15,7 +16,12 @@
 //!       runs closed-loop timing-driven routing: per-sink criticalities
 //!       seed the router and are refreshed by an STA against the partial
 //!       routing every K PathFinder iterations with smoothing factor A —
-//!       --sta-every 0 keeps the static pre-route weights).
+//!       --sta-every 0 keeps the static pre-route weights; across seeds,
+//!       each seed's achieved CPD re-normalizes the next seed's placement
+//!       and routing criticalities.  --place-crit-alpha A smooths the
+//!       placer's per-sink criticality refresh; --move-mix F in [0, 1]
+//!       scales the annealer's macro-shift/median move probabilities,
+//!       0 = uniform swaps only).
 //!   list
 //!       List available benchmarks.
 //!   coffe
@@ -52,7 +58,8 @@ fn main() {
             eprintln!("  dduty flow --bench <name> [--variant baseline|dd5|dd6] \
                        [--seed N | --seeds a,b,c] [--no-route] [--jobs N] \
                        [--route-jobs N] [--no-disk-cache] [--cache-cap-mb N] \
-                       [--timing-route] [--sta-every K] [--crit-alpha A]");
+                       [--timing-route] [--sta-every K] [--crit-alpha A] \
+                       [--place-crit-alpha A] [--move-mix F]");
             std::process::exit(if cmd == "help" { 0 } else { 2 });
         }
     }
@@ -96,16 +103,17 @@ fn parse_sta_every(args: &[String], default: usize) -> usize {
     }
 }
 
-/// `--crit-alpha A`: criticality smoothing factor in [0, 1] for the
-/// closed timing loop.  Malformed or out-of-range values are hard errors.
-fn parse_crit_alpha(args: &[String], default: f64) -> f64 {
-    let Some(i) = args.iter().position(|a| a == "--crit-alpha") else {
+/// Unit-interval float flag (`--crit-alpha`, `--place-crit-alpha`,
+/// `--move-mix`): value must lie in [0, 1].  Malformed or out-of-range
+/// values are hard errors.
+fn parse_unit_flag(args: &[String], flag: &str, what: &str, default: f64) -> f64 {
+    let Some(i) = args.iter().position(|a| a == flag) else {
         return default;
     };
     match args.get(i + 1).map(|s| s.parse::<f64>()) {
         Some(Ok(a)) if (0.0..=1.0).contains(&a) => a,
         _ => {
-            eprintln!("--crit-alpha requires a smoothing factor in [0, 1]");
+            eprintln!("{flag} requires {what} in [0, 1]");
             std::process::exit(2);
         }
     }
@@ -206,7 +214,16 @@ fn cmd_flow(args: &[String]) {
     let route_timing_weights = args.iter().any(|a| a == "--timing-route");
     let flow_defaults = FlowOpts::default();
     let sta_every = parse_sta_every(args, flow_defaults.sta_every);
-    let crit_alpha = parse_crit_alpha(args, flow_defaults.crit_alpha);
+    let crit_alpha =
+        parse_unit_flag(args, "--crit-alpha", "a smoothing factor", flow_defaults.crit_alpha);
+    let place_crit_alpha = parse_unit_flag(
+        args,
+        "--place-crit-alpha",
+        "a smoothing factor",
+        flow_defaults.place_crit_alpha,
+    );
+    let move_mix =
+        parse_unit_flag(args, "--move-mix", "a move-mix scale", flow_defaults.move_mix);
     let jobs = parse_jobs(args);
     let route_jobs = parse_route_jobs(args);
     let cache_cap_mb = parse_cache_cap_mb(args);
@@ -227,6 +244,8 @@ fn cmd_flow(args: &[String]) {
             route_timing_weights,
             sta_every,
             crit_alpha,
+            place_crit_alpha,
+            move_mix,
             use_kernel,
             ..Default::default()
         },

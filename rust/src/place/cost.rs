@@ -1,11 +1,26 @@
-//! Placement cost model: criticality-weighted HPWL with VPR's fanout
-//! correction factor, evaluated incrementally per move.
+//! Placement cost model: two-lane criticality-aware HPWL, evaluated
+//! incrementally per move.
+//!
+//! * **Wirelength lane** — the classic VPR formulation: per net,
+//!   `weight * q(n_terms) * bbox_span` ([`net_bbox`] + [`bbox_cost`]).
+//! * **Timing lane** — a *per-sink* criticality term: each (net, sink)
+//!   connection is charged `sink_w[k] * manhattan(src, sink_k)`, where
+//!   `sink_w[k] = gain * crit_k^2` comes from the STA's per-sink
+//!   [`SinkCrit`] arena ([`NetModel::fold_sink_crit`] +
+//!   [`NetModel::set_sink_crit`]) — not the per-net max, so a net's one
+//!   critical connection pulls its endpoints together while its
+//!   slack-rich sinks keep annealing on wirelength alone.
+//!
+//! With the timing lane empty (or `gain == 0`) every cost is *bit-equal*
+//! to the wirelength-only model — the placer's all-zero-criticality
+//! determinism contract rides on that (`rust/tests/place_timing.rs`).
 
 use std::collections::HashMap;
 
 use crate::arch::device::Loc;
-use crate::netlist::{CellId, CellKind, Netlist, NetId};
+use crate::netlist::{CellId, CellKind, Netlist, NetId, NetlistIndex};
 use crate::pack::Packing;
+use crate::timing::SinkCrit;
 
 /// A placeable terminal of a net.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -19,8 +34,13 @@ pub enum Term {
 pub struct ExtNet {
     pub net: NetId,
     pub terms: Vec<Term>,
-    /// Timing weight (1 + criticality amplification).
+    /// Wirelength-lane weight (1 + criticality amplification when the
+    /// legacy per-net weighting is used; 1.0 under the per-sink lane).
     pub weight: f64,
+    /// Timing-lane weights, one per sink terminal (`terms[1..]`, same
+    /// order): `gain * crit^2` from [`NetModel::set_sink_crit`].  Empty =
+    /// lane off (pure wirelength cost).
+    pub sink_w: Vec<f64>,
 }
 
 /// VPR's crossing-count correction for multi-terminal nets.
@@ -118,7 +138,7 @@ impl NetModel {
                 }
             }
             net_index.insert(ni as NetId, idx);
-            nets.push(ExtNet { net: ni as NetId, terms, weight: 1.0 });
+            nets.push(ExtNet { net: ni as NetId, terms, weight: 1.0, sink_w: Vec::new() });
         }
 
         NetModel { nets, lb_nets, net_index, cell_lb }
@@ -128,7 +148,9 @@ impl NetModel {
         self.nets.len()
     }
 
-    /// Set timing weights: `w = 1 + 8*crit^2` (sharp criticality emphasis).
+    /// Set legacy *per-net* timing weights on the wirelength lane:
+    /// `w = 1 + 8*crit^2` (sharp criticality emphasis).  Clears the
+    /// per-sink lane — the two weighting schemes are exclusive.
     pub fn set_weights(&mut self, net_crit: &[f64], timing_driven: bool) {
         for en in &mut self.nets {
             let c = if timing_driven {
@@ -137,7 +159,82 @@ impl NetModel {
                 0.0
             };
             en.weight = 1.0 + 8.0 * c * c;
+            en.sink_w.clear();
         }
+    }
+
+    /// Set the per-sink timing lane from per-terminal criticalities (the
+    /// shape [`Self::fold_sink_crit`] produces): `sink_w[k] = gain *
+    /// crit[i][k]^2`.  The wirelength-lane weight is reset to 1.0 — under
+    /// the per-sink lane, criticality is charged per connection, not per
+    /// net.  `gain == 0` (or all-zero criticality) makes every cost
+    /// bit-equal to the wirelength-only model.
+    pub fn set_sink_crit(&mut self, crit: &[Vec<f64>], gain: f64) {
+        debug_assert_eq!(crit.len(), self.nets.len());
+        for (en, c) in self.nets.iter_mut().zip(crit.iter()) {
+            debug_assert_eq!(c.len(), en.terms.len().saturating_sub(1));
+            en.weight = 1.0;
+            en.sink_w.clear();
+            en.sink_w.extend(c.iter().map(|&x| gain * x * x));
+        }
+    }
+
+    /// Fold a per-sink STA arena onto this model's terminals: entry
+    /// `[i][k]` aligns with `nets[i].terms[k + 1]` and is the max
+    /// criticality over the netlist sinks riding that terminal (several
+    /// cells in one LB can sink the same net).  This is the shape both
+    /// [`Self::set_sink_crit`] and the router's per-sink weights
+    /// ([`crate::route::RouteOpts::sink_crit`]) consume.  Intra-LB sinks
+    /// (no routed wire) and sinks sharing the driver's terminal
+    /// contribute nothing.
+    pub fn fold_sink_crit(&self, idx: &NetlistIndex, sc: &SinkCrit) -> Vec<Vec<f64>> {
+        self.nets
+            .iter()
+            .map(|en| {
+                let sinks = &en.terms[1..];
+                let mut out = vec![0.0f64; sinks.len()];
+                // Terminal-position lookup: linear scan for typical small
+                // nets, hashed for fanout-heavy ones (this runs on every
+                // criticality refresh, and a linear scan per netlist sink
+                // would be O(fanout^2) per net).  Terminal lists are
+                // deduped by [`NetModel::build`], so the map is
+                // well-defined.
+                let by_term: Option<HashMap<Term, usize>> = if sinks.len() > 16 {
+                    Some(sinks.iter().enumerate().map(|(k, &t)| (t, k)).collect())
+                } else {
+                    None
+                };
+                for ((cell, _pin), &c) in idx.sinks(en.net).zip(sc.net(en.net).iter()) {
+                    let term = self.term_of_cell(cell).unwrap_or(Term::Io(cell));
+                    let k = match &by_term {
+                        Some(m) => m.get(&term).copied(),
+                        None => sinks.iter().position(|&t| t == term),
+                    };
+                    if let Some(k) = k {
+                        if c > out[k] {
+                            out[k] = c;
+                        }
+                    }
+                }
+                out
+            })
+            .collect()
+    }
+
+    /// Zero per-terminal criticalities in the [`Self::fold_sink_crit`]
+    /// shape — the smoothing state's starting point.
+    pub fn zero_sink_crit(&self) -> Vec<Vec<f64>> {
+        self.nets
+            .iter()
+            .map(|en| vec![0.0f64; en.terms.len().saturating_sub(1)])
+            .collect()
+    }
+
+    /// Indices (into [`Self::nets`]) of the external nets touching LB
+    /// `lb` — the median-region move's net window.
+    #[inline]
+    pub fn nets_of_lb(&self, lb: usize) -> &[usize] {
+        &self.lb_nets[lb]
     }
 
     #[inline]
@@ -153,11 +250,12 @@ impl NetModel {
         }
     }
 
-    /// Weighted HPWL of one net (single source of the cost formula:
-    /// [`net_bbox`] + [`bbox_cost`], shared with [`IncrementalCost`]).
+    /// Full cost of one net: wirelength lane + per-sink timing lane
+    /// (single source of the cost formula — [`net_bbox`] + [`bbox_cost`]
+    /// + [`timing_cost`] — shared with [`IncrementalCost`]).
     #[inline]
     pub fn net_cost(&self, en: &ExtNet, lb_loc: &[Loc], io_loc: &HashMap<CellId, Loc>) -> f64 {
-        bbox_cost(en, net_bbox(en, lb_loc, io_loc, &[]))
+        bbox_cost(en, net_bbox(en, lb_loc, io_loc, &[])) + timing_cost(en, lb_loc, io_loc, &[])
     }
 
     /// Total cost from scratch.
@@ -175,8 +273,10 @@ impl NetModel {
         let mut delta = 0.0;
         for ni in self.affected_nets(moved) {
             let en = &self.nets[ni];
-            let before = bbox_cost(en, net_bbox(en, lb_loc, io_loc, &[]));
-            let after = bbox_cost(en, net_bbox(en, lb_loc, io_loc, moved));
+            let before = bbox_cost(en, net_bbox(en, lb_loc, io_loc, &[]))
+                + timing_cost(en, lb_loc, io_loc, &[]);
+            let after = bbox_cost(en, net_bbox(en, lb_loc, io_loc, moved))
+                + timing_cost(en, lb_loc, io_loc, moved);
             delta += after - before;
         }
         delta
@@ -290,11 +390,45 @@ fn net_bbox(
     [xmin, xmax, ymin, ymax]
 }
 
-/// Weighted HPWL of a net given its bounding box.
+/// Weighted HPWL of a net given its bounding box (the wirelength lane).
 #[inline]
 fn bbox_cost(en: &ExtNet, bb: [u16; 4]) -> f64 {
     let span = (bb[1] - bb[0]) as f64 + (bb[3] - bb[2]) as f64;
     en.weight * q_factor(en.terms.len()) * span
+}
+
+/// Per-sink timing lane of a net: each sink terminal is charged its own
+/// criticality weight times the source→sink Manhattan distance, with
+/// optional pending-location overrides for moved blocks.  Exactly 0.0
+/// when the lane is off (empty `sink_w`) or every weight is zero — the
+/// bit-equality the all-zero-criticality contract needs.
+fn timing_cost(
+    en: &ExtNet,
+    lb_loc: &[Loc],
+    io_loc: &HashMap<CellId, Loc>,
+    moved: &[(usize, Loc)],
+) -> f64 {
+    if en.sink_w.is_empty() {
+        return 0.0;
+    }
+    let loc_of = |t: Term| -> Loc {
+        match t {
+            Term::Lb(i) => moved
+                .iter()
+                .find(|&&(m, _)| m == i)
+                .map(|&(_, l)| l)
+                .unwrap_or(lb_loc[i]),
+            Term::Io(c) => io_loc[&c],
+        }
+    };
+    let src = loc_of(en.terms[0]);
+    let mut t = 0.0;
+    for (&term, &w) in en.terms[1..].iter().zip(en.sink_w.iter()) {
+        if w > 0.0 {
+            t += w * src.dist(loc_of(term)) as f64;
+        }
+    }
+    t
 }
 
 /// Incrementally maintained placement cost.
@@ -313,41 +447,70 @@ fn bbox_cost(en: &ExtNet, bb: [u16; 4]) -> f64 {
 #[derive(Clone, Debug)]
 pub struct IncrementalCost {
     bbox: Vec<[u16; 4]>,
-    cost: Vec<f64>,
-    total: f64,
+    /// Wirelength-lane cost per net.
+    wl: Vec<f64>,
+    /// Per-sink timing-lane cost per net (0.0 with the lane off).
+    timing: Vec<f64>,
+    wl_total: f64,
+    timing_total: f64,
 }
 
 impl IncrementalCost {
     pub fn new(model: &NetModel, lb_loc: &[Loc], io_loc: &HashMap<CellId, Loc>) -> Self {
         let n = model.nets.len();
-        let mut ic = IncrementalCost { bbox: vec![[0; 4]; n], cost: vec![0.0; n], total: 0.0 };
+        let mut ic = IncrementalCost {
+            bbox: vec![[0; 4]; n],
+            wl: vec![0.0; n],
+            timing: vec![0.0; n],
+            wl_total: 0.0,
+            timing_total: 0.0,
+        };
         ic.refresh(model, lb_loc, io_loc);
         ic
     }
 
-    /// Current total weighted HPWL.
+    /// Current total cost (wirelength lane + timing lane).
     #[inline]
     pub fn total(&self) -> f64 {
-        self.total
+        self.wl_total + self.timing_total
+    }
+
+    /// Current wirelength-lane total alone — what the PJRT kernel's
+    /// bbox-based wHPWL is comparable to (the kernel never sees the
+    /// per-sink timing lane).
+    #[inline]
+    pub fn wl_total(&self) -> f64 {
+        self.wl_total
+    }
+
+    /// Cached bounding box of net `ni`.
+    #[inline]
+    pub fn bbox(&self, ni: usize) -> [u16; 4] {
+        self.bbox[ni]
     }
 
     /// Recompute every net from scratch; returns the new total.  Needed
-    /// after [`NetModel::set_weights`] (cached costs embed the weights).
+    /// after [`NetModel::set_weights`] / [`NetModel::set_sink_crit`]
+    /// (cached costs embed the weights).
     pub fn refresh(
         &mut self,
         model: &NetModel,
         lb_loc: &[Loc],
         io_loc: &HashMap<CellId, Loc>,
     ) -> f64 {
-        self.total = 0.0;
+        self.wl_total = 0.0;
+        self.timing_total = 0.0;
         for (ni, en) in model.nets.iter().enumerate() {
             let bb = net_bbox(en, lb_loc, io_loc, &[]);
-            let c = bbox_cost(en, bb);
+            let w = bbox_cost(en, bb);
+            let t = timing_cost(en, lb_loc, io_loc, &[]);
             self.bbox[ni] = bb;
-            self.cost[ni] = c;
-            self.total += c;
+            self.wl[ni] = w;
+            self.timing[ni] = t;
+            self.wl_total += w;
+            self.timing_total += t;
         }
-        self.total
+        self.total()
     }
 
     /// Cost delta if `moved` blocks relocate (positions not yet applied):
@@ -362,7 +525,9 @@ impl IncrementalCost {
         let mut delta = 0.0;
         for ni in model.affected_nets(moved) {
             let en = &model.nets[ni];
-            delta += bbox_cost(en, net_bbox(en, lb_loc, io_loc, moved)) - self.cost[ni];
+            let new = bbox_cost(en, net_bbox(en, lb_loc, io_loc, moved))
+                + timing_cost(en, lb_loc, io_loc, moved);
+            delta += new - (self.wl[ni] + self.timing[ni]);
         }
         delta
     }
@@ -380,10 +545,13 @@ impl IncrementalCost {
         for ni in model.affected_nets(moved) {
             let en = &model.nets[ni];
             let bb = net_bbox(en, lb_loc, io_loc, &[]);
-            let c = bbox_cost(en, bb);
-            self.total += c - self.cost[ni];
+            let w = bbox_cost(en, bb);
+            let t = timing_cost(en, lb_loc, io_loc, &[]);
+            self.wl_total += w - self.wl[ni];
+            self.timing_total += t - self.timing[ni];
             self.bbox[ni] = bb;
-            self.cost[ni] = c;
+            self.wl[ni] = w;
+            self.timing[ni] = t;
         }
     }
 
@@ -537,6 +705,96 @@ mod tests {
         // refresh() lands on the exact scratch sum.
         let refreshed = inc.refresh(&m, &lb_loc, &io_loc);
         assert_eq!(refreshed, scratch);
+    }
+
+    /// Synthetic per-terminal criticalities in the
+    /// [`NetModel::fold_sink_crit`] shape, varied per (net, sink).
+    fn synth_sink_crit(m: &NetModel) -> Vec<Vec<f64>> {
+        m.nets
+            .iter()
+            .enumerate()
+            .map(|(i, en)| {
+                (0..en.terms.len().saturating_sub(1))
+                    .map(|k| (((i * 7 + k * 3) % 10) as f64) / 10.0)
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// The per-sink lane at zero gain — or with all-zero criticality — is
+    /// *bit-equal* to the wirelength-only model (the placer's all-zero
+    /// determinism contract).
+    #[test]
+    fn zero_sink_lane_is_wirelength_only_bitwise() {
+        let (mut m, n_lbs) = model();
+        let lb_loc: Vec<Loc> = (0..n_lbs)
+            .map(|i| Loc::new((i % 5 + 1) as u16, (i / 5 + 1) as u16))
+            .collect();
+        let mut io_loc = HashMap::new();
+        for en in &m.nets {
+            for &t in &en.terms {
+                if let Term::Io(c) = t {
+                    io_loc.insert(c, Loc::new(0, (c % 7 + 1) as u16));
+                }
+            }
+        }
+        m.set_weights(&[], false);
+        let base = m.full_cost(&lb_loc, &io_loc);
+        // Real criticalities, zero gain.
+        m.set_sink_crit(&synth_sink_crit(&m), 0.0);
+        assert_eq!(m.full_cost(&lb_loc, &io_loc).to_bits(), base.to_bits());
+        // Zero criticalities, real gain.
+        m.set_sink_crit(&m.zero_sink_crit(), 8.0);
+        assert_eq!(m.full_cost(&lb_loc, &io_loc).to_bits(), base.to_bits());
+        // And the incremental cache agrees lane-by-lane.
+        let inc = IncrementalCost::new(&m, &lb_loc, &io_loc);
+        assert_eq!(inc.total().to_bits(), base.to_bits());
+        assert_eq!(inc.wl_total().to_bits(), base.to_bits());
+    }
+
+    /// With the per-sink lane on, the incremental cache still tracks the
+    /// from-scratch recompute through a long random move sequence.
+    #[test]
+    fn incremental_tracks_scratch_with_sink_lane() {
+        let (mut m, n_lbs) = model();
+        if n_lbs == 0 {
+            return;
+        }
+        let crit = synth_sink_crit(&m);
+        m.set_sink_crit(&crit, 8.0);
+        let mut lb_loc: Vec<Loc> = (0..n_lbs)
+            .map(|i| Loc::new((i % 5 + 1) as u16, (i / 5 + 1) as u16))
+            .collect();
+        let mut io_loc = HashMap::new();
+        for en in &m.nets {
+            for &t in &en.terms {
+                if let Term::Io(c) = t {
+                    io_loc.insert(c, Loc::new(0, (c % 7 + 1) as u16));
+                }
+            }
+        }
+        let mut inc = IncrementalCost::new(&m, &lb_loc, &io_loc);
+        // The lane is actually live: timing adds cost over the wl lane.
+        assert!(inc.total() > inc.wl_total(), "timing lane contributed nothing");
+        let mut rng = crate::util::Rng::new(7);
+        let mut predicted = inc.total();
+        for step in 0..4_000 {
+            let lb = rng.below(n_lbs);
+            let to = Loc::new(rng.below(9) as u16 + 1, rng.below(9) as u16 + 1);
+            let moved = [(lb, to)];
+            let delta = inc.move_delta(&m, &lb_loc, &io_loc, &moved);
+            lb_loc[lb] = to;
+            inc.apply_move(&m, &lb_loc, &io_loc, &moved);
+            predicted += delta;
+            if step % 500 == 0 {
+                let scratch = m.full_cost(&lb_loc, &io_loc);
+                let tol = 1e-6 * scratch.abs().max(1.0);
+                assert!((inc.total() - scratch).abs() < tol,
+                        "step {step}: incremental {} vs scratch {scratch}", inc.total());
+                assert!((predicted - scratch).abs() < tol,
+                        "step {step}: summed deltas {predicted} vs scratch {scratch}");
+            }
+        }
     }
 
     #[test]

@@ -101,7 +101,8 @@ mod tests {
         let arch = Arch::paper(ArchVariant::Baseline);
         let packing = pack(&nl, &arch, &PackOpts::default());
         let pl = place(&nl, &packing, &arch,
-                       &PlaceOpts { effort: 0.2, timing_driven: false, ..Default::default() });
+                       &PlaceOpts { effort: 0.2, timing_driven: false, ..Default::default() })
+            .expect("placement");
 
         let mut model = NetModel::build(&nl, &packing);
         model.set_weights(&[], false);

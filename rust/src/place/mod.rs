@@ -1,15 +1,50 @@
 //! Timing-driven simulated-annealing placement (the VPR substitute).
 //!
 //! Blocks are packed LBs plus I/O pads; carry chains spanning multiple LBs
-//! are vertical macros that move as units.  Cost is criticality-weighted
-//! HPWL (the classic VPR formulation); criticalities refresh from STA
-//! periodically.  Moves flow through a batched proposal pipeline —
-//! randomness is drawn per batch, then each candidate is scored against
-//! the incremental per-net bounding-box cost cache
-//! ([`cost::IncrementalCost`]) and committed in order.  The batched
-//! full-cost + congestion evaluation runs through the AOT-compiled
-//! JAX/Pallas kernel via PJRT ([`kernel_accel`]), fed straight from the
-//! cached boxes — python never executes at placement time.
+//! are vertical macros that move as units.  Cost is the two-lane model of
+//! [`cost`]: criticality-weighted HPWL plus a *per-sink* timing lane in
+//! which every (net, sink) connection is weighted by its own smoothed
+//! `1 - slack/cpd` from the STA's [`crate::timing::SinkCrit`] arena —
+//! the placer consumes the same per-sink criticality subsystem as the
+//! closed-loop router, refreshed periodically during annealing with
+//! exponential smoothing `crit' = α·new + (1-α)·old`
+//! ([`PlaceOpts::crit_alpha`], the `--place-crit-alpha` CLI knob) and
+//! optionally re-normalized against the routed CPD a previous seed
+//! actually achieved ([`PlaceOpts::cpd_prior_ps`] — the cross-seed
+//! place↔route feedback the flow engine drives).
+//!
+//! ## Move-type diversity
+//!
+//! Moves flow through a batched proposal pipeline — randomness is drawn
+//! per batch, then each candidate is scored against the incremental
+//! per-net cost cache ([`cost::IncrementalCost`]) and committed in order,
+//! so the result is a pure function of the seed.  Three proposal kinds
+//! mix on a temperature schedule ([`MoveKind`], counts reported in
+//! [`Placement::move_stats`]):
+//!
+//! * **uniform** — the classic random swap/displace within the range
+//!   limit,
+//! * **macro column shift** — a chain macro slides vertically within its
+//!   own column (chains are column-locked, so uniform swaps rarely
+//!   propose useful macro moves once the range limit shrinks),
+//! * **median region** — a block jumps near the median of its connected
+//!   nets' cached bounding boxes (VPR's median move), increasingly
+//!   favored as the anneal cools and local refinement dominates.
+//!
+//! The batched full-cost + congestion evaluation runs through the
+//! AOT-compiled JAX/Pallas kernel via PJRT ([`kernel_accel`]), fed
+//! straight from the cached boxes — python never executes at placement
+//! time; the kernel validates the wirelength lane
+//! ([`cost::IncrementalCost::wl_total`]).
+//!
+//! ## Device-sizing contract
+//!
+//! A caller-fixed [`PlaceOpts::device`] is a hard constraint: if the
+//! design does not fit — too few LB slots or I/O sites, or a chain macro
+//! taller than the grid — [`place`] returns an error instead of silently
+//! growing the device (Table-IV-style fixed-device stress runs must never
+//! quietly measure a larger grid).  Auto-sizing (`device: None`) still
+//! grows the grid until the tallest macro fits.
 
 pub mod cost;
 pub mod kernel_accel;
@@ -18,9 +53,10 @@ use std::collections::HashMap;
 
 use crate::arch::device::{Device, Loc};
 use crate::arch::Arch;
-use crate::netlist::{CellId, Netlist, NetId};
+use crate::netlist::{CellId, NetId, Netlist, NetlistIndex, PackIndex};
 use crate::pack::Packing;
 use crate::timing;
+use crate::util::error::Result;
 use crate::util::Rng;
 
 pub use cost::{IncrementalCost, NetModel, PlacementCost};
@@ -33,10 +69,31 @@ pub struct Placement {
     pub lb_loc: Vec<Loc>,
     /// Location of each I/O cell.
     pub io_loc: HashMap<CellId, Loc>,
-    /// Final placement cost (weighted HPWL).
+    /// Final placement cost (weighted HPWL + per-sink timing lane).
     pub cost: f64,
     /// Post-placement estimated critical path (ps).
     pub est_cpd_ps: f64,
+    /// Per-kind proposal/acceptance counts of the annealing run.
+    pub move_stats: MoveStats,
+}
+
+/// Annealing move kinds (see module docs).  The discriminants index
+/// [`MoveStats`] arrays.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MoveKind {
+    Uniform = 0,
+    MacroShift = 1,
+    Median = 2,
+}
+
+/// Number of [`MoveKind`] variants.
+pub const NUM_MOVE_KINDS: usize = 3;
+
+/// Per-kind move counters, indexed by `MoveKind as usize`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MoveStats {
+    pub proposed: [usize; NUM_MOVE_KINDS],
+    pub accepted: [usize; NUM_MOVE_KINDS],
 }
 
 /// Placer options.
@@ -45,12 +102,36 @@ pub struct PlaceOpts {
     pub seed: u64,
     /// Moves per temperature = `effort * blocks^(4/3)` (VPR's inner_num).
     pub effort: f64,
-    /// Timing-driven (criticality-weighted) vs pure wirelength.
+    /// Timing-driven (per-sink criticality lane) vs pure wirelength.
     pub timing_driven: bool,
+    /// Exponential smoothing factor α for the periodic criticality
+    /// refresh (`--place-crit-alpha`): `crit' = α·new + (1-α)·old`,
+    /// matching the closed-loop router's recurrence.
+    pub crit_alpha: f64,
+    /// Timing-lane gain g: each (net, sink) connection is charged
+    /// `g * crit^2 * dist`.  `0.0` reduces the timing-driven placer to
+    /// the wirelength-only one bit-for-bit (the determinism suite pins
+    /// this).
+    pub crit_gain: f64,
+    /// Move-type mix scale in [0, 1]: scales the temperature-scheduled
+    /// macro-shift and median-move probabilities; `0.0` proposes uniform
+    /// swaps only (the pre-diversity pipeline).
+    pub move_mix: f64,
+    /// Achieved routed CPD (ps) from a previous seed, fed back by the
+    /// flow engine: criticalities are re-normalized against it
+    /// ([`crate::timing::rescale_crit`]) so placement optimizes toward
+    /// the CPD routing will actually see.  `None` uses the pre-route
+    /// estimate alone.
+    pub cpd_prior_ps: Option<f64>,
+    /// Worker threads for the placer's periodic STA refreshes (the report
+    /// is bit-identical for any value, so this never perturbs placement).
+    pub sta_jobs: usize,
     /// Evaluate the full cost + congestion map through the PJRT kernel at
     /// each temperature (validated against the incremental Rust cost).
     pub use_kernel: bool,
     /// Fix the device size (Table IV stress tests); `None` auto-sizes.
+    /// A fixed device that cannot fit the design is an error — see the
+    /// module docs.
     pub device: Option<Device>,
 }
 
@@ -60,6 +141,11 @@ impl Default for PlaceOpts {
             seed: 1,
             effort: 1.0,
             timing_driven: true,
+            crit_alpha: 0.5,
+            crit_gain: 8.0,
+            move_mix: 1.0,
+            cpd_prior_ps: None,
+            sta_jobs: 1,
             use_kernel: false,
             device: None,
         }
@@ -76,12 +162,59 @@ pub fn est_net_delay(arch: &Arch, src: Loc, dst: Loc) -> f64 {
     arch.delays.conn_block + segs * arch.delays.wire_segment
 }
 
-/// Place a packed design.
-pub fn place(nl: &Netlist, packing: &Packing, arch: &Arch, opts: &PlaceOpts) -> Placement {
+/// Greedy column-major vertical-window assignment for the multi-LB chain
+/// macros of `packing` on `device` — the placer's initial-placement rule,
+/// exposed so fixed-device callers (Table IV's stress loop) can pre-check
+/// the fourth fit dimension, window availability, alongside LB/IO
+/// capacity and macro height.  Entry `k` is the `(column, first row)` of
+/// the `k`-th chain macro spanning more than one LB, in
+/// `Packing::chain_macros` order; `None` when some macro finds no free
+/// window.
+pub fn macro_windows(packing: &Packing, device: &Device) -> Option<Vec<(u16, u16)>> {
+    let mut col_fill: Vec<u16> = vec![1; device.lb_cols as usize + 1]; // next free y per col
+    let mut out = Vec::new();
+    for m in packing.chain_macros.iter().filter(|m| m.len() > 1) {
+        let len = m.len() as u16;
+        let mut placed = None;
+        for x in 1..=device.lb_cols {
+            let y0 = col_fill[x as usize];
+            if y0 + len - 1 <= device.lb_rows {
+                col_fill[x as usize] = y0 + len;
+                placed = Some((x, y0));
+                break;
+            }
+        }
+        out.push(placed?);
+    }
+    Some(out)
+}
+
+/// Place a packed design.  Builds the dense index arenas itself; hot
+/// callers that already share them per (netlist, packing) — the flow
+/// engine's seed jobs — use [`place_with`].
+pub fn place(nl: &Netlist, packing: &Packing, arch: &Arch, opts: &PlaceOpts) -> Result<Placement> {
+    let idx = NetlistIndex::build(nl);
+    let pidx = PackIndex::build(nl, packing);
+    place_with(nl, packing, arch, opts, &idx, &pidx)
+}
+
+/// [`place`] over prebuilt index arenas (shared read-only across seeds by
+/// the flow engine, like packings).  Deterministic in (inputs, seed);
+/// bit-identical for any [`PlaceOpts::sta_jobs`].
+pub fn place_with(
+    nl: &Netlist,
+    packing: &Packing,
+    arch: &Arch,
+    opts: &PlaceOpts,
+    idx: &NetlistIndex,
+    pidx: &PackIndex,
+) -> Result<Placement> {
     let mut rng = Rng::new(opts.seed);
 
     // --- Device sizing. ----------------------------------------------------
-    // Tallest chain macro constrains the minimum grid height.
+    // Tallest chain macro constrains the minimum grid height.  A fixed
+    // device is a contract: misfits error out (module docs); only the
+    // auto-sized path may grow the grid.
     let max_macro = packing
         .chain_macros
         .iter()
@@ -89,19 +222,37 @@ pub fn place(nl: &Netlist, packing: &Packing, arch: &Arch, opts: &PlaceOpts) -> 
         .max()
         .unwrap_or(1)
         .max(1);
-    let mut device = opts.device.clone().unwrap_or_else(|| {
-        Device::auto_size(packing.lbs.len(), packing.ios.len(), 1.15)
-    });
-    while (device.lb_rows as usize) < max_macro {
-        device = Device::new(device.lb_cols + 1, device.lb_rows + 1);
-    }
-    assert!(
-        device.lb_capacity() >= packing.lbs.len(),
-        "device too small: {} LBs for {} slots",
-        packing.lbs.len(),
-        device.lb_capacity()
-    );
-    assert!(device.io_capacity() >= packing.ios.len(), "not enough I/O sites");
+    let device = match &opts.device {
+        Some(d) => {
+            crate::ensure!(
+                (d.lb_rows as usize) >= max_macro,
+                "fixed device {}x{} cannot host a {max_macro}-LB chain macro \
+                 (needs lb_rows >= {max_macro})",
+                d.lb_cols,
+                d.lb_rows
+            );
+            crate::ensure!(
+                d.lb_capacity() >= packing.lbs.len(),
+                "fixed device too small: {} LB slots for {} LBs",
+                d.lb_capacity(),
+                packing.lbs.len()
+            );
+            crate::ensure!(
+                d.io_capacity() >= packing.ios.len(),
+                "fixed device has {} I/O sites for {} I/Os",
+                d.io_capacity(),
+                packing.ios.len()
+            );
+            d.clone()
+        }
+        None => {
+            let mut d = Device::auto_size(packing.lbs.len(), packing.ios.len(), 1.15);
+            while (d.lb_rows as usize) < max_macro {
+                d = Device::new(d.lb_cols + 1, d.lb_rows + 1);
+            }
+            d
+        }
+    };
 
     // --- Macro identification. ---------------------------------------------
     // lb -> macro id; macros are vertically-consecutive LB lists.
@@ -125,25 +276,21 @@ pub fn place(nl: &Netlist, packing: &Packing, arch: &Arch, opts: &PlaceOpts) -> 
     let mut grid: HashMap<Loc, usize> = HashMap::new(); // loc -> lb index
     let mut lb_loc: Vec<Loc> = vec![Loc::new(0, 0); packing.lbs.len()];
     let lb_locs = device.lb_locs();
-    // Macros first: place each in a free vertical window, column-major scan.
-    let mut col_fill: Vec<u16> = vec![1; device.lb_cols as usize + 1]; // next free y per col
-    for m in &macros {
-        let len = m.len() as u16;
-        let mut placed = false;
-        for x in 1..=device.lb_cols {
-            let y0 = col_fill[x as usize];
-            if y0 + len - 1 <= device.lb_rows {
-                for (i, &lb) in m.iter().enumerate() {
-                    let loc = Loc::new(x, y0 + i as u16);
-                    grid.insert(loc, lb);
-                    lb_loc[lb] = loc;
-                }
-                col_fill[x as usize] = y0 + len;
-                placed = true;
-                break;
-            }
+    // Macros first: each into a free vertical window ([`macro_windows`] —
+    // the same rule fixed-device callers pre-check fit with).
+    let Some(windows) = macro_windows(packing, &device) else {
+        crate::bail!(
+            "no vertical window for every chain macro on device {}x{}",
+            device.lb_cols,
+            device.lb_rows
+        );
+    };
+    for (m, &(x, y0)) in macros.iter().zip(windows.iter()) {
+        for (i, &lb) in m.iter().enumerate() {
+            let loc = Loc::new(x, y0 + i as u16);
+            grid.insert(loc, lb);
+            lb_loc[lb] = loc;
         }
-        assert!(placed, "no vertical window for chain macro of {} LBs", m.len());
     }
     // Singles into remaining slots.
     let mut free: Vec<Loc> = lb_locs
@@ -186,19 +333,29 @@ pub fn place(nl: &Netlist, packing: &Packing, arch: &Arch, opts: &PlaceOpts) -> 
 
     // --- Net model. -----------------------------------------------------------
     // STA runs repeatedly during annealing (initial, every 4th temperature,
-    // final); build the dense netlist/packing indexes once and share them
-    // across every call instead of paying per-call HashMap rebuilds.
-    let nl_index = crate::netlist::NetlistIndex::build(nl);
-    let pack_index = crate::netlist::PackIndex::build(nl, packing);
+    // final) over the shared dense index arenas — built once per
+    // (netlist, packing) by the caller (or by [`place`]) instead of per
+    // call, and shared read-only across seeds by the flow engine.
+    let sta_jobs = opts.sta_jobs.max(1);
     let mut model = cost::NetModel::build(nl, packing);
-    let mut crit = vec![0.0f64; nl.nets.len()];
+    // Smoothed per-terminal criticality state (the per-sink lane's α
+    // recurrence runs over this, mirroring the router's).
+    let mut sink_state: Vec<Vec<f64>> = Vec::new();
     if opts.timing_driven {
-        let rpt = timing::sta_with(nl, &nl_index, &pack_index, packing, arch,
-                                   |_, _, _| arch.delays.wire_segment * 2.0, 1);
-        crit = rpt.net_crit;
+        let rpt = timing::sta_with(
+            nl,
+            idx,
+            pidx,
+            packing,
+            arch,
+            |_, _, _| arch.delays.wire_segment * 2.0,
+            sta_jobs,
+        );
+        sink_state = model.fold_sink_crit(idx, &rpt.sink_crit);
+        timing::rescale_crit(&mut sink_state, rpt.cpd_ps, opts.cpd_prior_ps);
+        model.set_sink_crit(&sink_state, opts.crit_gain);
     }
-    model.set_weights(&crit, opts.timing_driven);
-    // Incremental cost cache: per-net bbox + weighted cost, refreshed per
+    // Incremental cost cache: per-net bbox + two-lane cost, refreshed per
     // temperature (after weight updates) and updated per accepted move.
     let mut inc = cost::IncrementalCost::new(&model, &lb_loc, &io_loc);
 
@@ -213,13 +370,14 @@ pub fn place(nl: &Netlist, packing: &Packing, arch: &Arch, opts: &PlaceOpts) -> 
     let n_blocks = packing.lbs.len().max(2);
     let n_lb = lb_loc.len();
     let moves_per_t = ((opts.effort * (n_blocks as f64).powf(4.0 / 3.0)) as usize).max(64);
-    // Initial temperature: 20x the std-dev of random move deltas.
+    // Initial temperature: 20x the std-dev of random move deltas (uniform
+    // probes only — they are not counted in the move stats).
     let mut t = {
         let mut deltas = Vec::with_capacity(64);
         if n_lb >= 2 {
             let rmax = device.lb_cols.max(device.lb_rows);
             for _ in 0..64 {
-                let p = propose_move(&mut rng, n_lb, rmax);
+                let p = propose_move(&mut rng, n_lb, rmax, 0.0, 0.0, &macros);
                 if let Some(dc) = apply_proposal(&p, &device, &mut grid, &mut lb_loc,
                                                  &lb_macro, &macros, &model, &mut inc,
                                                  &io_loc, f64::INFINITY)
@@ -231,9 +389,11 @@ pub fn place(nl: &Netlist, packing: &Packing, arch: &Arch, opts: &PlaceOpts) -> 
         let m = crate::util::stats::mean(&deltas);
         (20.0 * m).max(1.0)
     };
+    let t0 = t;
     let mut rlim = device.lb_cols.max(device.lb_rows);
     let mut temp_idx = 0usize;
     let t_min = 0.005 * inc.total().max(1.0) / model.num_nets().max(1) as f64;
+    let mut move_stats = MoveStats::default();
 
     // Batched move-proposal pipeline: each batch draws all its randomness
     // up front, then evaluates the candidates against the incremental cost
@@ -246,20 +406,35 @@ pub fn place(nl: &Netlist, packing: &Packing, arch: &Arch, opts: &PlaceOpts) -> 
     let mut batch: Vec<MoveProposal> = Vec::with_capacity(MOVE_BATCH);
 
     while t > t_min {
+        // Temperature-scheduled move mix: `cold` sweeps 0 -> 1 over the
+        // anneal (log scale, matching the multiplicative cooling), so
+        // exploration starts on uniform swaps and shifts toward targeted
+        // median / macro moves as local refinement starts to dominate.
+        let mix = opts.move_mix.clamp(0.0, 1.0);
+        let cold = if t0 > t_min && t > 0.0 {
+            ((t0 / t).ln() / (t0 / t_min).ln()).clamp(0.0, 1.0)
+        } else {
+            1.0
+        };
+        let p_macro = if macros.is_empty() { 0.0 } else { 0.10 * mix };
+        let p_median = mix * (0.05 + 0.35 * cold);
+
         let mut accepted = 0usize;
         let mut done = 0usize;
         while done < moves_per_t && n_lb >= 2 {
             let take = MOVE_BATCH.min(moves_per_t - done);
             batch.clear();
             for _ in 0..take {
-                batch.push(propose_move(&mut rng, n_lb, rlim));
+                batch.push(propose_move(&mut rng, n_lb, rlim, p_macro, p_median, &macros));
             }
             for p in &batch {
+                move_stats.proposed[p.kind as usize] += 1;
                 if apply_proposal(p, &device, &mut grid, &mut lb_loc, &lb_macro,
                                   &macros, &model, &mut inc, &io_loc, t)
                     .is_some()
                 {
                     accepted += 1;
+                    move_stats.accepted[p.kind as usize] += 1;
                 }
             }
             done += take;
@@ -274,37 +449,49 @@ pub fn place(nl: &Netlist, packing: &Packing, arch: &Arch, opts: &PlaceOpts) -> 
         let r = accepted as f64 / moves_per_t as f64;
         let new_rlim = (rlim as f64 * (1.0 - 0.44 + r)).clamp(1.0, device.lb_cols.max(device.lb_rows) as f64);
         rlim = new_rlim.round() as u16;
-        // Refresh criticalities + rebuild the cost cache (weights feed the
-        // cached per-net costs, and the re-sum caps f64 drift).  STA is the
-        // placer's most expensive periodic step; every 4th temperature
-        // tracks criticality closely enough (perf pass, EXPERIMENTS.md §Perf).
+        // Refresh per-sink criticalities + rebuild the cost cache (weights
+        // feed the cached per-net costs, and the re-sum caps f64 drift).
+        // STA is the placer's most expensive periodic step; every 4th
+        // temperature tracks criticality closely enough (perf pass,
+        // EXPERIMENTS.md §Perf).  The refresh folds in with the α
+        // recurrence, so one noisy estimate cannot whipsaw the weights.
         temp_idx += 1;
         if opts.timing_driven && temp_idx % 4 == 0 {
-            let rpt = timing::sta_with(nl, &nl_index, &pack_index, packing, arch,
+            let rpt = timing::sta_with(nl, idx, pidx, packing, arch,
                                        |net, sink, _| {
                 net_endpoint_delay(&model, &lb_loc, &io_loc, arch, net, sink)
-            }, 1);
-            model.set_weights(&rpt.net_crit, true);
+            }, sta_jobs);
+            let mut fresh = model.fold_sink_crit(idx, &rpt.sink_crit);
+            timing::rescale_crit(&mut fresh, rpt.cpd_ps, opts.cpd_prior_ps);
+            let a = opts.crit_alpha.clamp(0.0, 1.0);
+            for (cur, new) in sink_state.iter_mut().zip(fresh.iter()) {
+                for (cv, &nv) in cur.iter_mut().zip(new.iter()) {
+                    *cv = a * nv + (1.0 - a) * *cv;
+                }
+            }
+            model.set_sink_crit(&sink_state, opts.crit_gain);
         }
-        let cur_cost = inc.refresh(&model, &lb_loc, &io_loc);
+        inc.refresh(&model, &lb_loc, &io_loc);
         // Kernel-evaluated full cost from the cached boxes: consistency
-        // check + congestion signal.
+        // check on the wirelength lane (the kernel never sees the
+        // per-sink timing lane) + congestion signal.
         if let Some(k) = kernel.as_mut() {
             if let Ok(kc) = k.evaluate_cached(&model, &inc, &device) {
-                // Within float tolerance of the Rust cost.
-                debug_assert!((kc.whpwl - cur_cost).abs() <= 1e-3 * cur_cost.max(1.0) + 1.0,
-                              "kernel {} vs rust {}", kc.whpwl, cur_cost);
+                // Within float tolerance of the Rust wirelength cost.
+                let wl = inc.wl_total();
+                debug_assert!((kc.whpwl - wl).abs() <= 1e-3 * wl.max(1.0) + 1.0,
+                              "kernel {} vs rust {}", kc.whpwl, wl);
             }
         }
     }
 
     // Final STA with placed delays.
-    let rpt = timing::sta_with(nl, &nl_index, &pack_index, packing, arch, |net, sink, _| {
+    let rpt = timing::sta_with(nl, idx, pidx, packing, arch, |net, sink, _| {
         net_endpoint_delay(&model, &lb_loc, &io_loc, arch, net, sink)
-    }, 1);
+    }, sta_jobs);
 
     let cost = inc.refresh(&model, &lb_loc, &io_loc);
-    Placement { device, lb_loc, io_loc, cost, est_cpd_ps: rpt.cpd_ps }
+    Ok(Placement { device, lb_loc, io_loc, cost, est_cpd_ps: rpt.cpd_ps, move_stats })
 }
 
 /// Estimated interconnect delay for one net sink given current locations.
@@ -322,24 +509,62 @@ pub fn net_endpoint_delay(
     est_net_delay(arch, src, dst)
 }
 
-/// One pre-drawn SA move candidate: a block pick, a displacement, and the
+/// One pre-drawn SA move candidate: a kind, a block pick, a displacement
+/// (or, for median moves, a jitter around the computed target), and the
 /// Metropolis uniform.  All randomness is drawn at proposal time so
 /// evaluation/commit is a deterministic pipeline over the batch.
 #[derive(Clone, Copy, Debug)]
 struct MoveProposal {
+    kind: MoveKind,
     block: usize,
     dx: i32,
     dy: i32,
     accept_draw: f64,
 }
 
-/// Draw one move proposal within range limit `rlim`.
-fn propose_move(rng: &mut Rng, n_blocks: usize, rlim: u16) -> MoveProposal {
-    MoveProposal {
-        block: rng.below(n_blocks),
-        dx: rng.range(-(rlim as i64), rlim as i64) as i32,
-        dy: rng.range(-(rlim as i64), rlim as i64) as i32,
-        accept_draw: rng.f64(),
+/// Draw one move proposal within range limit `rlim`.  `p_macro` /
+/// `p_median` are the scheduled probabilities of the diverse kinds (both
+/// 0.0 reproduces the uniform-only pipeline; the kind draw is still
+/// consumed, keeping the RNG stream independent of the mix outcome).
+fn propose_move(
+    rng: &mut Rng,
+    n_blocks: usize,
+    rlim: u16,
+    p_macro: f64,
+    p_median: f64,
+    macros: &[Vec<usize>],
+) -> MoveProposal {
+    let kind_draw = rng.f64();
+    if kind_draw < p_macro && !macros.is_empty() {
+        // Shift one macro within its column: pick the macro directly (a
+        // uniform block pick almost never lands on one) and displace
+        // vertically only.
+        let block = macros[rng.below(macros.len())][0];
+        MoveProposal {
+            kind: MoveKind::MacroShift,
+            block,
+            dx: 0,
+            dy: rng.range(-(rlim as i64), rlim as i64) as i32,
+            accept_draw: rng.f64(),
+        }
+    } else if kind_draw < p_macro + p_median {
+        // Median-region move: dx/dy are jitter around the target computed
+        // at evaluation time from the cached net boxes.
+        MoveProposal {
+            kind: MoveKind::Median,
+            block: rng.below(n_blocks),
+            dx: rng.range(-1, 1) as i32,
+            dy: rng.range(-1, 1) as i32,
+            accept_draw: rng.f64(),
+        }
+    } else {
+        MoveProposal {
+            kind: MoveKind::Uniform,
+            block: rng.below(n_blocks),
+            dx: rng.range(-(rlim as i64), rlim as i64) as i32,
+            dy: rng.range(-(rlim as i64), rlim as i64) as i32,
+            accept_draw: rng.f64(),
+        }
     }
 }
 
@@ -349,10 +574,73 @@ fn accepts(p: &MoveProposal, delta: f64, t: f64) -> bool {
     delta <= 0.0 || (t > 0.0 && p.accept_draw < (-delta / t).exp())
 }
 
-/// Evaluate and (maybe) commit one proposal: resolve the target window for
-/// the picked block (macro or single LB), score the affected nets against
-/// the incremental cost cache, accept by Metropolis, and on acceptance
-/// update grid/locations and the cache. Returns the accepted cost delta.
+/// Median-region target for `block`: the median of its connected nets'
+/// bounding-box edges computed *excluding the block itself* (as in VPR's
+/// median move — including it would bias every net's box toward the
+/// block's current location, collapsing the move into a no-op on
+/// low-fanout nets), plus the proposal's jitter, clamped into the logic
+/// grid.  `None` when no connected net has another terminal (nothing
+/// pulls the block anywhere).
+fn median_target(
+    model: &cost::NetModel,
+    lb_loc: &[Loc],
+    io_loc: &HashMap<CellId, Loc>,
+    block: usize,
+    device: &Device,
+    jx: i32,
+    jy: i32,
+) -> Option<Loc> {
+    let nets = model.nets_of_lb(block);
+    if nets.is_empty() {
+        return None;
+    }
+    let mut xs: Vec<u16> = Vec::with_capacity(nets.len() * 2);
+    let mut ys: Vec<u16> = Vec::with_capacity(nets.len() * 2);
+    for &ni in nets {
+        let en = &model.nets[ni];
+        let mut xmin = u16::MAX;
+        let mut xmax = 0u16;
+        let mut ymin = u16::MAX;
+        let mut ymax = 0u16;
+        let mut any = false;
+        for &t in &en.terms {
+            let l = match t {
+                cost::Term::Lb(i) => {
+                    if i == block {
+                        continue;
+                    }
+                    lb_loc[i]
+                }
+                cost::Term::Io(c) => io_loc[&c],
+            };
+            xmin = xmin.min(l.x);
+            xmax = xmax.max(l.x);
+            ymin = ymin.min(l.y);
+            ymax = ymax.max(l.y);
+            any = true;
+        }
+        if any {
+            xs.push(xmin);
+            xs.push(xmax);
+            ys.push(ymin);
+            ys.push(ymax);
+        }
+    }
+    if xs.is_empty() {
+        return None;
+    }
+    xs.sort_unstable();
+    ys.sort_unstable();
+    let tx = (xs[xs.len() / 2] as i32 + jx).clamp(1, device.lb_cols as i32) as u16;
+    let ty = (ys[ys.len() / 2] as i32 + jy).clamp(1, device.lb_rows as i32) as u16;
+    Some(Loc::new(tx, ty))
+}
+
+/// Evaluate and (maybe) commit one proposal: resolve the proposal kind
+/// into a displacement, resolve the target window for the picked block
+/// (macro or single LB), score the affected nets against the incremental
+/// cost cache, accept by Metropolis, and on acceptance update
+/// grid/locations and the cache. Returns the accepted cost delta.
 #[allow(clippy::too_many_arguments)]
 fn apply_proposal(
     p: &MoveProposal,
@@ -372,7 +660,16 @@ fn apply_proposal(
     }
     let a = p.block;
     let a_loc = lb_loc[a];
-    let (dx, dy) = (p.dx, p.dy);
+    let (dx, dy) = match p.kind {
+        MoveKind::Uniform | MoveKind::MacroShift => (p.dx, p.dy),
+        MoveKind::Median => {
+            let target = median_target(model, lb_loc, io_loc, a, device, p.dx, p.dy)?;
+            (
+                target.x as i32 - a_loc.x as i32,
+                target.y as i32 - a_loc.y as i32,
+            )
+        }
+    };
 
     if let Some(mid) = lb_macro[a] {
         // Macro move: shift the whole vertical run to a new column window.
@@ -496,7 +793,8 @@ mod tests {
     #[test]
     fn placement_is_legal() {
         let (nl, packing, arch) = setup();
-        let p = place(&nl, &packing, &arch, &PlaceOpts { effort: 0.3, ..Default::default() });
+        let p = place(&nl, &packing, &arch, &PlaceOpts { effort: 0.3, ..Default::default() })
+            .expect("auto-sized placement");
         // Every LB on a distinct logic tile.
         let mut seen = std::collections::HashSet::new();
         for &loc in &p.lb_loc {
@@ -508,12 +806,15 @@ mod tests {
             assert!(p.device.is_io(*loc));
         }
         assert!(p.est_cpd_ps > 0.0);
+        // The pipeline really ran a mix of move kinds.
+        assert!(p.move_stats.proposed.iter().sum::<usize>() > 0);
     }
 
     #[test]
     fn chain_macros_stay_vertical() {
         let (nl, packing, arch) = setup();
-        let p = place(&nl, &packing, &arch, &PlaceOpts { effort: 0.3, ..Default::default() });
+        let p = place(&nl, &packing, &arch, &PlaceOpts { effort: 0.3, ..Default::default() })
+            .expect("auto-sized placement");
         for m in &packing.chain_macros {
             if m.len() < 2 {
                 continue;
@@ -532,9 +833,11 @@ mod tests {
         let (nl, packing, arch) = setup();
         // Effort 0 -> essentially initial placement.
         let rough = place(&nl, &packing, &arch,
-                          &PlaceOpts { effort: 0.05, seed: 3, ..Default::default() });
+                          &PlaceOpts { effort: 0.05, seed: 3, ..Default::default() })
+            .expect("rough placement");
         let tuned = place(&nl, &packing, &arch,
-                          &PlaceOpts { effort: 1.5, seed: 3, ..Default::default() });
+                          &PlaceOpts { effort: 1.5, seed: 3, ..Default::default() })
+            .expect("tuned placement");
         assert!(tuned.cost <= rough.cost * 1.05,
                 "tuned {} vs rough {}", tuned.cost, rough.cost);
     }
@@ -542,9 +845,56 @@ mod tests {
     #[test]
     fn deterministic_per_seed() {
         let (nl, packing, arch) = setup();
-        let a = place(&nl, &packing, &arch, &PlaceOpts { effort: 0.3, seed: 7, ..Default::default() });
-        let b = place(&nl, &packing, &arch, &PlaceOpts { effort: 0.3, seed: 7, ..Default::default() });
+        let mk = || {
+            place(&nl, &packing, &arch, &PlaceOpts { effort: 0.3, seed: 7, ..Default::default() })
+                .expect("placement")
+        };
+        let a = mk();
+        let b = mk();
         assert_eq!(a.lb_loc, b.lb_loc);
         assert_eq!(a.cost, b.cost);
+        assert_eq!(a.move_stats.proposed, b.move_stats.proposed);
+        assert_eq!(a.move_stats.accepted, b.move_stats.accepted);
+    }
+
+    /// A fixed device whose rows cannot host the tallest chain macro (or
+    /// whose capacity is short) must error — never silently resize.
+    #[test]
+    fn fixed_device_misfit_errors() {
+        use crate::techmap::aig::Lit;
+        // One long carry chain (64 bits >> the 20 adder bits per LB), so
+        // the packing is guaranteed to contain a multi-LB chain macro.
+        let mut c = Circuit::new("chain");
+        let x = c.pi_bus("x", 64);
+        let y = c.pi_bus("y", 64);
+        let ops: Vec<(Lit, Lit)> = x.iter().copied().zip(y.iter().copied()).collect();
+        let (sums, cout) = c.add_chain(ops, Lit::FALSE);
+        c.po_bus("s", &sums);
+        c.po("co", cout);
+        let nl = map_circuit(&c, &MapOpts::default());
+        let arch = Arch::paper(ArchVariant::Baseline);
+        let packing = pack(&nl, &arch, &PackOpts::default());
+        let max_macro = packing.chain_macros.iter().map(|m| m.len()).max().unwrap_or(1);
+        assert!(max_macro >= 2, "want a multi-LB chain macro in the fixture");
+        // Wide enough for every LB, but too short for the macro.
+        let short = Device::new(packing.lbs.len() as u16 + 2, max_macro as u16 - 1);
+        let err = place(&nl, &packing, &arch, &PlaceOpts {
+            effort: 0.05,
+            device: Some(short),
+            ..Default::default()
+        });
+        let msg = format!("{}", err.expect_err("macro-misfit device must error"));
+        assert!(msg.contains("chain macro"), "unexpected error: {msg}");
+        // Too few LB slots.
+        let tiny = Device::new(1, max_macro as u16);
+        let err = place(&nl, &packing, &arch, &PlaceOpts {
+            effort: 0.05,
+            device: Some(tiny),
+            ..Default::default()
+        });
+        assert!(err.is_err(), "capacity-misfit device must error");
+        // Auto-sizing still grows the grid for the same design.
+        assert!(place(&nl, &packing, &arch, &PlaceOpts { effort: 0.05, ..Default::default() })
+            .is_ok());
     }
 }

@@ -471,8 +471,15 @@ pub fn table4(opts: &ExpOpts) -> Table {
                 }
                 let nl = map_circuit(&circ, &MapOpts::default());
                 let packing = pack(&nl, &arch, &PackOpts { unrelated: Unrelated::Auto });
+                // The fixed device is a hard contract: the placer errors on
+                // any misfit (LB slots, I/O sites, or chain-macro windows)
+                // instead of silently resizing, so every fit dimension is
+                // the stress loop's stop condition.  `macro_windows` runs
+                // the placer's own window-assignment rule, which subsumes
+                // the macro-height check.
                 if packing.lbs.len() > device.lb_capacity()
                     || packing.stats.ios > device.io_capacity()
+                    || crate::place::macro_windows(&packing, &device).is_none()
                 {
                     break;
                 }

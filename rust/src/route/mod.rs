@@ -677,42 +677,17 @@ fn route_inner(
 /// can sink the same net).  This is the shape [`RouteOpts::sink_crit`]
 /// and the closed loop's refresh consume.  Intra-LB sinks (no routed
 /// wire) and sinks sharing the driver's terminal contribute nothing.
+///
+/// The fold itself lives on the net model
+/// ([`NetModel::fold_sink_crit`]) — the placer's per-sink timing lane
+/// consumes exactly the same shape, so router and placer share one
+/// definition.
 pub fn term_sink_crit(
     model: &NetModel,
     idx: &NetlistIndex,
     sc: &SinkCrit,
 ) -> Vec<Vec<f64>> {
-    model
-        .nets
-        .iter()
-        .map(|en| {
-            let sinks = &en.terms[1..];
-            let mut out = vec![0.0f64; sinks.len()];
-            // Terminal-position lookup: linear scan for typical small
-            // nets, hashed for fanout-heavy ones (this runs on every
-            // closed-loop STA refresh, and a linear scan per netlist
-            // sink would be O(fanout^2) per net).  Terminal lists are
-            // deduped by `NetModel::build`, so the map is well-defined.
-            let by_term: Option<HashMap<Term, usize>> = if sinks.len() > 16 {
-                Some(sinks.iter().enumerate().map(|(k, &t)| (t, k)).collect())
-            } else {
-                None
-            };
-            for ((cell, _pin), &c) in idx.sinks(en.net).zip(sc.net(en.net).iter()) {
-                let term = model.term_of_cell(cell).unwrap_or(Term::Io(cell));
-                let k = match &by_term {
-                    Some(m) => m.get(&term).copied(),
-                    None => sinks.iter().position(|&t| t == term),
-                };
-                if let Some(k) = k {
-                    if c > out[k] {
-                        out[k] = c;
-                    }
-                }
-            }
-            out
-        })
-        .collect()
+    model.fold_sink_crit(idx, sc)
 }
 
 /// Per-net, per-sink interconnect delays from a set of routed sink paths
@@ -780,7 +755,8 @@ mod tests {
         let arch = Arch::paper(ArchVariant::Baseline);
         let packing = pack(&nl, &arch, &PackOpts::default());
         let pl = place(&nl, &packing, &arch,
-                       &PlaceOpts { effort: 0.3, ..Default::default() });
+                       &PlaceOpts { effort: 0.3, ..Default::default() })
+            .expect("placement");
         let mut model = NetModel::build(&nl, &packing);
         model.set_weights(&[], false);
         let r = route(&model, &pl, &arch, &RouteOpts::default());
@@ -819,7 +795,8 @@ mod tests {
         let mut arch = Arch::paper(ArchVariant::Baseline);
         let packing = pack(&nl, &arch, &PackOpts::default());
         let pl = place(&nl, &packing, &arch,
-                       &PlaceOpts { effort: 0.3, ..Default::default() });
+                       &PlaceOpts { effort: 0.3, ..Default::default() })
+            .expect("placement");
         let mut model = NetModel::build(&nl, &packing);
         model.set_weights(&[], false);
         arch.routing.channel_width = 48;
@@ -877,7 +854,8 @@ mod tests {
         let nl = map_circuit(&c, &MapOpts::default());
         let packing = pack(&nl, &arch, &PackOpts::default());
         let pl = place(&nl, &packing, &arch,
-                       &PlaceOpts { effort: 0.3, ..Default::default() });
+                       &PlaceOpts { effort: 0.3, ..Default::default() })
+            .expect("placement");
         let r0 = route(&model, &pl, &arch, &zeros);
         assert_eq!(r0.wirelength, base.wirelength);
         assert_eq!(r0.net_nodes, base.net_nodes);

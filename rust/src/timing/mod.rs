@@ -131,6 +131,34 @@ impl TimingReport {
     }
 }
 
+/// Rescale per-terminal criticalities against an *achieved*-CPD prior
+/// from a previously routed seed (the cross-seed place↔route feedback
+/// loop): `crit' = crit^γ` with `γ = cpd_est / cpd_prior` (clamped to
+/// [1/4, 4]) — the criticality-exponent form VPR uses for timing
+/// pressure.  The fixed points 0 and 1 are preserved, so zero-slack
+/// sinks never acquire phantom weight and the fully-critical path stays
+/// pinned; when the router achieved a *worse* CPD than the estimate
+/// (`γ < 1`, the usual case — pre-route estimates undershoot), the
+/// mid-range sharpens upward so near-critical connections pull harder,
+/// and when the router beat the estimate (`γ > 1`) pressure relaxes.
+/// Under uniform delay scaling criticality is scale-invariant, so the
+/// exponent only encodes how far the estimate *missed*, not the absolute
+/// period.  `crit` is the per-terminal shape
+/// [`crate::place::cost::NetModel::fold_sink_crit`] produces; `None` or
+/// non-positive priors leave it untouched.
+pub fn rescale_crit(crit: &mut [Vec<f64>], cpd_est_ps: f64, cpd_prior_ps: Option<f64>) {
+    let Some(prior) = cpd_prior_ps else { return };
+    if !(prior.is_finite() && prior > 0.0 && cpd_est_ps > 0.0) {
+        return;
+    }
+    let gamma = (cpd_est_ps / prior).clamp(0.25, 4.0);
+    for v in crit.iter_mut() {
+        for c in v.iter_mut() {
+            *c = c.powf(gamma).clamp(0.0, 1.0);
+        }
+    }
+}
+
 /// Sink-kind classification for input-path delays.
 fn sink_input_delay(
     nl: &Netlist,
@@ -479,6 +507,29 @@ mod tests {
         let d5 = sta(&nl_d, &pk_d, &arch_d, |_, _, _| 200.0).cpd_ps;
         let d6 = sta(&nl_6, &pk_6, &arch_6, |_, _, _| 200.0).cpd_ps;
         assert!(d6 >= d5, "dd6 {d6} vs dd5 {d5}");
+    }
+
+    /// Prior rescaling is a criticality-exponent correction: a prior
+    /// above the estimate sharpens mid-range criticalities upward, one
+    /// below relaxes them, and the fixed points 0 and 1 never move (no
+    /// phantom weight on zero-slack sinks).
+    #[test]
+    fn rescale_crit_renormalizes_to_prior() {
+        let mut c = vec![vec![0.5, 1.0], vec![0.0]];
+        rescale_crit(&mut c, 100.0, None);
+        assert_eq!(c, vec![vec![0.5, 1.0], vec![0.0]]);
+        // Router achieved 2x the estimate: gamma = 0.5 sharpens upward.
+        rescale_crit(&mut c, 100.0, Some(200.0));
+        assert!((c[0][0] - 0.5f64.sqrt()).abs() < 1e-12);
+        assert_eq!(c[0][1], 1.0, "fully critical stays pinned");
+        assert_eq!(c[1][0], 0.0, "zero-slack-pressure sinks stay at zero");
+        // Router beat the estimate: gamma = 2 relaxes the mid-range.
+        let mut d = vec![vec![0.2]];
+        rescale_crit(&mut d, 100.0, Some(50.0));
+        assert!((d[0][0] - 0.04).abs() < 1e-12);
+        let mut e = vec![vec![0.4]];
+        rescale_crit(&mut e, 100.0, Some(0.0));
+        assert_eq!(e[0][0], 0.4, "non-positive prior is ignored");
     }
 
     /// Parallel STA must equal the serial path bit-for-bit.

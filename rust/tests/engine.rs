@@ -74,6 +74,48 @@ fn engine_matches_uncached_run_benchmark_routed() {
     assert_eq!(got.dedup_hits, want.dedup_hits);
 }
 
+/// Closed-timing-loop plans chain seeds — each seed's achieved CPD is the
+/// next seed's criticality prior.  The engine must reproduce the uncached
+/// serial flow bit-for-bit (any worker count), and record one
+/// achieved-CPD prior per chained seed in its artifact cache.
+#[test]
+fn chained_timing_plan_matches_serial_and_records_priors() {
+    let params = BenchParams::default();
+    let plan = ExperimentPlan {
+        benches: vtr_suite(&params)[..1].to_vec(),
+        variants: vec![ArchVariant::Dd5],
+        flow: FlowOpts {
+            seeds: vec![1, 2],
+            place_effort: 0.05,
+            route_timing_weights: true,
+            sta_every: 2,
+            ..Default::default()
+        },
+    };
+    let engine = Engine::new(4);
+    let grid = engine.run(&plan);
+    let got = &grid[0][0];
+    assert!(!got.cpd_trace_ns.is_empty(), "timing-route plans must carry a CPD trace");
+    // One prior per (cell, seed) chain link.
+    assert_eq!(engine.cache.cpd_priors_recorded(), 2);
+
+    // Bit-identical to the uncached serial path (which runs the same
+    // chain in the same seed order).
+    let want = run_benchmark(&plan.benches[0], ArchVariant::Dd5, &plan.flow);
+    assert_eq!(got.cpd_ns.to_bits(), want.cpd_ns.to_bits(), "chained cpd");
+    assert_eq!(got.routed_ok, want.routed_ok);
+    assert_eq!(got.channel_util, want.channel_util);
+    assert_eq!(got.cpd_trace_ns.len(), want.cpd_trace_ns.len());
+    for (a, b) in got.cpd_trace_ns.iter().zip(want.cpd_trace_ns.iter()) {
+        assert_eq!(a.to_bits(), b.to_bits(), "chained cpd trace");
+    }
+
+    // And to a single-worker engine run.
+    let serial = Engine::new(1).run(&plan);
+    assert_eq!(serial[0][0].cpd_ns.to_bits(), got.cpd_ns.to_bits());
+    assert_eq!(serial[0][0].channel_util, got.channel_util);
+}
+
 /// Artifacts served from the cache are identical to a cold recomputation,
 /// and repeat lookups are real hits (same shared instance, no recompute).
 #[test]

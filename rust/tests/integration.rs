@@ -189,7 +189,8 @@ fn flow_dd5_never_worse_in_alms() {
 }
 
 /// Failure injection: placement on a device with exactly-capacity LBs must
-/// still be legal; chain macros taller than the device must panic cleanly.
+/// still be legal (fixed-device *misfits* error instead of resizing — see
+/// `rust/tests/place_timing.rs`).
 #[test]
 fn placement_edge_devices() {
     let circ = stress_circuit(40, 10);
@@ -202,7 +203,8 @@ fn placement_edge_devices() {
         effort: 0.05,
         device: Some(dev),
         ..Default::default()
-    });
+    })
+    .expect("exact-fit fixed device must place legally");
     let mut seen = std::collections::HashSet::new();
     for &loc in &pl.lb_loc {
         assert!(seen.insert(loc));

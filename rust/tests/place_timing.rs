@@ -1,0 +1,216 @@
+//! Placement-side determinism contracts of the per-sink timing lane and
+//! move-type diversity (ISSUE-5):
+//!
+//! * (a) per-sink timing-driven placement is bit-identical for any
+//!   `PlaceOpts::sta_jobs` — the STA refreshes are jobs-invariant, so
+//!   worker counts must never leak into the anneal;
+//! * (b) all-zero criticality (timing lane gain 0) is bit-identical to
+//!   the wirelength-only placer — the timing lane contributes *exactly*
+//!   zero, not approximately;
+//! * (c) a fixed-seed golden run proposes and accepts every move kind,
+//!   keeps chain macros legal, and reproduces itself exactly;
+//! * (d) `move_mix = 0` restores the uniform-only proposal pipeline;
+//! * (e) chained cross-seed feedback (`--timing-route`) stays
+//!   bit-identical across `--route-jobs` at the flow layer.
+
+use double_duty::arch::{Arch, ArchVariant};
+use double_duty::netlist::{Netlist, NetlistIndex, PackIndex};
+use double_duty::pack::{pack, PackOpts, Packing};
+use double_duty::place::{place, place_with, MoveKind, PlaceOpts, Placement};
+use double_duty::synth::circuit::Circuit;
+use double_duty::synth::multiplier::{soft_mul, AdderAlgo};
+use double_duty::techmap::aig::Lit;
+use double_duty::techmap::{map_circuit, MapOpts};
+
+/// A multiplier plus one long carry chain: single-LB logic blocks *and* a
+/// guaranteed multi-LB chain macro (48 bits >> the 20 adder bits per LB),
+/// so every move kind has real work.
+fn chainy_setup() -> (Netlist, Packing, Arch) {
+    let mut c = Circuit::new("chainy");
+    let x = c.pi_bus("x", 5);
+    let y = c.pi_bus("y", 5);
+    let p = soft_mul(&mut c, &x, &y, AdderAlgo::Wallace);
+    c.po_bus("p", &p);
+    let a = c.pi_bus("a", 48);
+    let b = c.pi_bus("b", 48);
+    let ops: Vec<(Lit, Lit)> = a.iter().copied().zip(b.iter().copied()).collect();
+    let (sums, cout) = c.add_chain(ops, Lit::FALSE);
+    c.po_bus("s", &sums);
+    c.po("co", cout);
+    let nl = map_circuit(&c, &MapOpts::default());
+    let arch = Arch::paper(ArchVariant::Dd5);
+    let packing = pack(&nl, &arch, &PackOpts::default());
+    (nl, packing, arch)
+}
+
+fn assert_placement_eq(a: &Placement, b: &Placement, tag: &str) {
+    assert_eq!(a.lb_loc, b.lb_loc, "{tag}: lb_loc");
+    assert_eq!(a.io_loc, b.io_loc, "{tag}: io_loc");
+    assert_eq!(a.cost.to_bits(), b.cost.to_bits(), "{tag}: cost");
+    assert_eq!(a.est_cpd_ps.to_bits(), b.est_cpd_ps.to_bits(), "{tag}: est_cpd_ps");
+    assert_eq!(a.move_stats.proposed, b.move_stats.proposed, "{tag}: proposed");
+    assert_eq!(a.move_stats.accepted, b.move_stats.accepted, "{tag}: accepted");
+}
+
+/// (a) `Placement` bit-identical for any STA worker count, with the
+/// per-sink timing lane on.
+#[test]
+fn timing_placement_bit_identical_across_sta_jobs() {
+    let (nl, packing, arch) = chainy_setup();
+    let idx = NetlistIndex::build(&nl);
+    let pidx = PackIndex::build(&nl, &packing);
+    let mk = |sta_jobs: usize| {
+        place_with(
+            &nl,
+            &packing,
+            &arch,
+            &PlaceOpts { effort: 0.3, seed: 5, sta_jobs, ..Default::default() },
+            &idx,
+            &pidx,
+        )
+        .expect("placement")
+    };
+    let base = mk(1);
+    assert!(base.move_stats.proposed.iter().sum::<usize>() > 0);
+    for jobs in [2usize, 8] {
+        let p = mk(jobs);
+        assert_placement_eq(&base, &p, &format!("sta_jobs={jobs}"));
+    }
+}
+
+/// (b) Timing-driven placement with a zero-gain lane is the
+/// wirelength-only placer, bit for bit: same RNG stream, same deltas,
+/// same acceptances, same final cost.
+#[test]
+fn zero_gain_timing_is_wirelength_only_placer() {
+    let (nl, packing, arch) = chainy_setup();
+    let wl = place(
+        &nl,
+        &packing,
+        &arch,
+        &PlaceOpts { effort: 0.3, seed: 9, timing_driven: false, ..Default::default() },
+    )
+    .expect("wirelength placement");
+    let zg = place(
+        &nl,
+        &packing,
+        &arch,
+        &PlaceOpts { effort: 0.3, seed: 9, timing_driven: true, crit_gain: 0.0, ..Default::default() },
+    )
+    .expect("zero-gain placement");
+    assert_placement_eq(&wl, &zg, "zero-gain vs wirelength-only");
+}
+
+/// (c) Fixed-seed golden run: every move kind is proposed *and* accepted,
+/// chain macros stay vertical columns, and the run reproduces itself.
+#[test]
+fn golden_run_exercises_every_move_kind() {
+    let (nl, packing, arch) = chainy_setup();
+    let mk = || {
+        place(
+            &nl,
+            &packing,
+            &arch,
+            &PlaceOpts { effort: 1.0, seed: 42, ..Default::default() },
+        )
+        .expect("placement")
+    };
+    let p = mk();
+    let st = &p.move_stats;
+    for kind in [MoveKind::Uniform, MoveKind::MacroShift, MoveKind::Median] {
+        assert!(
+            st.proposed[kind as usize] > 0,
+            "{kind:?} never proposed: {:?}",
+            st.proposed
+        );
+        assert!(
+            st.accepted[kind as usize] > 0,
+            "{kind:?} never accepted: proposed {:?}, accepted {:?}",
+            st.proposed,
+            st.accepted
+        );
+    }
+    // Uniform swaps stay the bulk of the mix.
+    assert!(
+        st.proposed[MoveKind::Uniform as usize]
+            > st.proposed[MoveKind::MacroShift as usize]
+                + st.proposed[MoveKind::Median as usize],
+        "diverse moves should not dominate: {:?}",
+        st.proposed
+    );
+    // Macro legality after a macro-move-heavy anneal.
+    for m in &packing.chain_macros {
+        if m.len() < 2 {
+            continue;
+        }
+        for w in m.windows(2) {
+            let a = p.lb_loc[w[0]];
+            let b = p.lb_loc[w[1]];
+            assert_eq!(a.x, b.x, "macro not in one column");
+            assert_eq!(b.y, a.y + 1, "macro not vertically consecutive");
+        }
+    }
+    // Golden: the exact same run again.
+    assert_placement_eq(&p, &mk(), "golden rerun");
+}
+
+/// (d) `move_mix = 0` proposes uniform swaps only.
+#[test]
+fn zero_move_mix_is_uniform_only() {
+    let (nl, packing, arch) = chainy_setup();
+    let p = place(
+        &nl,
+        &packing,
+        &arch,
+        &PlaceOpts { effort: 0.3, seed: 3, move_mix: 0.0, ..Default::default() },
+    )
+    .expect("placement");
+    assert!(p.move_stats.proposed[MoveKind::Uniform as usize] > 0);
+    assert_eq!(p.move_stats.proposed[MoveKind::MacroShift as usize], 0);
+    assert_eq!(p.move_stats.proposed[MoveKind::Median as usize], 0);
+}
+
+/// (e) The chained cross-seed feedback loop at the flow layer: two seeds
+/// with `--timing-route` on, bit-identical across `route_jobs`, and the
+/// second seed really runs under the first seed's achieved-CPD prior
+/// (serial reference = the engine-facing `SeedCtx` chain).
+#[test]
+fn chained_seed_feedback_deterministic_across_route_jobs() {
+    use double_duty::flow::{place_route_seed, FlowOpts, SeedCtx};
+    let (nl, packing, arch) = chainy_setup();
+    let idx = NetlistIndex::build(&nl);
+    let pidx = PackIndex::build(&nl, &packing);
+    let run_chain = |route_jobs: usize| {
+        let opts = FlowOpts {
+            seeds: vec![1, 2],
+            place_effort: 0.2,
+            route_jobs,
+            route_timing_weights: true,
+            sta_every: 2,
+            ..Default::default()
+        };
+        let mut prior = None;
+        let mut out = Vec::new();
+        for &seed in &opts.seeds {
+            let ctx = SeedCtx { idx: &idx, pidx: &pidx, cpd_prior_ps: prior };
+            let m = place_route_seed(&nl, &packing, &arch, &opts, seed, &ctx);
+            if m.routed_ok {
+                prior = Some(m.cpd_ns * 1000.0); // only legal routes feed the chain
+            }
+            out.push(m);
+        }
+        out
+    };
+    let serial = run_chain(1);
+    let parallel = run_chain(4);
+    assert_eq!(serial.len(), parallel.len());
+    for (a, b) in serial.iter().zip(parallel.iter()) {
+        assert_eq!(a.cpd_ns.to_bits(), b.cpd_ns.to_bits(), "cpd across route_jobs");
+        assert_eq!(a.routed_ok, b.routed_ok);
+        assert_eq!(a.channel_util, b.channel_util);
+        assert_eq!(a.cpd_trace_ns.len(), b.cpd_trace_ns.len());
+        for (x, y) in a.cpd_trace_ns.iter().zip(b.cpd_trace_ns.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "cpd trace across route_jobs");
+        }
+    }
+}

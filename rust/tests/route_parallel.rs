@@ -11,7 +11,7 @@
 
 use double_duty::arch::{Arch, ArchVariant};
 use double_duty::bench_suites::{kratos_suite, BenchParams};
-use double_duty::flow::{place_route_seed, FlowOpts};
+use double_duty::flow::{place_route_seed, FlowOpts, SeedCtx};
 use double_duty::pack::{pack, PackOpts, Packing};
 use double_duty::place::cost::NetModel;
 use double_duty::place::{place, PlaceOpts, Placement};
@@ -31,7 +31,8 @@ fn placed_mul(w: usize) -> (Netlist, Packing, Placement, NetModel, Arch) {
     let arch = Arch::paper(ArchVariant::Dd5);
     let packing = pack(&nl, &arch, &PackOpts::default());
     let pl = place(&nl, &packing, &arch,
-                   &PlaceOpts { effort: 0.3, ..Default::default() });
+                   &PlaceOpts { effort: 0.3, ..Default::default() })
+        .expect("placement");
     let mut model = NetModel::build(&nl, &packing);
     model.set_weights(&[], false);
     (nl, packing, pl, model, arch)
@@ -84,6 +85,8 @@ fn flow_metrics_identical_across_route_jobs() {
     let nl = map_circuit(&circ, &MapOpts::default());
     let arch = Arch::coffe(ArchVariant::Dd5);
     let packing = pack(&nl, &arch, &PackOpts::default());
+    let idx = double_duty::netlist::NetlistIndex::build(&nl);
+    let pidx = double_duty::netlist::PackIndex::build(&nl, &packing);
     for seed in [1u64, 2] {
         let mk = |route_jobs: usize| {
             let opts = FlowOpts {
@@ -92,7 +95,7 @@ fn flow_metrics_identical_across_route_jobs() {
                 route_jobs,
                 ..Default::default()
             };
-            place_route_seed(&nl, &packing, &arch, &opts, seed)
+            place_route_seed(&nl, &packing, &arch, &opts, seed, &SeedCtx::new(&idx, &pidx))
         };
         let serial = mk(1);
         let parallel = mk(4);
@@ -108,8 +111,12 @@ fn flow_metrics_identical_across_route_jobs() {
 #[test]
 fn placer_deterministic_with_incremental_cost() {
     let (nl, packing, _pl, _model, arch) = placed_mul(5);
-    let a = place(&nl, &packing, &arch, &PlaceOpts { effort: 0.4, seed: 11, ..Default::default() });
-    let b = place(&nl, &packing, &arch, &PlaceOpts { effort: 0.4, seed: 11, ..Default::default() });
+    let mk = || {
+        place(&nl, &packing, &arch, &PlaceOpts { effort: 0.4, seed: 11, ..Default::default() })
+            .expect("placement")
+    };
+    let a = mk();
+    let b = mk();
     assert_eq!(a.lb_loc, b.lb_loc);
     assert_eq!(a.cost, b.cost);
     assert_eq!(a.est_cpd_ps, b.est_cpd_ps);

@@ -42,7 +42,8 @@ fn setup(channel_width: Option<u16>) -> Setup {
         arch.routing.channel_width = w;
     }
     let packing = pack(&nl, &arch, &PackOpts::default());
-    let pl = place(&nl, &packing, &arch, &PlaceOpts { effort: 0.2, ..Default::default() });
+    let pl = place(&nl, &packing, &arch, &PlaceOpts { effort: 0.2, ..Default::default() })
+        .expect("placement");
     let mut model = NetModel::build(&nl, &packing);
     model.set_weights(&[], false);
     Setup { nl, packing, arch, pl, model }
@@ -182,8 +183,10 @@ fn sta_every_zero_is_static_weights_exactly() {
 /// final entry is the reported CPD, and `route_jobs` never perturbs it.
 #[test]
 fn flow_records_cpd_trajectory_deterministically() {
-    use double_duty::flow::{place_route_seed, FlowOpts};
+    use double_duty::flow::{place_route_seed, FlowOpts, SeedCtx};
     let s = setup(None);
+    let idx = NetlistIndex::build(&s.nl);
+    let pidx = PackIndex::build(&s.nl, &s.packing);
     let mk = |route_jobs: usize| {
         let opts = FlowOpts {
             seeds: vec![1],
@@ -194,7 +197,7 @@ fn flow_records_cpd_trajectory_deterministically() {
             crit_alpha: 0.5,
             ..Default::default()
         };
-        place_route_seed(&s.nl, &s.packing, &s.arch, &opts, 1)
+        place_route_seed(&s.nl, &s.packing, &s.arch, &opts, 1, &SeedCtx::new(&idx, &pidx))
     };
     let serial = mk(1);
     assert!(!serial.cpd_trace_ns.is_empty());
