@@ -1,0 +1,363 @@
+//! `dduty check`: independent static analysis of every stage artifact.
+//!
+//! The flow's optimizers (packer, placer, router) each *manipulate* the
+//! legality rules they are supposed to respect — an overfilled ALM, a
+//! shared wire, or a broken carry chain would silently corrupt every
+//! area/delay number reported against the paper's Double Duty claims.
+//! This module is the VPR-style `check_place` / `check_route` answer: a
+//! read-only audit layer that re-verifies each artifact against the
+//! formal invariants of its stage, using only the dense arenas
+//! ([`crate::netlist::NetlistIndex`], [`crate::netlist::PackIndex`], the
+//! RRG CSR) and **none of the producer code paths**, so a producer bug
+//! cannot self-certify.  The one deliberate exception is
+//! [`crate::place::macro_windows`]: the fixed-device window rule is
+//! *defined* by that function (the placer's initial-placement contract),
+//! so the place auditor re-checks fit against the same definition.
+//!
+//! Auditors (one submodule per stage):
+//!
+//! * [`netlist::audit_netlist`] — pin shapes, undriven / multi-driven
+//!   nets, dangling inputs, carry-chain continuity, and the levelization
+//!   re-verified edge-by-edge as the combinational-loop witness;
+//! * [`pack::audit_packing`] — ALM 6-LUT half accounting, operand-path
+//!   and Z-bypass legality per variant, LB capacity and pin feasibility,
+//!   chain macros unsplit across LBs, exactly-once cell coverage;
+//! * [`place::audit_placement`] — one block per site, I/O pad capacity,
+//!   macro column alignment, and the four-dimensional device-fit
+//!   re-check;
+//! * [`route::audit_routing`] — every (net, sink) connected source→sink
+//!   over the RRG (pin taps re-derived independently), no wire overuse
+//!   after the final iteration, and the committed node arenas consistent
+//!   with a directed routing tree (no orphan nodes);
+//! * [`timing::audit_timing`] — arrival monotonicity along combinational
+//!   edges, endpoint arrivals bounded by the reported CPD, `SinkCrit`
+//!   values in [0, 1] with per-net max consistency (bitwise).
+//!
+//! Every auditor returns a structured [`Violation`] list in a stable,
+//! artifact-defined scan order (cells/nets/ALMs/LBs ascending) instead of
+//! panicking, so callers can report, count, or gate on them.  The CLI
+//! (`dduty check`) runs the auditors over whole benchmark suites;
+//! `--check [strict]` on `exp` / `flow` wires them into the flow after
+//! each stage ([`crate::flow::FlowOpts::check`]), where
+//! [`CheckMode::Strict`] fails the run.  This layer is a *contract*:
+//! future stages (capacity-scale packing, service mode) must ship an
+//! auditor here before their artifacts feed the flow.
+
+pub mod netlist;
+pub mod pack;
+pub mod place;
+pub mod route;
+pub mod timing;
+
+pub use netlist::audit_netlist;
+pub use pack::audit_packing;
+pub use place::audit_placement;
+pub use route::audit_routing;
+pub use timing::audit_timing;
+
+use std::fmt;
+
+use crate::arch::{Arch, ArchVariant};
+use crate::bench_suites::Benchmark;
+use crate::flow::engine::ArtifactCache;
+use crate::flow::{arch_for_run, FlowOpts};
+use crate::pack::PackOpts;
+use crate::place::{place_with, PlaceOpts};
+use crate::route::{route, RouteOpts};
+use crate::timing::sta_routed;
+
+/// How bad a violation is.  [`CheckMode::Strict`] fails a run on
+/// `Error`s only; `Warning`s are documented relaxations the producers
+/// intentionally allow (e.g. the packer's VPR-style carry-segment pin
+/// exemption).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+/// Which stage artifact a violation was found in.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    Netlist,
+    Pack,
+    Place,
+    Route,
+    Timing,
+}
+
+impl Stage {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Stage::Netlist => "netlist",
+            Stage::Pack => "pack",
+            Stage::Place => "place",
+            Stage::Route => "route",
+            Stage::Timing => "timing",
+        }
+    }
+}
+
+/// One audited invariant failure: a stable machine-readable `code`, the
+/// artifact location it anchors to, and a human-readable message naming
+/// the failing dimension.  Auditors emit violations in a deterministic
+/// artifact scan order, so two audits of the same artifact produce
+/// identical lists.
+#[derive(Clone, Debug)]
+pub struct Violation {
+    pub stage: Stage,
+    pub severity: Severity,
+    /// Stable code, `stage.rule` (e.g. `"pack.lb-capacity"`) — what
+    /// mutation tests assert on.
+    pub code: &'static str,
+    /// Location inside the artifact (e.g. `"net 12"`, `"alm 3"`,
+    /// `"net 4 sink 1"`).
+    pub location: String,
+    pub message: String,
+}
+
+impl Violation {
+    pub fn new(
+        stage: Stage,
+        severity: Severity,
+        code: &'static str,
+        location: impl Into<String>,
+        message: impl Into<String>,
+    ) -> Violation {
+        Violation {
+            stage,
+            severity,
+            code,
+            location: location.into(),
+            message: message.into(),
+        }
+    }
+
+    /// Wrap a producer-side error (e.g. the placer's fixed-device misfit
+    /// or the disk cache's integrity rejection) into the violation shape,
+    /// so failure paths that surface as `Err`/`None` upstream report
+    /// through the same channel as audited invariants.
+    pub fn from_producer_error(
+        stage: Stage,
+        code: &'static str,
+        location: impl Into<String>,
+        err: &crate::util::error::Error,
+    ) -> Violation {
+        Violation::new(stage, Severity::Error, code, location, err.to_string())
+    }
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let sev = match self.severity {
+            Severity::Error => "error",
+            Severity::Warning => "warning",
+        };
+        write!(f, "[{sev}] {} ({}): {}", self.code, self.location, self.message)
+    }
+}
+
+/// When (and how hard) the flow runs the auditors after each stage.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum CheckMode {
+    /// No auditing (the default; audits cost a linear pass per artifact).
+    #[default]
+    Off,
+    /// Audit and report violations on stderr; the run continues.
+    Warn,
+    /// Audit and fail the run (panic with the violation list) on any
+    /// `Error`-severity violation.
+    Strict,
+}
+
+/// Aggregated audit outcome for one artifact chain.
+#[derive(Clone, Debug, Default)]
+pub struct CheckReport {
+    pub violations: Vec<Violation>,
+}
+
+impl CheckReport {
+    pub fn is_clean(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// Any `Error`-severity violation present (what strict mode gates on)?
+    pub fn has_errors(&self) -> bool {
+        self.violations.iter().any(|v| v.severity == Severity::Error)
+    }
+
+    /// Violations found in `stage`.
+    pub fn stage(&self, stage: Stage) -> impl Iterator<Item = &Violation> {
+        self.violations.iter().filter(move |v| v.stage == stage)
+    }
+
+    /// `"<errors> error(s), <warnings> warning(s)"`.
+    pub fn summary(&self) -> String {
+        let e = self.violations.iter().filter(|v| v.severity == Severity::Error).count();
+        let w = self.violations.len() - e;
+        format!("{e} error(s), {w} warning(s)")
+    }
+}
+
+/// Enforce a stage audit according to `mode`: `Warn` prints every
+/// violation to stderr, `Strict` panics when an `Error`-severity
+/// violation is present (warnings still only print).  The flow calls this
+/// after each stage ([`crate::flow::place_route_seed`]).
+pub fn enforce(mode: CheckMode, what: &str, violations: &[Violation]) {
+    if mode == CheckMode::Off || violations.is_empty() {
+        return;
+    }
+    for v in violations {
+        eprintln!("check[{what}]: {v}");
+    }
+    if mode == CheckMode::Strict && violations.iter().any(|v| v.severity == Severity::Error) {
+        let list: Vec<String> = violations
+            .iter()
+            .filter(|v| v.severity == Severity::Error)
+            .map(|v| v.to_string())
+            .collect();
+        panic!("strict check failed for {what}: {}", list.join("; "));
+    }
+}
+
+/// Run the full audit chain on one benchmark: map → pack → place → route
+/// → STA, auditing each artifact as it is produced (through the shared
+/// artifact `cache`, so `dduty check` after `dduty exp` audits the cached
+/// artifacts rather than recomputing them).  A placement misfit on a
+/// caller-fixed device reports as a `place.device-misfit` violation
+/// instead of an error — the check CLI's job is to report, not crash.
+pub fn check_benchmark(
+    cache: &ArtifactCache,
+    b: &Benchmark,
+    variant: ArchVariant,
+    opts: &FlowOpts,
+) -> CheckReport {
+    let mapped = cache.mapped(b);
+    let arch = arch_for_run(&Arch::coffe(variant), opts);
+    let pack_opts = PackOpts { unrelated: opts.unrelated };
+    let packing = cache.packed(&mapped, &arch, &pack_opts);
+    let arenas = cache.indexed(&mapped, &packing, &arch, &pack_opts);
+    let nl = &mapped.nl;
+
+    let mut report = CheckReport::default();
+    report.violations.extend(audit_netlist(nl, &arenas.idx));
+    report.violations.extend(audit_packing(nl, &packing, &arch));
+
+    let seed = opts.seeds.first().copied().unwrap_or(1);
+    let pl = match place_with(
+        nl,
+        &packing,
+        &arch,
+        &PlaceOpts {
+            seed,
+            effort: opts.place_effort,
+            device: opts.device.clone(),
+            ..Default::default()
+        },
+        &arenas.idx,
+        &arenas.pidx,
+    ) {
+        Ok(pl) => pl,
+        Err(e) => {
+            report.violations.push(Violation::from_producer_error(
+                Stage::Place,
+                "place.device-misfit",
+                "device",
+                &e,
+            ));
+            return report;
+        }
+    };
+    report.violations.extend(audit_placement(&packing, &pl));
+
+    if opts.route {
+        let mut model = crate::place::cost::NetModel::build(nl, &packing);
+        model.set_weights(&[], false);
+        let r = route(
+            &model,
+            &pl,
+            &arch,
+            &RouteOpts { jobs: opts.route_jobs.max(1), ..RouteOpts::default() },
+        );
+        report.violations.extend(audit_routing(&model, &pl, &arch, &r));
+        let rpt = sta_routed(nl, &packing, &arch, &r, &model);
+        report.violations.extend(audit_timing(nl, &arenas.idx, &rpt));
+    } else {
+        let rpt = crate::timing::sta_with(
+            nl,
+            &arenas.idx,
+            &arenas.pidx,
+            &packing,
+            &arch,
+            |_, _, _| arch.delays.wire_segment * 2.0,
+            1,
+        );
+        report.violations.extend(audit_timing(nl, &arenas.idx, &rpt));
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn violation_display_names_code_and_location() {
+        let v = Violation::new(
+            Stage::Pack,
+            Severity::Error,
+            "pack.lb-capacity",
+            "lb 3",
+            "11 ALMs exceed the 10-ALM LB capacity",
+        );
+        let s = v.to_string();
+        assert!(s.contains("pack.lb-capacity") && s.contains("lb 3"), "{s}");
+        assert!(s.contains("error"), "{s}");
+    }
+
+    #[test]
+    fn report_summary_counts_severities() {
+        let mut r = CheckReport::default();
+        assert!(r.is_clean() && !r.has_errors());
+        r.violations.push(Violation::new(
+            Stage::Route,
+            Severity::Warning,
+            "route.x",
+            "net 0",
+            "w",
+        ));
+        assert!(!r.is_clean() && !r.has_errors());
+        r.violations.push(Violation::new(
+            Stage::Route,
+            Severity::Error,
+            "route.y",
+            "net 1",
+            "e",
+        ));
+        assert!(r.has_errors());
+        assert_eq!(r.summary(), "1 error(s), 1 warning(s)");
+        assert_eq!(r.stage(Stage::Route).count(), 2);
+        assert_eq!(r.stage(Stage::Pack).count(), 0);
+    }
+
+    #[test]
+    fn enforce_warn_does_not_panic() {
+        let v = vec![Violation::new(Stage::Netlist, Severity::Error, "netlist.x", "net 0", "m")];
+        enforce(CheckMode::Off, "t", &v);
+        enforce(CheckMode::Warn, "t", &v);
+    }
+
+    #[test]
+    #[should_panic(expected = "strict check failed")]
+    fn enforce_strict_panics_on_error() {
+        let v = vec![Violation::new(Stage::Netlist, Severity::Error, "netlist.x", "net 0", "m")];
+        enforce(CheckMode::Strict, "t", &v);
+    }
+
+    #[test]
+    fn enforce_strict_tolerates_warnings() {
+        let v =
+            vec![Violation::new(Stage::Pack, Severity::Warning, "pack.lb-pins", "lb 0", "m")];
+        enforce(CheckMode::Strict, "t", &v);
+    }
+}

@@ -1,0 +1,244 @@
+//! Netlist lint: structural legality of the mapped IR, plus the
+//! combinational-loop witness.
+//!
+//! The levelization in [`NetlistIndex`] is built by a Kahn pass whose
+//! cycle detection is only a `debug_assert` — release builds would
+//! silently mis-level a cyclic netlist.  The auditor therefore treats the
+//! levelization as a *witness* and re-verifies it edge by edge: every
+//! combinational edge (non-FF driver → non-FF sink) must strictly
+//! increase the level, and the topological order must cover every cell
+//! exactly once.  A cycle cannot satisfy both, so a clean audit proves
+//! acyclicity without re-running the producer's traversal.
+
+use std::collections::HashMap;
+
+use crate::netlist::{CellKind, Netlist, NetlistIndex, NO_NET};
+
+use super::{Severity, Stage, Violation};
+
+fn err(code: &'static str, location: String, message: String) -> Violation {
+    Violation::new(Stage::Netlist, Severity::Error, code, location, message)
+}
+
+/// Audit a mapped netlist.  Scan order: cells ascending (pin shapes,
+/// dangling inputs), nets ascending (driver/sink consistency), chains
+/// ascending (carry continuity), then the levelization witness.
+pub fn audit_netlist(nl: &Netlist, idx: &NetlistIndex) -> Vec<Violation> {
+    let mut out = Vec::new();
+
+    // --- Pin shapes + dangling inputs (cells ascending). -----------------
+    for (ci, cell) in nl.cells.iter().enumerate() {
+        let (want_ins, want_outs) = match cell.kind {
+            CellKind::Input => (0usize, 1usize),
+            CellKind::Output => (1, 0),
+            CellKind::Lut { k, .. } => (k as usize, 1),
+            CellKind::AdderBit { .. } => (3, 2),
+            CellKind::Ff => (1, 1),
+            CellKind::Const(_) => (0, 1),
+        };
+        if cell.ins.len() != want_ins || cell.outs.len() != want_outs {
+            out.push(err(
+                "netlist.pin-shape",
+                format!("cell {ci}"),
+                format!(
+                    "{:?} has {}/{} in/out pins, expected {want_ins}/{want_outs}",
+                    cell.kind,
+                    cell.ins.len(),
+                    cell.outs.len()
+                ),
+            ));
+        }
+        if let CellKind::Lut { k, truth } = cell.kind {
+            if k > 6 {
+                out.push(err(
+                    "netlist.pin-shape",
+                    format!("cell {ci}"),
+                    format!("LUT width k={k} exceeds the 6-input ALM LUT"),
+                ));
+            } else if (1..6).contains(&k) && truth >= (1u64 << (1u32 << k)) {
+                out.push(err(
+                    "netlist.pin-shape",
+                    format!("cell {ci}"),
+                    format!("truth table {truth:#x} wider than 2^{}", 1u32 << k),
+                ));
+            }
+        }
+        for (pin, &net) in cell.ins.iter().enumerate() {
+            if net == NO_NET {
+                out.push(err(
+                    "netlist.dangling-input",
+                    format!("cell {ci} pin {pin}"),
+                    format!("{:?} input pin {pin} is unconnected", cell.kind),
+                ));
+            } else if net as usize >= nl.nets.len() {
+                out.push(err(
+                    "netlist.dangling-input",
+                    format!("cell {ci} pin {pin}"),
+                    format!("input pin {pin} references net {net} out of range"),
+                ));
+            }
+        }
+        for (pin, &net) in cell.outs.iter().enumerate() {
+            if net != NO_NET && net as usize >= nl.nets.len() {
+                out.push(err(
+                    "netlist.dangling-input",
+                    format!("cell {ci} out {pin}"),
+                    format!("output pin {pin} references net {net} out of range"),
+                ));
+            }
+        }
+    }
+
+    // --- Driver / sink consistency (nets ascending). ---------------------
+    // Recompute each net's driver count from the cell side: the stored
+    // `net.driver` must be the unique producing pin.
+    let mut drive_count: Vec<u32> = vec![0; nl.nets.len()];
+    for cell in &nl.cells {
+        for &net in &cell.outs {
+            if net != NO_NET && (net as usize) < nl.nets.len() {
+                drive_count[net as usize] += 1;
+            }
+        }
+    }
+    for (ni, net) in nl.nets.iter().enumerate() {
+        if drive_count[ni] > 1 {
+            out.push(err(
+                "netlist.multi-driven",
+                format!("net {ni}"),
+                format!("driven by {} output pins", drive_count[ni]),
+            ));
+        }
+        match net.driver {
+            Some((c, p)) => {
+                let ok = (c as usize) < nl.cells.len()
+                    && nl.cells[c as usize].outs.get(p as usize).copied() == Some(ni as u32);
+                if !ok {
+                    out.push(err(
+                        "netlist.multi-driven",
+                        format!("net {ni}"),
+                        format!("stored driver (cell {c} pin {p}) does not drive this net"),
+                    ));
+                }
+            }
+            None => {
+                if !net.sinks.is_empty() {
+                    out.push(err(
+                        "netlist.undriven",
+                        format!("net {ni}"),
+                        format!("{} sink(s) but no driver", net.sinks.len()),
+                    ));
+                }
+            }
+        }
+        for &(c, p) in &net.sinks {
+            let ok = (c as usize) < nl.cells.len()
+                && nl.cells[c as usize].ins.get(p as usize).copied() == Some(ni as u32);
+            if !ok {
+                out.push(err(
+                    "netlist.undriven",
+                    format!("net {ni}"),
+                    format!("sink backref (cell {c} pin {p}) does not read this net"),
+                ));
+            }
+        }
+    }
+
+    // --- Carry-chain continuity (chains ascending). ----------------------
+    // Chain bits must occupy positions 0..len contiguously (a gap in `pos`
+    // is a chain break), and each bit's cout must drive the next bit's
+    // cin through a dedicated two-terminal connection.
+    for ch in 0..nl.num_chains {
+        let bits = nl.chain_cells(ch);
+        let mut pos_seen: HashMap<u32, u32> = HashMap::new();
+        for &b in &bits {
+            if let CellKind::AdderBit { pos, .. } = nl.cells[b as usize].kind {
+                if let Some(prev) = pos_seen.insert(pos, b) {
+                    out.push(err(
+                        "netlist.chain-break",
+                        format!("chain {ch} pos {pos}"),
+                        format!("position held by both cell {prev} and cell {b}"),
+                    ));
+                }
+            }
+        }
+        for (want, &b) in bits.iter().enumerate() {
+            if let CellKind::AdderBit { pos, .. } = nl.cells[b as usize].kind {
+                if pos as usize != want {
+                    out.push(err(
+                        "netlist.chain-break",
+                        format!("chain {ch}"),
+                        format!("position gap: expected pos {want}, found pos {pos} (cell {b})"),
+                    ));
+                    break; // one gap report per chain; later bits all shift
+                }
+            }
+        }
+        for w in bits.windows(2) {
+            let (a, b) = (w[0], w[1]);
+            let (ka, kb) = (&nl.cells[a as usize], &nl.cells[b as usize]);
+            let (Some(&cout), Some(&cin)) = (ka.outs.get(1), kb.ins.get(2)) else {
+                continue; // pin-shape violation already reported above
+            };
+            if cout != cin {
+                out.push(err(
+                    "netlist.chain-break",
+                    format!("chain {ch} cell {a}->{b}"),
+                    format!("cout net {cout} does not feed the next bit's cin (net {cin})"),
+                ));
+            }
+        }
+    }
+
+    // --- Levelization witness (combinational-loop check). ----------------
+    // The topological order must cover every cell exactly once ...
+    let mut seen = vec![false; nl.cells.len()];
+    let mut dup = false;
+    for &c in idx.topo_order() {
+        if (c as usize) >= seen.len() || seen[c as usize] {
+            dup = true;
+            break;
+        }
+        seen[c as usize] = true;
+    }
+    if dup || idx.topo_order().len() != nl.cells.len() {
+        out.push(err(
+            "netlist.comb-loop",
+            "topo order".to_string(),
+            format!(
+                "topological order covers {} of {} cells exactly once: combinational \
+                 cycle or stale index",
+                idx.topo_order().len(),
+                nl.cells.len()
+            ),
+        ));
+    }
+    // ... and every combinational edge (non-FF driver -> non-FF sink) must
+    // strictly increase the level.  A cycle cannot satisfy this for all
+    // of its edges, so this is a complete witness.
+    let is_ff = |c: u32| matches!(nl.cells[c as usize].kind, CellKind::Ff);
+    for (ni, _) in nl.nets.iter().enumerate() {
+        let Some((drv, _)) = idx.driver(ni as u32) else { continue };
+        if (drv as usize) >= nl.cells.len() || is_ff(drv) {
+            continue;
+        }
+        for (sink, _pin) in idx.sinks(ni as u32) {
+            if (sink as usize) >= nl.cells.len() || is_ff(sink) {
+                continue;
+            }
+            if idx.level(drv) >= idx.level(sink) {
+                out.push(err(
+                    "netlist.comb-loop",
+                    format!("net {ni}"),
+                    format!(
+                        "combinational edge cell {drv} (level {}) -> cell {sink} (level {}) \
+                         does not increase the level",
+                        idx.level(drv),
+                        idx.level(sink)
+                    ),
+                ));
+            }
+        }
+    }
+
+    out
+}

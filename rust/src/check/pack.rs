@@ -1,0 +1,411 @@
+//! Pack legality: ALM half accounting, LB capacity and pin feasibility,
+//! chain-macro integrity, and exact cell coverage.
+//!
+//! Everything here is recomputed from the [`Packing`] artifact and the
+//! netlist — the packer's own accounting (`lut_units`, `free_halves`, the
+//! incremental LB input sets) is never consulted, so a bookkeeping bug in
+//! the producer cannot self-certify.
+//!
+//! One deliberate severity split: LBs hosting carry-chain segments are
+//! exempt from the external-pin budget by design (VPR-style carry-macro
+//! exemption — see `cluster::cluster_lbs`), so a pin overflow there is a
+//! [`Severity::Warning`]; on any other LB it is an [`Severity::Error`].
+
+use std::collections::HashMap;
+
+use crate::arch::Arch;
+use crate::netlist::{CellId, CellKind, NetId, Netlist};
+use crate::pack::{OperandPath, Packing};
+
+use super::{Severity, Stage, Violation};
+
+fn v(sev: Severity, code: &'static str, location: String, message: String) -> Violation {
+    Violation::new(Stage::Pack, sev, code, location, message)
+}
+
+fn err(code: &'static str, location: String, message: String) -> Violation {
+    v(Severity::Error, code, location, message)
+}
+
+/// Audit a packing against `nl` and the per-variant ALM/LB legality rules
+/// in `arch`.  Scan order: ALMs ascending, LBs ascending, chains
+/// ascending, then coverage.
+pub fn audit_packing(nl: &Netlist, packing: &Packing, arch: &Arch) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let baseline = arch.alm.z_inputs == 0;
+
+    // --- Per-ALM legality (ALMs ascending). ------------------------------
+    for (ai, alm) in packing.alms.iter().enumerate() {
+        let loc = format!("alm {ai}");
+
+        // Adder bits: count, kind, one chain, consecutive positions.
+        if alm.adder_bits.len() > arch.alm.adders as usize {
+            out.push(err(
+                "pack.alm-adders",
+                loc.clone(),
+                format!(
+                    "{} adder bits exceed the {} per-ALM adders",
+                    alm.adder_bits.len(),
+                    arch.alm.adders
+                ),
+            ));
+        }
+        if alm.operand_paths.len() != alm.adder_bits.len() {
+            out.push(err(
+                "pack.alm-adders",
+                loc.clone(),
+                format!(
+                    "{} operand-path entries for {} adder bits",
+                    alm.operand_paths.len(),
+                    alm.adder_bits.len()
+                ),
+            ));
+        }
+        let mut bit_pos: Vec<(u32, u32)> = Vec::new(); // (chain, pos)
+        for &b in &alm.adder_bits {
+            match nl.cells.get(b as usize).map(|c| &c.kind) {
+                Some(&CellKind::AdderBit { chain, pos }) => bit_pos.push((chain, pos)),
+                other => out.push(err(
+                    "pack.alm-adders",
+                    loc.clone(),
+                    format!("adder slot holds cell {b} of kind {other:?}"),
+                )),
+            }
+        }
+        if let Some(&(ch0, _)) = bit_pos.first() {
+            if alm.chain != Some(ch0) || bit_pos.iter().any(|&(ch, _)| ch != ch0) {
+                out.push(err(
+                    "pack.alm-adders",
+                    loc.clone(),
+                    format!("chain tag {:?} does not match hosted bits {bit_pos:?}", alm.chain),
+                ));
+            }
+            for w in bit_pos.windows(2) {
+                if w[1].1 != w[0].1 + 1 {
+                    out.push(err(
+                        "pack.alm-adders",
+                        loc.clone(),
+                        format!("non-consecutive chain positions {} and {}", w[0].1, w[1].1),
+                    ));
+                }
+            }
+        } else if alm.chain.is_some() {
+            out.push(err(
+                "pack.alm-adders",
+                loc.clone(),
+                format!("chain tag {:?} on an ALM with no adder bits", alm.chain),
+            ));
+        }
+
+        // Input budgets.
+        if alm.gen_inputs.len() > arch.alm.general_inputs as usize {
+            out.push(err(
+                "pack.alm-inputs",
+                loc.clone(),
+                format!(
+                    "{} general inputs exceed the A-H budget of {}",
+                    alm.gen_inputs.len(),
+                    arch.alm.general_inputs
+                ),
+            ));
+        }
+        if alm.z_inputs.len() > arch.alm.z_inputs as usize {
+            out.push(err(
+                "pack.alm-inputs",
+                loc.clone(),
+                format!(
+                    "{} Z inputs exceed the Z1-Z4 budget of {}",
+                    alm.z_inputs.len(),
+                    arch.alm.z_inputs
+                ),
+            ));
+        }
+
+        // Baseline must not use the DD bypass at all.
+        let z_paths = alm
+            .operand_paths
+            .iter()
+            .flatten()
+            .filter(|p| matches!(p, OperandPath::ZBypass))
+            .count();
+        if baseline && (z_paths > 0 || !alm.z_inputs.is_empty()) {
+            out.push(err(
+                "pack.z-on-baseline",
+                loc.clone(),
+                format!(
+                    "baseline ALM uses {} Z-bypass operand(s) and {} Z input net(s)",
+                    z_paths,
+                    alm.z_inputs.len()
+                ),
+            ));
+        }
+
+        // Half accounting, recomputed from scratch.  A half is busy iff its
+        // adder bit has an operand entering through a 4-LUT; logic LUTs may
+        // only occupy free halves (a 6-LUT fractures across both).
+        let mut recomputed_halves = 0usize;
+        for &l in &alm.logic_luts {
+            match nl.cells.get(l as usize).map(|c| &c.kind) {
+                Some(&CellKind::Lut { k, .. }) if k <= 6 => {
+                    recomputed_halves += if k == 6 { 2 } else { 1 };
+                }
+                other => out.push(err(
+                    "pack.lut-halves",
+                    loc.clone(),
+                    format!("logic-LUT slot holds cell {l} of kind {other:?}"),
+                )),
+            }
+        }
+        if recomputed_halves != alm.logic_halves {
+            out.push(err(
+                "pack.lut-halves",
+                loc.clone(),
+                format!(
+                    "stored logic_halves {} but hosted LUT widths need {}",
+                    alm.logic_halves, recomputed_halves
+                ),
+            ));
+        }
+        let busy_halves = alm
+            .operand_paths
+            .iter()
+            .filter(|paths| {
+                paths.iter().any(|p| {
+                    matches!(p, OperandPath::AbsorbedLut(_) | OperandPath::RouteThrough)
+                })
+            })
+            .count();
+        if busy_halves + recomputed_halves > 2 {
+            out.push(err(
+                "pack.lut-halves",
+                loc.clone(),
+                format!(
+                    "{busy_halves} feeder-busy half(s) + {recomputed_halves} logic half(s) \
+                     exceed the 2 ALM halves"
+                ),
+            ));
+        }
+        let feeders = alm
+            .operand_paths
+            .iter()
+            .flatten()
+            .filter(|p| matches!(p, OperandPath::AbsorbedLut(_) | OperandPath::RouteThrough))
+            .count();
+        if feeders + recomputed_halves * 2 > arch.alm.lut4_units as usize {
+            out.push(err(
+                "pack.lut-halves",
+                loc.clone(),
+                format!(
+                    "{} feeder + {} logic 4-LUT units exceed the {} available",
+                    feeders,
+                    recomputed_halves * 2,
+                    arch.alm.lut4_units
+                ),
+            ));
+        }
+        if baseline && alm.uses_adders() && !alm.logic_luts.is_empty() {
+            out.push(err(
+                "pack.concurrent-on-baseline",
+                loc.clone(),
+                format!(
+                    "baseline ALM hosts {} adder bit(s) concurrently with {} logic LUT(s)",
+                    alm.adder_bits.len(),
+                    alm.logic_luts.len()
+                ),
+            ));
+        }
+        if alm.ffs.len() > arch.alm.ffs as usize {
+            out.push(err(
+                "pack.alm-ffs",
+                loc.clone(),
+                format!("{} FFs exceed the {} per-ALM registers", alm.ffs.len(), arch.alm.ffs),
+            ));
+        }
+    }
+
+    // --- Per-LB legality (LBs ascending). --------------------------------
+    // Which ALM drives each net (recomputed; mirrors nothing stored in the
+    // LB itself).
+    let mut net_driver_alm: HashMap<NetId, usize> = HashMap::new();
+    for (ai, alm) in packing.alms.iter().enumerate() {
+        for &net in &alm.outputs {
+            net_driver_alm.insert(net, ai);
+        }
+    }
+    let mut alm_lb: Vec<Option<usize>> = vec![None; packing.alms.len()];
+    for (li, lb) in packing.lbs.iter().enumerate() {
+        let loc = format!("lb {li}");
+        if lb.alms.len() > arch.lb.alms as usize {
+            out.push(err(
+                "pack.lb-capacity",
+                loc.clone(),
+                format!("{} ALMs exceed the {} per-LB capacity", lb.alms.len(), arch.lb.alms),
+            ));
+        }
+        for &ai in &lb.alms {
+            if ai >= packing.alms.len() {
+                out.push(err(
+                    "pack.lb-capacity",
+                    loc.clone(),
+                    format!("member ALM index {ai} out of range"),
+                ));
+                continue;
+            }
+            if let Some(prev) = alm_lb[ai] {
+                out.push(err(
+                    "pack.cell-double-packed",
+                    loc.clone(),
+                    format!("ALM {ai} is a member of both LB {prev} and LB {li}"),
+                ));
+            } else {
+                alm_lb[ai] = Some(li);
+            }
+        }
+        // External input pins, recomputed: a member's gen/Z input net is an
+        // LB input unless another member drives it.
+        let members: Vec<usize> =
+            lb.alms.iter().copied().filter(|&ai| ai < packing.alms.len()).collect();
+        let mut ext: Vec<NetId> = members
+            .iter()
+            .flat_map(|&ai| {
+                let alm = &packing.alms[ai];
+                alm.gen_inputs.iter().chain(alm.z_inputs.iter()).copied()
+            })
+            .filter(|net| {
+                !net_driver_alm.get(net).map_or(false, |d| members.contains(d))
+            })
+            .collect();
+        ext.sort_unstable();
+        ext.dedup();
+        if ext.len() > arch.lb.inputs as usize {
+            let chain_lb = !lb.chains.is_empty();
+            out.push(v(
+                if chain_lb { Severity::Warning } else { Severity::Error },
+                "pack.lb-pins",
+                loc.clone(),
+                format!(
+                    "{} external input nets exceed the {} LB input pins{}",
+                    ext.len(),
+                    arch.lb.inputs,
+                    if chain_lb { " (tolerated: carry-macro LB)" } else { "" }
+                ),
+            ));
+        }
+        // Chain-tag cross-check: lb.chains must be exactly the chains of
+        // its member ALMs.
+        let mut member_chains: Vec<u32> =
+            members.iter().filter_map(|&ai| packing.alms[ai].chain).collect();
+        member_chains.sort_unstable();
+        member_chains.dedup();
+        let mut stored = lb.chains.clone();
+        stored.sort_unstable();
+        stored.dedup();
+        if stored != member_chains {
+            out.push(err(
+                "pack.lb-chains",
+                loc.clone(),
+                format!("LB chain tags {stored:?} != member ALM chains {member_chains:?}"),
+            ));
+        }
+    }
+    for (ai, lb) in alm_lb.iter().enumerate() {
+        if lb.is_none() {
+            out.push(err(
+                "pack.cell-unpacked",
+                format!("alm {ai}"),
+                "ALM belongs to no LB".to_string(),
+            ));
+        }
+    }
+
+    // --- Chain macros (chains ascending). --------------------------------
+    // Walk each chain's ALMs in bit order; the LB sequence they visit,
+    // consecutively deduped, must equal the stored macro (and never revisit
+    // an LB — that would split the carry chain).
+    for (ch, stored) in packing.chain_macros.iter().enumerate() {
+        let mut chain_alms: Vec<(u32, usize)> = Vec::new(); // (min pos, alm)
+        for (ai, alm) in packing.alms.iter().enumerate() {
+            if alm.chain == Some(ch as u32) {
+                let mut min_pos = u32::MAX;
+                for &b in &alm.adder_bits {
+                    if let Some(&CellKind::AdderBit { pos, .. }) =
+                        nl.cells.get(b as usize).map(|c| &c.kind)
+                    {
+                        min_pos = min_pos.min(pos);
+                    }
+                }
+                chain_alms.push((min_pos, ai));
+            }
+        }
+        chain_alms.sort_unstable();
+        let mut visited: Vec<usize> = Vec::new();
+        for &(_, ai) in &chain_alms {
+            if let Some(lb) = alm_lb[ai] {
+                if visited.last() != Some(&lb) {
+                    visited.push(lb);
+                }
+            }
+        }
+        let mut uniq = visited.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        if uniq.len() != visited.len() {
+            out.push(err(
+                "pack.chain-split",
+                format!("chain {ch}"),
+                format!("chain re-enters an LB it already left: visits {visited:?}"),
+            ));
+        }
+        if &visited != stored {
+            out.push(err(
+                "pack.chain-macro-mismatch",
+                format!("chain {ch}"),
+                format!("stored macro {stored:?} != LB walk {visited:?}"),
+            ));
+        }
+    }
+
+    // --- Exact cell coverage. --------------------------------------------
+    // Every LUT, adder bit, and FF must be packed exactly once; every
+    // Input/Output cell must appear exactly once in `ios`.
+    let mut slot_count: HashMap<CellId, u32> = HashMap::new();
+    for alm in &packing.alms {
+        for &c in alm.adder_bits.iter().chain(alm.logic_luts.iter()).chain(alm.ffs.iter()) {
+            *slot_count.entry(c).or_insert(0) += 1;
+        }
+        for p in alm.operand_paths.iter().flatten() {
+            if let OperandPath::AbsorbedLut(l) = p {
+                *slot_count.entry(*l).or_insert(0) += 1;
+            }
+        }
+    }
+    for &c in &packing.ios {
+        *slot_count.entry(c).or_insert(0) += 1;
+    }
+    for (ci, cell) in nl.cells.iter().enumerate() {
+        let packable = matches!(
+            cell.kind,
+            CellKind::Lut { .. }
+                | CellKind::AdderBit { .. }
+                | CellKind::Ff
+                | CellKind::Input
+                | CellKind::Output
+        );
+        let n = slot_count.get(&(ci as CellId)).copied().unwrap_or(0);
+        if packable && n == 0 {
+            out.push(err(
+                "pack.cell-unpacked",
+                format!("cell {ci}"),
+                format!("{:?} appears in no ALM slot or I/O pad", cell.kind),
+            ));
+        } else if n > 1 {
+            out.push(err(
+                "pack.cell-double-packed",
+                format!("cell {ci}"),
+                format!("{:?} occupies {n} packing slots", cell.kind),
+            ));
+        }
+    }
+
+    out
+}

@@ -1,0 +1,179 @@
+//! Place legality: site exclusivity, carry-macro column alignment, and a
+//! device-fit re-check.
+//!
+//! The one deliberate exception to the "no producer code" rule for this
+//! subsystem: the device-fit re-check calls [`crate::place::macro_windows`]
+//! — the same greedy column packer the placer uses — because "every chain
+//! macro has a vertical window" is *defined* by that packer.  Everything
+//! else (site occupancy, alignment, capacities) is recomputed from the
+//! artifact alone.
+
+use std::collections::HashMap;
+
+use crate::arch::device::Loc;
+use crate::pack::Packing;
+use crate::place::{macro_windows, Placement};
+
+use super::{Severity, Stage, Violation};
+
+fn err(code: &'static str, location: String, message: String) -> Violation {
+    Violation::new(Stage::Place, Severity::Error, code, location, message)
+}
+
+/// Audit a placement of `packing` on `placement.device`.  Scan order: LBs
+/// ascending, I/Os in `packing.ios` order, macros ascending, device fit.
+pub fn audit_placement(packing: &Packing, placement: &Placement) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let dev = &placement.device;
+
+    // --- LB sites: arity, bounds, exclusivity (LBs ascending). -----------
+    if placement.lb_loc.len() != packing.lbs.len() {
+        out.push(err(
+            "place.arity",
+            "lb_loc".to_string(),
+            format!(
+                "{} LB locations for {} packed LBs",
+                placement.lb_loc.len(),
+                packing.lbs.len()
+            ),
+        ));
+    }
+    let mut site_owner: HashMap<Loc, usize> = HashMap::new();
+    for (li, &loc) in placement.lb_loc.iter().enumerate() {
+        if !dev.is_lb(loc) {
+            out.push(err(
+                "place.site-overlap",
+                format!("lb {li}"),
+                format!(
+                    "placed at ({},{}) outside the {}x{} logic grid",
+                    loc.x, loc.y, dev.lb_cols, dev.lb_rows
+                ),
+            ));
+        }
+        if let Some(&prev) = site_owner.get(&loc) {
+            out.push(err(
+                "place.site-overlap",
+                format!("lb {li}"),
+                format!("shares site ({},{}) with LB {prev}", loc.x, loc.y),
+            ));
+        } else {
+            site_owner.insert(loc, li);
+        }
+    }
+
+    // --- I/O pads (packing.ios order). -----------------------------------
+    let mut pad_fill: HashMap<Loc, u16> = HashMap::new();
+    for &cell in &packing.ios {
+        match placement.io_loc.get(&cell) {
+            None => out.push(err(
+                "place.io-site",
+                format!("io cell {cell}"),
+                "I/O cell has no placed pad".to_string(),
+            )),
+            Some(&loc) => {
+                if !dev.is_io(loc) {
+                    out.push(err(
+                        "place.io-site",
+                        format!("io cell {cell}"),
+                        format!("pad ({},{}) is not on the I/O perimeter", loc.x, loc.y),
+                    ));
+                }
+                let fill = pad_fill.entry(loc).or_insert(0);
+                *fill += 1;
+                if *fill == dev.io_per_tile + 1 {
+                    // Report once per overfilled tile, at the pad that tips it.
+                    out.push(err(
+                        "place.io-overlap",
+                        format!("io cell {cell}"),
+                        format!(
+                            "pad tile ({},{}) holds more than {} I/Os",
+                            loc.x, loc.y, dev.io_per_tile
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+
+    // --- Carry-macro alignment (macros ascending). ------------------------
+    // A multi-LB chain macro must occupy one column, consecutive rows, in
+    // macro order — the placer's column/window rule.
+    for (ch, m) in packing.chain_macros.iter().enumerate() {
+        if m.len() < 2 {
+            continue;
+        }
+        let locs: Vec<Loc> = m
+            .iter()
+            .filter_map(|&lb| placement.lb_loc.get(lb).copied())
+            .collect();
+        if locs.len() != m.len() {
+            out.push(err(
+                "place.macro-alignment",
+                format!("chain {ch}"),
+                format!("macro references LB index out of range: {m:?}"),
+            ));
+            continue;
+        }
+        for (k, w) in locs.windows(2).enumerate() {
+            if w[1].x != w[0].x || w[1].y != w[0].y + 1 {
+                out.push(err(
+                    "place.macro-alignment",
+                    format!("chain {ch} lb {}..{}", m[k], m[k + 1]),
+                    format!(
+                        "macro breaks column alignment: ({},{}) then ({},{})",
+                        w[0].x, w[0].y, w[1].x, w[1].y
+                    ),
+                ));
+            }
+        }
+    }
+
+    // --- Device-fit re-check. ---------------------------------------------
+    if packing.lbs.len() > dev.lb_capacity() {
+        out.push(err(
+            "place.device-fit",
+            "device".to_string(),
+            format!(
+                "{} LBs exceed the {} LB slots of a {}x{} device",
+                packing.lbs.len(),
+                dev.lb_capacity(),
+                dev.lb_cols,
+                dev.lb_rows
+            ),
+        ));
+    }
+    if packing.ios.len() > dev.io_capacity() {
+        out.push(err(
+            "place.device-fit",
+            "device".to_string(),
+            format!(
+                "{} I/Os exceed the {} I/O sites",
+                packing.ios.len(),
+                dev.io_capacity()
+            ),
+        ));
+    }
+    let max_macro = packing.chain_macros.iter().map(|m| m.len()).max().unwrap_or(0);
+    if max_macro > dev.lb_rows as usize {
+        out.push(err(
+            "place.device-fit",
+            "device".to_string(),
+            format!(
+                "a {max_macro}-LB chain macro cannot stand in {} rows",
+                dev.lb_rows
+            ),
+        ));
+    }
+    if macro_windows(packing, dev).is_none() {
+        out.push(err(
+            "place.device-fit",
+            "device".to_string(),
+            format!(
+                "no vertical window assignment for every chain macro on {}x{}",
+                dev.lb_cols, dev.lb_rows
+            ),
+        ));
+    }
+
+    out
+}

@@ -1,0 +1,218 @@
+//! Route validity: connectivity, overuse, and tree-arena integrity,
+//! re-derived on a freshly built RRG.
+//!
+//! The graph is rebuilt with [`RrGraph::build`] from the device and arch —
+//! the same deterministic constructor the router used — and every net's
+//! pin taps are re-derived from the router's published salt scheme
+//! (source `17 + 131*net`, sink `71 + 131*net`, over `fc_out`/`fc_in`).
+//! Connectivity is checked by *directed* reachability: every committed
+//! node of a net must be reachable from its source taps, and every sink's
+//! tap set must intersect the reachable set.  (Undirected acyclicity is
+//! deliberately not an invariant here: RRG turn edges are partially
+//! asymmetric and a legal tree brushing two adjacent corners induces
+//! undirected cycles.)  Reachability of everything from the source is the
+//! sound replacement: it proves the committed set is one source-rooted
+//! tree with no orphaned wiring.
+
+use crate::arch::device::Loc;
+use crate::arch::Arch;
+use crate::place::cost::{NetModel, Term};
+use crate::place::Placement;
+use crate::route::Routing;
+use crate::rrg::RrGraph;
+
+use super::{Severity, Stage, Violation};
+
+fn err(code: &'static str, location: String, message: String) -> Violation {
+    Violation::new(Stage::Route, Severity::Error, code, location, message)
+}
+
+/// Audit a routing of `model` on `placement`.  Scan order: nets ascending
+/// (arena shape, sink terms, connectivity), then global overuse.
+pub fn audit_routing(
+    model: &NetModel,
+    placement: &Placement,
+    arch: &Arch,
+    routing: &Routing,
+) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let graph = RrGraph::build(&placement.device, arch);
+    let n_nodes = graph.num_nodes();
+
+    if routing.net_nodes.len() != model.nets.len()
+        || routing.sink_hops.len() != model.nets.len()
+    {
+        out.push(err(
+            "route.arity",
+            "routing".to_string(),
+            format!(
+                "{} node lists / {} sink lists for {} external nets",
+                routing.net_nodes.len(),
+                routing.sink_hops.len(),
+                model.nets.len()
+            ),
+        ));
+        return out; // everything below indexes by net; bail before panicking
+    }
+
+    let term_loc = |t: Term| -> Option<Loc> {
+        match t {
+            Term::Lb(i) => placement.lb_loc.get(i).copied(),
+            Term::Io(c) => placement.io_loc.get(&c).copied(),
+        }
+    };
+
+    let mut occ: Vec<u16> = vec![0; n_nodes];
+    for (ni, en) in model.nets.iter().enumerate() {
+        let loc = |suffix: &str| format!("net {}{suffix}", en.net);
+        let nodes = &routing.net_nodes[ni];
+
+        // Tree arena contract: sorted, deduplicated, in bounds.
+        let mut arena_ok = true;
+        for w in nodes.windows(2) {
+            if w[1] <= w[0] {
+                out.push(err(
+                    "route.arena",
+                    loc(""),
+                    format!("node arena not strictly increasing at {} -> {}", w[0], w[1]),
+                ));
+                arena_ok = false;
+                break;
+            }
+        }
+        if let Some(&max) = nodes.last() {
+            if max >= n_nodes {
+                out.push(err(
+                    "route.arena",
+                    loc(""),
+                    format!("node id {max} out of range for a {n_nodes}-node RRG"),
+                ));
+                arena_ok = false;
+            }
+        }
+        if arena_ok {
+            for &n in nodes {
+                occ[n] += 1;
+            }
+        }
+
+        // Sink list must mirror the net's sink terminals in order.
+        let hops = &routing.sink_hops[ni];
+        let want: &[Term] = en.terms.get(1..).unwrap_or(&[]);
+        if hops.len() != want.len() || hops.iter().map(|(t, _)| *t).ne(want.iter().copied()) {
+            out.push(err(
+                "route.sink-terms",
+                loc(""),
+                format!(
+                    "sink-hop terminals {:?} do not mirror the net's sinks {want:?}",
+                    hops.iter().map(|(t, _)| *t).collect::<Vec<_>>()
+                ),
+            ));
+        }
+
+        // Connectivity — only meaningful once the router claims success
+        // (a failed run legitimately leaves unroutable sinks pathless).
+        if !routing.success || !arena_ok || want.is_empty() {
+            continue;
+        }
+        let Some(src_loc) = term_loc(en.terms[0]) else {
+            out.push(err(
+                "route.disconnected",
+                loc(""),
+                format!("source terminal {:?} has no placed location", en.terms[0]),
+            ));
+            continue;
+        };
+        let src_taps = graph.pin_nodes(src_loc, arch.routing.fc_out, 17 + 131 * ni as u64);
+
+        // Directed BFS over the committed subgraph, seeded at source taps.
+        let mut reached = vec![false; nodes.len()];
+        let mut stack: Vec<usize> = Vec::new();
+        for &s in &src_taps {
+            if let Ok(p) = nodes.binary_search(&s) {
+                if !reached[p] {
+                    reached[p] = true;
+                    stack.push(p);
+                }
+            }
+        }
+        while let Some(p) = stack.pop() {
+            for &nb in graph.neighbors(nodes[p]) {
+                if let Ok(q) = nodes.binary_search(&(nb as usize)) {
+                    if !reached[q] {
+                        reached[q] = true;
+                        stack.push(q);
+                    }
+                }
+            }
+        }
+        for (si, &sink) in want.iter().enumerate() {
+            let Some(dst_loc) = term_loc(sink) else {
+                out.push(err(
+                    "route.disconnected",
+                    loc(&format!(" sink {si}")),
+                    format!("sink terminal {sink:?} has no placed location"),
+                ));
+                continue;
+            };
+            let dst_taps = graph.pin_nodes(dst_loc, arch.routing.fc_in, 71 + 131 * ni as u64);
+            let hit = dst_taps
+                .iter()
+                .any(|t| nodes.binary_search(t).map_or(false, |p| reached[p]));
+            if !hit {
+                out.push(err(
+                    "route.disconnected",
+                    loc(&format!(" sink {si}")),
+                    format!(
+                        "no directed path from source taps at ({},{}) reaches a sink tap \
+                         at ({},{})",
+                        src_loc.x, src_loc.y, dst_loc.x, dst_loc.y
+                    ),
+                ));
+            }
+        }
+        for (p, &n) in nodes.iter().enumerate() {
+            if !reached[p] {
+                let (d, x, y, t) = graph.decode(n);
+                out.push(err(
+                    "route.orphan-node",
+                    loc(""),
+                    format!(
+                        "committed node {n} (dir {d}, x {x}, y {y}, track {t}) is not \
+                         reachable from the net's source taps"
+                    ),
+                ));
+            }
+        }
+    }
+
+    // --- Global overuse (after all nets counted). -------------------------
+    let recounted = occ.iter().filter(|&&o| o as f64 > crate::rrg::NODE_CAP).count();
+    if recounted != routing.overused {
+        out.push(err(
+            "route.overuse-count",
+            "routing".to_string(),
+            format!(
+                "recounted {recounted} overused node(s) but the router reported {}",
+                routing.overused
+            ),
+        ));
+    }
+    if routing.success {
+        for (n, &o) in occ.iter().enumerate() {
+            if o as f64 > crate::rrg::NODE_CAP {
+                let (d, x, y, t) = graph.decode(n);
+                out.push(err(
+                    "route.overuse",
+                    format!("node {n}"),
+                    format!(
+                        "wire (dir {d}, x {x}, y {y}, track {t}) carries {o} nets on a \
+                         claimed-legal routing"
+                    ),
+                ));
+            }
+        }
+    }
+
+    out
+}

@@ -1,0 +1,161 @@
+//! Timing sanity: the STA report must be internally consistent with the
+//! netlist it claims to time.
+//!
+//! Invariants re-derived from the artifact (no STA re-run): arrivals are
+//! finite and non-negative; along every combinational edge (non-FF driver
+//! → non-FF sink) the sink's arrival is no earlier than the driver's
+//! (all component delays are non-negative, so arrival is monotone along
+//! paths); every primary-output arrival is bounded by the reported CPD
+//! (the CPD is their max); the per-sink criticality arena has exactly the
+//! index's CSR shape with every value in [0, 1]; and each net's
+//! criticality is **bitwise** the max-fold (from 0.0) of its sink slots —
+//! the same reduction the producer and the determinism suites use.
+
+use crate::netlist::{CellKind, Netlist, NetlistIndex};
+use crate::timing::TimingReport;
+
+use super::{Severity, Stage, Violation};
+
+/// Slop for comparisons that cross independently rounded sums.
+const EPS: f64 = 1e-9;
+
+fn err(code: &'static str, location: String, message: String) -> Violation {
+    Violation::new(Stage::Timing, Severity::Error, code, location, message)
+}
+
+/// Audit a timing report against the netlist/index it was computed from.
+/// Scan order: global arity, cells ascending (arrival range), nets
+/// ascending (monotonicity, criticality), outputs ascending.
+pub fn audit_timing(nl: &Netlist, idx: &NetlistIndex, rpt: &TimingReport) -> Vec<Violation> {
+    let mut out = Vec::new();
+
+    // --- CPD. -------------------------------------------------------------
+    if !(rpt.cpd_ps.is_finite() && rpt.cpd_ps > 0.0) {
+        out.push(err(
+            "timing.cpd",
+            "cpd".to_string(),
+            format!("reported CPD {} ps is not finite and positive", rpt.cpd_ps),
+        ));
+    }
+
+    // --- Arity. -----------------------------------------------------------
+    let mut shape_ok = true;
+    if rpt.arrival.len() != nl.cells.len() || rpt.net_crit.len() != nl.nets.len() {
+        out.push(err(
+            "timing.arity",
+            "report".to_string(),
+            format!(
+                "{} arrivals / {} net criticalities for {} cells / {} nets",
+                rpt.arrival.len(),
+                rpt.net_crit.len(),
+                nl.cells.len(),
+                nl.nets.len()
+            ),
+        ));
+        shape_ok = false;
+    }
+    // The sink-crit arena must be *the* index CSR: same offsets, same
+    // slot count.  Validated before any `net()` slicing.
+    if rpt.sink_crit.num_nets() != nl.nets.len()
+        || rpt.sink_crit.len() != idx.num_sink_slots()
+        || rpt.sink_crit.offsets() != idx.sink_offsets()
+    {
+        out.push(err(
+            "timing.csr-shape",
+            "sink_crit".to_string(),
+            format!(
+                "arena covers {} nets / {} slots, index has {} nets / {} slots \
+                 (or offsets diverge)",
+                rpt.sink_crit.num_nets(),
+                rpt.sink_crit.len(),
+                nl.nets.len(),
+                idx.num_sink_slots()
+            ),
+        ));
+        shape_ok = false;
+    }
+
+    // --- Criticality range (flat arena scan). -----------------------------
+    for (slot, &c) in rpt.sink_crit.values().iter().enumerate() {
+        if !(0.0..=1.0).contains(&c) || c.is_nan() {
+            out.push(err(
+                "timing.crit-range",
+                format!("sink slot {slot}"),
+                format!("sink criticality {c} outside [0, 1]"),
+            ));
+        }
+    }
+
+    if !shape_ok {
+        return out; // per-cell / per-net scans below index by these shapes
+    }
+
+    // --- Arrival range (cells ascending). ---------------------------------
+    for (ci, &a) in rpt.arrival.iter().enumerate() {
+        if !(a.is_finite() && a >= 0.0) {
+            out.push(err(
+                "timing.arrival-range",
+                format!("cell {ci}"),
+                format!("arrival {a} ps is not finite and non-negative"),
+            ));
+        }
+    }
+
+    // --- Edge monotonicity + per-net criticality (nets ascending). --------
+    let is_ff = |c: u32| matches!(nl.cells[c as usize].kind, CellKind::Ff);
+    for ni in 0..nl.nets.len() {
+        // net_crit must be bitwise the max-fold of the net's sink slots.
+        let fold = rpt
+            .sink_crit
+            .net(ni as u32)
+            .iter()
+            .fold(0.0f64, |m, &c| m.max(c));
+        if fold.to_bits() != rpt.net_crit[ni].to_bits() {
+            out.push(err(
+                "timing.net-crit-mismatch",
+                format!("net {ni}"),
+                format!(
+                    "net criticality {} is not the max of its sink slots ({fold})",
+                    rpt.net_crit[ni]
+                ),
+            ));
+        }
+        let Some((drv, _)) = idx.driver(ni as u32) else { continue };
+        if is_ff(drv) {
+            continue; // FF launches re-time from the clock edge
+        }
+        for (sink, _pin) in idx.sinks(ni as u32) {
+            if is_ff(sink) {
+                continue; // FF d-pins capture; their arrival is 0 by definition
+            }
+            let (ad, asv) = (rpt.arrival[drv as usize], rpt.arrival[sink as usize]);
+            if asv + EPS < ad {
+                out.push(err(
+                    "timing.arrival-monotone",
+                    format!("net {ni}"),
+                    format!(
+                        "combinational edge cell {drv} -> cell {sink} goes back in time: \
+                         arrival {ad} ps then {asv} ps"
+                    ),
+                ));
+            }
+        }
+    }
+
+    // --- Endpoint arrivals bounded by the CPD (outputs ascending). --------
+    for &po in &nl.outputs {
+        let a = rpt.arrival[po as usize];
+        if a > rpt.cpd_ps + EPS {
+            out.push(err(
+                "timing.arrival-exceeds-cpd",
+                format!("cell {po}"),
+                format!(
+                    "primary-output arrival {a} ps exceeds the reported CPD {} ps",
+                    rpt.cpd_ps
+                ),
+            ));
+        }
+    }
+
+    out
+}

@@ -30,6 +30,7 @@ pub mod engine;
 use crate::arch::device::Device;
 use crate::arch::{Arch, ArchVariant};
 use crate::bench_suites::Benchmark;
+use crate::check::{self, CheckMode};
 use crate::netlist::{Netlist, NetlistIndex, PackIndex};
 use crate::pack::{pack, PackOpts, Packing, Unrelated};
 use crate::place::{place_with, PlaceOpts};
@@ -75,6 +76,12 @@ pub struct FlowOpts {
     /// Fixed device (Table IV stress); `None` auto-sizes per design.
     pub device: Option<Device>,
     pub channel_width: Option<u16>,
+    /// Run the stage auditors ([`crate::check`]) on each artifact as the
+    /// flow produces it (`--check [strict]`).  [`CheckMode::Warn`] prints
+    /// violations and continues; [`CheckMode::Strict`] fails the run.
+    /// Deliberately *not* part of the engine's cache keys: auditing never
+    /// changes an artifact, so checked and unchecked runs may share them.
+    pub check: CheckMode,
 }
 
 impl Default for FlowOpts {
@@ -93,6 +100,7 @@ impl Default for FlowOpts {
             use_kernel: false,
             device: None,
             channel_width: None,
+            check: CheckMode::Off,
         }
     }
 }
@@ -193,6 +201,13 @@ pub fn place_route_seed(
     seed: u64,
     ctx: &SeedCtx,
 ) -> SeedMetrics {
+    // `--check`: audit the upstream artifacts once per seed cell (cheap
+    // linear scans), then each artifact this cell produces right after
+    // its stage.  Strict mode panics inside `enforce`.
+    if opts.check != CheckMode::Off {
+        check::enforce(opts.check, "netlist", &check::audit_netlist(nl, ctx.idx));
+        check::enforce(opts.check, "pack", &check::audit_packing(nl, packing, arch));
+    }
     let pl = place_with(
         nl,
         packing,
@@ -213,6 +228,9 @@ pub fn place_route_seed(
         ctx.pidx,
     )
     .unwrap_or_else(|e| panic!("placement failed (seed {seed}): {e}"));
+    if opts.check != CheckMode::Off {
+        check::enforce(opts.check, "place", &check::audit_placement(packing, &pl));
+    }
     if opts.route {
         let mut model = crate::place::cost::NetModel::build(nl, packing);
         model.set_weights(&[], false);
@@ -273,6 +291,10 @@ pub fn place_route_seed(
             let rpt = sta_routed(nl, packing, arch, &r, &model);
             (r, rpt)
         };
+        if opts.check != CheckMode::Off {
+            check::enforce(opts.check, "route", &check::audit_routing(&model, &pl, arch, &r));
+            check::enforce(opts.check, "timing", &check::audit_timing(nl, ctx.idx, &rpt));
+        }
         let cpd_trace_ns = if opts.route_timing_weights {
             let mut t: Vec<f64> = r.cpd_trace.iter().map(|c| c / 1000.0).collect();
             t.push(rpt.cpd_ps / 1000.0);

@@ -80,6 +80,17 @@
 //! content hashes, so repeated CLI invocations skip the map/pack stages
 //! (`--no-disk-cache` opts out; `--cache-cap-mb N` bounds the store with
 //! LRU-by-mtime eviction).
+//!
+//! ## Stage auditors
+//!
+//! [`check`] is the independent static-analysis layer over every stage
+//! artifact: netlist lint (incl. the combinational-loop witness), pack /
+//! place legality, route validity over the RRG, and timing sanity — each
+//! re-derived from the dense arenas without the producer code paths, so
+//! producer bugs cannot self-certify.  `dduty check` runs the auditors
+//! over whole benchmark suites; `--check [strict]` gates the flow on them
+//! after each stage.  The layer is a *contract*: any future stage must
+//! ship its auditor here before its artifacts feed the flow.
 
 pub mod arch;
 pub mod coffe;
@@ -101,6 +112,8 @@ pub mod rrg;
 pub mod route;
 
 pub mod bench_suites;
+
+pub mod check;
 
 pub mod coordinator;
 pub mod flow;

@@ -22,10 +22,25 @@
 //!       placer's per-sink criticality refresh; --move-mix F in [0, 1]
 //!       scales the annealer's macro-shift/median move probabilities,
 //!       0 = uniform swaps only).
+//!   check [<bench|suite> ...] [--variant baseline|dd5|dd6|all] [--strict]
+//!         [--quick] [--no-route] [--route-jobs N] [--no-disk-cache]
+//!         [--cache-cap-mb N]
+//!       Run the stage auditors ([`double_duty::check`]) over the named
+//!       benchmarks/suites (default: every shipped suite) on each listed
+//!       architecture variant, re-deriving netlist, packing, placement,
+//!       routing and timing invariants from the artifacts alone.  Exits
+//!       nonzero under `--strict` if any Error-severity violation is
+//!       found.  Artifacts come from the same persistent cache the other
+//!       subcommands fill, so `dduty check` after `dduty exp` audits what
+//!       actually ran.
 //!   list
 //!       List available benchmarks.
 //!   coffe
 //!       Print the COFFE component report (Tables I & II).
+//!
+//! `exp` and `flow` also accept `--check [strict]`: the flow then runs
+//! the same auditors on every artifact as it is produced — warn mode
+//! prints violations and continues, strict mode fails the run.
 //!
 //! Mapped netlists and packings persist under `target/dd-cache` so
 //! repeated invocations skip the map/pack stages; `--no-disk-cache`
@@ -34,6 +49,7 @@
 
 use double_duty::arch::ArchVariant;
 use double_duty::bench_suites::{all_suites, BenchParams};
+use double_duty::check::{self, CheckMode, Severity};
 use double_duty::coordinator::default_workers;
 use double_duty::flow::engine::{ArtifactCache, Engine, ExperimentPlan};
 use double_duty::flow::FlowOpts;
@@ -45,6 +61,7 @@ fn main() {
     match cmd {
         "exp" => cmd_exp(&args[1..]),
         "flow" => cmd_flow(&args[1..]),
+        "check" => cmd_check(&args[1..]),
         "list" => cmd_list(),
         "coffe" => {
             report::table1().print();
@@ -52,14 +69,18 @@ fn main() {
             report::table2().print();
         }
         _ => {
-            eprintln!("usage: dduty <exp|flow|list|coffe> ...");
+            eprintln!("usage: dduty <exp|flow|check|list|coffe> ...");
             eprintln!("  dduty exp <table1|table2|table3|table4|fig5..fig9|all> [--quick] \
-                       [--jobs N] [--route-jobs N] [--no-disk-cache] [--cache-cap-mb N]");
+                       [--jobs N] [--route-jobs N] [--no-disk-cache] [--cache-cap-mb N] \
+                       [--check [strict]]");
             eprintln!("  dduty flow --bench <name> [--variant baseline|dd5|dd6] \
                        [--seed N | --seeds a,b,c] [--no-route] [--jobs N] \
                        [--route-jobs N] [--no-disk-cache] [--cache-cap-mb N] \
                        [--timing-route] [--sta-every K] [--crit-alpha A] \
-                       [--place-crit-alpha A] [--move-mix F]");
+                       [--place-crit-alpha A] [--move-mix F] [--check [strict]]");
+            eprintln!("  dduty check [<bench|suite> ...] [--variant baseline|dd5|dd6|all] \
+                       [--strict] [--quick] [--no-route] [--route-jobs N] \
+                       [--no-disk-cache] [--cache-cap-mb N]");
             std::process::exit(if cmd == "help" { 0 } else { 2 });
         }
     }
@@ -132,6 +153,19 @@ fn parse_cache_cap_mb(args: &[String]) -> Option<u64> {
     }
 }
 
+/// `--check [strict]`: run the stage auditors on each artifact the flow
+/// produces.  Bare `--check` warns (prints violations, continues);
+/// `--check strict` fails the run on any Error-severity violation.
+fn parse_check_mode(args: &[String]) -> CheckMode {
+    let Some(i) = args.iter().position(|a| a == "--check") else {
+        return CheckMode::Off;
+    };
+    match args.get(i + 1).map(|s| s.as_str()) {
+        Some("strict") => CheckMode::Strict,
+        _ => CheckMode::Warn,
+    }
+}
+
 fn exp_opts(args: &[String]) -> ExpOpts {
     let mut opts = if args.iter().any(|a| a == "--quick") {
         ExpOpts::quick()
@@ -142,6 +176,7 @@ fn exp_opts(args: &[String]) -> ExpOpts {
     opts.route_jobs = parse_route_jobs(args);
     opts.disk_cache = !args.iter().any(|a| a == "--no-disk-cache");
     opts.cache_cap_mb = parse_cache_cap_mb(args);
+    opts.check = parse_check_mode(args);
     opts
 }
 
@@ -247,6 +282,7 @@ fn cmd_flow(args: &[String]) {
             place_crit_alpha,
             move_mix,
             use_kernel,
+            check: parse_check_mode(args),
             ..Default::default()
         },
     };
@@ -273,6 +309,98 @@ fn cmd_flow(args: &[String]) {
         println!("CPD trajectory : {} ns", trace.join(" -> "));
     }
     println!("chain dedup    : {} hits", r.dedup_hits);
+}
+
+/// `dduty check`: audit cached (or freshly built) stage artifacts for the
+/// selected benchmarks x variants and report every invariant violation.
+fn cmd_check(args: &[String]) {
+    let get = |flag: &str| -> Option<String> {
+        args.iter()
+            .position(|a| a == flag)
+            .and_then(|i| args.get(i + 1).cloned())
+    };
+    let strict = args.iter().any(|a| a == "--strict");
+    let quick = args.iter().any(|a| a == "--quick");
+    let route = !args.iter().any(|a| a == "--no-route");
+    let route_jobs = parse_route_jobs(args);
+    let cache_cap_mb = parse_cache_cap_mb(args);
+    let disk_cache = !args.iter().any(|a| a == "--no-disk-cache");
+    let variants: Vec<ArchVariant> = match get("--variant").as_deref() {
+        None | Some("all") => vec![ArchVariant::Baseline, ArchVariant::Dd5, ArchVariant::Dd6],
+        Some("baseline") => vec![ArchVariant::Baseline],
+        Some("dd5") => vec![ArchVariant::Dd5],
+        Some("dd6") => vec![ArchVariant::Dd6],
+        Some(other) => {
+            eprintln!("unknown variant {other} (expected baseline|dd5|dd6|all)");
+            std::process::exit(2);
+        }
+    };
+
+    // Positional selectors name benchmarks or whole suites; none selects
+    // every shipped suite.  Flag values must not read as selectors.
+    const VALUE_FLAGS: &[&str] = &["--variant", "--jobs", "--route-jobs", "--cache-cap-mb"];
+    let mut selectors: Vec<&str> = Vec::new();
+    let mut skip_value = false;
+    for a in args {
+        if skip_value {
+            skip_value = false;
+            continue;
+        }
+        if VALUE_FLAGS.contains(&a.as_str()) {
+            skip_value = true;
+        } else if !a.starts_with("--") {
+            selectors.push(a.as_str());
+        }
+    }
+
+    let params = BenchParams::default();
+    let benches: Vec<_> = all_suites(&params)
+        .into_iter()
+        .filter(|b| {
+            selectors.is_empty()
+                || selectors.iter().any(|s| *s == b.name || *s == b.suite.name())
+        })
+        .collect();
+    if benches.is_empty() {
+        eprintln!("no benchmark or suite matches; see `dduty list`");
+        std::process::exit(2);
+    }
+
+    let opts = FlowOpts {
+        seeds: vec![1],
+        route,
+        route_jobs,
+        place_effort: if quick { 0.15 } else { 0.5 },
+        ..Default::default()
+    };
+    let cache = ArtifactCache::for_cli(disk_cache, cache_cap_mb);
+    let (mut errors, mut warnings) = (0usize, 0usize);
+    for b in &benches {
+        for &variant in &variants {
+            let report = check::check_benchmark(&cache, b, variant, &opts);
+            let status = if report.is_clean() {
+                "clean".to_string()
+            } else {
+                report.summary()
+            };
+            println!("check {:20} [{:8}] {status}", b.name, variant.name());
+            for v in &report.violations {
+                println!("  {v}");
+                match v.severity {
+                    Severity::Error => errors += 1,
+                    Severity::Warning => warnings += 1,
+                }
+            }
+        }
+    }
+    println!(
+        "check: {} benchmark(s) x {} variant(s): {errors} error(s), {warnings} warning(s)",
+        benches.len(),
+        variants.len()
+    );
+    if strict && errors > 0 {
+        std::process::exit(1);
+    }
 }
 
 fn cmd_list() {

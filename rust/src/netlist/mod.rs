@@ -8,7 +8,9 @@
 //! ([`blif`]) provides external interchange, and [`index`] flattens the
 //! hot-path views (CSR fanout, dense drivers, combinational levelization,
 //! cell→ALM/LB ownership) into cache-friendly arenas built once per
-//! netlist/packing.
+//! netlist/packing.  Structural well-formedness (pin shapes, drivers,
+//! chain continuity, acyclicity) is re-verified over those arenas by
+//! [`crate::check::audit_netlist`] — the check-layer contract.
 
 pub mod blif;
 pub mod index;

@@ -17,6 +17,11 @@
 //! input-pin budget (`target_ext_pin_util` x 60) and carry-chain macros
 //! that must occupy consecutive ALM slots (and consecutive LBs when a
 //! chain spans blocks).
+//!
+//! Every legality rule above is re-verified from the artifact alone by
+//! the independent [`crate::check::audit_packing`] auditor — changes to
+//! the rules must land with the matching auditor + mutation-test update
+//! (the check-layer contract).
 
 pub mod cluster;
 

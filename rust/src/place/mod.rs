@@ -45,6 +45,11 @@
 //! growing the device (Table-IV-style fixed-device stress runs must never
 //! quietly measure a larger grid).  Auto-sizing (`device: None`) still
 //! grows the grid until the tallest macro fits.
+//!
+//! Placement legality (site exclusivity, macro column alignment, device
+//! fit) is independently re-audited by [`crate::check::audit_placement`];
+//! misfit errors surface through the same violation channel
+//! (`place.device-misfit`) in `dduty check`.
 
 pub mod cost;
 pub mod kernel_accel;

@@ -15,6 +15,7 @@ use crate::arch::device::Device;
 use crate::arch::{Arch, ArchVariant};
 use crate::bench_suites::{all_suites, koios_suite, kratos_suite, vtr_suite, BenchParams,
                           Benchmark, Suite};
+use crate::check::CheckMode;
 use crate::coordinator::default_workers;
 use crate::flow::engine::{ArtifactCache, Engine, ExperimentPlan};
 use crate::flow::{run_flow, FlowOpts, FlowResult};
@@ -44,6 +45,9 @@ pub struct ExpOpts {
     /// stores evict least-recently-modified artifacts beyond the cap.
     /// `None` leaves the store unbounded.
     pub cache_cap_mb: Option<u64>,
+    /// Run the stage auditors on every artifact the sweep produces
+    /// (`--check [strict]`); see [`crate::check`].
+    pub check: CheckMode,
 }
 
 impl Default for ExpOpts {
@@ -55,6 +59,7 @@ impl Default for ExpOpts {
             route_jobs: 1,
             disk_cache: false,
             cache_cap_mb: None,
+            check: CheckMode::Off,
         }
     }
 }
@@ -70,6 +75,7 @@ impl ExpOpts {
             place_effort: if self.quick { 0.15 } else { 0.5 },
             route: true,
             route_jobs: self.route_jobs,
+            check: self.check,
             ..Default::default()
         }
     }

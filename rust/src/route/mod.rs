@@ -15,6 +15,10 @@
 //!    before the next wave starts,
 //! 3. bump history costs on overused nodes (serial reduction).
 //!
+//! A claimed-legal [`Routing`] is independently re-verified (source→sink
+//! connectivity, overuse recount, tree-arena integrity) by
+//! [`crate::check::audit_routing`] — the check-layer contract.
+//!
 //! Wave boundaries depend only on the work list — never on the worker
 //! count — and routing a net is a pure function of (wave snapshot, net),
 //! so results are bit-identical for any `jobs` value — see

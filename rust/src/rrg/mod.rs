@@ -1,5 +1,8 @@
 //! Routing-resource graph (RRG): the shared substrate of the router and
-//! the post-route timing path.
+//! the post-route timing path.  The graph build is deterministic per
+//! (device, arch), which is what lets [`crate::check::audit_routing`]
+//! rebuild it independently and re-derive pin taps when auditing a
+//! routing.
 //!
 //! ## Node layout
 //!

@@ -83,6 +83,26 @@ pub struct SinkCrit {
 }
 
 impl SinkCrit {
+    /// Build from raw CSR parts: `start` is the offset array (length
+    /// `nets + 1`, a copy of [`NetlistIndex::sink_offsets`]) and `crit`
+    /// the flat per-slot arena.  Exists for the check subsystem's
+    /// mutation tests, which need to hand-corrupt an arena; producers go
+    /// through [`sta_with`].
+    pub fn from_raw(start: Vec<u32>, crit: Vec<f64>) -> SinkCrit {
+        SinkCrit { start, crit }
+    }
+
+    /// Number of nets the CSR covers (`start.len() - 1`).
+    pub fn num_nets(&self) -> usize {
+        self.start.len().saturating_sub(1)
+    }
+
+    /// The CSR offset array (length `num_nets() + 1`) — lets auditors
+    /// validate the shape without risking the slicing in [`Self::net`].
+    pub fn offsets(&self) -> &[u32] {
+        &self.start
+    }
+
     /// Criticalities of `net`'s sinks, in stored sink order.
     #[inline]
     pub fn net(&self, net: NetId) -> &[f64] {

@@ -1,0 +1,385 @@
+//! Mutation tests for the [`double_duty::check`] stage auditors.
+//!
+//! Pattern (one test per auditor, per the check-subsystem contract): build
+//! a small real artifact through the production flow, assert the
+//! uncorrupted artifact audits clean, inject one specific corruption, and
+//! assert the auditor reports exactly that violation code.  A lint that
+//! never fires is indistinguishable from a lint that works; these tests
+//! are the difference.
+//!
+//! Also drives two producer *failure paths* through the violation types
+//! (the disk cache's integrity rejection and the placer's fixed-device
+//! misfit errors), asserting the surfaced messages name the failing
+//! dimension rather than a generic "failed".
+
+use double_duty::arch::{Arch, ArchVariant, Device};
+use double_duty::bench_suites::{all_suites, BenchParams};
+use double_duty::check::{
+    audit_netlist, audit_packing, audit_placement, audit_routing, audit_timing,
+    check_benchmark, Severity, Stage, Violation,
+};
+use double_duty::flow::diskcache::{DiskCache, CACHE_VERSION};
+use double_duty::flow::engine::{ArtifactCache, MappedCircuit};
+use double_duty::flow::FlowOpts;
+use double_duty::netlist::{CellKind, Netlist, NetlistIndex, NO_NET};
+use double_duty::pack::{pack, PackOpts, Packing};
+use double_duty::place::cost::NetModel;
+use double_duty::place::{place, PlaceOpts, Placement};
+use double_duty::route::{route, RouteOpts, Routing};
+use double_duty::synth::circuit::Circuit;
+use double_duty::synth::multiplier::{soft_mul, AdderAlgo};
+use double_duty::techmap::aig::Lit;
+use double_duty::techmap::{map_circuit, MapOpts};
+use double_duty::timing::{sta, SinkCrit};
+use double_duty::util::error::Error;
+
+/// A real mapped-and-packed multiplier (same fixture the timing suite
+/// uses): long carry chains, absorbed operand LUTs, FFs-free datapath.
+fn mul_fixture(v: ArchVariant) -> (Netlist, Packing, Arch) {
+    let mut c = Circuit::new("m");
+    let x = c.pi_bus("x", 6);
+    let y = c.pi_bus("y", 6);
+    let p = soft_mul(&mut c, &x, &y, AdderAlgo::Wallace);
+    c.po_bus("p", &p);
+    let nl = map_circuit(&c, &MapOpts::default());
+    let arch = Arch::paper(v);
+    let packing = pack(&nl, &arch, &PackOpts::default());
+    (nl, packing, arch)
+}
+
+fn placed(nl: &Netlist, packing: &Packing, arch: &Arch) -> Placement {
+    place(nl, packing, arch, &PlaceOpts { effort: 0.1, ..Default::default() })
+        .expect("auto-sized placement fits")
+}
+
+fn routed(nl: &Netlist, packing: &Packing, arch: &Arch, pl: &Placement) -> (NetModel, Routing) {
+    let mut model = NetModel::build(nl, packing);
+    model.set_weights(&[], false);
+    let r = route(&model, pl, arch, &RouteOpts::default());
+    (model, r)
+}
+
+fn has_code(vs: &[Violation], code: &str) -> bool {
+    vs.iter().any(|v| v.code == code)
+}
+
+// --- netlist auditor -------------------------------------------------------
+
+#[test]
+fn netlist_audit_catches_chain_position_gap() {
+    let (mut nl, _, _) = mul_fixture(ArchVariant::Dd5);
+    let idx = NetlistIndex::build(&nl);
+    assert!(audit_netlist(&nl, &idx).is_empty(), "uncorrupted netlist audits clean");
+
+    // Shift one mid-chain bit's position: chain 0 now has a pos gap (and a
+    // duplicate position) without touching any net, so the index stays valid.
+    let victim = nl
+        .cells
+        .iter()
+        .position(|c| matches!(c.kind, CellKind::AdderBit { pos: 1, .. }))
+        .expect("fixture has a multi-bit chain");
+    let CellKind::AdderBit { chain, pos } = nl.cells[victim].kind.clone() else {
+        unreachable!()
+    };
+    nl.cells[victim].kind = CellKind::AdderBit { chain, pos: pos + 1 };
+
+    let vs = audit_netlist(&nl, &idx);
+    assert!(has_code(&vs, "netlist.chain-break"), "expected netlist.chain-break in {vs:?}");
+}
+
+#[test]
+fn netlist_audit_catches_dangling_input() {
+    let (mut nl, _, _) = mul_fixture(ArchVariant::Baseline);
+    let idx = NetlistIndex::build(&nl);
+    assert!(audit_netlist(&nl, &idx).is_empty());
+
+    let victim = nl
+        .cells
+        .iter()
+        .position(|c| matches!(c.kind, CellKind::Lut { .. }) && !c.ins.is_empty())
+        .expect("fixture has a LUT");
+    nl.cells[victim].ins[0] = NO_NET;
+
+    let vs = audit_netlist(&nl, &idx);
+    assert!(has_code(&vs, "netlist.dangling-input"), "expected netlist.dangling-input in {vs:?}");
+}
+
+// --- pack auditor ----------------------------------------------------------
+
+/// Clean means: no Error-severity violations.  (Carry-macro LBs may carry
+/// the documented pin-budget *warning* — that is the audited severity
+/// split, not noise.)
+fn assert_pack_clean(nl: &Netlist, packing: &Packing, arch: &Arch) {
+    let vs = audit_packing(nl, packing, arch);
+    let errors: Vec<_> = vs.iter().filter(|v| v.severity == Severity::Error).collect();
+    assert!(errors.is_empty(), "uncorrupted packing has error violations: {errors:?}");
+}
+
+#[test]
+fn pack_audit_catches_half_miscount() {
+    let (nl, mut packing, arch) = mul_fixture(ArchVariant::Dd5);
+    assert_pack_clean(&nl, &packing, &arch);
+
+    let ai = packing
+        .alms
+        .iter()
+        .position(|a| !a.logic_luts.is_empty())
+        .expect("fixture packs logic LUTs");
+    packing.alms[ai].logic_halves += 1;
+
+    let vs = audit_packing(&nl, &packing, &arch);
+    assert!(has_code(&vs, "pack.lut-halves"), "expected pack.lut-halves in {vs:?}");
+}
+
+#[test]
+fn pack_audit_catches_double_packed_alm() {
+    let (nl, mut packing, arch) = mul_fixture(ArchVariant::Dd5);
+    assert_pack_clean(&nl, &packing, &arch);
+
+    let dup = packing.lbs[0].alms[0];
+    packing.lbs[0].alms.push(dup);
+
+    let vs = audit_packing(&nl, &packing, &arch);
+    assert!(has_code(&vs, "pack.cell-double-packed"), "expected pack.cell-double-packed in {vs:?}");
+}
+
+#[test]
+fn pack_audit_catches_chain_macro_mismatch() {
+    let (nl, mut packing, arch) = mul_fixture(ArchVariant::Dd5);
+    assert_pack_clean(&nl, &packing, &arch);
+    assert!(!packing.chain_macros.is_empty(), "fixture has carry chains");
+
+    // Append a bogus LB to a stored macro: the recomputed LB walk of the
+    // chain's ALMs can no longer match it.
+    packing.chain_macros[0].push(0);
+
+    let vs = audit_packing(&nl, &packing, &arch);
+    assert!(
+        has_code(&vs, "pack.chain-macro-mismatch"),
+        "expected pack.chain-macro-mismatch in {vs:?}"
+    );
+}
+
+// --- place auditor ---------------------------------------------------------
+
+#[test]
+fn place_audit_catches_site_overlap() {
+    let (nl, packing, arch) = mul_fixture(ArchVariant::Dd5);
+    let mut pl = placed(&nl, &packing, &arch);
+    assert!(audit_placement(&packing, &pl).is_empty(), "uncorrupted placement audits clean");
+
+    assert!(pl.lb_loc.len() >= 2, "fixture spans multiple LBs");
+    pl.lb_loc[1] = pl.lb_loc[0];
+
+    let vs = audit_placement(&packing, &pl);
+    assert!(has_code(&vs, "place.site-overlap"), "expected place.site-overlap in {vs:?}");
+}
+
+#[test]
+fn place_audit_catches_broken_macro_column() {
+    // A 64-bit ripple chain guarantees a multi-LB macro (20 adder bits per
+    // LB), which the mul fixture's short chains do not.
+    let mut c = Circuit::new("chain");
+    let x = c.pi_bus("x", 64);
+    let y = c.pi_bus("y", 64);
+    let ops: Vec<(Lit, Lit)> = x.iter().copied().zip(y.iter().copied()).collect();
+    let (sums, cout) = c.add_chain(ops, Lit::FALSE);
+    c.po_bus("s", &sums);
+    c.po("co", cout);
+    let nl = map_circuit(&c, &MapOpts::default());
+    let arch = Arch::paper(ArchVariant::Baseline);
+    let packing = pack(&nl, &arch, &PackOpts::default());
+    let mac = packing
+        .chain_macros
+        .iter()
+        .find(|m| m.len() >= 2)
+        .cloned()
+        .expect("fixture has a multi-LB chain macro");
+
+    let mut pl = placed(&nl, &packing, &arch);
+    assert!(audit_placement(&packing, &pl).is_empty());
+
+    // Nudge the macro's second LB off its column.
+    let lb = mac[1];
+    let old = pl.lb_loc[lb];
+    pl.lb_loc[lb] = double_duty::arch::device::Loc::new(old.x + 1, old.y);
+
+    let vs = audit_placement(&packing, &pl);
+    assert!(has_code(&vs, "place.macro-alignment"), "expected place.macro-alignment in {vs:?}");
+}
+
+// --- route auditor ---------------------------------------------------------
+
+#[test]
+fn route_audit_catches_stolen_wire() {
+    let (nl, packing, arch) = mul_fixture(ArchVariant::Dd5);
+    let pl = placed(&nl, &packing, &arch);
+    let (model, mut r) = routed(&nl, &packing, &arch, &pl);
+    assert!(r.success, "fixture must route (iterations {})", r.iterations);
+    assert!(
+        audit_routing(&model, &pl, &arch, &r).is_empty(),
+        "uncorrupted routing audits clean"
+    );
+
+    // Commit one of net A's wires to net B as well: the recount sees an
+    // overused node the router never reported (and net B now owns a wire
+    // its own tree never reaches).
+    let donor = r.net_nodes.iter().position(|n| !n.is_empty()).expect("routed net");
+    let node = r.net_nodes[donor][0];
+    let victim = (0..r.net_nodes.len())
+        .find(|&i| i != donor && !r.net_nodes[i].is_empty() && !r.net_nodes[i].contains(&node))
+        .expect("second net avoiding the donor's wire");
+    r.net_nodes[victim].push(node);
+    r.net_nodes[victim].sort_unstable();
+
+    let vs = audit_routing(&model, &pl, &arch, &r);
+    assert!(has_code(&vs, "route.overuse-count"), "expected route.overuse-count in {vs:?}");
+    assert!(has_code(&vs, "route.overuse"), "expected route.overuse in {vs:?}");
+}
+
+// --- timing auditor --------------------------------------------------------
+
+#[test]
+fn timing_audit_catches_out_of_range_criticality() {
+    let (nl, packing, arch) = mul_fixture(ArchVariant::Dd5);
+    let idx = NetlistIndex::build(&nl);
+    let mut rpt = sta(&nl, &packing, &arch, |_, _, _| 200.0);
+    assert!(audit_timing(&nl, &idx, &rpt).is_empty(), "uncorrupted report audits clean");
+
+    let mut vals = rpt.sink_crit.values().to_vec();
+    assert!(!vals.is_empty());
+    vals[0] = 1.5; // criticality > 1 is meaningless
+    rpt.sink_crit = SinkCrit::from_raw(idx.sink_offsets().to_vec(), vals);
+
+    let vs = audit_timing(&nl, &idx, &rpt);
+    assert!(has_code(&vs, "timing.crit-range"), "expected timing.crit-range in {vs:?}");
+}
+
+#[test]
+fn timing_audit_catches_endpoint_beyond_cpd() {
+    let (nl, packing, arch) = mul_fixture(ArchVariant::Baseline);
+    let idx = NetlistIndex::build(&nl);
+    let mut rpt = sta(&nl, &packing, &arch, |_, _, _| 200.0);
+    assert!(audit_timing(&nl, &idx, &rpt).is_empty());
+
+    let po = *nl.outputs.first().expect("fixture has outputs");
+    rpt.arrival[po as usize] = rpt.cpd_ps + 1000.0;
+
+    let vs = audit_timing(&nl, &idx, &rpt);
+    assert!(
+        has_code(&vs, "timing.arrival-exceeds-cpd"),
+        "expected timing.arrival-exceeds-cpd in {vs:?}"
+    );
+}
+
+// --- producer failure paths through the violation types --------------------
+
+/// PR-5 placer misfit errors, wrapped the way `check_benchmark` wraps
+/// them: the violation message must name the failing dimension (chain
+/// macro height, LB slots, I/O sites) — not a generic failure.
+#[test]
+fn place_misfit_errors_surface_as_named_violations() {
+    let mut c = Circuit::new("chain");
+    let x = c.pi_bus("x", 64);
+    let y = c.pi_bus("y", 64);
+    let ops: Vec<(Lit, Lit)> = x.iter().copied().zip(y.iter().copied()).collect();
+    let (sums, cout) = c.add_chain(ops, Lit::FALSE);
+    c.po_bus("s", &sums);
+    c.po("co", cout);
+    let nl = map_circuit(&c, &MapOpts::default());
+    let arch = Arch::paper(ArchVariant::Baseline);
+    let packing = pack(&nl, &arch, &PackOpts::default());
+    let max_macro = packing.chain_macros.iter().map(|m| m.len()).max().unwrap_or(1);
+    assert!(max_macro >= 2, "want a multi-LB chain macro");
+
+    // Wide enough for every LB, too short for the macro.
+    let short = Device::new(packing.lbs.len() as u16 + 2, max_macro as u16 - 1);
+    let err = place(&nl, &packing, &arch, &PlaceOpts {
+        effort: 0.05,
+        device: Some(short),
+        ..Default::default()
+    })
+    .expect_err("macro-misfit device must error");
+    let v = Violation::from_producer_error(Stage::Place, "place.device-misfit", "device", &err);
+    let s = v.to_string();
+    assert!(s.contains("place.device-misfit"), "{s}");
+    assert!(s.contains("chain macro"), "misfit violation must name the dimension: {s}");
+
+    // Tall enough for the macro, starved of capacity.
+    let tiny = Device::new(1, max_macro as u16);
+    let err = place(&nl, &packing, &arch, &PlaceOpts {
+        effort: 0.05,
+        device: Some(tiny),
+        ..Default::default()
+    })
+    .expect_err("capacity-misfit device must error");
+    let v = Violation::from_producer_error(Stage::Place, "place.device-misfit", "device", &err);
+    let s = v.to_string();
+    assert!(
+        s.contains("LB slots") || s.contains("I/O sites"),
+        "capacity violation must name the starved dimension: {s}"
+    );
+}
+
+/// The disk cache's integrity rejection (corrupted artifact loads as a
+/// miss) expressed as a violation naming the integrity dimension.
+#[test]
+fn diskcache_integrity_failure_surfaces_as_violation() {
+    let root = std::path::PathBuf::from("target").join("dd-check-audit-cache");
+    let _ = std::fs::remove_dir_all(&root);
+    let cache = DiskCache::new(&root);
+
+    let (nl, _, _) = mul_fixture(ArchVariant::Baseline);
+    let fingerprint = ArtifactCache::netlist_fingerprint(&nl);
+    let m = MappedCircuit { nl, dedup_hits: 0, fingerprint };
+    cache.store_mapped(11, &m);
+    assert!(cache.load_mapped(11).is_some(), "intact artifact loads");
+
+    let file = format!("map-v{CACHE_VERSION}-{:016x}.dd", 11u64);
+    std::fs::write(root.join(&file), "ddmap1\ngarbage\n").expect("corrupt the artifact");
+    assert!(
+        cache.load_mapped(11).is_none(),
+        "integrity check must reject the corrupted artifact"
+    );
+
+    let err = Error::msg(format!(
+        "mapped artifact {file} failed the disk-cache integrity check \
+         (bad header or fingerprint mismatch)"
+    ));
+    let v = Violation::from_producer_error(Stage::Netlist, "flow.cache-integrity", file, &err);
+    let s = v.to_string();
+    assert!(s.contains("flow.cache-integrity"), "{s}");
+    assert!(s.contains("integrity"), "violation must name the failing dimension: {s}");
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+// --- whole-chain smoke (the `dduty check` path) ----------------------------
+
+/// `check_benchmark` over a real shipped benchmark must come back with no
+/// Error-severity violations — the same gate `dduty check --strict` applies
+/// to the full suites.
+#[test]
+fn check_benchmark_is_strict_clean_on_a_shipped_bench() {
+    let params = BenchParams::default();
+    let bench = all_suites(&params)
+        .into_iter()
+        .find(|b| b.name == "gemmt-FU-mini")
+        .expect("shipped benchmark");
+    let cache = ArtifactCache::for_cli(false, None);
+    let opts = FlowOpts {
+        seeds: vec![1],
+        route: false, // placement + pre-route STA keep this test fast
+        place_effort: 0.1,
+        ..Default::default()
+    };
+    for variant in [ArchVariant::Baseline, ArchVariant::Dd5] {
+        let report = check_benchmark(&cache, &bench, variant, &opts);
+        assert!(
+            !report.has_errors(),
+            "{:?}: {} — {:?}",
+            variant,
+            report.summary(),
+            report.violations
+        );
+    }
+}

@@ -1,0 +1,272 @@
+//! Source-level determinism lints for the flow-critical modules.
+//!
+//! The whole pipeline advertises bit-identical results for any worker
+//! count (`rust/tests/*_parallel.rs` pin it dynamically); the classic way
+//! to lose that property silently is iterating a `HashMap`/`HashSet` in
+//! its nondeterministic order and letting that order reach a result.
+//! This lint is the static tripwire: it scans `rust/src` for identifiers
+//! declared with a hash-container type and flags any line that iterates
+//! them (`.iter()`, `.keys()`, `.values()`, `.drain(...)`, `for .. in`),
+//! unless the line is in the reviewed allowlist below.
+//!
+//! It is a line-scoped heuristic, not a prover: multi-line iterator
+//! chains escape it, and a `Vec` that shares a flagged identifier's name
+//! trips it.  Both are acceptable for a tripwire — the allowlist exists
+//! exactly so every hash-order iteration that *does* reach the scanner
+//! has been reviewed as order-independent (sorted right after, reduced
+//! with `.any()`/`.count()`, or accumulated into another set).
+//!
+//! The second test is the registration guard: `Cargo.toml` sets
+//! `autotests = false`, so a test file that is not declared as a
+//! `[[test]]` target silently never runs (it happened to
+//! `frontend_parallel` before PR 4).
+
+use std::collections::BTreeSet;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Reviewed order-independent hash iterations: (path suffix, line
+/// substring).  Every entry must still match a flagged line — stale
+/// entries fail the lint so the list cannot rot.
+const ALLOWLIST: &[(&str, &str)] = &[
+    // Serialization helper: collects, then sort_unstable() on the next line.
+    ("flow/diskcache.rs", "set.iter().copied().collect()"),
+    // alm_nets feeds only a .filter(..).count() reduction (order-free).
+    ("pack/cluster.rs", ".chain(alms[ai].outputs.iter())"),
+    // Attraction-net gather: nets.sort_unstable() immediately after.
+    ("pack/cluster.rs", ".chain(lbs[lb_idx].outputs.iter())"),
+    // `Cell::ins` is a Vec (deterministic order); the name `ins` merely
+    // collides with a local HashSet elsewhere in the file.
+    ("pack/mod.rs", "cell.ins.iter().take(2).enumerate()"),
+    // Candidate-net gather: nets.sort_unstable() immediately after.
+    ("pack/mod.rs", ".chain(alms[alm_idx].z_inputs.iter())"),
+    ("pack/mod.rs", ".chain(alms[alm_idx].outputs.iter())"),
+    // Vec field collected *into* a HashSet (source order is the Vec's).
+    ("pack/mod.rs", "nl.cells[l as usize].ins.iter().copied().collect()"),
+    ("pack/mod.rs", "nl.cells[b as usize].ins.iter().copied().collect()"),
+    // Membership predicates: .any() is order-independent.
+    ("pack/mod.rs", "ins_b.iter().any("),
+    ("place/mod.rs", "grid.values().any("),
+    // A* seed gather: seeds.sort_unstable() on the next line.
+    ("route/mod.rs", "tree.iter().map(|(&n, &h)| (n, h)).collect()"),
+    // Commutative accumulation into another HashSet (pos_need inserts).
+    ("techmap/mapper.rs", "for leaves in selected.values()"),
+    // Key gather: order.sort_unstable() on the next line.
+    ("techmap/mapper.rs", "selected.keys().copied().collect()"),
+];
+
+fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Words that can sit left of a `:`/`=` without being a binding name.
+const KEYWORDS: &[&str] = &["mut", "let", "pub", "in", "if", "return", "match", "ref"];
+
+/// Identifiers this file declares with a `HashMap`/`HashSet` type:
+/// `let [mut] name = HashMap::..`, `name: HashSet<..>` (bindings, struct
+/// fields, and fn parameters all share these two shapes).
+fn hash_names(lines: &[&str]) -> BTreeSet<String> {
+    let mut names = BTreeSet::new();
+    for line in lines {
+        for marker in ["HashMap", "HashSet"] {
+            let mut start = 0;
+            while let Some(off) = line[start..].find(marker) {
+                let i = start + off;
+                start = i + 1;
+                // The marker must be a whole path segment, not a slice of
+                // a longer identifier.
+                if line[..i].chars().next_back().map_or(false, is_ident)
+                    || line[i + marker.len()..].chars().next().map_or(false, is_ident)
+                {
+                    continue;
+                }
+                // Walk left over type-position punctuation and `mut` to
+                // reach the binder: `x: &mut HashMap<..>` binds `x`.
+                let mut b = line[..i].trim_end();
+                loop {
+                    b = b.trim_end();
+                    if b.ends_with('&') || b.ends_with('(') || b.ends_with('<') {
+                        b = &b[..b.len() - 1];
+                    } else if b.ends_with("mut")
+                        && (b.len() == 3 || !is_ident(b.as_bytes()[b.len() - 4] as char))
+                    {
+                        b = &b[..b.len() - 3];
+                    } else {
+                        break;
+                    }
+                }
+                let Some(rest) = b.strip_suffix(':').or_else(|| b.strip_suffix('=')) else {
+                    continue; // type in return/generic position, `use` path, ...
+                };
+                let rest = rest.trim_end();
+                let tail = rest.len()
+                    - rest.chars().rev().take_while(|&c| is_ident(c)).count();
+                let name = &rest[tail..];
+                if !name.is_empty()
+                    && !name.starts_with(|c: char| c.is_ascii_digit())
+                    && !KEYWORDS.contains(&name)
+                {
+                    names.insert(name.to_string());
+                }
+            }
+        }
+    }
+    names
+}
+
+/// Iteration adapters whose visit order is the hash order.
+const ADAPTERS: &[&str] = &[
+    ".iter()",
+    ".iter_mut()",
+    ".keys()",
+    ".values()",
+    ".values_mut()",
+    ".drain(",
+    ".into_iter()",
+];
+
+/// 1-based line numbers in `lines` that iterate one of `names`.
+fn iteration_hits(lines: &[&str], names: &BTreeSet<String>) -> Vec<usize> {
+    let mut out = Vec::new();
+    for (ln, line) in lines.iter().enumerate() {
+        if line.trim_start().starts_with("//") {
+            continue;
+        }
+        let mut hit = false;
+        for name in names {
+            for pat in ADAPTERS {
+                let needle = format!("{name}{pat}");
+                let mut j = 0;
+                while let Some(off) = line[j..].find(&needle) {
+                    let k = j + off;
+                    if !line[..k].chars().next_back().map_or(false, is_ident) {
+                        hit = true;
+                    }
+                    j = k + 1;
+                }
+            }
+            if line.contains("for ") {
+                for form in
+                    [format!("in &mut {name}"), format!("in &{name}"), format!("in {name}")]
+                {
+                    let Some(k) = line.find(&form) else { continue };
+                    let next = line[k + form.len()..].chars().next();
+                    if next.map_or(true, |c| !is_ident(c) && c != '.') {
+                        hit = true;
+                    }
+                    break; // longest matching form decides
+                }
+            }
+        }
+        if hit {
+            out.push(ln + 1);
+        }
+    }
+    out
+}
+
+fn rs_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    let mut entries: Vec<PathBuf> = fs::read_dir(dir)
+        .unwrap_or_else(|e| panic!("read_dir {}: {e}", dir.display()))
+        .map(|e| e.expect("dir entry").path())
+        .collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            rs_files(&p, out);
+        } else if p.extension().map_or(false, |x| x == "rs") {
+            out.push(p);
+        }
+    }
+}
+
+fn repo_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+#[test]
+fn no_unreviewed_hash_iteration_in_flow_modules() {
+    let src_root = repo_root().join("rust/src");
+    let mut files = Vec::new();
+    rs_files(&src_root, &mut files);
+    assert!(!files.is_empty(), "no sources under {}", src_root.display());
+
+    let mut offenders: Vec<String> = Vec::new();
+    let mut matched = vec![false; ALLOWLIST.len()];
+    for path in &files {
+        let src = fs::read_to_string(path)
+            .unwrap_or_else(|e| panic!("read {}: {e}", path.display()));
+        // Test modules may iterate hash containers freely — assertions on
+        // unordered views are order-independent by construction.
+        let body = match src.find("#[cfg(test)]") {
+            Some(p) => &src[..p],
+            None => &src[..],
+        };
+        let lines: Vec<&str> = body.lines().collect();
+        let names = hash_names(&lines);
+        if names.is_empty() {
+            continue;
+        }
+        let rel = path
+            .strip_prefix(&src_root)
+            .expect("source under src root")
+            .to_string_lossy()
+            .replace('\\', "/");
+        for ln in iteration_hits(&lines, &names) {
+            let text = lines[ln - 1].trim();
+            let allowed = ALLOWLIST.iter().enumerate().any(|(i, (suffix, pat))| {
+                let ok = rel.ends_with(suffix) && text.contains(pat);
+                if ok {
+                    matched[i] = true;
+                }
+                ok
+            });
+            if !allowed {
+                offenders.push(format!("rust/src/{rel}:{ln}: {text}"));
+            }
+        }
+    }
+    assert!(
+        offenders.is_empty(),
+        "hash-order iteration in flow-critical code (sort the keys, reduce \
+         order-independently, or review + allowlist in {}):\n  {}",
+        file!(),
+        offenders.join("\n  ")
+    );
+    let stale: Vec<String> = ALLOWLIST
+        .iter()
+        .zip(&matched)
+        .filter(|(_, &m)| !m)
+        .map(|((suffix, pat), _)| format!("({suffix:?}, {pat:?})"))
+        .collect();
+    assert!(
+        stale.is_empty(),
+        "stale allowlist entries (the code they excused is gone — delete them):\n  {}",
+        stale.join("\n  ")
+    );
+}
+
+#[test]
+fn every_test_file_is_registered_in_cargo_toml() {
+    let root = repo_root();
+    let manifest = fs::read_to_string(root.join("Cargo.toml")).expect("read Cargo.toml");
+    let mut tests: Vec<PathBuf> = Vec::new();
+    rs_files(&root.join("rust/tests"), &mut tests);
+    assert!(!tests.is_empty(), "no files under rust/tests");
+    let missing: Vec<String> = tests
+        .iter()
+        .filter_map(|p| {
+            let rel = format!(
+                "rust/tests/{}",
+                p.file_name().expect("file name").to_string_lossy()
+            );
+            // A [[test]] stanza must point at the file verbatim.
+            (!manifest.contains(&format!("path = \"{rel}\""))).then_some(rel)
+        })
+        .collect();
+    assert!(
+        missing.is_empty(),
+        "Cargo.toml sets autotests = false, so these test files silently \
+         never run until declared as [[test]] targets: {missing:?}"
+    );
+}
