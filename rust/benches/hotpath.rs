@@ -22,7 +22,12 @@
 //! The gate fails when any stage's `median_s` exceeds the baseline's by
 //! more than 25% (ignoring sub-[`NOISE_FLOOR_S`] medians, which are
 //! timer noise on shared runners) or when the run's wall clock exceeds
-//! the baseline's `wall_clock_budget_s`.
+//! the baseline's `wall_clock_budget_s`.  The record also carries the
+//! deterministic router work counters `route_iters` (PathFinder
+//! iterations) and `astar_pops` (A* heap pops, lookahead on), gated at
+//! the same 25% headroom with no noise floor — they are bit-stable per
+//! (bench, arch, placement), so any growth is a real search-quality
+//! regression.
 //!
 //! `--quick` runs a CI-smoke subset: single iterations, the router and
 //! front-end determinism checks, no engine sweep.
@@ -37,7 +42,7 @@ use double_duty::netlist::{Netlist, NetlistIndex, PackIndex};
 use double_duty::pack::{pack, pack_with, PackOpts};
 use double_duty::place::cost::{IncrementalCost, NetModel};
 use double_duty::place::{place, PlaceOpts};
-use double_duty::route::{route, RouteOpts, Routing};
+use double_duty::route::{route, LookaheadMode, RouteOpts, Routing};
 use double_duty::techmap::{map_circuit, map_circuit_with, MapOpts};
 use double_duty::timing::{sta_with, TimingReport};
 
@@ -127,6 +132,7 @@ fn routing_identical(a: &Routing, b: &Routing) -> bool {
         && a.sink_hops == b.sink_hops
         && a.net_nodes == b.net_nodes
         && a.channel_util == b.channel_util
+        && a.astar_pops == b.astar_pops
 }
 
 /// A stage median regression beyond this factor fails the perf gate.
@@ -181,6 +187,29 @@ fn compare_bench(cur_path: &str, base_path: &str) -> Result<(), String> {
                 }
             }
             _ => failures.push(format!("stage {stage}: missing median_s in current or baseline")),
+        }
+    }
+    // Deterministic router work counters (PathFinder iterations and A*
+    // heap pops, lookahead on): growth means the search got genuinely
+    // less focused — no timer noise involved, so no noise floor, but the
+    // same 25% headroom keeps loosely seeded baselines usable.
+    for key in ["route_iters", "astar_pops"] {
+        match (json_num(&cur, key, 0), json_num(&base, key, 0)) {
+            (Some(c), Some(b)) => {
+                if c > b * REGRESS_FACTOR {
+                    failures.push(format!(
+                        "counter {key}: {c:.0} vs baseline {b:.0} (> {:.0}% growth)",
+                        (REGRESS_FACTOR - 1.0) * 100.0
+                    ));
+                } else {
+                    println!("perf gate: counter {key:<11} ok ({c:.0} vs baseline {b:.0})");
+                }
+            }
+            (Some(_), None) => {
+                // Pre-counter baselines stay usable; re-baseline to arm.
+                println!("perf gate: counter {key} absent from baseline (skipped)");
+            }
+            _ => failures.push(format!("counter {key}: missing from current BENCH.json")),
         }
     }
     if let (Some(budget), Some(elapsed)) = (
@@ -315,6 +344,12 @@ fn main() {
 
     let route_jobs = if quick { 2 } else { 4 };
     let route_reps = reps(3);
+    // Pre-build the shared RRG lookahead so the serial timing loop does
+    // not pay the one-time map construction in its first rep.
+    {
+        let g = double_duty::rrg::RrGraph::build(&big_pl.device, &arch);
+        let _ = double_duty::rrg::lookahead::shared(&g);
+    }
     // Per-rep times -> median, matching the other gated stages (a mean
     // would let one scheduler hiccup fail the perf gate).
     let med = |ts: &mut Vec<f64>| {
@@ -349,6 +384,28 @@ fn main() {
         t_serial / t_sharded.max(1e-9),
         sr.iterations
     );
+
+    // Lookahead evidence: the same route with the legacy Manhattan
+    // heuristic, so the pops/iterations reduction the lookahead buys is
+    // visible in every bench log (the gated counters below come from the
+    // lookahead-on run).
+    let off = route(&big_model, &big_pl, &arch,
+                    &RouteOpts { jobs: 1, lookahead: LookaheadMode::Off, ..Default::default() });
+    println!(
+        "route {big_name:<18} lookahead on  {:>9} A* pops, {:>3} iters",
+        sr.astar_pops, sr.iterations
+    );
+    println!(
+        "route {big_name:<18} lookahead off {:>9} A* pops, {:>3} iters  \
+         ({:.2}x pops vs on)",
+        off.astar_pops,
+        off.iterations,
+        off.astar_pops as f64 / sr.astar_pops.max(1) as f64
+    );
+    // Counters for the BENCH.json record (gated by compare_bench):
+    // deterministic per (bench, arch, placement), so they track search
+    // quality with zero timer noise.
+    let (route_iters_ct, astar_pops_ct) = (sr.iterations, sr.astar_pops);
 
     // --- Front-end: levelized wave-parallel mapper / packer / STA on the
     // largest Kratos circuit, jobs=1 vs jobs=default_workers() (the PR-3
@@ -438,7 +495,8 @@ fn main() {
     let emit_and_gate = |elapsed_s: f64| {
         let json = format!(
             "{{\n  \"version\": 1,\n  \"bench\": \"{big_name}\",\n  \"cells\": {},\n  \
-             \"jobs\": {fe_jobs},\n  \"elapsed_s\": {elapsed_s:.3},\n  \
+             \"jobs\": {fe_jobs},\n  \"route_iters\": {route_iters_ct},\n  \
+             \"astar_pops\": {astar_pops_ct},\n  \"elapsed_s\": {elapsed_s:.3},\n  \
              \"wall_clock_budget_s\": {WALL_BUDGET_S:.1},\n  \"stages\": [\n    \
              {{\"stage\": \"map\", \"median_s_jobs1\": {:.6}, \"median_s\": {:.6}, \"speedup\": {:.3}}},\n    \
              {{\"stage\": \"pack\", \"median_s_jobs1\": {:.6}, \"median_s\": {:.6}, \"speedup\": {:.3}}},\n    \

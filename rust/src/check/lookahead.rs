@@ -1,0 +1,206 @@
+//! Lookahead admissibility: the routing lookahead's class distances must
+//! never exceed the true congestion-free remaining hop count, re-derived
+//! by an independent backward BFS on the forward RRG adjacency.
+//!
+//! The router prices every A* seed and expansion with
+//! [`Lookahead::query`] (scaled by its heuristic factor); A* returns
+//! cheapest paths only while the heuristic *underestimates* the true
+//! remaining cost.  Because every RRG node costs at least 1.0 under
+//! [`crate::rrg::CostState::node_cost`], hop count is the binding lower
+//! bound: for a sample of target locations this auditor runs a backward
+//! BFS from **every** node on the target's four saturated channel
+//! corners — a superset of any sink's actual pin taps, so the BFS
+//! distance lower-bounds the tap distance — and flags any node whose
+//! lookahead estimate exceeds it.  The BFS walks a reverse adjacency
+//! built here from [`RrGraph::neighbors`], sharing none of the map
+//! construction code in [`crate::rrg::lookahead`], so a builder bug (or
+//! a corrupted disk-cache artifact) cannot self-certify.
+//!
+//! Scan order: shape first, then sampled targets in fixed corner →
+//! center order, nodes ascending within each target; the violation list
+//! is capped at [`MAX_REPORTED`] entries with a final summary violation
+//! naming the total count.
+
+use crate::rrg::lookahead::Lookahead;
+use crate::rrg::RrGraph;
+
+use super::{Severity, Stage, Violation};
+
+/// Cap on individually reported admissibility violations; a corrupted
+/// map class typically breaks thousands of (node, target) pairs at once
+/// and listing them all would drown the report.
+pub const MAX_REPORTED: usize = 16;
+
+fn err(code: &'static str, location: String, message: String) -> Violation {
+    Violation::new(Stage::Lookahead, Severity::Error, code, location, message)
+}
+
+/// Audit `la` against a freshly built `graph`: shape, then sampled
+/// admissibility (`la.query(n, tx, ty)` must lower-bound the true hop
+/// distance from `n` to the target's corner nodes for every node `n`).
+pub fn audit_lookahead(graph: &RrGraph, la: &Lookahead) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let n_nodes = graph.num_nodes();
+    if n_nodes == 0 {
+        return out;
+    }
+
+    // Recover the grid shape from the CSR itself (the last node id
+    // decodes to the maximal coordinate in every dimension) instead of
+    // trusting either party's accessors.
+    let (_, wx, hy, tt) = graph.decode(n_nodes - 1);
+    let (width, height, tracks) = (wx + 1, hy + 1, tt + 1);
+    if la.width() != width
+        || la.height() != height
+        || la.tracks() != tracks
+        || la.dist().len() != 2 * width * height
+    {
+        out.push(err(
+            "lookahead.shape",
+            "lookahead".to_string(),
+            format!(
+                "map describes a {}x{} grid with {} tracks ({} classes) but the RRG decodes \
+                 to {width}x{height} with {tracks} tracks",
+                la.width(),
+                la.height(),
+                la.tracks(),
+                la.dist().len(),
+            ),
+        ));
+        return out; // query() would misdecode node ids below
+    }
+
+    // Reverse adjacency, rebuilt here from the forward CSR.
+    let mut rev_start: Vec<u32> = vec![0; n_nodes + 1];
+    for n in 0..n_nodes {
+        for &nb in graph.neighbors(n) {
+            rev_start[nb as usize + 1] += 1;
+        }
+    }
+    for i in 0..n_nodes {
+        rev_start[i + 1] += rev_start[i];
+    }
+    let mut rev: Vec<u32> = vec![0; rev_start[n_nodes] as usize];
+    let mut cursor = rev_start.clone();
+    for n in 0..n_nodes {
+        for &nb in graph.neighbors(n) {
+            let c = &mut cursor[nb as usize];
+            rev[*c as usize] = n as u32;
+            *c += 1;
+        }
+    }
+
+    // Deterministic target sample: the four grid corners plus the
+    // center — the extremes exercise the saturated-corner clamping in
+    // `query`, the center the generic both-axes case.
+    let mut targets: Vec<(usize, usize)> = vec![
+        (0, 0),
+        (width - 1, 0),
+        (0, height - 1),
+        (width - 1, height - 1),
+        (width / 2, height / 2),
+    ];
+    targets.dedup();
+
+    let mut reported = 0usize;
+    let mut total = 0usize;
+    let mut dist: Vec<u32> = Vec::new();
+    let mut queue: std::collections::VecDeque<usize> = std::collections::VecDeque::new();
+    for &(tx, ty) in &targets {
+        // Seed: every node on one of the four saturated corner
+        // locations — the superset `pin_nodes` draws sink taps from.
+        dist.clear();
+        dist.resize(n_nodes, u32::MAX);
+        queue.clear();
+        let cx = [tx, tx.saturating_sub(1)];
+        let cy = [ty, ty.saturating_sub(1)];
+        for n in 0..n_nodes {
+            let (_, x, y, _) = graph.decode(n);
+            if cx.contains(&x) && cy.contains(&y) {
+                dist[n] = 0;
+                queue.push_back(n);
+            }
+        }
+        while let Some(n) = queue.pop_front() {
+            let d = dist[n] + 1;
+            for &p in &rev[rev_start[n] as usize..rev_start[n + 1] as usize] {
+                if dist[p as usize] == u32::MAX {
+                    dist[p as usize] = d;
+                    queue.push_back(p as usize);
+                }
+            }
+        }
+        for (n, &d) in dist.iter().enumerate() {
+            if d == u32::MAX {
+                continue; // unreachable: any finite estimate is moot
+            }
+            let est = la.query(n, tx, ty);
+            if est > d as f64 + 1e-9 {
+                total += 1;
+                if reported < MAX_REPORTED {
+                    reported += 1;
+                    let (dd, x, y, t) = graph.decode(n);
+                    out.push(err(
+                        "lookahead.admissibility",
+                        format!("node {n} target ({tx},{ty})"),
+                        format!(
+                            "estimate {est} exceeds the true {d}-hop distance from wire \
+                             (dir {dd}, x {x}, y {y}, track {t})"
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+    if total > reported {
+        out.push(err(
+            "lookahead.admissibility",
+            "lookahead".to_string(),
+            format!("{total} inadmissible (node, target) pairs in all ({reported} listed)"),
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::device::Device;
+    use crate::arch::{Arch, ArchVariant};
+
+    fn graph(w: u16, h: u16, tracks: u32) -> RrGraph {
+        let mut arch = Arch::paper(ArchVariant::Baseline);
+        arch.routing.channel_width = tracks;
+        RrGraph::build(&Device::new(w, h), &arch)
+    }
+
+    #[test]
+    fn built_map_audits_clean() {
+        let g = graph(4, 3, 4);
+        let la = Lookahead::build(&g);
+        let v = audit_lookahead(&g, &la);
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn wrong_shape_is_flagged_without_scanning() {
+        let g = graph(4, 3, 4);
+        let other = Lookahead::build(&graph(5, 5, 4));
+        let v = audit_lookahead(&g, &other);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].code, "lookahead.shape");
+    }
+
+    #[test]
+    fn inflated_class_distance_is_inadmissible() {
+        let g = graph(4, 4, 3);
+        let la = Lookahead::build(&g);
+        let mut dist = la.dist().to_vec();
+        dist[0] = 60_000; // class (dir 0, |dx| 0, |dy| 0): true distance 0
+        let bad = Lookahead::from_raw(la.width(), la.height(), la.tracks(), dist).unwrap();
+        let v = audit_lookahead(&g, &bad);
+        assert!(v.iter().any(|x| x.code == "lookahead.admissibility"), "{v:?}");
+        // Capped: never more than the cap plus the one summary entry.
+        assert!(v.len() <= MAX_REPORTED + 1, "{} violations", v.len());
+    }
+}

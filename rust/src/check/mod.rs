@@ -29,6 +29,11 @@
 //!   over the RRG (pin taps re-derived independently), no wire overuse
 //!   after the final iteration, and the committed node arenas consistent
 //!   with a directed routing tree (no orphan nodes);
+//! * [`lookahead::audit_lookahead`] — the router's precomputed
+//!   cost-to-target map re-verified admissible (estimate ≤ true hop
+//!   distance) against an independent backward BFS for a deterministic
+//!   sample of targets, guarding against builder bugs and corrupted
+//!   disk-cache artifacts;
 //! * [`timing::audit_timing`] — arrival monotonicity along combinational
 //!   edges, endpoint arrivals bounded by the reported CPD, `SinkCrit`
 //!   values in [0, 1] with per-net max consistency (bitwise).
@@ -43,12 +48,14 @@
 //! future stages (capacity-scale packing, service mode) must ship an
 //! auditor here before their artifacts feed the flow.
 
+pub mod lookahead;
 pub mod netlist;
 pub mod pack;
 pub mod place;
 pub mod route;
 pub mod timing;
 
+pub use lookahead::audit_lookahead;
 pub use netlist::audit_netlist;
 pub use pack::audit_packing;
 pub use place::audit_placement;
@@ -63,7 +70,8 @@ use crate::flow::engine::ArtifactCache;
 use crate::flow::{arch_for_run, FlowOpts};
 use crate::pack::PackOpts;
 use crate::place::{place_with, PlaceOpts};
-use crate::route::{route, RouteOpts};
+use crate::route::{route, LookaheadMode, RouteOpts};
+use crate::rrg::RrGraph;
 use crate::timing::sta_routed;
 
 /// How bad a violation is.  [`CheckMode::Strict`] fails a run on
@@ -82,6 +90,7 @@ pub enum Stage {
     Netlist,
     Pack,
     Place,
+    Lookahead,
     Route,
     Timing,
 }
@@ -92,6 +101,7 @@ impl Stage {
             Stage::Netlist => "netlist",
             Stage::Pack => "pack",
             Stage::Place => "place",
+            Stage::Lookahead => "lookahead",
             Stage::Route => "route",
             Stage::Timing => "timing",
         }
@@ -273,11 +283,23 @@ pub fn check_benchmark(
     if opts.route {
         let mut model = crate::place::cost::NetModel::build(nl, &packing);
         model.set_weights(&[], false);
+        let la_mode = if opts.lookahead {
+            let graph = RrGraph::build(&pl.device, &arch);
+            let la = cache.lookahead(&pl.device, &arch);
+            report.violations.extend(audit_lookahead(&graph, &la));
+            LookaheadMode::Shared(la)
+        } else {
+            LookaheadMode::Off
+        };
         let r = route(
             &model,
             &pl,
             &arch,
-            &RouteOpts { jobs: opts.route_jobs.max(1), ..RouteOpts::default() },
+            &RouteOpts {
+                jobs: opts.route_jobs.max(1),
+                lookahead: la_mode,
+                ..RouteOpts::default()
+            },
         );
         report.violations.extend(audit_routing(&model, &pl, &arch, &r));
         let rpt = sta_routed(nl, &packing, &arch, &r, &model);

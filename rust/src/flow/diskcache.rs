@@ -23,6 +23,7 @@ use std::path::{Path, PathBuf};
 use crate::arch::ArchVariant;
 use crate::netlist::{Cell, CellId, CellKind, Net, Netlist};
 use crate::pack::{OperandPath, PackStats, PackedAlm, PackedLb, Packing};
+use crate::rrg::lookahead::Lookahead;
 
 use super::engine::{ArtifactCache, MappedCircuit};
 
@@ -73,6 +74,10 @@ impl DiskCache {
         self.root.join(format!("pack-v{CACHE_VERSION}-{key:016x}.dd"))
     }
 
+    fn lookahead_path(&self, key: u64) -> PathBuf {
+        self.root.join(format!("look-v{CACHE_VERSION}-{key:016x}.dd"))
+    }
+
     /// Load a mapped-circuit artifact; `None` on miss or integrity failure.
     pub fn load_mapped(&self, key: u64) -> Option<MappedCircuit> {
         let text = fs::read_to_string(self.mapped_path(key)).ok()?;
@@ -109,6 +114,52 @@ impl DiskCache {
     /// Store a packing artifact (best-effort).
     pub fn store_packing(&self, key: u64, p: &Packing) {
         write_atomic(&self.packing_path(key), &packing_text(p));
+        self.evict_to_cap();
+    }
+
+    /// Load a router-lookahead artifact ([`crate::rrg::lookahead`]);
+    /// `None` on miss, malformed content, or a dimension mismatch with
+    /// the expected grid (the key already hashes the dimensions and
+    /// `LOOKAHEAD_VERSION`, so the stored dims are an integrity check,
+    /// not extra identity).
+    pub fn load_lookahead(
+        &self,
+        key: u64,
+        width: usize,
+        height: usize,
+        tracks: usize,
+    ) -> Option<Lookahead> {
+        let text = fs::read_to_string(self.lookahead_path(key)).ok()?;
+        let mut lines = text.lines();
+        if lines.next()? != "ddlook1" {
+            return None;
+        }
+        let dims: Vec<usize> = nums(field(lines.next()?, "dims")?)?;
+        if dims != [width, height, tracks] {
+            return None;
+        }
+        let dist: Vec<u16> = nums(field(lines.next()?, "dist")?)?;
+        if lines.next()? != "end" {
+            return None;
+        }
+        Lookahead::from_raw(width, height, tracks, dist)
+    }
+
+    /// Store a router-lookahead artifact (best-effort).
+    pub fn store_lookahead(&self, key: u64, la: &Lookahead) {
+        let dist: String = la
+            .dist()
+            .iter()
+            .map(|d| d.to_string())
+            .collect::<Vec<_>>()
+            .join(" ");
+        let text = format!(
+            "ddlook1\ndims {} {} {}\ndist {dist}\nend\n",
+            la.width(),
+            la.height(),
+            la.tracks()
+        );
+        write_atomic(&self.lookahead_path(key), &text);
         self.evict_to_cap();
     }
 
@@ -573,6 +624,36 @@ mod tests {
         )
         .unwrap();
         assert!(cache.load_mapped(7).is_none());
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn lookahead_store_load_cycle() {
+        use crate::arch::device::Device;
+        use crate::rrg::{lookahead, RrGraph};
+        let root = tmp_root("look");
+        let _ = std::fs::remove_dir_all(&root);
+        let cache = DiskCache::new(&root);
+        let mut arch = Arch::paper(ArchVariant::Baseline);
+        arch.routing.channel_width = 4;
+        let g = RrGraph::build(&Device::new(4, 4), &arch);
+        let la = Lookahead::build(&g);
+        let key = lookahead::cache_key(g.width, g.height, g.tracks);
+        assert!(cache.load_lookahead(key, g.width, g.height, g.tracks).is_none());
+        cache.store_lookahead(key, &la);
+        let back = cache
+            .load_lookahead(key, g.width, g.height, g.tracks)
+            .expect("stored lookahead loads");
+        assert_eq!(back.dist(), la.dist());
+        // Wrong expected dims -> integrity miss, not a wrong artifact.
+        assert!(cache.load_lookahead(key, g.width + 1, g.height, g.tracks).is_none());
+        // Corrupt file -> miss.
+        std::fs::write(
+            root.join(format!("look-v{CACHE_VERSION}-{key:016x}.dd")),
+            "ddlook1\ngarbage\n",
+        )
+        .unwrap();
+        assert!(cache.load_lookahead(key, g.width, g.height, g.tracks).is_none());
         let _ = std::fs::remove_dir_all(&root);
     }
 

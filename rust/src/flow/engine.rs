@@ -37,11 +37,13 @@ use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
+use crate::arch::device::Device;
 use crate::arch::{Arch, ArchVariant};
 use crate::bench_suites::Benchmark;
 use crate::coordinator::parallel_indexed;
 use crate::netlist::{CellKind, Netlist, NetlistIndex, PackIndex};
 use crate::pack::{pack_with, PackOpts, Packing, Unrelated};
+use crate::rrg::{lookahead, lookahead::Lookahead, RrGraph};
 use crate::techmap::{map_circuit_with, MapOpts};
 
 use super::diskcache::DiskCache;
@@ -83,6 +85,9 @@ pub struct CacheStats {
     pub pack_misses: AtomicUsize,
     pub index_hits: AtomicUsize,
     pub index_misses: AtomicUsize,
+    pub lookahead_hits: AtomicUsize,
+    pub lookahead_disk_hits: AtomicUsize,
+    pub lookahead_misses: AtomicUsize,
 }
 
 impl CacheStats {
@@ -115,6 +120,11 @@ pub struct ArtifactCache {
     /// deterministic functions of their key, so reads can never change
     /// results.
     cpd_priors: Mutex<HashMap<u64, f64>>,
+    /// Router lookahead maps per (device grid, channel width) — keyed by
+    /// [`crate::rrg::lookahead::cache_key`], which hashes nothing
+    /// netlist-shaped, so one map serves every benchmark routed on the
+    /// same device.  Backed by the disk store when one is attached.
+    lookaheads: Mutex<HashMap<u64, Arc<Lookahead>>>,
     /// Optional persistent store under the in-memory maps: a memory miss
     /// consults the disk before recomputing, and fresh computations are
     /// written back (same content-hash keys, so entries survive across
@@ -346,6 +356,9 @@ impl ArtifactCache {
         opts.place_crit_alpha.to_bits().hash(&mut h);
         opts.move_mix.to_bits().hash(&mut h);
         opts.use_kernel.hash(&mut h);
+        // The lookahead changes routing results (sink order + heuristic),
+        // so on/off records must not alias.
+        opts.lookahead.hash(&mut h);
         // route_jobs is deliberately NOT keyed: results are bit-identical
         // for any worker count, so records must match across job counts.
         opts.channel_width.hash(&mut h);
@@ -362,6 +375,35 @@ impl ArtifactCache {
         .hash(&mut h);
         seed_prefix.hash(&mut h);
         h.finish()
+    }
+
+    /// Router lookahead map for `(device, arch)`, or the shared instance
+    /// — memo, then disk (integrity-checked), then compute-and-store.
+    /// The compute path goes through the process-global memo
+    /// ([`crate::rrg::lookahead::shared`]) so even caches without a disk
+    /// store never build the same map twice in one process.
+    pub fn lookahead(&self, device: &Device, arch: &Arch) -> Arc<Lookahead> {
+        let w = device.width() as usize;
+        let h = device.height() as usize;
+        let tracks = (arch.routing.channel_width as usize).max(1);
+        let key = lookahead::cache_key(w, h, tracks);
+        if let Some(m) = self.lookaheads.lock().unwrap().get(&key) {
+            CacheStats::bump(&self.stats.lookahead_hits);
+            return Arc::clone(m);
+        }
+        if let Some(d) = &self.disk {
+            if let Some(la) = d.load_lookahead(key, w, h, tracks) {
+                CacheStats::bump(&self.stats.lookahead_disk_hits);
+                let la = Arc::new(la);
+                return Arc::clone(self.lookaheads.lock().unwrap().entry(key).or_insert(la));
+            }
+        }
+        CacheStats::bump(&self.stats.lookahead_misses);
+        let la = lookahead::shared(&RrGraph::build(device, arch));
+        if let Some(d) = &self.disk {
+            d.store_lookahead(key, &la);
+        }
+        Arc::clone(self.lookaheads.lock().unwrap().entry(key).or_insert(la))
     }
 
     /// Recorded achieved CPD (ps) for a chained seed, if any run under
@@ -472,6 +514,7 @@ impl Engine {
                     opts,
                     &ar.idx,
                     &ar.pidx,
+                    Some(cache),
                     |si, cpd_ps| {
                         let key = ArtifactCache::cpd_prior_key(
                             mapped[bi].fingerprint,
@@ -499,7 +542,12 @@ impl Engine {
                     &archs[vi],
                     opts,
                     opts.seeds[si],
-                    &SeedCtx::new(&ar.idx, &ar.pidx),
+                    &SeedCtx {
+                        idx: &ar.idx,
+                        pidx: &ar.pidx,
+                        cpd_prior_ps: None,
+                        la_cache: Some(cache),
+                    },
                 )
             })
         };
@@ -546,6 +594,7 @@ pub fn run_benchmark_cached(
         opts,
         &arenas.idx,
         &arenas.pidx,
+        Some(cache),
         |si, cpd_ps| {
             let key = ArtifactCache::cpd_prior_key(
                 mapped.fingerprint,
@@ -640,6 +689,31 @@ mod tests {
         assert_eq!(m0.dedup_hits, m1.dedup_hits);
         assert_eq!(p0.stats.alms, p1.stats.alms);
         assert_eq!(p0.chain_macros, p1.chain_macros);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    /// The lookahead layer: in-memory memo, then disk revival across
+    /// cache instances, with the stats counters tracking each tier.
+    #[test]
+    fn lookahead_cache_memoizes_and_revives_from_disk() {
+        let root = std::env::temp_dir()
+            .join(format!("dd-cache-lookahead-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        let device = Device::new(6, 6);
+        let arch = Arch::coffe(ArchVariant::Baseline);
+
+        let cold = ArtifactCache::with_disk(DiskCache::new(&root));
+        let a = cold.lookahead(&device, &arch);
+        assert_eq!(cold.stats.lookahead_misses.load(Ordering::Relaxed), 1);
+        let b = cold.lookahead(&device, &arch);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(cold.stats.lookahead_hits.load(Ordering::Relaxed), 1);
+
+        let warm = ArtifactCache::with_disk(DiskCache::new(&root));
+        let c = warm.lookahead(&device, &arch);
+        assert_eq!(warm.stats.lookahead_misses.load(Ordering::Relaxed), 0);
+        assert_eq!(warm.stats.lookahead_disk_hits.load(Ordering::Relaxed), 1);
+        assert_eq!(c.dist(), a.dist());
         let _ = std::fs::remove_dir_all(&root);
     }
 

@@ -35,8 +35,9 @@ use crate::netlist::{Netlist, NetlistIndex, PackIndex};
 use crate::pack::{pack, PackOpts, Packing, Unrelated};
 use crate::place::{place_with, PlaceOpts};
 use crate::route::{
-    route, route_timing, routed_net_delay, term_sink_crit, RouteOpts, TimingCtx,
+    route, route_timing, routed_net_delay, term_sink_crit, LookaheadMode, RouteOpts, TimingCtx,
 };
+use crate::rrg::{lookahead::Lookahead, RrGraph};
 use crate::synth::Circuit;
 use crate::techmap::{map_circuit, MapOpts};
 use crate::timing::sta_routed;
@@ -82,6 +83,12 @@ pub struct FlowOpts {
     /// Deliberately *not* part of the engine's cache keys: auditing never
     /// changes an artifact, so checked and unchecked runs may share them.
     pub check: CheckMode,
+    /// Router A* lookahead (`--lookahead on|off`, default on): guide each
+    /// sink's search with the per-device class-distance map and route
+    /// sinks in criticality order (see [`crate::rrg::lookahead`]).  `false`
+    /// reproduces the pre-lookahead router bit-for-bit.  Part of the
+    /// engine's CPD-prior cache key — the two modes route differently.
+    pub lookahead: bool,
 }
 
 impl Default for FlowOpts {
@@ -101,6 +108,7 @@ impl Default for FlowOpts {
             device: None,
             channel_width: None,
             check: CheckMode::Off,
+            lookahead: true,
         }
     }
 }
@@ -178,12 +186,17 @@ pub struct SeedCtx<'a> {
     /// the placer ([`PlaceOpts::cpd_prior_ps`]) and into the router's
     /// seed criticalities via [`crate::timing::rescale_crit`].
     pub cpd_prior_ps: Option<f64>,
+    /// Artifact cache to fetch the router's per-device lookahead map
+    /// through (memo + disk; see [`engine::ArtifactCache::lookahead`]).
+    /// `None` falls back to the process-global memo — results are
+    /// identical either way, the cache only adds the on-disk layer.
+    pub la_cache: Option<&'a engine::ArtifactCache>,
 }
 
 impl<'a> SeedCtx<'a> {
-    /// Context with no feedback prior.
+    /// Context with no feedback prior and no artifact cache.
     pub fn new(idx: &'a NetlistIndex, pidx: &'a PackIndex) -> SeedCtx<'a> {
-        SeedCtx { idx, pidx, cpd_prior_ps: None }
+        SeedCtx { idx, pidx, cpd_prior_ps: None, la_cache: None }
     }
 }
 
@@ -235,6 +248,32 @@ pub fn place_route_seed(
         let mut model = crate::place::cost::NetModel::build(nl, packing);
         model.set_weights(&[], false);
         let route_jobs = opts.route_jobs.max(1);
+        // Resolve the router lookahead once per seed, against the now
+        // known device: through the engine's artifact cache when one is
+        // plumbed (adds the disk layer), else the process-global memo.
+        // Either way the map is built at most once per (device, arch).
+        let la: Option<std::sync::Arc<Lookahead>> = if opts.lookahead {
+            Some(match ctx.la_cache {
+                Some(cache) => cache.lookahead(&pl.device, arch),
+                None => crate::rrg::lookahead::shared(&RrGraph::build(&pl.device, arch)),
+            })
+        } else {
+            None
+        };
+        if opts.check != CheckMode::Off {
+            if let Some(m) = &la {
+                let graph = RrGraph::build(&pl.device, arch);
+                check::enforce(
+                    opts.check,
+                    "lookahead",
+                    &check::audit_lookahead(&graph, m),
+                );
+            }
+        }
+        let la_mode = match &la {
+            Some(m) => LookaheadMode::Shared(m.clone()),
+            None => LookaheadMode::Off,
+        };
         let (r, rpt) = if opts.route_timing_weights {
             // Timing-driven: a pre-route STA over the placed distance
             // estimates seeds per-sink criticality weights — re-normalized
@@ -260,7 +299,12 @@ pub fn place_route_seed(
             );
             let mut sink_crit = term_sink_crit(&model, idx, &rpt.sink_crit);
             crate::timing::rescale_crit(&mut sink_crit, rpt.cpd_ps, ctx.cpd_prior_ps);
-            let ropts = RouteOpts { jobs: route_jobs, sink_crit, ..RouteOpts::default() };
+            let ropts = RouteOpts {
+                jobs: route_jobs,
+                sink_crit,
+                lookahead: la_mode.clone(),
+                ..RouteOpts::default()
+            };
             let ctx = TimingCtx {
                 nl,
                 idx,
@@ -286,7 +330,11 @@ pub fn place_route_seed(
             );
             (r, rpt)
         } else {
-            let ropts = RouteOpts { jobs: route_jobs, ..RouteOpts::default() };
+            let ropts = RouteOpts {
+                jobs: route_jobs,
+                lookahead: la_mode.clone(),
+                ..RouteOpts::default()
+            };
             let r = route(&model, &pl, arch, &ropts);
             let rpt = sta_routed(nl, packing, arch, &r, &model);
             (r, rpt)
@@ -333,6 +381,7 @@ pub fn place_route_seed(
 /// routed* chained seed's achieved CPD (the engine writes these into its
 /// artifact cache as the provenance trail; pass a no-op elsewhere);
 /// failed routes neither feed the chain nor get recorded.
+#[allow(clippy::too_many_arguments)]
 pub fn chain_seeds(
     nl: &Netlist,
     packing: &Packing,
@@ -340,13 +389,14 @@ pub fn chain_seeds(
     opts: &FlowOpts,
     idx: &NetlistIndex,
     pidx: &PackIndex,
+    la_cache: Option<&engine::ArtifactCache>,
     mut record: impl FnMut(usize, f64),
 ) -> Vec<SeedMetrics> {
     let chained = opts.route && opts.route_timing_weights;
     let mut prior: Option<f64> = None;
     let mut out = Vec::with_capacity(opts.seeds.len());
     for (si, &seed) in opts.seeds.iter().enumerate() {
-        let ctx = SeedCtx { idx, pidx, cpd_prior_ps: prior };
+        let ctx = SeedCtx { idx, pidx, cpd_prior_ps: prior, la_cache };
         let m = place_route_seed(nl, packing, arch, opts, seed, &ctx);
         // Only a *legally routed* seed feeds the chain: a CPD measured
         // over a failed (still-overused) routing is not an achieved
@@ -464,7 +514,7 @@ pub fn run_flow_mapped(
     let packing = pack(nl, &arch, &PackOpts { unrelated: opts.unrelated });
     let idx = NetlistIndex::build(nl);
     let pidx = PackIndex::build(nl, &packing);
-    let seeds = chain_seeds(nl, &packing, &arch, opts, &idx, &pidx, |_, _| {});
+    let seeds = chain_seeds(nl, &packing, &arch, opts, &idx, &pidx, None, |_, _| {});
     assemble_result(name, &arch, &packing, &seeds, dedup_hits)
 }
 

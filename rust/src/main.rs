@@ -2,13 +2,13 @@
 //!
 //! Subcommands:
 //!   exp <table1|table2|table3|table4|fig5|fig6|fig7|fig8|fig9|all> [--quick] [--jobs N]
-//!       [--route-jobs N] [--no-disk-cache] [--cache-cap-mb N]
+//!       [--route-jobs N] [--lookahead on|off] [--no-disk-cache] [--cache-cap-mb N]
 //!       Regenerate a paper table/figure (experiment-engine sweeps run on
 //!       N worker threads; default: all cores / DDUTY_WORKERS).
 //!   flow --bench <name> [--variant baseline|dd5|dd6] [--seed N | --seeds a,b,c]
-//!        [--no-route] [--jobs N] [--route-jobs N] [--no-disk-cache]
-//!        [--cache-cap-mb N] [--timing-route] [--sta-every K] [--crit-alpha A]
-//!        [--place-crit-alpha A] [--move-mix F]
+//!        [--no-route] [--jobs N] [--route-jobs N] [--lookahead on|off]
+//!        [--no-disk-cache] [--cache-cap-mb N] [--timing-route] [--sta-every K]
+//!        [--crit-alpha A] [--place-crit-alpha A] [--move-mix F]
 //!       Run the full CAD flow on one benchmark and print its metrics
 //!       (multi-seed runs place/route the seeds in parallel; --jobs also
 //!       shards the mapper/packer front-end and --route-jobs each
@@ -21,10 +21,12 @@
 //!       and routing criticalities.  --place-crit-alpha A smooths the
 //!       placer's per-sink criticality refresh; --move-mix F in [0, 1]
 //!       scales the annealer's macro-shift/median move probabilities,
-//!       0 = uniform swaps only).
+//!       0 = uniform swaps only; --lookahead off falls back to the legacy
+//!       per-expansion Manhattan heuristic, bit-identical to pre-lookahead
+//!       builds).
 //!   check [<bench|suite> ...] [--variant baseline|dd5|dd6|all] [--strict]
-//!         [--quick] [--no-route] [--route-jobs N] [--no-disk-cache]
-//!         [--cache-cap-mb N]
+//!         [--quick] [--no-route] [--route-jobs N] [--lookahead on|off]
+//!         [--no-disk-cache] [--cache-cap-mb N]
 //!       Run the stage auditors ([`double_duty::check`]) over the named
 //!       benchmarks/suites (default: every shipped suite) on each listed
 //!       architecture variant, re-deriving netlist, packing, placement,
@@ -71,16 +73,17 @@ fn main() {
         _ => {
             eprintln!("usage: dduty <exp|flow|check|list|coffe> ...");
             eprintln!("  dduty exp <table1|table2|table3|table4|fig5..fig9|all> [--quick] \
-                       [--jobs N] [--route-jobs N] [--no-disk-cache] [--cache-cap-mb N] \
-                       [--check [strict]]");
+                       [--jobs N] [--route-jobs N] [--lookahead on|off] [--no-disk-cache] \
+                       [--cache-cap-mb N] [--check [strict]]");
             eprintln!("  dduty flow --bench <name> [--variant baseline|dd5|dd6] \
                        [--seed N | --seeds a,b,c] [--no-route] [--jobs N] \
-                       [--route-jobs N] [--no-disk-cache] [--cache-cap-mb N] \
-                       [--timing-route] [--sta-every K] [--crit-alpha A] \
-                       [--place-crit-alpha A] [--move-mix F] [--check [strict]]");
+                       [--route-jobs N] [--lookahead on|off] [--no-disk-cache] \
+                       [--cache-cap-mb N] [--timing-route] [--sta-every K] \
+                       [--crit-alpha A] [--place-crit-alpha A] [--move-mix F] \
+                       [--check [strict]]");
             eprintln!("  dduty check [<bench|suite> ...] [--variant baseline|dd5|dd6|all] \
                        [--strict] [--quick] [--no-route] [--route-jobs N] \
-                       [--no-disk-cache] [--cache-cap-mb N]");
+                       [--lookahead on|off] [--no-disk-cache] [--cache-cap-mb N]");
             std::process::exit(if cmd == "help" { 0 } else { 2 });
         }
     }
@@ -153,6 +156,23 @@ fn parse_cache_cap_mb(args: &[String]) -> Option<u64> {
     }
 }
 
+/// `--lookahead on|off`: toggle the router's precomputed cost-to-target
+/// lookahead (default on).  `off` reproduces the legacy Manhattan
+/// heuristic and in-terms-order sink routing bit for bit.
+fn parse_lookahead(args: &[String]) -> bool {
+    let Some(i) = args.iter().position(|a| a == "--lookahead") else {
+        return true;
+    };
+    match args.get(i + 1).map(|s| s.as_str()) {
+        Some("on") => true,
+        Some("off") => false,
+        _ => {
+            eprintln!("--lookahead requires on|off");
+            std::process::exit(2);
+        }
+    }
+}
+
 /// `--check [strict]`: run the stage auditors on each artifact the flow
 /// produces.  Bare `--check` warns (prints violations, continues);
 /// `--check strict` fails the run on any Error-severity violation.
@@ -177,6 +197,7 @@ fn exp_opts(args: &[String]) -> ExpOpts {
     opts.disk_cache = !args.iter().any(|a| a == "--no-disk-cache");
     opts.cache_cap_mb = parse_cache_cap_mb(args);
     opts.check = parse_check_mode(args);
+    opts.lookahead = parse_lookahead(args);
     opts
 }
 
@@ -282,6 +303,7 @@ fn cmd_flow(args: &[String]) {
             place_crit_alpha,
             move_mix,
             use_kernel,
+            lookahead: parse_lookahead(args),
             check: parse_check_mode(args),
             ..Default::default()
         },
@@ -338,7 +360,8 @@ fn cmd_check(args: &[String]) {
 
     // Positional selectors name benchmarks or whole suites; none selects
     // every shipped suite.  Flag values must not read as selectors.
-    const VALUE_FLAGS: &[&str] = &["--variant", "--jobs", "--route-jobs", "--cache-cap-mb"];
+    const VALUE_FLAGS: &[&str] =
+        &["--variant", "--jobs", "--route-jobs", "--cache-cap-mb", "--lookahead"];
     let mut selectors: Vec<&str> = Vec::new();
     let mut skip_value = false;
     for a in args {
@@ -371,6 +394,7 @@ fn cmd_check(args: &[String]) {
         route,
         route_jobs,
         place_effort: if quick { 0.15 } else { 0.5 },
+        lookahead: parse_lookahead(args),
         ..Default::default()
     };
     let cache = ArtifactCache::for_cli(disk_cache, cache_cap_mb);

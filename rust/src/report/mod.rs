@@ -48,6 +48,10 @@ pub struct ExpOpts {
     /// Run the stage auditors on every artifact the sweep produces
     /// (`--check [strict]`); see [`crate::check`].
     pub check: CheckMode,
+    /// Route with the precomputed cost-to-target lookahead
+    /// (`--lookahead on|off`, default on); `false` falls back to the
+    /// legacy per-expansion Manhattan heuristic.
+    pub lookahead: bool,
 }
 
 impl Default for ExpOpts {
@@ -60,6 +64,7 @@ impl Default for ExpOpts {
             disk_cache: false,
             cache_cap_mb: None,
             check: CheckMode::Off,
+            lookahead: true,
         }
     }
 }
@@ -76,6 +81,7 @@ impl ExpOpts {
             route: true,
             route_jobs: self.route_jobs,
             check: self.check,
+            lookahead: self.lookahead,
             ..Default::default()
         }
     }

@@ -19,6 +19,27 @@
 //! connectivity, overuse recount, tree-arena integrity) by
 //! [`crate::check::audit_routing`] — the check-layer contract.
 //!
+//! ## Lookahead-guided A* and criticality-ordered trunk reuse
+//!
+//! By default ([`LookaheadMode::On`]) each sink's A* is guided by the
+//! per-device class-distance lookahead ([`crate::rrg::lookahead`]): an
+//! *exact* congestion-free hops-to-target bound, computed once per
+//! (device, channel width) by backward BFS, memoized process-globally
+//! and in the flow's disk cache (keyed by
+//! [`crate::rrg::lookahead::cache_key`] — never by the netlist), and a
+//! strictly better-informed admissible heuristic than the Manhattan
+//! bound it replaces, so the search expands a near-minimal cone.  On
+//! top of it, a net's sinks are routed in *descending criticality* order
+//! (ties broken by sink index — a fixed total order, so the determinism
+//! contract is untouched): the critical sinks lay the route tree's
+//! trunk while congestion is fresh, and slack-rich sinks branch off the
+//! committed tree with lookahead-priced seeds, which is where Steiner
+//! trunk sharing comes from.  Results are still reported in terminal
+//! order.  [`LookaheadMode::Off`] (`--lookahead off`) restores the
+//! legacy Manhattan heuristic *and* source-order sinks, reproducing the
+//! pre-lookahead router bit-for-bit — the escape hatch
+//! `rust/tests/route_lookahead.rs` pins.
+//!
 //! Wave boundaries depend only on the work list — never on the worker
 //! count — and routing a net is a pure function of (wave snapshot, net),
 //! so results are bit-identical for any `jobs` value — see
@@ -66,7 +87,8 @@
 //! With all criticalities zero the blend collapses to exactly the
 //! timing-oblivious cost, so untimed runs are unchanged bit-for-bit.
 
-use std::collections::{BinaryHeap, HashMap, HashSet};
+use std::collections::{BinaryHeap, HashMap};
+use std::sync::Arc;
 
 use crate::arch::device::Loc;
 use crate::arch::Arch;
@@ -75,6 +97,7 @@ use crate::netlist::{CellId, NetId, Netlist, NetlistIndex, PackIndex};
 use crate::pack::Packing;
 use crate::place::cost::{NetModel, Term};
 use crate::place::Placement;
+use crate::rrg::lookahead::{self, Lookahead};
 use crate::rrg::{self, CostState, RrGraph, NODE_CAP};
 use crate::timing::SinkCrit;
 
@@ -100,6 +123,24 @@ pub const CRIT_MAX: f64 = 0.95;
 /// nets that happened to be congestion-ripped anyway.  Criticalities
 /// change only at STA refreshes, so static-weight runs never trigger it.
 const CRIT_RIPUP_DELTA: f32 = 0.1;
+
+/// How the router obtains its A* heuristic (and, with it, the sink
+/// routing order — the two ship together so `Off` is a faithful
+/// pre-lookahead escape hatch; see the module docs).
+#[derive(Clone, Debug, Default)]
+pub enum LookaheadMode {
+    /// Legacy router: Manhattan heuristic, sinks in terminal order.
+    /// Bit-identical to the pre-lookahead router.
+    Off,
+    /// Build (or fetch from the process-global memo,
+    /// [`crate::rrg::lookahead::shared`]) the per-device map.
+    #[default]
+    On,
+    /// Use a prebuilt map — the flow passes the disk-cache-backed
+    /// [`crate::flow::engine::ArtifactCache`] artifact through here.
+    /// Must match the device grid (checked at route start).
+    Shared(Arc<Lookahead>),
+}
 
 /// Router options.
 #[derive(Clone, Debug)]
@@ -132,6 +173,9 @@ pub struct RouteOpts {
     ///
     /// [`net_crit`]: RouteOpts::net_crit
     pub sink_crit: Vec<Vec<f64>>,
+    /// A* lookahead mode (default [`LookaheadMode::On`]; see the module
+    /// docs and `--lookahead` on the CLI).
+    pub lookahead: LookaheadMode,
 }
 
 impl Default for RouteOpts {
@@ -149,6 +193,7 @@ impl Default for RouteOpts {
             jobs: 1,
             net_crit: Vec::new(),
             sink_crit: Vec::new(),
+            lookahead: LookaheadMode::default(),
         }
     }
 }
@@ -175,6 +220,12 @@ pub struct Routing {
     /// timing-oblivious runs and when the router converges before the
     /// first refresh.
     pub cpd_trace: Vec<f64>,
+    /// Total A* heap pops across all nets, sinks, and negotiation
+    /// iterations — the router's search-effort odometer (with
+    /// `iterations`, the evidence counters the perf gate tracks in
+    /// `BENCH.json`).  Deterministic: a fixed-order sum of per-net
+    /// values that are themselves pure in (snapshot, net).
+    pub astar_pops: usize,
 }
 
 impl Routing {
@@ -213,12 +264,24 @@ impl PartialOrd for QItem {
 }
 
 /// Per-worker A* search state, reused across the nets a worker routes.
-/// Reset between searches via the `touched` list, so a search's outcome
-/// never depends on which worker (or in which order) it ran.
+/// The dense arrays reset between searches via the `touched` list, and
+/// the per-net/per-sink buffers (`tree`, `heap`, `order`) are cleared
+/// before use, so a search's outcome never depends on which worker (or
+/// in which order) it ran — and per-sink setup allocates nothing.
 struct AStarScratch {
     cost: Vec<f64>,
     prev: Vec<usize>,
     touched: Vec<usize>,
+    /// Route tree of the net being routed: `(node, hops)` pairs sorted
+    /// by node (nodes are unique), probed by binary search — the seed
+    /// iteration order is identical to the sorted seed list the
+    /// `HashMap` version collected per sink, without the per-sink
+    /// collect + sort.
+    tree: Vec<(usize, usize)>,
+    /// A* frontier, cleared per sink.
+    heap: BinaryHeap<QItem>,
+    /// Sink routing order for the net being routed (see `route_net`).
+    order: Vec<usize>,
 }
 
 impl AStarScratch {
@@ -227,6 +290,9 @@ impl AStarScratch {
             cost: vec![f64::INFINITY; n_nodes],
             prev: vec![usize::MAX; n_nodes],
             touched: Vec::new(),
+            tree: Vec::new(),
+            heap: BinaryHeap::new(),
+            order: Vec::new(),
         }
     }
 }
@@ -261,12 +327,16 @@ impl Drop for ScratchLease<'_> {
 }
 
 /// Route one net against a frozen cost snapshot.  Pure in
-/// (graph, snapshot, pres_fac, net, sink criticalities): no shared
-/// mutable state.  `sink_crit[k]` is the criticality of sink terminal
-/// `terms[k + 1]`; the A* toward that sink prices every node at
+/// (graph, snapshot, pres_fac, net, sink criticalities, lookahead): no
+/// shared mutable state.  `sink_crit[k]` is the criticality of sink
+/// terminal `terms[k + 1]`; the A* toward that sink prices every node at
 /// `(1 - crit) * congestion_cost + crit` (0.0 = exactly the
-/// timing-oblivious cost; see [`RouteOpts::sink_crit`]).  Returns the
-/// net's committed node set (sorted, deduped) and per-sink hop counts.
+/// timing-oblivious cost; see [`RouteOpts::sink_crit`]).  With a
+/// lookahead, sinks route in descending-criticality order (index
+/// tie-break) so critical trunks commit first and slack-rich sinks
+/// branch off them; `sink_hops` is always reported in terminal order.
+/// Returns the net's committed node set (sorted, deduped), per-sink hop
+/// counts, and the search's heap-pop count.
 #[allow(clippy::too_many_arguments)]
 fn route_net<F: Fn(Term) -> Loc>(
     graph: &RrGraph,
@@ -277,75 +347,105 @@ fn route_net<F: Fn(Term) -> Loc>(
     term_loc: &F,
     arch: &Arch,
     sink_crit: &[f64],
+    la: Option<&Lookahead>,
     scratch: &mut AStarScratch,
-) -> (Vec<usize>, Vec<(Term, usize)>) {
+) -> (Vec<usize>, Vec<(Term, usize)>, usize) {
     let src_loc = term_loc(terms[0]);
     let src_nodes = graph.pin_nodes(src_loc, arch.routing.fc_out, 17 + 131 * ni as u64);
 
-    // Route tree as a set of nodes with hop-distance from source.  Seeds
-    // (source track taps) are search entry points but only nodes actually
-    // used by a sink path get committed.
-    let mut tree: HashMap<usize, usize> = HashMap::new(); // node -> hops
-    let mut used: Vec<usize> = Vec::new();
-    for &id in &src_nodes {
-        tree.insert(id, 0);
-    }
-    let mut sink_hops: Vec<(Term, usize)> = Vec::with_capacity(terms.len().saturating_sub(1));
+    // Split-borrow the scratch so the tree can be read while the search
+    // arrays and frontier are written.
+    let AStarScratch { cost, prev, touched, tree, heap, order } = scratch;
 
-    for (si, &sink) in terms[1..].iter().enumerate() {
+    // Route tree as `(node, hops-from-source)` pairs, kept sorted by
+    // node.  Seeds (source track taps, already sorted + deduped) are
+    // search entry points but only nodes actually used by a sink path
+    // get committed.
+    tree.clear();
+    tree.extend(src_nodes.iter().map(|&id| (id, 0usize)));
+    let mut used: Vec<usize> = Vec::new();
+    let n_sinks = terms.len().saturating_sub(1);
+    let mut sink_hops: Vec<(Term, usize)> =
+        terms[1..].iter().map(|&t| (t, 0usize)).collect();
+    let mut pops = 0usize;
+
+    // Sink routing order: terminal order without a lookahead (the legacy
+    // router, preserved bit-for-bit for `--lookahead off`); descending
+    // criticality with sink-index tie-break with one — a fixed total
+    // order, so determinism is untouched and tied criticalities route
+    // stably.
+    order.clear();
+    order.extend(0..n_sinks);
+    if la.is_some() {
+        order.sort_by(|&a, &b| {
+            let ca = sink_crit.get(a).copied().unwrap_or(0.0);
+            let cb = sink_crit.get(b).copied().unwrap_or(0.0);
+            cb.total_cmp(&ca).then(a.cmp(&b))
+        });
+    }
+
+    for oi in 0..order.len() {
+        let si = order[oi];
+        let sink = terms[si + 1];
         // This sink's criticality blend (0.0 when absent — neutral).
         let c = sink_crit.get(si).copied().unwrap_or(0.0);
         let dst_loc = term_loc(sink);
+        // Sorted + deduped; target membership is a binary-search probe.
         let dst_nodes = graph.pin_nodes(dst_loc, arch.routing.fc_in, 71 + 131 * ni as u64);
-        let is_target: HashSet<usize> = dst_nodes.iter().copied().collect();
         let (tx, ty) = (dst_loc.x as usize, dst_loc.y as usize);
 
         // Reset the search arrays from the previous sink.
-        for &n in &scratch.touched {
-            scratch.cost[n] = f64::INFINITY;
-            scratch.prev[n] = usize::MAX;
+        for &n in touched.iter() {
+            cost[n] = f64::INFINITY;
+            prev[n] = usize::MAX;
         }
-        scratch.touched.clear();
+        touched.clear();
+        heap.clear();
 
-        // A* from the current tree.
-        let mut heap: BinaryHeap<QItem> = BinaryHeap::new();
-        let mut seeds: Vec<(usize, usize)> = tree.iter().map(|(&n, &h)| (n, h)).collect();
-        seeds.sort_unstable(); // deterministic A* tie-breaking
-        for (n, hops) in seeds {
+        // A* from the current tree (sorted by node — the same
+        // deterministic tie-breaking order as ever).
+        for &(n, hops) in tree.iter() {
             // Fresh source taps pay their own congestion cost (otherwise a
             // net would happily start on an occupied tap it never
             // perceives); nodes already on this net's tree re-enter free.
             let entry =
                 if hops == 0 { (1.0 - c) * costs.node_cost(n, pres_fac) + c } else { 0.0 };
-            scratch.cost[n] = entry;
-            scratch.prev[n] = usize::MAX;
-            scratch.touched.push(n);
-            heap.push(QItem { prio: entry + graph.heur(n, tx, ty), cost: entry, node: n });
+            cost[n] = entry;
+            prev[n] = usize::MAX;
+            touched.push(n);
+            // Legacy quirk, kept bit-exact for the Off path: seed
+            // priorities skip the ASTAR_FAC inflation.
+            let h = match la {
+                Some(m) => ASTAR_FAC * m.query(n, tx, ty),
+                None => graph.heur(n, tx, ty),
+            };
+            heap.push(QItem { prio: entry + h, cost: entry, node: n });
         }
 
         let mut found = usize::MAX;
-        while let Some(QItem { cost, node, .. }) = heap.pop() {
-            if cost > scratch.cost[node] {
+        while let Some(QItem { cost: ncost, node, .. }) = heap.pop() {
+            pops += 1;
+            if ncost > cost[node] {
                 continue;
             }
-            if is_target.contains(&node) {
+            if dst_nodes.binary_search(&node).is_ok() {
                 found = node;
                 break;
             }
             for &nb in graph.neighbors(node) {
                 let nid = nb as usize;
-                let nc = cost + (1.0 - c) * costs.node_cost(nid, pres_fac) + c;
-                if nc < scratch.cost[nid] {
-                    if scratch.cost[nid].is_infinite() && scratch.prev[nid] == usize::MAX {
-                        scratch.touched.push(nid);
+                let nc = ncost + (1.0 - c) * costs.node_cost(nid, pres_fac) + c;
+                if nc < cost[nid] {
+                    if cost[nid].is_infinite() && prev[nid] == usize::MAX {
+                        touched.push(nid);
                     }
-                    scratch.cost[nid] = nc;
-                    scratch.prev[nid] = node;
-                    heap.push(QItem {
-                        prio: nc + ASTAR_FAC * graph.heur(nid, tx, ty),
-                        cost: nc,
-                        node: nid,
-                    });
+                    cost[nid] = nc;
+                    prev[nid] = node;
+                    let h = match la {
+                        Some(m) => ASTAR_FAC * m.query(nid, tx, ty),
+                        None => ASTAR_FAC * graph.heur(nid, tx, ty),
+                    };
+                    heap.push(QItem { prio: nc + h, cost: nc, node: nid });
                 }
             }
         }
@@ -353,32 +453,38 @@ fn route_net<F: Fn(Term) -> Loc>(
         if found == usize::MAX {
             // Unroutable sink this iteration; count a distance estimate and
             // keep going (pressure will reshape other nets).
-            sink_hops.push((sink, (src_loc.dist(dst_loc) as usize).max(1)));
+            sink_hops[si] = (sink, (src_loc.dist(dst_loc) as usize).max(1));
             continue;
         }
         // Walk back, add path to tree.
         let mut path = Vec::new();
         let mut cur = found;
-        while cur != usize::MAX && !tree.contains_key(&cur) {
+        while cur != usize::MAX && tree.binary_search_by_key(&cur, |&(n, _)| n).is_err() {
             path.push(cur);
-            cur = scratch.prev[cur];
+            cur = prev[cur];
         }
-        let base_hops = if cur == usize::MAX { 0 } else { tree[&cur] };
+        let base_hops = match tree.binary_search_by_key(&cur, |&(n, _)| n) {
+            Ok(i) => tree[i].1,
+            Err(_) => 0,
+        };
         // The attachment node is used (it may be a fresh seed tap).
         if cur != usize::MAX {
             used.push(cur);
         }
         let hops = base_hops + path.len();
-        sink_hops.push((sink, hops));
+        sink_hops[si] = (sink, hops);
+        // Path nodes are new to the tree (the walk-back stopped at the
+        // first tree node), so append + re-sort keeps nodes unique.
         for (off, &n) in path.iter().rev().enumerate() {
-            tree.insert(n, base_hops + off + 1);
+            tree.push((n, base_hops + off + 1));
             used.push(n);
         }
+        tree.sort_unstable();
     }
 
     used.sort_unstable();
     used.dedup();
-    (used, sink_hops)
+    (used, sink_hops, pops)
 }
 
 /// Route a placed design (timing-oblivious unless `opts` carries static
@@ -446,6 +552,27 @@ fn route_inner(
     let graph = RrGraph::build(device, arch);
     let n_nodes = graph.num_nodes();
 
+    // Resolve the A* lookahead: `On` builds (or fetches) the per-device
+    // map via the process-global memo; `Shared` trusts a prebuilt
+    // artifact after a dimension check; `Off` is the legacy router.
+    let la: Option<Arc<Lookahead>> = match &opts.lookahead {
+        LookaheadMode::Off => None,
+        LookaheadMode::On => Some(lookahead::shared(&graph)),
+        LookaheadMode::Shared(m) => {
+            assert!(
+                m.matches(&graph),
+                "lookahead map is for a {}x{}xW{} grid, graph is {}x{}xW{}",
+                m.width(),
+                m.height(),
+                m.tracks(),
+                graph.width,
+                graph.height,
+                graph.tracks
+            );
+            Some(m.clone())
+        }
+    };
+
     let term_loc = |t: Term| -> Loc {
         match t {
             Term::Lb(i) => placement.lb_loc[i],
@@ -504,6 +631,7 @@ fn route_inner(
     let mut pres_fac = opts.pres_fac0;
     let mut iterations = 0;
     let mut success = false;
+    let mut astar_pops = 0usize;
 
     // Shared A* scratch pool: at most `jobs` sets of search arrays are
     // ever allocated, leased per wave and reused across waves/iterations.
@@ -546,12 +674,13 @@ fn route_inner(
             let crit_ref = &crit;
             let term_loc_ref = &term_loc;
             let pool_ref = &scratch_pool;
+            let la_ref = la.as_deref();
             // Small waves (the long tail of late, lightly-congested
             // iterations) run on the calling thread: spawning workers for
             // a handful of nets costs more than it saves, and the result
             // is identical either way (worker count is unobservable).
             let wave_jobs = if wave.len() < 8 { 1 } else { opts.jobs.max(1) };
-            let routed: Vec<(Vec<usize>, Vec<(Term, usize)>)> = parallel_indexed_with(
+            let routed: Vec<(Vec<usize>, Vec<(Term, usize)>, usize)> = parallel_indexed_with(
                 wave.len(),
                 wave_jobs,
                 || ScratchLease::take(pool_ref, n_nodes),
@@ -566,17 +695,21 @@ fn route_inner(
                         term_loc_ref,
                         arch,
                         &crit_ref[ni],
+                        la_ref,
                         lease.scratch.as_mut().expect("scratch held for lease lifetime"),
                     )
                 },
             );
-            for ((used, hops), &ni) in routed.into_iter().zip(wave.iter()) {
+            for ((used, hops, pops), &ni) in routed.into_iter().zip(wave.iter()) {
                 for &n in &used {
                     costs.occ[n] += 1;
                 }
                 net_nodes[ni] = used;
                 sink_hops[ni] = hops;
                 routed_crit[ni] = net_max_crit[ni];
+                // Fixed-order sum of per-net pop counts: identical for
+                // any worker count.
+                astar_pops += pops;
             }
         }
 
@@ -672,6 +805,7 @@ fn route_inner(
         overused_nodes,
         net_nodes,
         cpd_trace,
+        astar_pops,
     }
 }
 
@@ -839,6 +973,39 @@ mod tests {
         }
         // Some terminal is critical somewhere.
         assert!(sc.iter().flatten().any(|&x| x > 0.5));
+    }
+
+    /// Both lookahead modes converge on the same instance, the pop
+    /// odometer runs, and per-sink results line up with the terminal
+    /// lists in both modes (the Off/On bit-level contracts live in
+    /// `rust/tests/route_lookahead.rs`).
+    #[test]
+    fn lookahead_modes_route_and_count_pops() {
+        let (on, model, arch) = routed(5);
+        assert!(on.astar_pops > 0, "pop odometer never ran");
+        let mut c = Circuit::new("m");
+        let x = c.pi_bus("x", 5);
+        let y = c.pi_bus("y", 5);
+        let p = soft_mul(&mut c, &x, &y, AdderAlgo::Wallace);
+        c.po_bus("p", &p);
+        let nl = map_circuit(&c, &MapOpts::default());
+        let packing = pack(&nl, &arch, &PackOpts::default());
+        let pl = place(&nl, &packing, &arch,
+                       &PlaceOpts { effort: 0.3, ..Default::default() })
+            .expect("placement");
+        let off = route(&model, &pl, &arch,
+                        &RouteOpts { lookahead: LookaheadMode::Off, ..Default::default() });
+        assert!(off.success);
+        assert!(off.astar_pops > 0);
+        for (i, en) in model.nets.iter().enumerate() {
+            assert_eq!(off.sink_hops[i].len(), en.terms.len() - 1);
+            for (k, &(t, _)) in off.sink_hops[i].iter().enumerate() {
+                assert_eq!(t, en.terms[k + 1], "sink order must mirror terms");
+            }
+            for (k, &(t, _)) in on.sink_hops[i].iter().enumerate() {
+                assert_eq!(t, en.terms[k + 1], "sink order must mirror terms");
+            }
+        }
     }
 
     /// Timing-driven weights: zero criticalities are exactly the

@@ -29,6 +29,13 @@
 //! corners per (location, salt), exactly like VPR's connection-block
 //! flexibility.
 //!
+//! Because the edge pattern is translation-invariant, exact
+//! congestion-free cost-to-target maps exist per node *class* rather
+//! than per node: [`lookahead`] precomputes them once per
+//! (device, channel width) — keyed by [`lookahead::cache_key`], never by
+//! the netlist — and the router uses them as a sharper admissible A*
+//! heuristic (see that module's docs for the admissibility argument).
+//!
 //! ## Cost model and the snapshot/reduce negotiation scheme
 //!
 //! [`CostState`] holds the PathFinder arrays: per-node occupancy
@@ -58,6 +65,8 @@
 use crate::arch::device::Device;
 use crate::arch::device::Loc;
 use crate::arch::Arch;
+
+pub mod lookahead;
 
 /// Per-track capacity (one wire per track node).
 pub const NODE_CAP: f64 = 1.0;

@@ -15,8 +15,8 @@
 use double_duty::arch::{Arch, ArchVariant, Device};
 use double_duty::bench_suites::{all_suites, BenchParams};
 use double_duty::check::{
-    audit_netlist, audit_packing, audit_placement, audit_routing, audit_timing,
-    check_benchmark, Severity, Stage, Violation,
+    audit_lookahead, audit_netlist, audit_packing, audit_placement, audit_routing,
+    audit_timing, check_benchmark, Severity, Stage, Violation,
 };
 use double_duty::flow::diskcache::{DiskCache, CACHE_VERSION};
 use double_duty::flow::engine::{ArtifactCache, MappedCircuit};
@@ -26,6 +26,8 @@ use double_duty::pack::{pack, PackOpts, Packing};
 use double_duty::place::cost::NetModel;
 use double_duty::place::{place, PlaceOpts, Placement};
 use double_duty::route::{route, RouteOpts, Routing};
+use double_duty::rrg::lookahead::Lookahead;
+use double_duty::rrg::RrGraph;
 use double_duty::synth::circuit::Circuit;
 use double_duty::synth::multiplier::{soft_mul, AdderAlgo};
 use double_duty::techmap::aig::Lit;
@@ -235,6 +237,30 @@ fn route_audit_catches_stolen_wire() {
     let vs = audit_routing(&model, &pl, &arch, &r);
     assert!(has_code(&vs, "route.overuse-count"), "expected route.overuse-count in {vs:?}");
     assert!(has_code(&vs, "route.overuse"), "expected route.overuse in {vs:?}");
+}
+
+// --- lookahead auditor -----------------------------------------------------
+
+#[test]
+fn lookahead_audit_catches_inflated_class_distance() {
+    let (nl, packing, arch) = mul_fixture(ArchVariant::Dd5);
+    let pl = placed(&nl, &packing, &arch);
+    let graph = RrGraph::build(&pl.device, &arch);
+    let la = Lookahead::build(&graph);
+    assert!(audit_lookahead(&graph, &la).is_empty(), "built map audits clean");
+
+    // Inflate one class distance: (dir 0, |dx| 0, |dy| 0) is truly 0
+    // hops, so any estimate above it is inadmissible at every target
+    // whose corner set covers a dir-0 node's own location.
+    let mut dist = la.dist().to_vec();
+    dist[0] = 60_000;
+    let bad = Lookahead::from_raw(la.width(), la.height(), la.tracks(), dist)
+        .expect("shape is unchanged");
+    let vs = audit_lookahead(&graph, &bad);
+    assert!(
+        has_code(&vs, "lookahead.admissibility"),
+        "expected lookahead.admissibility in {vs:?}"
+    );
 }
 
 // --- timing auditor --------------------------------------------------------

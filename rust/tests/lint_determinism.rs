@@ -47,8 +47,8 @@ const ALLOWLIST: &[(&str, &str)] = &[
     // Membership predicates: .any() is order-independent.
     ("pack/mod.rs", "ins_b.iter().any("),
     ("place/mod.rs", "grid.values().any("),
-    // A* seed gather: seeds.sort_unstable() on the next line.
-    ("route/mod.rs", "tree.iter().map(|(&n, &h)| (n, h)).collect()"),
+    // (PR 7 removed the router's HashMap route tree — the A* scratch now
+    // carries a sorted Vec arena, so no route/mod.rs entries remain.)
     // Commutative accumulation into another HashSet (pos_need inserts).
     ("techmap/mapper.rs", "for leaves in selected.values()"),
     // Key gather: order.sort_unstable() on the next line.

@@ -1,0 +1,154 @@
+//! Lookahead-router contracts, end to end:
+//!
+//! * with the lookahead on (the default), `Routing` — including the
+//!   `astar_pops` work counter — is bit-identical across
+//!   `--route-jobs 1/2/8`, congested or not;
+//! * `LookaheadMode::Off` *is* the pre-lookahead code path: the legacy
+//!   Manhattan heuristic at every seed/expansion and strict in-terms
+//!   sink order (the criticality sort is gated on the same flag), so the
+//!   off-mode jobs-invariance here pins the PR-6 router bit for bit;
+//! * tied per-sink criticalities fall back to index order (stable sort
+//!   key), so uniform ties keep `sink_hops` mirroring the net's terms
+//!   and stay deterministic across jobs and repeated runs;
+//! * a shared map built for a different device grid is rejected loudly
+//!   instead of silently mispricing the search.
+
+use double_duty::arch::device::Device;
+use double_duty::arch::{Arch, ArchVariant};
+use double_duty::pack::{pack, PackOpts, Packing};
+use double_duty::place::cost::NetModel;
+use double_duty::place::{place, PlaceOpts, Placement};
+use double_duty::route::{route, LookaheadMode, RouteOpts, Routing};
+use double_duty::rrg::lookahead::Lookahead;
+use double_duty::rrg::RrGraph;
+use double_duty::synth::circuit::Circuit;
+use double_duty::synth::multiplier::{soft_mul, AdderAlgo};
+use double_duty::techmap::{map_circuit, MapOpts};
+use double_duty::netlist::Netlist;
+
+fn placed_mul(w: usize) -> (Netlist, Packing, Placement, NetModel, Arch) {
+    let mut c = Circuit::new("m");
+    let x = c.pi_bus("x", w);
+    let y = c.pi_bus("y", w);
+    let p = soft_mul(&mut c, &x, &y, AdderAlgo::Wallace);
+    c.po_bus("p", &p);
+    let nl = map_circuit(&c, &MapOpts::default());
+    let arch = Arch::paper(ArchVariant::Dd5);
+    let packing = pack(&nl, &arch, &PackOpts::default());
+    let pl = place(&nl, &packing, &arch,
+                   &PlaceOpts { effort: 0.3, ..Default::default() })
+        .expect("placement");
+    let mut model = NetModel::build(&nl, &packing);
+    model.set_weights(&[], false);
+    (nl, packing, pl, model, arch)
+}
+
+fn assert_routing_eq(a: &Routing, b: &Routing, tag: &str) {
+    assert_eq!(a.success, b.success, "{tag}: success");
+    assert_eq!(a.iterations, b.iterations, "{tag}: iterations");
+    assert_eq!(a.wirelength, b.wirelength, "{tag}: wirelength");
+    assert_eq!(a.overused, b.overused, "{tag}: overused");
+    assert_eq!(a.overused_nodes, b.overused_nodes, "{tag}: overused_nodes");
+    assert_eq!(a.sink_hops, b.sink_hops, "{tag}: sink_hops");
+    assert_eq!(a.net_nodes, b.net_nodes, "{tag}: net_nodes");
+    assert_eq!(a.channel_util, b.channel_util, "{tag}: channel_util");
+    assert_eq!(a.astar_pops, b.astar_pops, "{tag}: astar_pops");
+}
+
+/// Lookahead on (the default): identical `Routing` for every job count,
+/// work counter included.
+#[test]
+fn lookahead_routing_bit_identical_across_job_counts() {
+    let (_nl, _packing, pl, model, arch) = placed_mul(6);
+    let base = route(&model, &pl, &arch, &RouteOpts { jobs: 1, ..Default::default() });
+    assert!(base.success, "baseline route failed ({} overused)", base.overused);
+    assert!(base.astar_pops > 0, "pops odometer never moved");
+    for jobs in [2, 8] {
+        let r = route(&model, &pl, &arch, &RouteOpts { jobs, ..Default::default() });
+        assert_routing_eq(&base, &r, &format!("lookahead jobs={jobs}"));
+    }
+}
+
+/// The contract survives congestion (narrow channel => several
+/// negotiation iterations with criticality-ordered trunk reuse in play).
+#[test]
+fn lookahead_routing_bit_identical_under_congestion() {
+    let (_nl, _packing, pl, model, mut arch) = placed_mul(6);
+    arch.routing.channel_width = 14;
+    let base = route(&model, &pl, &arch, &RouteOpts { jobs: 1, ..Default::default() });
+    assert!(base.iterations > 1, "want real negotiation churn");
+    for jobs in [2, 8] {
+        let r = route(&model, &pl, &arch, &RouteOpts { jobs, ..Default::default() });
+        assert_routing_eq(&base, &r, &format!("lookahead congested jobs={jobs}"));
+    }
+}
+
+/// `LookaheadMode::Off` reproduces the legacy router: the Manhattan
+/// heuristic (ASTAR_FAC-free at seeds, exactly as before) and in-terms
+/// sink order both sit behind the same flag, so this run *is* the PR-6
+/// code path.  Pin that it stays deterministic and jobs-invariant, and
+/// that it agrees with itself rep to rep.
+#[test]
+fn lookahead_off_is_legacy_and_jobs_invariant() {
+    let (_nl, _packing, pl, model, arch) = placed_mul(6);
+    let mk = |jobs: usize| {
+        route(&model, &pl, &arch,
+              &RouteOpts { jobs, lookahead: LookaheadMode::Off, ..Default::default() })
+    };
+    let base = mk(1);
+    assert!(base.success, "legacy route failed ({} overused)", base.overused);
+    assert_routing_eq(&base, &mk(1), "off repeat");
+    for jobs in [2, 8] {
+        assert_routing_eq(&base, &mk(jobs), &format!("off jobs={jobs}"));
+    }
+}
+
+/// Uniform (tied) per-sink criticalities: the descending sort's index
+/// tie-break keeps the routing order at identity, so `sink_hops` still
+/// mirrors each net's sink terms in order and the result is stable
+/// across jobs and repeated runs.
+#[test]
+fn tied_sink_criticalities_are_stable() {
+    let (_nl, _packing, pl, model, arch) = placed_mul(5);
+    let ties: Vec<Vec<f64>> = model
+        .nets
+        .iter()
+        .map(|en| vec![0.7; en.terms.len().saturating_sub(1)])
+        .collect();
+    let mk = |jobs: usize| {
+        route(&model, &pl, &arch,
+              &RouteOpts { jobs, sink_crit: ties.clone(), ..Default::default() })
+    };
+    let base = mk(1);
+    assert!(base.success, "tied-crit route failed ({} overused)", base.overused);
+    for (ni, en) in model.nets.iter().enumerate() {
+        let got: Vec<_> = base.sink_hops[ni].iter().map(|&(t, _)| t).collect();
+        let want: Vec<_> = en.terms[1..].to_vec();
+        assert_eq!(got, want, "net {ni}: sink_hops must mirror terms order");
+    }
+    assert_routing_eq(&base, &mk(1), "ties repeat");
+    for jobs in [2, 8] {
+        assert_routing_eq(&base, &mk(jobs), &format!("ties jobs={jobs}"));
+    }
+}
+
+/// A shared lookahead for the wrong grid is a hard error, not a silent
+/// mispricing of every A* estimate.
+#[test]
+#[should_panic(expected = "lookahead map")]
+fn mismatched_shared_lookahead_is_rejected() {
+    let (_nl, _packing, pl, model, arch) = placed_mul(5);
+    let mut other_arch = Arch::paper(ArchVariant::Baseline);
+    other_arch.routing.channel_width = 3;
+    let wrong = Lookahead::build(&RrGraph::build(&Device::new(30, 30), &other_arch));
+    let _ = route(
+        &model,
+        &pl,
+        &arch,
+        &RouteOpts {
+            jobs: 1,
+            lookahead: LookaheadMode::Shared(std::sync::Arc::new(wrong)),
+            ..Default::default()
+        },
+    );
+}
