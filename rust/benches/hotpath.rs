@@ -193,7 +193,10 @@ fn compare_bench(cur_path: &str, base_path: &str) -> Result<(), String> {
     // heap pops, lookahead on): growth means the search got genuinely
     // less focused — no timer noise involved, so no noise floor, but the
     // same 25% headroom keeps loosely seeded baselines usable.
-    for key in ["route_iters", "astar_pops"] {
+    // `failed_seeds` / `escalations` baseline at 0: any failed or
+    // ladder-rescued seed in the (fault-free) bench sweep is a real
+    // robustness regression, so the 25% headroom degenerates to `> 0`.
+    for key in ["route_iters", "astar_pops", "failed_seeds", "escalations"] {
         match (json_num(&cur, key, 0), json_num(&base, key, 0)) {
             (Some(c), Some(b)) => {
                 if c > b * REGRESS_FACTOR {
@@ -492,11 +495,12 @@ fn main() {
     // the END of the run — quick or full — so elapsed_s covers
     // everything that actually ran (a full run's wall clock is dominated
     // by the engine sweep below), then gated against --baseline.
-    let emit_and_gate = |elapsed_s: f64| {
+    let emit_and_gate = |elapsed_s: f64, failed_seeds: usize, escalations: usize| {
         let json = format!(
             "{{\n  \"version\": 1,\n  \"bench\": \"{big_name}\",\n  \"cells\": {},\n  \
              \"jobs\": {fe_jobs},\n  \"route_iters\": {route_iters_ct},\n  \
-             \"astar_pops\": {astar_pops_ct},\n  \"elapsed_s\": {elapsed_s:.3},\n  \
+             \"astar_pops\": {astar_pops_ct},\n  \"failed_seeds\": {failed_seeds},\n  \
+             \"escalations\": {escalations},\n  \"elapsed_s\": {elapsed_s:.3},\n  \
              \"wall_clock_budget_s\": {WALL_BUDGET_S:.1},\n  \"stages\": [\n    \
              {{\"stage\": \"map\", \"median_s_jobs1\": {:.6}, \"median_s\": {:.6}, \"speedup\": {:.3}}},\n    \
              {{\"stage\": \"pack\", \"median_s_jobs1\": {:.6}, \"median_s\": {:.6}, \"speedup\": {:.3}}},\n    \
@@ -529,7 +533,9 @@ fn main() {
     };
 
     if quick {
-        emit_and_gate(t_start.elapsed().as_secs_f64());
+        // No engine sweep ran, so the robustness counters are zero by
+        // construction — matching the committed baseline.
+        emit_and_gate(t_start.elapsed().as_secs_f64(), 0, 0);
         println!("--quick: skipping engine sweep");
         return;
     }
@@ -586,5 +592,11 @@ fn main() {
         st.pack_hits.load(Relaxed)
     );
 
-    emit_and_gate(t_start.elapsed().as_secs_f64());
+    // Robustness counters over the fault-free sweep: any failed seed or
+    // ladder rescue here is a regression (the baseline pins them at 0).
+    let (sweep_failed, sweep_escalated) = parallel
+        .iter()
+        .flatten()
+        .fold((0usize, 0usize), |acc, r| (acc.0 + r.failed_seeds, acc.1 + r.escalations));
+    emit_and_gate(t_start.elapsed().as_secs_f64(), sweep_failed, sweep_escalated);
 }

@@ -36,7 +36,11 @@
 //!   disk-cache artifacts;
 //! * [`timing::audit_timing`] — arrival monotonicity along combinational
 //!   edges, endpoint arrivals bounded by the reported CPD, `SinkCrit`
-//!   values in [0, 1] with per-net max consistency (bitwise).
+//!   values in [0, 1] with per-net max consistency (bitwise);
+//! * [`recovery::audit_recovery`] — the failure-recovery bookkeeping of a
+//!   finished flow result: escalation rungs within the ladder, degraded
+//!   seeds excluded from CPD-prior chaining, failure counters consistent
+//!   with the per-seed error records.
 //!
 //! Every auditor returns a structured [`Violation`] list in a stable,
 //! artifact-defined scan order (cells/nets/ALMs/LBs ascending) instead of
@@ -52,6 +56,7 @@ pub mod lookahead;
 pub mod netlist;
 pub mod pack;
 pub mod place;
+pub mod recovery;
 pub mod route;
 pub mod timing;
 
@@ -59,6 +64,7 @@ pub use lookahead::audit_lookahead;
 pub use netlist::audit_netlist;
 pub use pack::audit_packing;
 pub use place::audit_placement;
+pub use recovery::audit_recovery;
 pub use route::audit_routing;
 pub use timing::audit_timing;
 
@@ -93,6 +99,10 @@ pub enum Stage {
     Lookahead,
     Route,
     Timing,
+    /// Failure-recovery bookkeeping: escalation provenance, CPD-prior
+    /// chaining hygiene, and cache-integrity quarantines
+    /// ([`recovery::audit_recovery`], `flow.cache-integrity`).
+    Recovery,
 }
 
 impl Stage {
@@ -104,6 +114,7 @@ impl Stage {
             Stage::Lookahead => "lookahead",
             Stage::Route => "route",
             Stage::Timing => "timing",
+            Stage::Recovery => "recovery",
         }
     }
 }

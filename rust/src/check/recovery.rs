@@ -1,0 +1,155 @@
+//! Recovery auditor: re-verifies the failure-recovery bookkeeping of a
+//! finished flow cell against the per-seed metrics it was reduced from.
+//!
+//! The fault-tolerant flow turns panics, placement misfits, and
+//! unroutable seeds into *data* ([`crate::flow::FlowError`]) instead of
+//! crashes — which means the recovery bookkeeping itself is now a
+//! correctness surface: a seed rescued at an escalated channel width
+//! must never feed the CPD-prior chain, the failure counters must agree
+//! with the per-seed error records, and an escalation rung must be one
+//! the ladder actually defines.  Like every other auditor, this one
+//! re-derives each invariant from the raw artifacts (the
+//! [`crate::flow::SeedMetrics`] list) without calling the producer code
+//! paths, so a bug in `assemble_result` or `chain_seeds` cannot
+//! self-certify.
+//!
+//! Codes (stable order of checks):
+//!
+//! * `recovery.escalation-provenance` — per seed: the recorded rung is
+//!   within [`crate::flow::ESCALATION_LADDER`]; a seed rescued by the
+//!   ladder (`escalation > 0`, routed) carries no error; a seed that
+//!   exhausted the ladder sits on the last rung *and* carries the
+//!   ladder-exhausted error; a routed seed never carries an error.
+//! * `recovery.prior-chaining` — the CPD-prior chain re-walked from
+//!   scratch: each seed's consumed prior must be bit-identical
+//!   (`f64::to_bits`) to the prior the chain rules predict, and only
+//!   healthy, undegraded, routed seeds advance the prediction.
+//!   Non-chained runs must consume no priors at all.
+//! * `recovery.failure-counts` — the reduced [`crate::flow::FlowResult`]
+//!   counters (`failed_seeds`, `escalations`, `errors`, `routed_ok`)
+//!   agree with a recount over the seed list.
+
+use crate::flow::{FlowResult, SeedMetrics, ESCALATION_LADDER};
+
+use super::{Severity, Stage, Violation};
+
+fn err(code: &'static str, location: impl Into<String>, message: impl Into<String>) -> Violation {
+    Violation::new(Stage::Recovery, Severity::Error, code, location, message)
+}
+
+/// Audit one flow cell's recovery bookkeeping.  `result` is the reduced
+/// cell result, `seeds` the per-seed metrics it was assembled from (in
+/// seed order), and `chained` whether the closed timing loop was on
+/// (`route && route_timing_weights`) — the only mode in which seeds may
+/// consume CPD priors.
+pub fn audit_recovery(
+    result: &FlowResult,
+    seeds: &[SeedMetrics],
+    chained: bool,
+) -> Vec<Violation> {
+    let mut vs = Vec::new();
+    let last_rung = ESCALATION_LADDER.len();
+
+    // 1. Escalation provenance, in seed order.
+    for s in seeds {
+        let loc = || format!("seed {}", s.seed);
+        let rung = s.escalation as usize;
+        if rung > last_rung {
+            vs.push(err(
+                "recovery.escalation-provenance",
+                loc(),
+                format!("escalation rung {rung} outside the {last_rung}-rung ladder"),
+            ));
+            continue;
+        }
+        if s.routed_ok && s.error.is_some() {
+            vs.push(err(
+                "recovery.escalation-provenance",
+                loc(),
+                "routed seed carries a failure record",
+            ));
+        }
+        if rung > 0 && !s.routed_ok {
+            // The ladder only stops early on success; an unrouted seed
+            // must have exhausted every rung and recorded the failure.
+            if rung < last_rung {
+                vs.push(err(
+                    "recovery.escalation-provenance",
+                    loc(),
+                    format!("unrouted seed stopped at rung {rung} of {last_rung}"),
+                ));
+            }
+            if s.error.is_none() {
+                vs.push(err(
+                    "recovery.escalation-provenance",
+                    loc(),
+                    "ladder-exhausted seed carries no failure record",
+                ));
+            }
+        }
+    }
+
+    // 2. CPD-prior chaining, re-walked from scratch.  Degraded
+    // (escalated), errored, and unrouted seeds must not advance the
+    // prior; non-chained runs must consume no priors at all.
+    let mut expected: Option<f64> = None;
+    for s in seeds {
+        let want = if chained { expected } else { None };
+        let same = match (s.used_prior_ps, want) {
+            (None, None) => true,
+            (Some(a), Some(b)) => a.to_bits() == b.to_bits(),
+            _ => false,
+        };
+        if !same {
+            vs.push(err(
+                "recovery.prior-chaining",
+                format!("seed {}", s.seed),
+                format!(
+                    "consumed prior {:?} ps, chain rules predict {:?} ps",
+                    s.used_prior_ps, want
+                ),
+            ));
+        }
+        if chained && s.routed_ok && s.error.is_none() && s.escalation == 0 {
+            expected = Some(s.cpd_ns * 1000.0);
+        }
+    }
+
+    // 3. Reduced counters vs a recount over the seed list.
+    let n_errors = seeds.iter().filter(|s| s.error.is_some()).count();
+    if result.failed_seeds != n_errors || result.errors.len() != n_errors {
+        vs.push(err(
+            "recovery.failure-counts",
+            "result",
+            format!(
+                "failed_seeds {} / errors {} vs {} seed failure record(s)",
+                result.failed_seeds,
+                result.errors.len(),
+                n_errors
+            ),
+        ));
+    }
+    let n_escalated = seeds.iter().filter(|s| s.escalation > 0).count();
+    if result.escalations != n_escalated {
+        vs.push(err(
+            "recovery.failure-counts",
+            "result",
+            format!(
+                "escalations {} vs {} escalated seed(s)",
+                result.escalations, n_escalated
+            ),
+        ));
+    }
+    let all_routed = seeds.iter().all(|s| s.routed_ok);
+    if result.routed_ok != all_routed {
+        vs.push(err(
+            "recovery.failure-counts",
+            "result",
+            format!(
+                "routed_ok {} vs per-seed conjunction {}",
+                result.routed_ok, all_routed
+            ),
+        ));
+    }
+    vs
+}

@@ -15,15 +15,32 @@
 //! anything malformed is treated as a miss and recomputed.  Stores are
 //! best-effort (I/O errors are ignored) and write-temp-then-rename so
 //! concurrent processes never observe torn files.
+//!
+//! Malformed artifacts are additionally **quarantined**: the corrupt
+//! file is renamed to `*.quarantine` (so the evidence survives the
+//! recompute-and-restore that would otherwise overwrite it) and a
+//! `flow.cache-integrity` [`Violation`] is recorded for the engine's
+//! end-of-run failure summary
+//! ([`ArtifactCache::take_cache_violations`]).  At most
+//! [`QUARANTINE_CAP`] quarantine files are retained per store; beyond
+//! that corrupt files are deleted outright.  A *missing* file is still a
+//! silent miss — only content that exists and fails its checks is
+//! evidence of corruption.  [`DiskCache::with_faults`] wires the
+//! fault-injection harness in: a `corrupt:cache` fault truncates
+//! matching artifacts at store time so tests drive this exact path.
 
 use std::collections::HashSet;
 use std::fs;
 use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
 
 use crate::arch::ArchVariant;
+use crate::check::{Stage, Violation};
 use crate::netlist::{Cell, CellId, CellKind, Net, Netlist};
 use crate::pack::{OperandPath, PackStats, PackedAlm, PackedLb, Packing};
 use crate::rrg::lookahead::Lookahead;
+use crate::util::error::Error;
+use crate::util::fault::FaultPlan;
 
 use super::engine::{ArtifactCache, MappedCircuit};
 
@@ -35,6 +52,12 @@ use super::engine::{ArtifactCache, MappedCircuit};
 /// old generations become unreachable (and harmless) on disk.
 pub const CACHE_VERSION: u32 = 1;
 
+/// Most `*.quarantine` files retained per store; further corrupt
+/// artifacts are deleted instead of renamed, so a persistently corrupting
+/// environment (bad disk, hostile writer) cannot grow the store
+/// unboundedly through the quarantine path.
+pub const QUARANTINE_CAP: usize = 8;
+
 /// Handle on one cache directory.
 #[derive(Clone, Debug)]
 pub struct DiskCache {
@@ -42,11 +65,24 @@ pub struct DiskCache {
     /// Byte-size cap on the store; `None` = unbounded.  When set, every
     /// store is followed by LRU-by-mtime eviction (see [`Self::with_cap_mb`]).
     cap_bytes: Option<u64>,
+    /// Injected store-time corruption ([`Self::with_faults`]); the empty
+    /// plan by default.
+    faults: FaultPlan,
+    /// Cache-integrity violations recorded by quarantines, drained by
+    /// [`ArtifactCache::take_cache_violations`] for the engine's failure
+    /// summary.  `Arc`-shared so clones of one handle report into the
+    /// same sink.
+    violations: Arc<Mutex<Vec<Violation>>>,
 }
 
 impl DiskCache {
     pub fn new(root: impl Into<PathBuf>) -> DiskCache {
-        DiskCache { root: root.into(), cap_bytes: None }
+        DiskCache {
+            root: root.into(),
+            cap_bytes: None,
+            faults: FaultPlan::default(),
+            violations: Arc::new(Mutex::new(Vec::new())),
+        }
     }
 
     /// Store with a byte-size cap (the CLI's `--cache-cap-mb N`): after
@@ -55,10 +91,18 @@ impl DiskCache {
     /// approximates LRU by write recency — cheap, filesystem-portable,
     /// and deterministic (ties break on file name).
     pub fn with_cap_mb(root: impl Into<PathBuf>, cap_mb: u64) -> DiskCache {
-        DiskCache {
-            root: root.into(),
-            cap_bytes: Some(cap_mb.saturating_mul(1024 * 1024)),
-        }
+        let mut c = DiskCache::new(root);
+        c.cap_bytes = Some(cap_mb.saturating_mul(1024 * 1024));
+        c
+    }
+
+    /// A handle whose stores inject the `corrupt:cache` faults of `plan`
+    /// (see [`crate::util::fault`]) — the fault-injection harness's way
+    /// to exercise the integrity-check → quarantine path with real files.
+    pub fn with_faults(root: impl Into<PathBuf>, faults: FaultPlan) -> DiskCache {
+        let mut c = DiskCache::new(root);
+        c.faults = faults;
+        c
     }
 
     /// The CLI default: `target/dd-cache` under the working directory.
@@ -78,20 +122,18 @@ impl DiskCache {
         self.root.join(format!("look-v{CACHE_VERSION}-{key:016x}.dd"))
     }
 
-    /// Load a mapped-circuit artifact; `None` on miss or integrity failure.
+    /// Load a mapped-circuit artifact; `None` on miss or integrity
+    /// failure.  A file that exists but fails its checks is quarantined.
     pub fn load_mapped(&self, key: u64) -> Option<MappedCircuit> {
-        let text = fs::read_to_string(self.mapped_path(key)).ok()?;
-        let mut lines = text.lines();
-        if lines.next()? != "ddmap1" {
-            return None;
+        let path = self.mapped_path(key);
+        let text = fs::read_to_string(&path).ok()?; // absent = silent miss
+        match mapped_from_text(&text) {
+            Some(m) => Some(m),
+            None => {
+                self.quarantine(&path, "mapped artifact");
+                None
+            }
         }
-        let dedup_hits: usize = field(lines.next()?, "dedup")?.parse().ok()?;
-        let fingerprint: u64 = field(lines.next()?, "fp")?.parse().ok()?;
-        let nl = netlist_from_lines(&mut lines)?;
-        if !nl.check().is_empty() || ArtifactCache::netlist_fingerprint(&nl) != fingerprint {
-            return None;
-        }
-        Some(MappedCircuit { nl, dedup_hits, fingerprint })
     }
 
     /// Store a mapped-circuit artifact (best-effort).
@@ -101,19 +143,30 @@ impl DiskCache {
             "ddmap1\ndedup {}\nfp {}\n{}",
             m.dedup_hits, m.fingerprint, body
         );
-        write_atomic(&self.mapped_path(key), &text);
+        write_atomic(&self.mapped_path(key), &self.maybe_corrupt("map", "ddmap1", text));
         self.evict_to_cap();
     }
 
-    /// Load a packing artifact; `None` on miss or malformed content.
+    /// Load a packing artifact; `None` on miss or malformed content
+    /// (the latter quarantined).
     pub fn load_packing(&self, key: u64) -> Option<Packing> {
-        let text = fs::read_to_string(self.packing_path(key)).ok()?;
-        packing_from_text(&text)
+        let path = self.packing_path(key);
+        let text = fs::read_to_string(&path).ok()?;
+        match packing_from_text(&text) {
+            Some(p) => Some(p),
+            None => {
+                self.quarantine(&path, "packing artifact");
+                None
+            }
+        }
     }
 
     /// Store a packing artifact (best-effort).
     pub fn store_packing(&self, key: u64, p: &Packing) {
-        write_atomic(&self.packing_path(key), &packing_text(p));
+        write_atomic(
+            &self.packing_path(key),
+            &self.maybe_corrupt("pack", "ddpack1", packing_text(p)),
+        );
         self.evict_to_cap();
     }
 
@@ -129,20 +182,24 @@ impl DiskCache {
         height: usize,
         tracks: usize,
     ) -> Option<Lookahead> {
-        let text = fs::read_to_string(self.lookahead_path(key)).ok()?;
-        let mut lines = text.lines();
-        if lines.next()? != "ddlook1" {
+        let path = self.lookahead_path(key);
+        let text = fs::read_to_string(&path).ok()?;
+        let Some((dims, dist)) = lookahead_from_text(&text) else {
+            self.quarantine(&path, "lookahead artifact");
             return None;
-        }
-        let dims: Vec<usize> = nums(field(lines.next()?, "dims")?)?;
+        };
         if dims != [width, height, tracks] {
+            // A well-formed artifact for a different grid is a caller
+            // expectation mismatch, not corruption: miss, keep the file.
             return None;
         }
-        let dist: Vec<u16> = nums(field(lines.next()?, "dist")?)?;
-        if lines.next()? != "end" {
-            return None;
+        match Lookahead::from_raw(width, height, tracks, dist) {
+            Some(la) => Some(la),
+            None => {
+                self.quarantine(&path, "lookahead artifact");
+                None
+            }
         }
-        Lookahead::from_raw(width, height, tracks, dist)
     }
 
     /// Store a router-lookahead artifact (best-effort).
@@ -159,8 +216,65 @@ impl DiskCache {
             la.height(),
             la.tracks()
         );
-        write_atomic(&self.lookahead_path(key), &text);
+        write_atomic(&self.lookahead_path(key), &self.maybe_corrupt("look", "ddlook1", text));
         self.evict_to_cap();
+    }
+
+    /// Drain the integrity violations recorded by quarantines since the
+    /// last call (or construction).
+    pub fn take_violations(&self) -> Vec<Violation> {
+        std::mem::take(&mut *self.violations.lock().unwrap())
+    }
+
+    /// Apply an injected `corrupt:cache` fault to an outgoing artifact:
+    /// keep the magic line (so the load reaches the *parse* stage rather
+    /// than looking like a foreign file) and replace the body.  Identity
+    /// when no fault matches.
+    fn maybe_corrupt(&self, kind: &str, magic: &str, text: String) -> String {
+        if self.faults.corrupts(kind) {
+            format!("{magic}\ncorrupted-by-fault-injection\n")
+        } else {
+            text
+        }
+    }
+
+    /// A file exists but failed its integrity checks: move it aside as
+    /// `*.quarantine` (deleting instead once [`QUARANTINE_CAP`] is
+    /// reached) and record a `flow.cache-integrity` violation.  The
+    /// caller then reports a miss, so the artifact is recomputed and
+    /// re-stored — results are unaffected; only the evidence and the
+    /// report change.
+    fn quarantine(&self, path: &Path, what: &str) {
+        let name = path
+            .file_name()
+            .and_then(|n| n.to_str())
+            .unwrap_or("<artifact>")
+            .to_string();
+        let kept = fs::read_dir(&self.root)
+            .map(|rd| {
+                rd.flatten()
+                    .filter(|e| {
+                        e.path().extension().and_then(|x| x.to_str()) == Some("quarantine")
+                    })
+                    .count()
+            })
+            .unwrap_or(0);
+        let disposition = if kept < QUARANTINE_CAP
+            && fs::rename(path, path.with_extension("quarantine")).is_ok()
+        {
+            "quarantined for inspection"
+        } else {
+            let _ = fs::remove_file(path);
+            "removed (quarantine cap reached)"
+        };
+        self.violations.lock().unwrap().push(Violation::from_producer_error(
+            Stage::Recovery,
+            "flow.cache-integrity",
+            &name,
+            &Error::msg(format!(
+                "{what} failed its integrity check; {disposition}; recomputing"
+            )),
+        ));
     }
 
     /// Enforce the byte cap: list this store's `.dd` artifacts and remove
@@ -224,6 +338,42 @@ fn field<'a>(line: &'a str, prefix: &str) -> Option<&'a str> {
 /// Parse a whitespace-separated number list.
 fn nums<T: std::str::FromStr>(s: &str) -> Option<Vec<T>> {
     s.split_whitespace().map(|t| t.parse().ok()).collect()
+}
+
+/// Parse a mapped-circuit artifact; `None` on any malformation or
+/// integrity failure (bad magic, truncation, fingerprint mismatch,
+/// `Netlist::check` errors).
+fn mapped_from_text(text: &str) -> Option<MappedCircuit> {
+    let mut lines = text.lines();
+    if lines.next()? != "ddmap1" {
+        return None;
+    }
+    let dedup_hits: usize = field(lines.next()?, "dedup")?.parse().ok()?;
+    let fingerprint: u64 = field(lines.next()?, "fp")?.parse().ok()?;
+    let nl = netlist_from_lines(&mut lines)?;
+    if !nl.check().is_empty() || ArtifactCache::netlist_fingerprint(&nl) != fingerprint {
+        return None;
+    }
+    Some(MappedCircuit { nl, dedup_hits, fingerprint })
+}
+
+/// Parse a lookahead artifact into its stored (dims, dist); `None` on
+/// malformation.  The caller checks dims against its expected grid —
+/// that mismatch is a miss, not corruption.
+fn lookahead_from_text(text: &str) -> Option<([usize; 3], Vec<u16>)> {
+    let mut lines = text.lines();
+    if lines.next()? != "ddlook1" {
+        return None;
+    }
+    let dims: Vec<usize> = nums(field(lines.next()?, "dims")?)?;
+    if dims.len() != 3 {
+        return None;
+    }
+    let dist: Vec<u16> = nums(field(lines.next()?, "dist")?)?;
+    if lines.next()? != "end" {
+        return None;
+    }
+    Some(([dims[0], dims[1], dims[2]], dist))
 }
 
 // ---------------------------------------------------------------------------
@@ -686,10 +836,8 @@ mod tests {
 
         // Cap at ~2.5 artifacts: storing 4 must evict down to the cap.
         let cap_bytes = one * 5 / 2;
-        let capped = DiskCache {
-            root: root.clone(),
-            cap_bytes: Some(cap_bytes),
-        };
+        let mut capped = DiskCache::new(&root);
+        capped.cap_bytes = Some(cap_bytes);
         for key in 1..=4u64 {
             capped.store_mapped(key, &m);
         }
@@ -711,5 +859,56 @@ mod tests {
         // `with_cap_mb` wires megabytes through.
         let c = DiskCache::with_cap_mb(&root, 3);
         assert_eq!(c.cap_bytes, Some(3 * 1024 * 1024));
+    }
+
+    #[test]
+    fn corrupt_artifact_is_quarantined_and_reported() {
+        let root = tmp_root("quar");
+        let _ = std::fs::remove_dir_all(&root);
+        let cache = DiskCache::new(&root);
+        let nl = mapped_mul();
+        let fingerprint = ArtifactCache::netlist_fingerprint(&nl);
+        let m = MappedCircuit { nl, dedup_hits: 0, fingerprint };
+        cache.store_mapped(3, &m);
+        let path = root.join(format!("map-v{CACHE_VERSION}-{:016x}.dd", 3u64));
+        std::fs::write(&path, "ddmap1\ngarbage\n").unwrap();
+        assert!(cache.load_mapped(3).is_none());
+        assert!(!path.exists(), "corrupt file left in place");
+        assert!(path.with_extension("quarantine").exists(), "evidence not retained");
+        let vs = cache.take_violations();
+        assert_eq!(vs.len(), 1, "{vs:?}");
+        assert_eq!(vs[0].code, "flow.cache-integrity");
+        assert!(cache.take_violations().is_empty(), "drain is one-shot");
+        // After the quarantine the slot is a clean miss; a fresh store
+        // restores normal service.
+        assert!(cache.load_mapped(3).is_none());
+        cache.store_mapped(3, &m);
+        assert!(cache.load_mapped(3).is_some());
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn injected_store_corruption_drives_the_quarantine_path() {
+        use crate::util::fault::FaultPlan;
+        let root = tmp_root("inject");
+        let _ = std::fs::remove_dir_all(&root);
+        let faulty =
+            DiskCache::with_faults(&root, FaultPlan::parse("corrupt:cache:map").unwrap());
+        let nl = mapped_mul();
+        let fingerprint = ArtifactCache::netlist_fingerprint(&nl);
+        let m = MappedCircuit { nl, dedup_hits: 0, fingerprint };
+        faulty.store_mapped(5, &m);
+        // The fault corrupted the stored body (magic intact): the load
+        // must take the real integrity-check -> quarantine path.
+        assert!(faulty.load_mapped(5).is_none());
+        let vs = faulty.take_violations();
+        assert_eq!(vs.len(), 1, "{vs:?}");
+        assert_eq!(vs[0].code, "flow.cache-integrity");
+        // A map-kind fault leaves packing stores untouched.
+        let arch = Arch::paper(ArchVariant::Baseline);
+        let p = pack(&m.nl, &arch, &PackOpts::default());
+        faulty.store_packing(6, &p);
+        assert!(faulty.load_packing(6).is_some());
+        let _ = std::fs::remove_dir_all(&root);
     }
 }

@@ -30,16 +30,29 @@
 //!   racing insert "wins" is unobservable,
 //! * seed reduction ([`assemble_result`]) runs on the calling thread in
 //!   fixed (variant, bench, seed) order.
+//!
+//! ## Failure isolation
+//!
+//! Every phase's jobs run under `catch_unwind`: a panicking job (organic
+//! or injected via [`FlowOpts::faults`]) becomes a structured
+//! [`FlowError`] — an upstream (map/pack/index) failure fails every
+//! dependent grid cell as data, a seed-job panic fails only its seed —
+//! and the rest of the plan completes untouched.  The run ends with a
+//! fixed-order [`FailureSummary`] (deterministic text for any worker
+//! count) and bumps the process-wide [`process_failures`] counter the
+//! CLI turns into a nonzero exit code.
 
 use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::arch::device::Device;
 use crate::arch::{Arch, ArchVariant};
 use crate::bench_suites::Benchmark;
+use crate::check::{self, CheckMode, Violation};
 use crate::coordinator::parallel_indexed;
 use crate::netlist::{CellKind, Netlist, NetlistIndex, PackIndex};
 use crate::pack::{pack_with, PackOpts, Packing, Unrelated};
@@ -48,7 +61,8 @@ use crate::techmap::{map_circuit_with, MapOpts};
 
 use super::diskcache::DiskCache;
 use super::{
-    arch_for_run, assemble_result, place_route_seed, FlowOpts, FlowResult, SeedCtx, SeedMetrics,
+    arch_for_run, assemble_result, place_route_seed, FlowError, FlowOpts, FlowResult,
+    RecoveryAction, SeedCtx, SeedMetrics,
 };
 
 /// A mapped circuit artifact: the netlist plus generation metadata.
@@ -359,6 +373,12 @@ impl ArtifactCache {
         // The lookahead changes routing results (sink order + heuristic),
         // so on/off records must not alias.
         opts.lookahead.hash(&mut h);
+        // Recovery knobs change what a seed result *is*: escalated,
+        // pops-budgeted, or fault-injected records must never alias
+        // clean ones.
+        opts.escalate.hash(&mut h);
+        opts.route_pops_budget.hash(&mut h);
+        opts.faults.hash(&mut h);
         // route_jobs is deliberately NOT keyed: results are bit-identical
         // for any worker count, so records must match across job counts.
         opts.channel_width.hash(&mut h);
@@ -421,6 +441,90 @@ impl ArtifactCache {
     pub fn cpd_priors_recorded(&self) -> usize {
         self.cpd_priors.lock().unwrap().len()
     }
+
+    /// Drain the cache-integrity violations the disk layer recorded
+    /// (corrupt files it quarantined before rebuilding).  Empty for
+    /// memory-only caches.
+    pub fn take_cache_violations(&self) -> Vec<Violation> {
+        match &self.disk {
+            Some(d) => d.take_violations(),
+            None => Vec::new(),
+        }
+    }
+}
+
+/// Process-wide failed-seed count across every [`Engine::run`] — the
+/// CLI's exit-code source (it cannot thread a return value through the
+/// report harness's deeply shared call paths).
+static PROCESS_FAILURES: AtomicUsize = AtomicUsize::new(0);
+
+/// Total failed seeds recorded by every engine run in this process.
+pub fn process_failures() -> usize {
+    PROCESS_FAILURES.load(Ordering::Relaxed)
+}
+
+/// Run one engine job under panic isolation: a panic becomes an `Err`
+/// carrying the payload text instead of poisoning the scoped work queue
+/// (a panicking worker would otherwise abort the whole plan).
+fn catch_job<T>(f: impl FnOnce() -> T) -> Result<T, String> {
+    catch_unwind(AssertUnwindSafe(f)).map_err(|p| super::panic_message(p.as_ref()))
+}
+
+/// Fixed-order end-of-run failure report: per-cell structured errors in
+/// (variant, bench, seed) order, escalation notes, and the disk cache's
+/// quarantine log.  Built after the grid reduction, so its text is
+/// bit-identical for any `--jobs`/`--route-jobs`.
+#[derive(Debug, Default)]
+pub struct FailureSummary {
+    pub failed_seeds: usize,
+    pub escalations: usize,
+    pub quarantined: usize,
+    pub lines: Vec<String>,
+}
+
+impl FailureSummary {
+    pub fn collect(grid: &[Vec<FlowResult>], cache_violations: &[Violation]) -> FailureSummary {
+        let mut s = FailureSummary::default();
+        for row in grid {
+            for r in row {
+                s.failed_seeds += r.failed_seeds;
+                s.escalations += r.escalations;
+                for e in &r.errors {
+                    s.lines.push(format!("[{:?}/{}] {e}", r.variant, r.name));
+                }
+                if r.escalations > 0 {
+                    s.lines.push(format!(
+                        "[{:?}/{}] {} seed(s) rescued by the escalation ladder (degraded)",
+                        r.variant, r.name, r.escalations
+                    ));
+                }
+            }
+        }
+        s.quarantined = cache_violations.len();
+        for v in cache_violations {
+            s.lines.push(format!("[cache] {v}"));
+        }
+        s
+    }
+
+    /// Nothing to report: no failures, no escalations, no quarantines.
+    pub fn is_clean(&self) -> bool {
+        self.failed_seeds == 0 && self.escalations == 0 && self.quarantined == 0
+    }
+}
+
+impl std::fmt::Display for FailureSummary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "flow failure summary: {} failed seed(s), {} escalation(s), {} quarantined cache file(s)",
+            self.failed_seeds, self.escalations, self.quarantined
+        )?;
+        for l in &self.lines {
+            writeln!(f, "  {l}")?;
+        }
+        Ok(())
+    }
 }
 
 /// The experiment grid: every benchmark on every variant, each averaged
@@ -465,35 +569,77 @@ impl Engine {
         // When the grid has fewer circuits than workers, the leftover
         // parallelism moves *inside* each mapping job (levelized cut
         // enumeration waves); output is bit-identical either way, so the
-        // split is a pure scheduling decision.
+        // split is a pure scheduling decision.  Each job runs isolated:
+        // a panic fails every grid cell of that circuit, not the plan.
         let map_inner = (self.jobs / nb.max(1)).max(1);
-        let mapped: Vec<Arc<MappedCircuit>> =
-            parallel_indexed(nb, self.jobs, |bi| cache.mapped_with(&benches[bi], map_inner));
+        let mapped: Vec<Result<Arc<MappedCircuit>, FlowError>> =
+            parallel_indexed(nb, self.jobs, |bi| {
+                catch_job(|| {
+                    opts.faults.fire_panic("map", &benches[bi].name, None);
+                    cache.mapped_with(&benches[bi], map_inner)
+                })
+                .map_err(|cause| {
+                    FlowError::stage_failure("map", None, cause, RecoveryAction::SkipCell)
+                })
+            });
 
         // Phase 2: pack every (circuit, variant) cell (same inner/outer
-        // parallelism split as phase 1).
+        // parallelism split as phase 1); an upstream map failure
+        // propagates without running the job.
         let archs: Vec<Arch> = variants
             .iter()
             .map(|&v| arch_for_run(&Arch::coffe(v), opts))
             .collect();
         let pack_inner = (self.jobs / (nb * nv).max(1)).max(1);
-        let packs: Vec<Arc<Packing>> = parallel_indexed(nb * nv, self.jobs, |i| {
-            let (vi, bi) = (i / nb, i % nb);
-            cache.packed_with(
-                &mapped[bi],
-                &archs[vi],
-                &PackOpts { unrelated: opts.unrelated },
-                pack_inner,
-            )
-        });
+        let packs: Vec<Result<Arc<Packing>, FlowError>> =
+            parallel_indexed(nb * nv, self.jobs, |i| {
+                let (vi, bi) = (i / nb, i % nb);
+                let m = mapped[bi].as_ref().map_err(|e| e.clone())?;
+                catch_job(|| {
+                    opts.faults.fire_panic("pack", &benches[bi].name, None);
+                    cache.packed_with(
+                        m,
+                        &archs[vi],
+                        &PackOpts { unrelated: opts.unrelated },
+                        pack_inner,
+                    )
+                })
+                .map_err(|cause| {
+                    FlowError::stage_failure("pack", None, cause, RecoveryAction::SkipCell)
+                })
+            });
 
         // Phase 3a: dense index arenas per (circuit, variant) cell —
         // cached like packings, shared read-only by every seed job.
         let pack_opts = PackOpts { unrelated: opts.unrelated };
-        let arenas: Vec<Arc<IndexArenas>> = parallel_indexed(nb * nv, self.jobs, |i| {
-            let (vi, bi) = (i / nb, i % nb);
-            cache.indexed(&mapped[bi], &packs[vi * nb + bi], &archs[vi], &pack_opts)
-        });
+        let arenas: Vec<Result<Arc<IndexArenas>, FlowError>> =
+            parallel_indexed(nb * nv, self.jobs, |i| {
+                let (vi, bi) = (i / nb, i % nb);
+                let m = mapped[bi].as_ref().map_err(|e| e.clone())?;
+                let p = packs[i].as_ref().map_err(|e| e.clone())?;
+                catch_job(|| cache.indexed(m, p, &archs[vi], &pack_opts)).map_err(|cause| {
+                    FlowError::stage_failure("index", None, cause, RecoveryAction::SkipCell)
+                })
+            });
+
+        // Upstream failure of a grid cell, attributed to the earliest
+        // failing stage (the later ones only propagated it).
+        let upstream_err = |bi: usize, ci: usize| -> FlowError {
+            mapped[bi]
+                .as_ref()
+                .err()
+                .or(packs[ci].as_ref().err())
+                .or(arenas[ci].as_ref().err())
+                .cloned()
+                .unwrap_or_else(|| {
+                    FlowError::stage_failure(
+                        "index",
+                        None,
+                        "upstream artifact unavailable".to_string(),
+                        RecoveryAction::SkipCell,
+                    )
+                })
+        };
 
         // Phase 3b: place/route.  Timing-oblivious plans fan out one job
         // per (circuit, variant, seed).  With the closed timing loop on,
@@ -506,18 +652,29 @@ impl Engine {
         let seed_runs: Vec<SeedMetrics> = if opts.route && opts.route_timing_weights {
             let cells: Vec<Vec<SeedMetrics>> = parallel_indexed(nb * nv, self.jobs, |i| {
                 let (vi, bi) = (i / nb, i % nb);
-                let ar = &arenas[i];
+                let (m, p, ar) = match (&mapped[bi], &packs[i], &arenas[i]) {
+                    (Ok(m), Ok(p), Ok(ar)) => (m, p, ar),
+                    _ => {
+                        let e = upstream_err(bi, i);
+                        return opts
+                            .seeds
+                            .iter()
+                            .map(|&s| SeedMetrics::failed(s, None, e.clone()))
+                            .collect();
+                    }
+                };
                 super::chain_seeds(
-                    &mapped[bi].nl,
-                    &packs[vi * nb + bi],
+                    &m.nl,
+                    p,
                     &archs[vi],
                     opts,
+                    &benches[bi].name,
                     &ar.idx,
                     &ar.pidx,
                     Some(cache),
                     |si, cpd_ps| {
                         let key = ArtifactCache::cpd_prior_key(
-                            mapped[bi].fingerprint,
+                            m.fingerprint,
                             &archs[vi],
                             opts,
                             &opts.seeds[..=si],
@@ -535,39 +692,72 @@ impl Engine {
                 let si = i % ns;
                 let bi = (i / ns) % nb;
                 let vi = i / (ns * nb);
-                let ar = &arenas[vi * nb + bi];
-                place_route_seed(
-                    &mapped[bi].nl,
-                    &packs[vi * nb + bi],
-                    &archs[vi],
-                    opts,
-                    opts.seeds[si],
-                    &SeedCtx {
-                        idx: &ar.idx,
-                        pidx: &ar.pidx,
-                        cpd_prior_ps: None,
-                        la_cache: Some(cache),
-                    },
-                )
+                let ci = vi * nb + bi;
+                match (&mapped[bi], &packs[ci], &arenas[ci]) {
+                    (Ok(m), Ok(p), Ok(ar)) => place_route_seed(
+                        &m.nl,
+                        p,
+                        &archs[vi],
+                        opts,
+                        opts.seeds[si],
+                        &SeedCtx {
+                            idx: &ar.idx,
+                            pidx: &ar.pidx,
+                            cpd_prior_ps: None,
+                            la_cache: Some(cache),
+                            label: &benches[bi].name,
+                        },
+                    ),
+                    _ => SeedMetrics::failed(opts.seeds[si], None, upstream_err(bi, ci)),
+                }
             })
         };
 
         // Phase 4: reduce per cell in fixed (variant, bench, seed) order.
+        let chained = opts.route && opts.route_timing_weights;
         let mut out: Vec<Vec<FlowResult>> = Vec::with_capacity(nv);
         for vi in 0..nv {
             let mut row = Vec::with_capacity(nb);
             for bi in 0..nb {
-                let base = (vi * nb + bi) * ns;
-                row.push(assemble_result(
-                    &benches[bi].name,
-                    &archs[vi],
-                    &packs[vi * nb + bi],
-                    &seed_runs[base..base + ns],
-                    mapped[bi].dedup_hits,
-                ));
+                let ci = vi * nb + bi;
+                let base = ci * ns;
+                let cell_seeds = &seed_runs[base..base + ns];
+                let r = match &packs[ci] {
+                    Ok(p) => {
+                        let dedup = mapped[bi].as_ref().map(|m| m.dedup_hits).unwrap_or(0);
+                        assemble_result(&benches[bi].name, &archs[vi], p, cell_seeds, dedup)
+                    }
+                    // No packing — the whole cell failed upstream; carry
+                    // the failure as data so the grid keeps its shape.
+                    Err(_) => FlowResult::failed(
+                        &benches[bi].name,
+                        variants[vi],
+                        upstream_err(bi, ci),
+                        ns,
+                    ),
+                };
+                if opts.check != CheckMode::Off {
+                    check::enforce(
+                        opts.check,
+                        "recovery",
+                        &check::audit_recovery(&r, cell_seeds, chained),
+                    );
+                }
+                row.push(r);
             }
             out.push(row);
         }
+
+        // End-of-run failure summary, in the same fixed (variant, bench)
+        // order as the reduction — deterministic text for any worker
+        // count.  Failed seeds feed the process-wide exit-code counter;
+        // escalations and quarantines are reported but not fatal.
+        let cache_violations = cache.take_cache_violations();
+        let summary = FailureSummary::collect(&out, &cache_violations);
+        if !summary.is_clean() {
+            eprintln!("{summary}");
+        }
+        PROCESS_FAILURES.fetch_add(summary.failed_seeds, Ordering::Relaxed);
         out
     }
 }
@@ -592,6 +782,7 @@ pub fn run_benchmark_cached(
         &packing,
         &arch,
         opts,
+        &b.name,
         &arenas.idx,
         &arenas.pidx,
         Some(cache),

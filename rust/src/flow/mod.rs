@@ -23,6 +23,24 @@
 //! delivers rather than the pre-route estimate.  The chain runs in fixed
 //! seed order in both the serial path and the engine, so results stay
 //! bit-identical between them.
+//!
+//! ## Failure semantics
+//!
+//! Stage failures are *data*, not process death.  Every seed job runs
+//! under `catch_unwind` ([`place_route_seed`]), so a panic — organic or
+//! injected via `--inject-faults` ([`crate::util::fault::FaultPlan`]) —
+//! becomes a [`SeedMetrics`] carrying a structured [`FlowError`]
+//! (stage, seed, cause, recovery action) while the rest of the plan
+//! completes; a misfit device is a failed-seed entry for the same
+//! reason.  Unroutable seeds can opt into a **deterministic escalation
+//! ladder** ([`FlowOpts::escalate`], [`ESCALATION_LADDER`]): fixed
+//! retry rungs (+25% then +50% channel width, then lookahead-off) with
+//! no wall-clock anywhere — degradation triggers only on deterministic
+//! odometers (`astar_pops` budgets, iteration caps) — so a faulted or
+//! escalated run is exactly as bit-reproducible across `--jobs` /
+//! `--route-jobs` as a clean one.  Failed seeds and escalated
+//! (degraded) seeds are excluded from the CPD-prior chain; the
+//! `check::audit_recovery` auditor re-verifies all of this per cell.
 
 pub mod diskcache;
 pub mod engine;
@@ -35,13 +53,16 @@ use crate::netlist::{Netlist, NetlistIndex, PackIndex};
 use crate::pack::{pack, PackOpts, Packing, Unrelated};
 use crate::place::{place_with, PlaceOpts};
 use crate::route::{
-    route, route_timing, routed_net_delay, term_sink_crit, LookaheadMode, RouteOpts, TimingCtx,
+    route, route_timing, routed_net_delay, term_sink_crit, LookaheadMode, RouteOpts, Routing,
+    TimingCtx,
 };
 use crate::rrg::{lookahead::Lookahead, RrGraph};
 use crate::synth::Circuit;
 use crate::techmap::{map_circuit, MapOpts};
-use crate::timing::sta_routed;
+use crate::timing::{sta_routed, TimingReport};
+use crate::util::fault::FaultPlan;
 use crate::util::stats::mean;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 
 /// Flow options.
 #[derive(Clone, Debug)]
@@ -89,6 +110,24 @@ pub struct FlowOpts {
     /// reproduces the pre-lookahead router bit-for-bit.  Part of the
     /// engine's CPD-prior cache key — the two modes route differently.
     pub lookahead: bool,
+    /// Deterministic retry/escalation ladder for unroutable seeds
+    /// (`--escalate`): on `success: false`, re-route through the fixed
+    /// [`ESCALATION_LADDER`] rungs (+25% / +50% channel width, then
+    /// lookahead-off).  Off by default — the Table IV stress sweep
+    /// *measures* non-convergence and must not be rescued.  Part of the
+    /// engine's CPD-prior cache key.
+    pub escalate: bool,
+    /// Deterministic router give-up odometer (`--route-pops-budget N`):
+    /// a PathFinder run stops (unconverged) once its fixed-order A*
+    /// heap-pop count reaches `N`.  `0` (default) = unlimited.  A
+    /// *logical* budget, never a wall clock, so it is bit-identical for
+    /// any worker count.  Part of the engine's CPD-prior cache key.
+    pub route_pops_budget: usize,
+    /// Deterministic fault-injection plan (`--inject-faults <spec>`;
+    /// empty = no faults).  See [`crate::util::fault`].  Part of the
+    /// engine's CPD-prior cache key so faulted results never alias
+    /// clean ones.
+    pub faults: FaultPlan,
 }
 
 impl Default for FlowOpts {
@@ -109,8 +148,107 @@ impl Default for FlowOpts {
             channel_width: None,
             check: CheckMode::Off,
             lookahead: true,
+            escalate: false,
+            route_pops_budget: 0,
+            faults: FaultPlan::default(),
         }
     }
+}
+
+/// What the flow did (or will do) about a failure — the recovery-action
+/// field of [`FlowError`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RecoveryAction {
+    /// The seed was skipped; the cell's surviving seeds still average.
+    SkipSeed,
+    /// A panic was caught and isolated to this job; the plan continued.
+    IsolateJob,
+    /// The escalation ladder ran out of rungs; the seed stays unrouted.
+    LadderExhausted,
+    /// An upstream (per-benchmark) artifact failed, so every seed of the
+    /// cell was skipped.
+    SkipCell,
+}
+
+impl RecoveryAction {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RecoveryAction::SkipSeed => "seed skipped",
+            RecoveryAction::IsolateJob => "job isolated",
+            RecoveryAction::LadderExhausted => "escalation exhausted",
+            RecoveryAction::SkipCell => "cell skipped",
+        }
+    }
+}
+
+/// Structured flow failure: which stage failed, for which seed (when
+/// seed-scoped), why, and what the flow did about it.  Replaces the
+/// old placement `panic!` — failures thread through
+/// [`SeedMetrics::error`] / [`FlowResult::errors`] as data and surface
+/// in the engine's fixed-order failure summary.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FlowError {
+    /// Failing stage (`"map"`, `"pack"`, `"place"`, `"route"`, `"job"`
+    /// for an isolated panic).
+    pub stage: &'static str,
+    /// Seed of the failing job; `None` for per-benchmark stages.
+    pub seed: Option<u64>,
+    pub cause: String,
+    pub action: RecoveryAction,
+}
+
+impl FlowError {
+    pub fn stage_failure(
+        stage: &'static str,
+        seed: Option<u64>,
+        cause: String,
+        action: RecoveryAction,
+    ) -> FlowError {
+        FlowError { stage, seed, cause, action }
+    }
+
+    /// A panic caught by the engine's job isolation.
+    pub fn job_panic(seed: Option<u64>, cause: String) -> FlowError {
+        FlowError { stage: "job", seed, cause, action: RecoveryAction::IsolateJob }
+    }
+}
+
+impl std::fmt::Display for FlowError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.seed {
+            Some(s) => write!(f, "{} failed (seed {s}): {} [{}]", self.stage, self.cause,
+                              self.action.name()),
+            None => write!(f, "{} failed: {} [{}]", self.stage, self.cause, self.action.name()),
+        }
+    }
+}
+
+/// Best-effort human-readable panic payload (every panic in this crate
+/// carries a `&str` or `String`).
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "panic with non-string payload".to_string()
+    }
+}
+
+/// The fixed escalation ladder for unroutable seeds: per rung, the
+/// channel-width percentage of the base width and whether the A*
+/// lookahead stays on.  +25% width, +50% width, then +50% with the
+/// lookahead off (the most conservative router).  A fixed sequence —
+/// never adapted from timing or load — so escalated runs keep the
+/// bit-identity contract.
+pub const ESCALATION_LADDER: &[(u32, bool)] = &[(125, true), (150, true), (150, false)];
+
+/// Channel width of an escalation rung: `base` scaled to `pct` percent
+/// (rounded up), and always at least one track wider than the base so
+/// every rung makes progress even at tiny widths.
+pub fn escalated_width(base: u16, pct: u32) -> u16 {
+    let scaled = (base as u64 * pct as u64 + 99) / 100;
+    scaled.max(base as u64 + 1).min(u16::MAX as u64) as u16
 }
 
 /// Metrics of one flow run (averaged over seeds).
@@ -144,6 +282,46 @@ pub struct FlowResult {
     /// [`FlowOpts::route_timing_weights`] is on.
     pub cpd_trace_ns: Vec<f64>,
     pub dedup_hits: usize,
+    /// Seeds that produced no usable result (carry a [`FlowError`]).
+    pub failed_seeds: usize,
+    /// Seeds rescued by the escalation ladder (degraded: routed at an
+    /// escalated channel width and excluded from CPD-prior chaining).
+    pub escalations: usize,
+    /// Structured failures, in seed order (one entry per failed seed).
+    pub errors: Vec<FlowError>,
+}
+
+impl FlowResult {
+    /// Result of a cell whose upstream (per-benchmark) stage failed:
+    /// every seed is a failure with the same cause, all metrics zero.
+    pub fn failed(
+        name: &str,
+        variant: ArchVariant,
+        error: FlowError,
+        n_seeds: usize,
+    ) -> FlowResult {
+        FlowResult {
+            name: name.to_string(),
+            variant,
+            luts: 0,
+            adder_bits: 0,
+            alms: 0,
+            lbs: 0,
+            concurrent_luts: 0,
+            alm_area_mwta: 0.0,
+            cpd_ns: 0.0,
+            adp: 0.0,
+            fmax_mhz: 0.0,
+            routed_ok: false,
+            route_iters: 0.0,
+            channel_util: Vec::new(),
+            cpd_trace_ns: Vec::new(),
+            dedup_hits: 0,
+            failed_seeds: n_seeds,
+            escalations: 0,
+            errors: vec![error; n_seeds],
+        }
+    }
 }
 
 /// Outcome of the place/route stage for one seed — the unit of work the
@@ -162,6 +340,37 @@ pub struct SeedMetrics {
     /// Closed-loop CPD trajectory in ns (refresh points + final; empty
     /// for timing-oblivious runs).
     pub cpd_trace_ns: Vec<f64>,
+    /// Escalation-ladder rung that produced this result: `0` = the base
+    /// attempt, `k > 0` = [`ESCALATION_LADDER`]`[k - 1]`.  A non-zero
+    /// value marks the seed *degraded* — it routed, but on an escalated
+    /// channel width — which excludes it from CPD-prior chaining.
+    pub escalation: u8,
+    /// The CPD prior (ps) this seed actually consumed — recorded on
+    /// every path (including failures) so `check::audit_recovery` can
+    /// re-verify the chain bit-exactly.
+    pub used_prior_ps: Option<f64>,
+    /// Structured failure, when the seed produced no usable result.
+    /// `None` with `routed_ok: false` is *measured* non-convergence
+    /// (no ladder ran) — a result, not an error.
+    pub error: Option<FlowError>,
+}
+
+impl SeedMetrics {
+    /// A seed that produced no usable result: zeroed metrics plus the
+    /// structured failure.
+    pub fn failed(seed: u64, used_prior_ps: Option<f64>, error: FlowError) -> SeedMetrics {
+        SeedMetrics {
+            seed,
+            cpd_ns: 0.0,
+            routed_ok: false,
+            route_iters: None,
+            channel_util: Vec::new(),
+            cpd_trace_ns: Vec::new(),
+            escalation: 0,
+            used_prior_ps,
+            error: Some(error),
+        }
+    }
 }
 
 /// Apply per-run architecture overrides (channel width).  Shared by the
@@ -191,22 +400,49 @@ pub struct SeedCtx<'a> {
     /// `None` falls back to the process-global memo — results are
     /// identical either way, the cache only adds the on-disk layer.
     pub la_cache: Option<&'a engine::ArtifactCache>,
+    /// Benchmark name of the cell this seed belongs to — the label
+    /// fault-injection sites match against (`""` matches only wildcard
+    /// faults).
+    pub label: &'a str,
 }
 
 impl<'a> SeedCtx<'a> {
-    /// Context with no feedback prior and no artifact cache.
+    /// Context with no feedback prior, no artifact cache, and no label.
     pub fn new(idx: &'a NetlistIndex, pidx: &'a PackIndex) -> SeedCtx<'a> {
-        SeedCtx { idx, pidx, cpd_prior_ps: None, la_cache: None }
+        SeedCtx { idx, pidx, cpd_prior_ps: None, la_cache: None, label: "" }
     }
 }
 
 /// Place (and optionally route + STA) one seed of an already-packed
 /// design.  Deterministic in (inputs, seed, prior): the only RNG is
 /// constructed here from `seed`, so scheduling order cannot perturb
-/// results.  Panics if a caller-fixed device cannot fit the design — the
-/// placer's hardened sizing contract surfaces instead of quietly
-/// measuring a larger grid.
+/// results.  Never panics the caller: a stage failure (e.g. a
+/// caller-fixed device that cannot fit the design) comes back as a
+/// [`SeedMetrics`] carrying a [`FlowError`], and any panic that escapes
+/// a stage — including ones injected by [`FlowOpts::faults`] — is
+/// caught here and isolated to this seed as a `job` error
+/// ([`RecoveryAction::IsolateJob`]), so the rest of the plan completes.
 pub fn place_route_seed(
+    nl: &Netlist,
+    packing: &Packing,
+    arch: &Arch,
+    opts: &FlowOpts,
+    seed: u64,
+    ctx: &SeedCtx,
+) -> SeedMetrics {
+    match catch_unwind(AssertUnwindSafe(|| {
+        place_route_seed_inner(nl, packing, arch, opts, seed, ctx)
+    })) {
+        Ok(m) => m,
+        Err(payload) => SeedMetrics::failed(
+            seed,
+            ctx.cpd_prior_ps,
+            FlowError::job_panic(Some(seed), panic_message(payload.as_ref())),
+        ),
+    }
+}
+
+fn place_route_seed_inner(
     nl: &Netlist,
     packing: &Packing,
     arch: &Arch,
@@ -216,12 +452,15 @@ pub fn place_route_seed(
 ) -> SeedMetrics {
     // `--check`: audit the upstream artifacts once per seed cell (cheap
     // linear scans), then each artifact this cell produces right after
-    // its stage.  Strict mode panics inside `enforce`.
+    // its stage.  Strict mode panics inside `enforce` — which the
+    // isolation wrapper above turns into a failed-seed entry, so one
+    // strict violation no longer kills a whole sweep.
     if opts.check != CheckMode::Off {
         check::enforce(opts.check, "netlist", &check::audit_netlist(nl, ctx.idx));
         check::enforce(opts.check, "pack", &check::audit_packing(nl, packing, arch));
     }
-    let pl = place_with(
+    opts.faults.fire_panic("place", ctx.label, Some(seed));
+    let pl = match place_with(
         nl,
         packing,
         arch,
@@ -239,8 +478,24 @@ pub fn place_route_seed(
         },
         ctx.idx,
         ctx.pidx,
-    )
-    .unwrap_or_else(|e| panic!("placement failed (seed {seed}): {e}"));
+    ) {
+        Ok(pl) => pl,
+        // The placer's hardened sizing contract (a fixed device that
+        // cannot fit the design) and any other placement failure become
+        // a failed-seed entry; the run continues.
+        Err(e) => {
+            return SeedMetrics::failed(
+                seed,
+                ctx.cpd_prior_ps,
+                FlowError::stage_failure(
+                    "place",
+                    Some(seed),
+                    e.to_string(),
+                    RecoveryAction::SkipSeed,
+                ),
+            )
+        }
+    };
     if opts.check != CheckMode::Off {
         check::enforce(opts.check, "place", &check::audit_placement(packing, &pl));
     }
@@ -248,99 +503,156 @@ pub fn place_route_seed(
         let mut model = crate::place::cost::NetModel::build(nl, packing);
         model.set_weights(&[], false);
         let route_jobs = opts.route_jobs.max(1);
-        // Resolve the router lookahead once per seed, against the now
-        // known device: through the engine's artifact cache when one is
-        // plumbed (adds the disk layer), else the process-global memo.
-        // Either way the map is built at most once per (device, arch).
-        let la: Option<std::sync::Arc<Lookahead>> = if opts.lookahead {
-            Some(match ctx.la_cache {
-                Some(cache) => cache.lookahead(&pl.device, arch),
-                None => crate::rrg::lookahead::shared(&RrGraph::build(&pl.device, arch)),
-            })
-        } else {
-            None
-        };
-        if opts.check != CheckMode::Off {
-            if let Some(m) = &la {
-                let graph = RrGraph::build(&pl.device, arch);
-                check::enforce(
-                    opts.check,
-                    "lookahead",
-                    &check::audit_lookahead(&graph, m),
+        // One route attempt against `rarch` — the run arch for the base
+        // attempt, an escalated-width clone for ladder rungs.  The
+        // lookahead resolves per attempt (its map is keyed by (device,
+        // channel width), so every rung needs its own) through the
+        // engine's artifact cache when one is plumbed (adds the disk
+        // layer), else the process-global memo.
+        let attempt = |rarch: &Arch, use_la: bool| -> (Routing, TimingReport) {
+            let la: Option<std::sync::Arc<Lookahead>> = if use_la {
+                Some(match ctx.la_cache {
+                    Some(cache) => cache.lookahead(&pl.device, rarch),
+                    None => crate::rrg::lookahead::shared(&RrGraph::build(&pl.device, rarch)),
+                })
+            } else {
+                None
+            };
+            if opts.check != CheckMode::Off {
+                if let Some(m) = &la {
+                    let graph = RrGraph::build(&pl.device, rarch);
+                    check::enforce(
+                        opts.check,
+                        "lookahead",
+                        &check::audit_lookahead(&graph, m),
+                    );
+                }
+            }
+            let la_mode = match &la {
+                Some(m) => LookaheadMode::Shared(m.clone()),
+                None => LookaheadMode::Off,
+            };
+            if opts.route_timing_weights {
+                // Timing-driven: a pre-route STA over the placed distance
+                // estimates seeds per-sink criticality weights —
+                // re-normalized against the previous seed's achieved CPD
+                // when the chain carries one — and (with sta_every > 0)
+                // the router closes the loop by refreshing them from STA
+                // runs against the evolving routing.  The index arenas
+                // come prebuilt through `ctx` and are shared with every
+                // refresh.
+                let idx = ctx.idx;
+                let pidx = ctx.pidx;
+                let rpt = crate::timing::sta_with(
+                    nl,
+                    idx,
+                    pidx,
+                    packing,
+                    rarch,
+                    |net, sink, _| {
+                        crate::place::net_endpoint_delay(
+                            &model, &pl.lb_loc, &pl.io_loc, rarch, net, sink,
+                        )
+                    },
+                    route_jobs,
                 );
+                let mut sink_crit = term_sink_crit(&model, idx, &rpt.sink_crit);
+                crate::timing::rescale_crit(&mut sink_crit, rpt.cpd_ps, ctx.cpd_prior_ps);
+                let ropts = RouteOpts {
+                    jobs: route_jobs,
+                    sink_crit,
+                    lookahead: la_mode.clone(),
+                    pops_budget: opts.route_pops_budget,
+                    ..RouteOpts::default()
+                };
+                let tctx = TimingCtx {
+                    nl,
+                    idx,
+                    pidx,
+                    packing,
+                    sta_every: opts.sta_every,
+                    crit_alpha: opts.crit_alpha,
+                    sta_jobs: route_jobs,
+                };
+                let r = route_timing(&model, &pl, rarch, &ropts, &tctx);
+                // Final post-route report over the SAME prebuilt arenas
+                // (and sharded like the refreshes) — `sta_routed` would
+                // rebuild both indexes from scratch per seed.  Identical
+                // result: the index build is deterministic and STA is
+                // jobs-invariant.
+                let rpt = crate::timing::sta_with(
+                    nl,
+                    idx,
+                    pidx,
+                    packing,
+                    rarch,
+                    routed_net_delay(&r, &model, rarch),
+                    route_jobs,
+                );
+                (r, rpt)
+            } else {
+                let ropts = RouteOpts {
+                    jobs: route_jobs,
+                    lookahead: la_mode.clone(),
+                    pops_budget: opts.route_pops_budget,
+                    ..RouteOpts::default()
+                };
+                let r = route(&model, &pl, rarch, &ropts);
+                let rpt = sta_routed(nl, packing, rarch, &r, &model);
+                (r, rpt)
+            }
+        };
+
+        opts.faults.fire_panic("route", ctx.label, Some(seed));
+        let (mut r, mut rpt) = attempt(arch, opts.lookahead);
+        if opts.faults.forces_noconverge(ctx.label, seed, 0) {
+            r.success = false;
+        }
+        // Deterministic escalation ladder: on non-convergence, retry the
+        // route through the fixed rungs.  Each rung is a fresh, pure
+        // attempt against a clone of the run arch, so the sequence of
+        // results — and which rung wins — is bit-identical for any
+        // `--jobs`/`--route-jobs`.  `cur_arch` tracks the arch of the
+        // attempt that produced the final (r, rpt), for the auditors.
+        let mut cur_arch = arch.clone();
+        let mut escalation: u8 = 0;
+        let mut error: Option<FlowError> = None;
+        if !r.success && opts.escalate {
+            let base_w = arch.routing.channel_width;
+            for (rung, &(pct, la_on)) in ESCALATION_LADDER.iter().enumerate() {
+                escalation = rung as u8 + 1;
+                let mut rarch = arch.clone();
+                rarch.routing.channel_width = escalated_width(base_w, pct);
+                let (r2, rpt2) = attempt(&rarch, la_on && opts.lookahead);
+                r = r2;
+                rpt = rpt2;
+                cur_arch = rarch;
+                if opts.faults.forces_noconverge(ctx.label, seed, escalation) {
+                    r.success = false;
+                }
+                if r.success {
+                    break;
+                }
+            }
+            if !r.success {
+                error = Some(FlowError::stage_failure(
+                    "route",
+                    Some(seed),
+                    format!(
+                        "unroutable after {} escalation rungs ({} nodes overused)",
+                        ESCALATION_LADDER.len(),
+                        r.overused
+                    ),
+                    RecoveryAction::LadderExhausted,
+                ));
             }
         }
-        let la_mode = match &la {
-            Some(m) => LookaheadMode::Shared(m.clone()),
-            None => LookaheadMode::Off,
-        };
-        let (r, rpt) = if opts.route_timing_weights {
-            // Timing-driven: a pre-route STA over the placed distance
-            // estimates seeds per-sink criticality weights — re-normalized
-            // against the previous seed's achieved CPD when the chain
-            // carries one — and (with sta_every > 0) the router closes the
-            // loop by refreshing them from STA runs against the evolving
-            // routing.  The index arenas come prebuilt through `ctx` and
-            // are shared with every refresh.
-            let idx = ctx.idx;
-            let pidx = ctx.pidx;
-            let rpt = crate::timing::sta_with(
-                nl,
-                idx,
-                pidx,
-                packing,
-                arch,
-                |net, sink, _| {
-                    crate::place::net_endpoint_delay(
-                        &model, &pl.lb_loc, &pl.io_loc, arch, net, sink,
-                    )
-                },
-                route_jobs,
-            );
-            let mut sink_crit = term_sink_crit(&model, idx, &rpt.sink_crit);
-            crate::timing::rescale_crit(&mut sink_crit, rpt.cpd_ps, ctx.cpd_prior_ps);
-            let ropts = RouteOpts {
-                jobs: route_jobs,
-                sink_crit,
-                lookahead: la_mode.clone(),
-                ..RouteOpts::default()
-            };
-            let ctx = TimingCtx {
-                nl,
-                idx,
-                pidx,
-                packing,
-                sta_every: opts.sta_every,
-                crit_alpha: opts.crit_alpha,
-                sta_jobs: route_jobs,
-            };
-            let r = route_timing(&model, &pl, arch, &ropts, &ctx);
-            // Final post-route report over the SAME prebuilt arenas (and
-            // sharded like the refreshes) — `sta_routed` would rebuild
-            // both indexes from scratch per seed.  Identical result: the
-            // index build is deterministic and STA is jobs-invariant.
-            let rpt = crate::timing::sta_with(
-                nl,
-                idx,
-                pidx,
-                packing,
-                arch,
-                routed_net_delay(&r, &model, arch),
-                route_jobs,
-            );
-            (r, rpt)
-        } else {
-            let ropts = RouteOpts {
-                jobs: route_jobs,
-                lookahead: la_mode.clone(),
-                ..RouteOpts::default()
-            };
-            let r = route(&model, &pl, arch, &ropts);
-            let rpt = sta_routed(nl, packing, arch, &r, &model);
-            (r, rpt)
-        };
         if opts.check != CheckMode::Off {
-            check::enforce(opts.check, "route", &check::audit_routing(&model, &pl, arch, &r));
+            check::enforce(
+                opts.check,
+                "route",
+                &check::audit_routing(&model, &pl, &cur_arch, &r),
+            );
             check::enforce(opts.check, "timing", &check::audit_timing(nl, ctx.idx, &rpt));
         }
         let cpd_trace_ns = if opts.route_timing_weights {
@@ -357,6 +669,9 @@ pub fn place_route_seed(
             route_iters: Some(r.iterations as f64),
             channel_util: r.channel_util,
             cpd_trace_ns,
+            escalation,
+            used_prior_ps: ctx.cpd_prior_ps,
+            error,
         }
     } else {
         SeedMetrics {
@@ -366,6 +681,9 @@ pub fn place_route_seed(
             route_iters: None,
             channel_util: Vec::new(),
             cpd_trace_ns: Vec::new(),
+            escalation: 0,
+            used_prior_ps: ctx.cpd_prior_ps,
+            error: None,
         }
     }
 }
@@ -377,16 +695,19 @@ pub fn place_route_seed(
 /// runs carry no prior).  This is the single definition of the cross-seed
 /// feedback chain — the serial flow, the cached benchmark runner, and the
 /// engine's cell jobs all call it, so the bit-identity contract between
-/// them cannot drift.  `record(si, cpd_ps)` observes each *successfully
-/// routed* chained seed's achieved CPD (the engine writes these into its
-/// artifact cache as the provenance trail; pass a no-op elsewhere);
-/// failed routes neither feed the chain nor get recorded.
+/// them cannot drift.  `label` is the benchmark name fault-injection
+/// sites match against.  `record(si, cpd_ps)` observes each
+/// *successfully routed* chained seed's achieved CPD (the engine writes
+/// these into its artifact cache as the provenance trail; pass a no-op
+/// elsewhere); failed, errored, and ladder-escalated (degraded) seeds
+/// neither feed the chain nor get recorded.
 #[allow(clippy::too_many_arguments)]
 pub fn chain_seeds(
     nl: &Netlist,
     packing: &Packing,
     arch: &Arch,
     opts: &FlowOpts,
+    label: &str,
     idx: &NetlistIndex,
     pidx: &PackIndex,
     la_cache: Option<&engine::ArtifactCache>,
@@ -396,13 +717,14 @@ pub fn chain_seeds(
     let mut prior: Option<f64> = None;
     let mut out = Vec::with_capacity(opts.seeds.len());
     for (si, &seed) in opts.seeds.iter().enumerate() {
-        let ctx = SeedCtx { idx, pidx, cpd_prior_ps: prior, la_cache };
+        let ctx = SeedCtx { idx, pidx, cpd_prior_ps: prior, la_cache, label };
         let m = place_route_seed(nl, packing, arch, opts, seed, &ctx);
-        // Only a *legally routed* seed feeds the chain: a CPD measured
-        // over a failed (still-overused) routing is not an achieved
-        // result and must not poison the next seed's criticalities or
-        // the provenance record.
-        if chained && m.routed_ok {
+        // Only a *legally routed, undegraded* seed feeds the chain: a CPD
+        // measured over a failed (still-overused) routing is not an
+        // achieved result, and one measured on an escalated channel width
+        // is not comparable to the base architecture — neither may poison
+        // the next seed's criticalities or the provenance record.
+        if chained && m.routed_ok && m.error.is_none() && m.escalation == 0 {
             let achieved = m.cpd_ns * 1000.0;
             record(si, achieved);
             prior = Some(achieved);
@@ -413,6 +735,11 @@ pub fn chain_seeds(
 }
 
 /// Reduce per-seed metrics (in seed order) into the averaged result.
+/// Failed seeds (those carrying a [`FlowError`]) contribute nothing to
+/// the averaged metrics — a zeroed CPD is not a measurement — but are
+/// counted in [`FlowResult::failed_seeds`] and listed in
+/// [`FlowResult::errors`]; measured non-convergence without an error
+/// (no ladder ran) still averages, exactly as before the taxonomy.
 pub fn assemble_result(
     name: &str,
     arch: &Arch,
@@ -420,14 +747,19 @@ pub fn assemble_result(
     seeds: &[SeedMetrics],
     dedup_hits: usize,
 ) -> FlowResult {
-    let cpds: Vec<f64> = seeds.iter().map(|s| s.cpd_ns).collect();
-    let iters: Vec<f64> = seeds.iter().filter_map(|s| s.route_iters).collect();
+    let healthy: Vec<&SeedMetrics> = seeds.iter().filter(|s| s.error.is_none()).collect();
+    let cpds: Vec<f64> = healthy.iter().map(|s| s.cpd_ns).collect();
+    let iters: Vec<f64> = healthy.iter().filter_map(|s| s.route_iters).collect();
     let routed_ok = seeds.iter().all(|s| s.routed_ok);
+    let failed_seeds = seeds.len() - healthy.len();
+    let escalations = seeds.iter().filter(|s| s.escalation > 0).count();
+    let errors: Vec<FlowError> = seeds.iter().filter_map(|s| s.error.clone()).collect();
 
     // Channel utilization: element-wise mean across seeds.  All seeds
     // route the same (deterministically sized) device, so sample vectors
     // align; if they ever did not, fall back to pooling the raw samples
-    // rather than silently dropping data.
+    // rather than silently dropping data.  (Failed seeds carry no
+    // samples, so the emptiness filter already excludes them.)
     let with_samples: Vec<&Vec<f64>> = seeds
         .iter()
         .map(|s| &s.channel_util)
@@ -472,7 +804,9 @@ pub fn assemble_result(
         Some(first) => (*first).clone(),
     };
 
-    let cpd_ns = mean(&cpds);
+    // With every seed failed there is no measurement: cpd 0, fmax 0 (an
+    // infinite fmax would read as the best row of a sweep table).
+    let cpd_ns = if cpds.is_empty() { 0.0 } else { mean(&cpds) };
     let alm_area_mwta = packing.stats.alms as f64 * arch.area.alm_mwta;
     FlowResult {
         name: name.to_string(),
@@ -485,12 +819,15 @@ pub fn assemble_result(
         alm_area_mwta,
         cpd_ns,
         adp: alm_area_mwta * cpd_ns,
-        fmax_mhz: if cpd_ns > 0.0 { 1000.0 / cpd_ns } else { f64::INFINITY },
+        fmax_mhz: if cpd_ns > 0.0 { 1000.0 / cpd_ns } else { 0.0 },
         routed_ok,
         route_iters: mean(&iters),
         channel_util,
         cpd_trace_ns,
         dedup_hits,
+        failed_seeds,
+        escalations,
+        errors,
     }
 }
 
@@ -514,8 +851,17 @@ pub fn run_flow_mapped(
     let packing = pack(nl, &arch, &PackOpts { unrelated: opts.unrelated });
     let idx = NetlistIndex::build(nl);
     let pidx = PackIndex::build(nl, &packing);
-    let seeds = chain_seeds(nl, &packing, &arch, opts, &idx, &pidx, None, |_, _| {});
-    assemble_result(name, &arch, &packing, &seeds, dedup_hits)
+    let seeds = chain_seeds(nl, &packing, &arch, opts, name, &idx, &pidx, None, |_, _| {});
+    let result = assemble_result(name, &arch, &packing, &seeds, dedup_hits);
+    if opts.check != CheckMode::Off {
+        let chained = opts.route && opts.route_timing_weights;
+        check::enforce(
+            opts.check,
+            "recovery",
+            &check::audit_recovery(&result, &seeds, chained),
+        );
+    }
+    result
 }
 
 /// Run a benchmark on one architecture variant.
@@ -539,6 +885,33 @@ mod tests {
     use super::*;
     use crate::bench_suites::{kratos_suite, BenchParams};
     use crate::synth::multiplier::{soft_mul, AdderAlgo};
+
+    #[test]
+    fn escalated_width_is_progressive() {
+        assert_eq!(escalated_width(100, 125), 125);
+        assert_eq!(escalated_width(100, 150), 150);
+        // ceil, and always at least one track wider than the base.
+        assert_eq!(escalated_width(3, 125), 4);
+        assert_eq!(escalated_width(1, 125), 2);
+        for &(pct, _) in ESCALATION_LADDER {
+            assert!(escalated_width(112, pct) > 112);
+        }
+    }
+
+    #[test]
+    fn flow_error_display_carries_taxonomy_fields() {
+        let e = FlowError::stage_failure(
+            "place",
+            Some(7),
+            "device 2x2 cannot fit 9 LBs".to_string(),
+            RecoveryAction::SkipSeed,
+        );
+        let s = e.to_string();
+        assert!(s.contains("place") && s.contains("seed 7") && s.contains("seed skipped"), "{s}");
+        let p = FlowError::job_panic(None, "boom".to_string());
+        assert!(p.to_string().contains("job isolated"));
+        assert_eq!(panic_message(&Box::new("boom") as &(dyn std::any::Any + Send)), "boom");
+    }
 
     #[test]
     fn full_flow_on_kratos_circuit() {

@@ -44,18 +44,33 @@
 //! the same auditors on every artifact as it is produced — warn mode
 //! prints violations and continues, strict mode fails the run.
 //!
+//! Failure semantics: `exp` and `flow` never die on a failing job.  A
+//! panicking seed, a device misfit, or an unroutable seed becomes a
+//! structured failure record; the run completes, prints the engine's
+//! failure summary on stderr, and the process exits with code 3 when
+//! any seed failed.  `--escalate` opts unroutable seeds into the
+//! deterministic retry ladder (+25% / +50% channel width, then
+//! lookahead-off), `--route-pops-budget N` bounds each route attempt by
+//! the deterministic A*-pop odometer, and `--inject-faults <spec>`
+//! injects deterministic faults (stage panics, forced non-convergence,
+//! cache corruption — see [`double_duty::util::fault`]) to exercise
+//! these paths on demand.
+//!
 //! Mapped netlists and packings persist under `target/dd-cache` so
 //! repeated invocations skip the map/pack stages; `--no-disk-cache`
 //! keeps a run memory-only, and `--cache-cap-mb N` bounds the store
 //! (least-recently-modified artifacts are evicted beyond N MiB).
+//! Artifacts that fail their load-time integrity checks are quarantined
+//! as `*.quarantine` and reported in the failure summary.
 
 use double_duty::arch::ArchVariant;
 use double_duty::bench_suites::{all_suites, BenchParams};
 use double_duty::check::{self, CheckMode, Severity};
 use double_duty::coordinator::default_workers;
-use double_duty::flow::engine::{ArtifactCache, Engine, ExperimentPlan};
+use double_duty::flow::engine::{process_failures, ArtifactCache, Engine, ExperimentPlan};
 use double_duty::flow::FlowOpts;
 use double_duty::report::{self, ExpOpts};
+use double_duty::util::fault::FaultPlan;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -74,18 +89,26 @@ fn main() {
             eprintln!("usage: dduty <exp|flow|check|list|coffe> ...");
             eprintln!("  dduty exp <table1|table2|table3|table4|fig5..fig9|all> [--quick] \
                        [--jobs N] [--route-jobs N] [--lookahead on|off] [--no-disk-cache] \
-                       [--cache-cap-mb N] [--check [strict]]");
+                       [--cache-cap-mb N] [--check [strict]] [--escalate] \
+                       [--inject-faults <spec>]");
             eprintln!("  dduty flow --bench <name> [--variant baseline|dd5|dd6] \
                        [--seed N | --seeds a,b,c] [--no-route] [--jobs N] \
                        [--route-jobs N] [--lookahead on|off] [--no-disk-cache] \
                        [--cache-cap-mb N] [--timing-route] [--sta-every K] \
                        [--crit-alpha A] [--place-crit-alpha A] [--move-mix F] \
-                       [--check [strict]]");
+                       [--check [strict]] [--escalate] [--route-pops-budget N] \
+                       [--inject-faults <spec>]");
             eprintln!("  dduty check [<bench|suite> ...] [--variant baseline|dd5|dd6|all] \
                        [--strict] [--quick] [--no-route] [--route-jobs N] \
                        [--lookahead on|off] [--no-disk-cache] [--cache-cap-mb N]");
             std::process::exit(if cmd == "help" { 0 } else { 2 });
         }
+    }
+    // Isolated job failures surface as data, not crashes: the run above
+    // completed, but any failed seed makes the invocation exit 3 so
+    // scripts and CI can gate on it.
+    if process_failures() > 0 {
+        std::process::exit(3);
     }
 }
 
@@ -186,6 +209,42 @@ fn parse_check_mode(args: &[String]) -> CheckMode {
     }
 }
 
+/// `--inject-faults <spec>`: deterministic fault injection (see
+/// [`double_duty::util::fault`] for the grammar).  A malformed spec is a
+/// hard error — it must never silently inject nothing.
+fn parse_fault_plan(args: &[String]) -> FaultPlan {
+    let Some(i) = args.iter().position(|a| a == "--inject-faults") else {
+        return FaultPlan::default();
+    };
+    let Some(spec) = args.get(i + 1) else {
+        eprintln!("--inject-faults requires a spec (e.g. panic:place:*:2)");
+        std::process::exit(2);
+    };
+    match FaultPlan::parse(spec) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("--inject-faults: {e}");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// `--route-pops-budget N`: deterministic per-attempt give-up budget on
+/// the router's A*-pop odometer (0 = unlimited).  Malformed values are
+/// hard errors.
+fn parse_pops_budget(args: &[String]) -> usize {
+    let Some(i) = args.iter().position(|a| a == "--route-pops-budget") else {
+        return 0;
+    };
+    match args.get(i + 1).map(|s| s.parse::<usize>()) {
+        Some(Ok(n)) => n,
+        _ => {
+            eprintln!("--route-pops-budget requires a numeric pop count (0 = unlimited)");
+            std::process::exit(2);
+        }
+    }
+}
+
 fn exp_opts(args: &[String]) -> ExpOpts {
     let mut opts = if args.iter().any(|a| a == "--quick") {
         ExpOpts::quick()
@@ -198,6 +257,8 @@ fn exp_opts(args: &[String]) -> ExpOpts {
     opts.cache_cap_mb = parse_cache_cap_mb(args);
     opts.check = parse_check_mode(args);
     opts.lookahead = parse_lookahead(args);
+    opts.escalate = args.iter().any(|a| a == "--escalate");
+    opts.faults = parse_fault_plan(args);
     opts
 }
 
@@ -305,6 +366,9 @@ fn cmd_flow(args: &[String]) {
             use_kernel,
             lookahead: parse_lookahead(args),
             check: parse_check_mode(args),
+            escalate: args.iter().any(|a| a == "--escalate"),
+            route_pops_budget: parse_pops_budget(args),
+            faults: parse_fault_plan(args),
             ..Default::default()
         },
     };
@@ -325,6 +389,15 @@ fn cmd_flow(args: &[String]) {
     println!("CPD            : {:.2} ns  (Fmax {:.1} MHz)", r.cpd_ns, r.fmax_mhz);
     println!("ADP            : {:.0}", r.adp);
     println!("routed         : {} (iters {:.0})", r.routed_ok, r.route_iters);
+    if r.failed_seeds > 0 || r.escalations > 0 {
+        println!(
+            "failed seeds   : {} ({} escalation(s))",
+            r.failed_seeds, r.escalations
+        );
+        for e in &r.errors {
+            println!("  {e}");
+        }
+    }
     if !r.cpd_trace_ns.is_empty() {
         // Closed-loop trajectory: CPD at each STA refresh, then final.
         let trace: Vec<String> = r.cpd_trace_ns.iter().map(|c| format!("{c:.2}")).collect();

@@ -24,6 +24,7 @@ use crate::pack::{pack, PackOpts, Unrelated};
 use crate::synth::multiplier::AdderAlgo;
 use crate::synth::Circuit;
 use crate::techmap::{map_circuit, MapOpts};
+use crate::util::fault::FaultPlan;
 use crate::util::stats::geomean;
 use crate::util::Table;
 
@@ -52,6 +53,13 @@ pub struct ExpOpts {
     /// (`--lookahead on|off`, default on); `false` falls back to the
     /// legacy per-expansion Manhattan heuristic.
     pub lookahead: bool,
+    /// Opt unroutable seeds into the deterministic escalation ladder
+    /// (`--escalate`; see [`crate::flow::ESCALATION_LADDER`]).  Off by
+    /// default — the paper sweeps measure non-convergence as data.
+    pub escalate: bool,
+    /// Deterministic fault injection (`--inject-faults <spec>`; see
+    /// [`crate::util::fault`]).  Empty by default.
+    pub faults: FaultPlan,
 }
 
 impl Default for ExpOpts {
@@ -65,6 +73,8 @@ impl Default for ExpOpts {
             cache_cap_mb: None,
             check: CheckMode::Off,
             lookahead: true,
+            escalate: false,
+            faults: FaultPlan::default(),
         }
     }
 }
@@ -82,6 +92,8 @@ impl ExpOpts {
             route_jobs: self.route_jobs,
             check: self.check,
             lookahead: self.lookahead,
+            escalate: self.escalate,
+            faults: self.faults.clone(),
             ..Default::default()
         }
     }

@@ -176,6 +176,14 @@ pub struct RouteOpts {
     /// A* lookahead mode (default [`LookaheadMode::On`]; see the module
     /// docs and `--lookahead` on the CLI).
     pub lookahead: LookaheadMode,
+    /// Deterministic give-up budget on the A* heap-pop odometer
+    /// ([`Routing::astar_pops`]): once the fixed-order pop total reaches
+    /// this, the negotiation stops at the end of the iteration and
+    /// reports `success: false`.  `0` (default) = unlimited.  A logical
+    /// odometer, never a wall clock — the flow's escalation ladder
+    /// degrades on it without breaking bit-identity across worker
+    /// counts.
+    pub pops_budget: usize,
 }
 
 impl Default for RouteOpts {
@@ -194,6 +202,7 @@ impl Default for RouteOpts {
             net_crit: Vec::new(),
             sink_crit: Vec::new(),
             lookahead: LookaheadMode::default(),
+            pops_budget: 0,
         }
     }
 }
@@ -309,11 +318,7 @@ struct ScratchLease<'a> {
 
 impl<'a> ScratchLease<'a> {
     fn take(pool: &'a std::sync::Mutex<Vec<AStarScratch>>, n_nodes: usize) -> ScratchLease<'a> {
-        let s = pool
-            .lock()
-            .unwrap()
-            .pop()
-            .unwrap_or_else(|| AStarScratch::new(n_nodes));
+        let s = pool.lock().unwrap().pop().unwrap_or_else(|| AStarScratch::new(n_nodes));
         ScratchLease { pool, scratch: Some(s) }
     }
 }
@@ -739,6 +744,12 @@ fn route_inner(
             success = true;
             break;
         }
+        // Deterministic give-up odometer: `astar_pops` is a fixed-order
+        // sum of per-net values that are pure in (snapshot, net), so the
+        // budget trips at the same iteration for any worker count.
+        if opts.pops_budget > 0 && astar_pops >= opts.pops_budget {
+            break;
+        }
         pres_fac *= opts.pres_mult;
 
         // Closed timing loop: every `sta_every` iterations, re-run STA
@@ -1006,6 +1017,44 @@ mod tests {
                 assert_eq!(t, en.terms[k + 1], "sink order must mirror terms");
             }
         }
+    }
+
+    /// A tiny pops budget stops the negotiation deterministically (same
+    /// iteration for any worker count) and reports non-convergence; a
+    /// huge budget never triggers and reproduces the unbudgeted run.
+    #[test]
+    fn pops_budget_gives_up_deterministically() {
+        let (base, model, arch) = routed(5);
+        let mut c = Circuit::new("m");
+        let x = c.pi_bus("x", 5);
+        let y = c.pi_bus("y", 5);
+        let p = soft_mul(&mut c, &x, &y, AdderAlgo::Wallace);
+        c.po_bus("p", &p);
+        let nl = map_circuit(&c, &MapOpts::default());
+        let packing = pack(&nl, &arch, &PackOpts::default());
+        let pl = place(&nl, &packing, &arch,
+                       &PlaceOpts { effort: 0.3, ..Default::default() })
+            .expect("placement");
+        // Starve the router on a too-narrow channel so it cannot converge
+        // inside the budget.
+        let mut narrow = arch.clone();
+        narrow.routing.channel_width = 2;
+        let budgeted = |jobs: usize| {
+            route(&model, &pl, &narrow,
+                  &RouteOpts { jobs, pops_budget: 500, ..Default::default() })
+        };
+        let b1 = budgeted(1);
+        assert!(!b1.success, "budget must stop an unconvergeable run");
+        assert!(b1.iterations < RouteOpts::default().max_iters, "gave up via the odometer");
+        let b4 = budgeted(4);
+        assert_eq!(b1.iterations, b4.iterations);
+        assert_eq!(b1.astar_pops, b4.astar_pops);
+        assert_eq!(b1.net_nodes, b4.net_nodes);
+        // A budget the run never reaches is a no-op.
+        let unbudged = route(&model, &pl, &arch,
+                             &RouteOpts { pops_budget: usize::MAX, ..Default::default() });
+        assert_eq!(unbudged.net_nodes, base.net_nodes);
+        assert_eq!(unbudged.iterations, base.iterations);
     }
 
     /// Timing-driven weights: zero criticalities are exactly the

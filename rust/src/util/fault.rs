@@ -1,0 +1,301 @@
+//! Deterministic fault injection for the flow engine.
+//!
+//! A [`FaultPlan`] is a parsed `--inject-faults <spec>` string: a
+//! comma-separated list of faults, each naming a site in the flow where
+//! a failure is forced.  Injection is *deterministic by construction*:
+//! a fault either always fires at its site or never does — there is no
+//! randomness and no wall clock — so a faulted run is exactly as
+//! bit-reproducible as a clean one, and `rust/tests/fault_recovery.rs`
+//! can assert byte-equal artifacts across `--jobs` / `--route-jobs`
+//! with faults active.  The plan also participates in cache keying
+//! (it is hashed into [`crate::flow::engine::ArtifactCache::cpd_prior_key`]),
+//! so faulted results never alias clean ones.
+//!
+//! ## Spec grammar
+//!
+//! ```text
+//! spec    := fault ("," fault)*
+//! fault   := "panic:" stage [":" bench [":" seed]]
+//!          | "noconverge:route" [":" bench [":" seed]]
+//!          | "noconverge-all:route" [":" bench [":" seed]]
+//!          | "corrupt:cache" [":" kind]
+//! stage   := "map" | "pack" | "place" | "route"
+//! kind    := "map" | "pack" | "look" | "*"
+//! bench   := benchmark name | "*"        (default "*")
+//! seed    := integer | "*"               (default "*")
+//! ```
+//!
+//! `panic` raises a real Rust panic at the named stage for matching
+//! (bench, seed) jobs — the payload the engine's `catch_unwind`
+//! isolation must convert into a [`crate::flow::FlowError`].
+//! `noconverge` forces the *base* route attempt of matching seeds to
+//! report `success: false` (the escalation ladder, if enabled, then
+//! rescues it); `noconverge-all` forces every ladder rung to fail too,
+//! exercising the ladder-exhausted path.  `corrupt:cache` truncates
+//! matching disk-cache artifacts *at store time* (magic line intact,
+//! body replaced), so the next load exercises the real integrity-check
+//! → quarantine path.
+//!
+//! Example: `panic:place:gemmt-FU-mini:2,noconverge:route:*:1`.
+
+use crate::util::error::Result;
+
+/// One injected fault (see the module docs for the grammar).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub enum Fault {
+    /// Panic at `stage` for matching (bench, seed) jobs.
+    Panic { stage: String, bench: String, seed: Option<u64> },
+    /// Force the base route attempt to report non-convergence.
+    NoConverge { bench: String, seed: Option<u64> },
+    /// Force the base attempt *and* every escalation rung to fail.
+    NoConvergeAll { bench: String, seed: Option<u64> },
+    /// Corrupt disk-cache artifacts of `kind` at store time.
+    CorruptCache { kind: String },
+}
+
+/// A parsed, deterministic fault-injection plan.  `Default` is the
+/// empty plan (no faults).  Hash/Eq derive so the plan can participate
+/// in cache keys.
+#[derive(Clone, Debug, Default, PartialEq, Eq, Hash)]
+pub struct FaultPlan {
+    pub faults: Vec<Fault>,
+}
+
+/// Stages that accept an injected panic.
+const PANIC_STAGES: &[&str] = &["map", "pack", "place", "route"];
+/// Disk-cache artifact kinds that accept injected corruption.
+const CACHE_KINDS: &[&str] = &["map", "pack", "look", "*"];
+
+fn parse_seed(s: &str) -> Result<Option<u64>> {
+    if s == "*" {
+        return Ok(None);
+    }
+    s.parse::<u64>()
+        .map(Some)
+        .map_err(|_| crate::util::error::Error::msg(format!("bad fault seed: {s:?}")))
+}
+
+fn matches_bench(pat: &str, bench: &str) -> bool {
+    pat == "*" || pat == bench
+}
+
+fn matches_seed(pat: Option<u64>, seed: Option<u64>) -> bool {
+    match pat {
+        None => true,
+        Some(p) => seed == Some(p),
+    }
+}
+
+impl FaultPlan {
+    /// Parse a `--inject-faults` spec (see the module docs).  Errors on
+    /// unknown fault types, stages, or cache kinds — a mistyped spec
+    /// must never silently inject nothing.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut faults = Vec::new();
+        for tok in spec.split(',') {
+            let tok = tok.trim();
+            if tok.is_empty() {
+                continue;
+            }
+            let parts: Vec<&str> = tok.split(':').collect();
+            let bench_at = |i: usize| parts.get(i).copied().unwrap_or("*").to_string();
+            let seed_at = |i: usize| parse_seed(parts.get(i).copied().unwrap_or("*"));
+            match parts[0] {
+                "panic" => {
+                    let stage = parts.get(1).copied().unwrap_or("");
+                    crate::ensure!(
+                        PANIC_STAGES.contains(&stage),
+                        "panic fault needs a stage in {PANIC_STAGES:?}, got {tok:?}"
+                    );
+                    crate::ensure!(parts.len() <= 4, "too many fields in fault {tok:?}");
+                    faults.push(Fault::Panic {
+                        stage: stage.to_string(),
+                        bench: bench_at(2),
+                        seed: seed_at(3)?,
+                    });
+                }
+                "noconverge" | "noconverge-all" => {
+                    crate::ensure!(
+                        parts.get(1) == Some(&"route"),
+                        "{} fault only supports the route stage, got {tok:?}",
+                        parts[0]
+                    );
+                    crate::ensure!(parts.len() <= 4, "too many fields in fault {tok:?}");
+                    let (bench, seed) = (bench_at(2), seed_at(3)?);
+                    faults.push(if parts[0] == "noconverge" {
+                        Fault::NoConverge { bench, seed }
+                    } else {
+                        Fault::NoConvergeAll { bench, seed }
+                    });
+                }
+                "corrupt" => {
+                    crate::ensure!(
+                        parts.get(1) == Some(&"cache"),
+                        "corrupt fault only supports cache, got {tok:?}"
+                    );
+                    crate::ensure!(parts.len() <= 3, "too many fields in fault {tok:?}");
+                    let kind = parts.get(2).copied().unwrap_or("*");
+                    crate::ensure!(
+                        CACHE_KINDS.contains(&kind),
+                        "corrupt:cache kind must be in {CACHE_KINDS:?}, got {tok:?}"
+                    );
+                    faults.push(Fault::CorruptCache { kind: kind.to_string() });
+                }
+                other => crate::bail!("unknown fault type {other:?} in {tok:?}"),
+            }
+        }
+        Ok(FaultPlan { faults })
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// Canonical round-trippable spec string (for display / summaries).
+    pub fn spec(&self) -> String {
+        let fmt_seed = |s: Option<u64>| match s {
+            Some(v) => v.to_string(),
+            None => "*".to_string(),
+        };
+        self.faults
+            .iter()
+            .map(|f| match f {
+                Fault::Panic { stage, bench, seed } => {
+                    format!("panic:{stage}:{bench}:{}", fmt_seed(*seed))
+                }
+                Fault::NoConverge { bench, seed } => {
+                    format!("noconverge:route:{bench}:{}", fmt_seed(*seed))
+                }
+                Fault::NoConvergeAll { bench, seed } => {
+                    format!("noconverge-all:route:{bench}:{}", fmt_seed(*seed))
+                }
+                Fault::CorruptCache { kind } => format!("corrupt:cache:{kind}"),
+            })
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// Panic if the plan injects a panic at this site.  `seed` is `None`
+    /// for per-bench stages (map/pack), in which case only wildcard-seed
+    /// faults match.  The panic payload carries the injection marker the
+    /// engine's isolation layer surfaces through `FlowError`.
+    pub fn fire_panic(&self, stage: &str, bench: &str, seed: Option<u64>) {
+        for f in &self.faults {
+            if let Fault::Panic { stage: s, bench: b, seed: sd } = f {
+                if s == stage && matches_bench(b, bench) && matches_seed(*sd, seed) {
+                    panic!(
+                        "injected fault: {stage} panic (bench {bench:?}, seed {seed:?})"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Does the plan force route non-convergence for this (bench, seed)
+    /// at escalation rung `rung` (0 = the base attempt)?
+    pub fn forces_noconverge(&self, bench: &str, seed: u64, rung: u8) -> bool {
+        self.faults.iter().any(|f| match f {
+            Fault::NoConverge { bench: b, seed: sd } => {
+                rung == 0 && matches_bench(b, bench) && matches_seed(*sd, Some(seed))
+            }
+            Fault::NoConvergeAll { bench: b, seed: sd } => {
+                matches_bench(b, bench) && matches_seed(*sd, Some(seed))
+            }
+            _ => false,
+        })
+    }
+
+    /// Does the plan corrupt disk-cache artifacts of `kind`
+    /// (`"map"` / `"pack"` / `"look"`)?
+    pub fn corrupts(&self, kind: &str) -> bool {
+        self.faults.iter().any(|f| match f {
+            Fault::CorruptCache { kind: k } => k == "*" || k == kind,
+            _ => false,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_canonical_spec() {
+        let spec = "panic:place:gemmt:2,noconverge:route:*:1,noconverge-all:route:m:*,corrupt:cache:map";
+        let plan = FaultPlan::parse(spec).expect("parse");
+        assert_eq!(plan.faults.len(), 4);
+        assert_eq!(plan.spec(), spec);
+        let again = FaultPlan::parse(&plan.spec()).expect("reparse");
+        assert_eq!(plan, again);
+    }
+
+    #[test]
+    fn parse_defaults_are_wildcards() {
+        let plan = FaultPlan::parse("panic:map").expect("parse");
+        assert_eq!(
+            plan.faults[0],
+            Fault::Panic { stage: "map".into(), bench: "*".into(), seed: None }
+        );
+        let plan = FaultPlan::parse("corrupt:cache").expect("parse");
+        assert_eq!(plan.faults[0], Fault::CorruptCache { kind: "*".into() });
+        assert!(FaultPlan::parse("").expect("empty").is_empty());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "panic",
+            "panic:sta",
+            "panic:place:b:notanumber",
+            "panic:place:b:1:extra",
+            "noconverge:place",
+            "noconverge-all:pack",
+            "corrupt:prior",
+            "corrupt:cache:netlist",
+            "frobnicate:route",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad:?} should fail to parse");
+        }
+    }
+
+    #[test]
+    fn matching_semantics() {
+        let plan =
+            FaultPlan::parse("noconverge:route:m:1,noconverge-all:route:n:*").expect("parse");
+        // NoConverge matches rung 0 only, exact bench + seed.
+        assert!(plan.forces_noconverge("m", 1, 0));
+        assert!(!plan.forces_noconverge("m", 1, 1));
+        assert!(!plan.forces_noconverge("m", 2, 0));
+        assert!(!plan.forces_noconverge("x", 1, 0));
+        // NoConvergeAll matches every rung.
+        assert!(plan.forces_noconverge("n", 7, 0));
+        assert!(plan.forces_noconverge("n", 7, 3));
+
+        let plan = FaultPlan::parse("corrupt:cache:look").expect("parse");
+        assert!(plan.corrupts("look"));
+        assert!(!plan.corrupts("map"));
+        let plan = FaultPlan::parse("corrupt:cache:*").expect("parse");
+        assert!(plan.corrupts("map") && plan.corrupts("pack") && plan.corrupts("look"));
+    }
+
+    #[test]
+    fn fire_panic_only_on_match() {
+        let plan = FaultPlan::parse("panic:place:m:2").expect("parse");
+        // Non-matching sites are no-ops.
+        plan.fire_panic("place", "m", Some(1));
+        plan.fire_panic("place", "x", Some(2));
+        plan.fire_panic("map", "m", None);
+        let hit = std::panic::catch_unwind(|| plan.fire_panic("place", "m", Some(2)));
+        let msg = *hit.expect_err("must panic").downcast::<String>().expect("string payload");
+        assert!(msg.contains("injected fault"), "payload: {msg}");
+    }
+
+    #[test]
+    fn wildcard_seed_matches_seedless_sites() {
+        let plan = FaultPlan::parse("panic:map:m").expect("parse");
+        assert!(std::panic::catch_unwind(|| plan.fire_panic("map", "m", None)).is_err());
+        // A seed-specific fault never fires at a seedless (per-bench) site.
+        let plan = FaultPlan::parse("panic:map:m:3").expect("parse");
+        plan.fire_panic("map", "m", None);
+    }
+}

@@ -4,6 +4,7 @@
 //! replacements are tiny, deterministic, and dependency-free.
 
 pub mod error;
+pub mod fault;
 pub mod rng;
 pub mod stats;
 pub mod table;

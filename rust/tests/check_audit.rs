@@ -15,12 +15,14 @@
 use double_duty::arch::{Arch, ArchVariant, Device};
 use double_duty::bench_suites::{all_suites, BenchParams};
 use double_duty::check::{
-    audit_lookahead, audit_netlist, audit_packing, audit_placement, audit_routing,
-    audit_timing, check_benchmark, Severity, Stage, Violation,
+    audit_lookahead, audit_netlist, audit_packing, audit_placement, audit_recovery,
+    audit_routing, audit_timing, check_benchmark, Severity, Stage, Violation,
 };
 use double_duty::flow::diskcache::{DiskCache, CACHE_VERSION};
 use double_duty::flow::engine::{ArtifactCache, MappedCircuit};
-use double_duty::flow::FlowOpts;
+use double_duty::flow::{
+    assemble_result, FlowError, FlowOpts, RecoveryAction, SeedMetrics, ESCALATION_LADDER,
+};
 use double_duty::netlist::{CellKind, Netlist, NetlistIndex, NO_NET};
 use double_duty::pack::{pack, PackOpts, Packing};
 use double_duty::place::cost::NetModel;
@@ -377,6 +379,131 @@ fn diskcache_integrity_failure_surfaces_as_violation() {
     assert!(s.contains("flow.cache-integrity"), "{s}");
     assert!(s.contains("integrity"), "violation must name the failing dimension: {s}");
     let _ = std::fs::remove_dir_all(&root);
+}
+
+// --- recovery auditor ------------------------------------------------------
+
+/// One healthy routed seed for the synthetic recovery chains.
+fn seed_ok(seed: u64, cpd_ns: f64, used_prior_ps: Option<f64>) -> SeedMetrics {
+    SeedMetrics {
+        seed,
+        cpd_ns,
+        routed_ok: true,
+        route_iters: Some(3.0),
+        channel_util: Vec::new(),
+        cpd_trace_ns: Vec::new(),
+        escalation: 0,
+        used_prior_ps,
+        error: None,
+    }
+}
+
+/// A realistic chained cell: two healthy seeds feeding the chain, one
+/// ladder-rescued (degraded) seed, and one healthy seed that must have
+/// inherited its prior *past* the degraded one.
+fn recovery_fixture() -> (double_duty::flow::FlowResult, Vec<SeedMetrics>) {
+    let (nl, packing, arch) = mul_fixture(ArchVariant::Dd5);
+    let _ = nl;
+    let mut s3 = seed_ok(3, 6.0, Some(4000.0));
+    s3.escalation = 1; // rescued at the first rung: degraded, no error
+    let seeds = vec![
+        seed_ok(1, 5.0, None),
+        seed_ok(2, 4.0, Some(5000.0)),
+        s3,
+        // Seed 3 is degraded, so seed 4 still consumes seed 2's CPD.
+        seed_ok(4, 4.5, Some(4000.0)),
+    ];
+    (assemble_result("m", &arch, &packing, &seeds, 0), seeds)
+}
+
+#[test]
+fn recovery_audit_clean_on_consistent_chain() {
+    let (r, seeds) = recovery_fixture();
+    let vs = audit_recovery(&r, &seeds, true);
+    assert!(vs.is_empty(), "consistent chain must audit clean: {vs:?}");
+}
+
+#[test]
+fn recovery_audit_catches_prior_chain_break() {
+    let (r, mut seeds) = recovery_fixture();
+    // As if the degraded seed 3 had (illegally) fed the chain.
+    seeds[3].used_prior_ps = Some(6000.0);
+    let vs = audit_recovery(&r, &seeds, true);
+    assert!(has_code(&vs, "recovery.prior-chaining"), "expected recovery.prior-chaining in {vs:?}");
+    assert!(!has_code(&vs, "recovery.failure-counts"), "counters are untouched: {vs:?}");
+}
+
+#[test]
+fn recovery_audit_catches_prior_in_unchained_run() {
+    let (r, seeds) = recovery_fixture();
+    // The same seeds claim priors, but the run never chained.
+    let vs = audit_recovery(&r, &seeds, false);
+    assert!(has_code(&vs, "recovery.prior-chaining"), "expected recovery.prior-chaining in {vs:?}");
+}
+
+#[test]
+fn recovery_audit_catches_out_of_ladder_rung() {
+    let (r, mut seeds) = recovery_fixture();
+    seeds[2].escalation = ESCALATION_LADDER.len() as u8 + 1;
+    let vs = audit_recovery(&r, &seeds, true);
+    assert!(
+        has_code(&vs, "recovery.escalation-provenance"),
+        "expected recovery.escalation-provenance in {vs:?}"
+    );
+}
+
+#[test]
+fn recovery_audit_catches_unrouted_escalation_without_error() {
+    let (_, mut seeds) = recovery_fixture();
+    // An unrouted seed that claims it stopped mid-ladder with no error
+    // record: impossible — the ladder only stops early on success.
+    seeds[2].routed_ok = false;
+    seeds[2].used_prior_ps = Some(4000.0);
+    seeds[3].used_prior_ps = Some(4000.0);
+    let (nl, packing, arch) = mul_fixture(ArchVariant::Dd5);
+    let _ = nl;
+    let r = assemble_result("m", &arch, &packing, &seeds, 0);
+    let vs = audit_recovery(&r, &seeds, true);
+    assert!(
+        has_code(&vs, "recovery.escalation-provenance"),
+        "expected recovery.escalation-provenance in {vs:?}"
+    );
+    assert!(!has_code(&vs, "recovery.prior-chaining"), "chain itself is legal: {vs:?}");
+}
+
+#[test]
+fn recovery_audit_catches_counter_drift() {
+    let (r, seeds) = recovery_fixture();
+
+    let mut bad = r.clone();
+    bad.failed_seeds += 1;
+    let vs = audit_recovery(&bad, &seeds, true);
+    assert!(has_code(&vs, "recovery.failure-counts"), "expected recovery.failure-counts in {vs:?}");
+    assert!(!has_code(&vs, "recovery.prior-chaining"), "{vs:?}");
+
+    let mut bad = r.clone();
+    bad.escalations = 0;
+    let vs = audit_recovery(&bad, &seeds, true);
+    assert!(has_code(&vs, "recovery.failure-counts"), "expected recovery.failure-counts in {vs:?}");
+
+    let mut bad = r.clone();
+    bad.routed_ok = false;
+    let vs = audit_recovery(&bad, &seeds, true);
+    assert!(has_code(&vs, "recovery.failure-counts"), "expected recovery.failure-counts in {vs:?}");
+
+    // A dropped error record trips the same counter check.
+    let mut bad = r.clone();
+    let mut seeds2 = seeds.clone();
+    seeds2[1].routed_ok = false;
+    seeds2[1].error = Some(FlowError::stage_failure(
+        "route",
+        Some(2),
+        "synthetic".to_string(),
+        RecoveryAction::SkipSeed,
+    ));
+    bad.routed_ok = false; // keep the conjunction consistent
+    let vs = audit_recovery(&bad, &seeds2, true);
+    assert!(has_code(&vs, "recovery.failure-counts"), "expected recovery.failure-counts in {vs:?}");
 }
 
 // --- whole-chain smoke (the `dduty check` path) ----------------------------

@@ -1,0 +1,203 @@
+//! Fault-tolerance contracts of the flow engine, end to end:
+//!
+//! * a seed that panics mid-plan is isolated — the run completes, the
+//!   failure surfaces as a structured [`FlowError`], and every surviving
+//!   cell is bit-identical to a clean run at any worker count;
+//! * a device misfit is a failed-seed record, not a process death;
+//! * the escalation ladder rescues forced non-convergence
+//!   deterministically across `--route-jobs`, marks the seed degraded,
+//!   and reports ladder exhaustion as a structured failure;
+//! * injected disk-cache corruption drives the real integrity-check →
+//!   quarantine → recompute path through the artifact cache.
+//!
+//! Every fault here comes from [`double_duty::util::fault`], so the
+//! faulted runs are exactly as reproducible as clean ones.
+
+use double_duty::arch::device::Device;
+use double_duty::arch::ArchVariant;
+use double_duty::bench_suites::{vtr_suite, BenchParams, Benchmark};
+use double_duty::flow::diskcache::DiskCache;
+use double_duty::flow::engine::{ArtifactCache, Engine, ExperimentPlan};
+use double_duty::flow::{run_benchmark, FlowOpts, FlowResult, RecoveryAction};
+use double_duty::util::fault::FaultPlan;
+
+fn benches(n: usize) -> Vec<Benchmark> {
+    vtr_suite(&BenchParams::default())[..n].to_vec()
+}
+
+fn plan(benches: Vec<Benchmark>, flow: FlowOpts) -> ExperimentPlan {
+    ExperimentPlan { benches, variants: vec![ArchVariant::Baseline], flow }
+}
+
+fn assert_cells_bit_identical(a: &FlowResult, b: &FlowResult, what: &str) {
+    assert_eq!(a.name, b.name, "{what}");
+    assert_eq!(a.cpd_ns.to_bits(), b.cpd_ns.to_bits(), "{what}: cpd {} vs {}", a.cpd_ns, b.cpd_ns);
+    assert_eq!(a.adp.to_bits(), b.adp.to_bits(), "{what}: adp");
+    assert_eq!(a.routed_ok, b.routed_ok, "{what}: routed_ok");
+    assert_eq!(a.route_iters.to_bits(), b.route_iters.to_bits(), "{what}: iters");
+    assert_eq!(a.channel_util, b.channel_util, "{what}: channel_util");
+    assert_eq!(a.failed_seeds, b.failed_seeds, "{what}: failed_seeds");
+    assert_eq!(a.escalations, b.escalations, "{what}: escalations");
+    assert_eq!(a.errors, b.errors, "{what}: errors");
+}
+
+/// A panic injected into one seed of one benchmark is isolated to that
+/// job: the plan completes, the failure is a structured record, and the
+/// surviving artifacts are bit-identical to a clean run — at any worker
+/// count.
+#[test]
+fn injected_panic_is_isolated_and_survivors_are_bit_identical() {
+    let bs = benches(2);
+    let victim = bs[0].name.clone();
+    let flow = FlowOpts { seeds: vec![1, 2], place_effort: 0.05, route: false, ..Default::default() };
+    let clean = Engine::new(1).run(&plan(bs.clone(), flow.clone()));
+
+    let faulted_flow = FlowOpts {
+        faults: FaultPlan::parse(&format!("panic:place:{victim}:2")).expect("spec"),
+        ..flow.clone()
+    };
+    let hit = Engine::new(1).run(&plan(bs.clone(), faulted_flow.clone()));
+
+    // The victim cell lost exactly seed 2 and says so, structurally.
+    let cell = &hit[0][0];
+    assert_eq!(cell.failed_seeds, 1, "exactly one seed fails");
+    assert_eq!(cell.errors.len(), 1);
+    assert_eq!(cell.errors[0].stage, "job", "caught panics report as isolated jobs");
+    assert_eq!(cell.errors[0].seed, Some(2));
+    assert_eq!(cell.errors[0].action, RecoveryAction::IsolateJob);
+    assert!(cell.errors[0].cause.contains("injected fault"), "{}", cell.errors[0].cause);
+    assert!(!cell.routed_ok, "a failed seed may not report a fully healthy cell");
+    assert!(cell.cpd_ns > 0.0, "the surviving seed still averages");
+
+    // The untouched cell is bit-identical to the clean run.
+    assert_cells_bit_identical(&hit[0][1], &clean[0][1], "survivor vs clean");
+
+    // And the whole faulted grid is invariant under the worker count.
+    let hit_par = Engine::new(4).run(&plan(bs, faulted_flow));
+    for (row_a, row_b) in hit.iter().zip(hit_par.iter()) {
+        for (a, b) in row_a.iter().zip(row_b.iter()) {
+            assert_cells_bit_identical(a, b, "jobs=1 vs jobs=4");
+        }
+    }
+}
+
+/// The old `panic!` on a placement misfit is gone: a device too small for
+/// the circuit yields failed-seed records and a completed run.
+#[test]
+fn device_misfit_is_a_failed_seed_not_a_crash() {
+    let b = &benches(1)[0];
+    let opts = FlowOpts {
+        seeds: vec![1, 2],
+        place_effort: 0.05,
+        route: false,
+        device: Some(Device::new(1, 1)),
+        ..Default::default()
+    };
+    let r = run_benchmark(b, ArchVariant::Baseline, &opts);
+    assert_eq!(r.failed_seeds, 2, "every seed misfits");
+    assert_eq!(r.errors.len(), 2);
+    for e in &r.errors {
+        assert_eq!(e.stage, "place");
+        assert_eq!(e.action, RecoveryAction::SkipSeed);
+    }
+    assert!(!r.routed_ok);
+    assert_eq!(r.cpd_ns, 0.0, "no measurement without a healthy seed");
+    assert_eq!(r.fmax_mhz, 0.0, "zero, not infinite, fmax");
+}
+
+/// Forced base non-convergence is rescued by the first escalation rung,
+/// the seed is marked degraded, and the rescue is bit-identical across
+/// `--route-jobs` — the ladder inherits the router's jobs-invariance.
+#[test]
+fn escalation_ladder_rescues_deterministically_across_route_jobs() {
+    let b = &benches(1)[0];
+    let base = FlowOpts {
+        seeds: vec![1],
+        place_effort: 0.05,
+        escalate: true,
+        faults: FaultPlan::parse("noconverge:route:*:1").expect("spec"),
+        ..Default::default()
+    };
+    let runs: Vec<FlowResult> = [1usize, 2, 8]
+        .iter()
+        .map(|&rj| run_benchmark(b, ArchVariant::Baseline, &FlowOpts { route_jobs: rj, ..base.clone() }))
+        .collect();
+    for r in &runs {
+        assert!(r.routed_ok, "the ladder must rescue the forced failure");
+        assert_eq!(r.escalations, 1, "rescued at the first rung");
+        assert_eq!(r.failed_seeds, 0);
+        assert!(r.errors.is_empty());
+        assert!(r.cpd_ns > 0.0);
+    }
+    for r in &runs[1..] {
+        assert_cells_bit_identical(r, &runs[0], "route-jobs sweep");
+    }
+
+    // Without the ladder the same fault is *measured* non-convergence:
+    // no error record, no escalation, just an unrouted result.
+    let off = run_benchmark(b, ArchVariant::Baseline, &FlowOpts { escalate: false, ..base.clone() });
+    assert!(!off.routed_ok);
+    assert_eq!(off.escalations, 0);
+    assert_eq!(off.failed_seeds, 0, "measured non-convergence is a result, not an error");
+    assert!(off.errors.is_empty());
+}
+
+/// When every rung is forced to fail too, the ladder exhausts and the
+/// seed carries a structured `LadderExhausted` failure.
+#[test]
+fn exhausted_ladder_reports_structured_failure() {
+    let b = &benches(1)[0];
+    let opts = FlowOpts {
+        seeds: vec![1],
+        place_effort: 0.05,
+        escalate: true,
+        faults: FaultPlan::parse("noconverge-all:route:*:1").expect("spec"),
+        ..Default::default()
+    };
+    let r = run_benchmark(b, ArchVariant::Baseline, &opts);
+    assert!(!r.routed_ok);
+    assert_eq!(r.failed_seeds, 1);
+    assert_eq!(r.errors.len(), 1);
+    assert_eq!(r.errors[0].stage, "route");
+    assert_eq!(r.errors[0].action, RecoveryAction::LadderExhausted);
+    assert!(r.errors[0].cause.contains("escalation rungs"), "{}", r.errors[0].cause);
+    assert_eq!(r.escalations, 1, "the exhausted seed still counts as escalated");
+}
+
+/// Injected store-time corruption drives the artifact cache's real
+/// recovery path: the corrupt file is quarantined, the artifact is
+/// recomputed identically, and the violation surfaces through
+/// [`ArtifactCache::take_cache_violations`].
+#[test]
+fn corrupted_disk_cache_quarantines_and_recomputes() {
+    let root = std::env::temp_dir()
+        .join(format!("dd-fault-recovery-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let b = &benches(1)[0];
+
+    // Pass 1: a faulty handle corrupts the mapped artifact on store.
+    let faulty = ArtifactCache::with_disk(DiskCache::with_faults(
+        &root,
+        FaultPlan::parse("corrupt:cache:map").expect("spec"),
+    ));
+    let want = faulty.mapped(b);
+
+    // Pass 2: a clean cache on the same root must detect the corruption,
+    // quarantine the file, and recompute the identical artifact.
+    let clean = ArtifactCache::with_disk(DiskCache::new(&root));
+    let got = clean.mapped(b);
+    assert_eq!(got.fingerprint, want.fingerprint, "recompute matches the original");
+    assert_eq!(got.nl.cells.len(), want.nl.cells.len());
+
+    let quarantined = std::fs::read_dir(&root)
+        .expect("cache root exists")
+        .flatten()
+        .filter(|e| e.path().extension().and_then(|x| x.to_str()) == Some("quarantine"))
+        .count();
+    assert_eq!(quarantined, 1, "corrupt artifact kept as evidence");
+    let vs = clean.take_cache_violations();
+    assert_eq!(vs.len(), 1, "{vs:?}");
+    assert_eq!(vs[0].code, "flow.cache-integrity");
+    assert!(clean.take_cache_violations().is_empty(), "drain is one-shot");
+    let _ = std::fs::remove_dir_all(&root);
+}

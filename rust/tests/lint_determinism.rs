@@ -16,7 +16,15 @@
 //! has been reviewed as order-independent (sorted right after, reduced
 //! with `.any()`/`.count()`, or accumulated into another set).
 //!
-//! The second test is the registration guard: `Cargo.toml` sets
+//! The second lint is panic hygiene for the fault-isolated modules:
+//! `flow` and `route` advertise that every seed failure becomes a
+//! structured [`FlowError`] record (PR 8), so a stray `panic!` /
+//! `.unwrap()` / `.expect(` on a production path there would be caught
+//! by the engine's job isolation and mis-reported as an internal fault
+//! instead of a typed error.  Reviewed sites (poisoned-mutex unwraps,
+//! lease invariants) live in their own allowlist.
+//!
+//! The last test is the registration guard: `Cargo.toml` sets
 //! `autotests = false`, so a test file that is not declared as a
 //! `[[test]]` target silently never runs (it happened to
 //! `frontend_parallel` before PR 4).
@@ -242,6 +250,89 @@ fn no_unreviewed_hash_iteration_in_flow_modules() {
     assert!(
         stale.is_empty(),
         "stale allowlist entries (the code they excused is gone — delete them):\n  {}",
+        stale.join("\n  ")
+    );
+}
+
+/// Reviewed panic sites in `flow`/`route` production code: (path
+/// suffix, line substring).  Same staleness contract as [`ALLOWLIST`].
+///
+/// A `Mutex::lock().unwrap()` only panics when another thread already
+/// panicked while holding the lock — propagating that poison is the
+/// correct response, not a recovery gap.
+const PANIC_ALLOWLIST: &[(&str, &str)] = &[
+    ("flow/diskcache.rs", ".lock().unwrap()"),
+    ("flow/engine.rs", ".lock().unwrap()"),
+    ("route/mod.rs", ".lock().unwrap()"),
+    // The scratch lease holds `Some` for its whole lifetime by
+    // construction (set in `lease()`, taken only in `drop`).
+    ("route/mod.rs", ".expect(\"scratch held for lease lifetime\")"),
+];
+
+/// Constructs that turn a recoverable condition into a process panic.
+const PANIC_PATTERNS: &[&str] = &["panic!(", ".unwrap()", ".expect("];
+
+#[test]
+fn no_unreviewed_panics_in_fault_isolated_modules() {
+    let src_root = repo_root().join("rust/src");
+    let mut files = Vec::new();
+    for module in ["flow", "route"] {
+        rs_files(&src_root.join(module), &mut files);
+    }
+    assert!(!files.is_empty(), "no sources under rust/src/{{flow,route}}");
+
+    let mut offenders: Vec<String> = Vec::new();
+    let mut matched = vec![false; PANIC_ALLOWLIST.len()];
+    for path in &files {
+        let src = fs::read_to_string(path)
+            .unwrap_or_else(|e| panic!("read {}: {e}", path.display()));
+        // Tests may panic freely — that is what assertions are.
+        let body = match src.find("#[cfg(test)]") {
+            Some(p) => &src[..p],
+            None => &src[..],
+        };
+        let rel = path
+            .strip_prefix(&src_root)
+            .expect("source under src root")
+            .to_string_lossy()
+            .replace('\\', "/");
+        for (ln, line) in body.lines().enumerate() {
+            let text = line.trim();
+            if text.starts_with("//") {
+                continue;
+            }
+            if !PANIC_PATTERNS.iter().any(|p| text.contains(p)) {
+                continue;
+            }
+            let allowed = PANIC_ALLOWLIST.iter().enumerate().any(|(i, (suffix, pat))| {
+                let ok = rel.ends_with(suffix) && text.contains(pat);
+                if ok {
+                    matched[i] = true;
+                }
+                ok
+            });
+            if !allowed {
+                offenders.push(format!("rust/src/{rel}:{}: {text}", ln + 1));
+            }
+        }
+    }
+    assert!(
+        offenders.is_empty(),
+        "panic-prone construct on a fault-isolated production path \
+         (return a FlowError / util::error::Error instead, or review + \
+         allowlist in {}):\n  {}",
+        file!(),
+        offenders.join("\n  ")
+    );
+    let stale: Vec<String> = PANIC_ALLOWLIST
+        .iter()
+        .zip(&matched)
+        .filter(|(_, &m)| !m)
+        .map(|((suffix, pat), _)| format!("({suffix:?}, {pat:?})"))
+        .collect();
+    assert!(
+        stale.is_empty(),
+        "stale panic-allowlist entries (the code they excused is gone — delete them):\n  {}",
         stale.join("\n  ")
     );
 }

@@ -192,7 +192,7 @@ fn chained_seed_feedback_deterministic_across_route_jobs() {
         let mut prior = None;
         let mut out = Vec::new();
         for &seed in &opts.seeds {
-            let ctx = SeedCtx { idx: &idx, pidx: &pidx, cpd_prior_ps: prior };
+            let ctx = SeedCtx { cpd_prior_ps: prior, ..SeedCtx::new(&idx, &pidx) };
             let m = place_route_seed(&nl, &packing, &arch, &opts, seed, &ctx);
             if m.routed_ok {
                 prior = Some(m.cpd_ns * 1000.0); // only legal routes feed the chain
