@@ -40,7 +40,11 @@
 //! * [`recovery::audit_recovery`] — the failure-recovery bookkeeping of a
 //!   finished flow result: escalation rungs within the ladder, degraded
 //!   seeds excluded from CPD-prior chaining, failure counters consistent
-//!   with the per-seed error records.
+//!   with the per-seed error records;
+//! * [`serve::audit_serve`] — the `dd serve` daemon's job bookkeeping:
+//!   lifecycle transitions replayed from each job's event log,
+//!   submission-key dedup uniqueness, terminal states consistent with
+//!   the results they carry.
 //!
 //! Every auditor returns a structured [`Violation`] list in a stable,
 //! artifact-defined scan order (cells/nets/ALMs/LBs ascending) instead of
@@ -58,6 +62,7 @@ pub mod pack;
 pub mod place;
 pub mod recovery;
 pub mod route;
+pub mod serve;
 pub mod timing;
 
 pub use lookahead::audit_lookahead;
@@ -66,6 +71,7 @@ pub use pack::audit_packing;
 pub use place::audit_placement;
 pub use recovery::audit_recovery;
 pub use route::audit_routing;
+pub use serve::audit_serve;
 pub use timing::audit_timing;
 
 use std::fmt;
@@ -103,6 +109,10 @@ pub enum Stage {
     /// chaining hygiene, and cache-integrity quarantines
     /// ([`recovery::audit_recovery`], `flow.cache-integrity`).
     Recovery,
+    /// The `dd serve` daemon's job bookkeeping: lifecycle transitions,
+    /// submission-key dedup, terminal-state/result agreement
+    /// ([`serve::audit_serve`]).
+    Serve,
 }
 
 impl Stage {
@@ -115,6 +125,7 @@ impl Stage {
             Stage::Route => "route",
             Stage::Timing => "timing",
             Stage::Recovery => "recovery",
+            Stage::Serve => "serve",
         }
     }
 }

@@ -1,0 +1,165 @@
+//! Serve auditor: re-verifies the daemon's job bookkeeping from the raw
+//! queue snapshots ([`crate::flow::engine::JobSnapshot`]), without
+//! calling any queue or server code path — a scheduler bug cannot
+//! self-certify.
+//!
+//! The resident queue promises three invariants the daemon's clients
+//! rely on: job lifecycles are strictly
+//! `Scheduled → Running → Done | Failed` with progress events only while
+//! running, identical submissions coalesce onto one job (the
+//! cache-dedup, execute-once story), and a job's terminal state agrees
+//! with the result it carries.  `dd serve` runs this auditor over its
+//! full job history at shutdown; `rust/tests/serve.rs` mutates snapshots
+//! to prove each code fires.
+//!
+//! Codes (stable order of checks):
+//!
+//! * `serve.state-transition` — per job, replayed from the event log:
+//!   the log starts at `Scheduled`, transitions only along the lifecycle
+//!   edges, has no events after a terminal state, numbers its seed
+//!   events `0, 1, 2, …` strictly inside `Running`, and ends in exactly
+//!   the state the snapshot reports.
+//! * `serve.result-consistency` — `Done` jobs carry a result with zero
+//!   failed seeds and one seed event per seed; `Failed` jobs carry a
+//!   result recording the failure; non-terminal jobs carry no result.
+//! * `serve.dedup-key` — no two queue jobs share a submission key (a
+//!   duplicate means the dedup index failed to coalesce identical
+//!   submissions into one execution).
+
+use crate::flow::engine::{JobEvent, JobSnapshot, JobState};
+
+use super::{Severity, Stage, Violation};
+
+fn err(code: &'static str, location: impl Into<String>, message: impl Into<String>) -> Violation {
+    Violation::new(Stage::Serve, Severity::Error, code, location, message)
+}
+
+/// Audit a queue's full job history (snapshots in id order).
+pub fn audit_serve(jobs: &[JobSnapshot]) -> Vec<Violation> {
+    let mut vs = Vec::new();
+    for j in jobs {
+        let loc = || format!("job j{} ({}/{})", j.id, j.variant.name(), j.bench);
+        let name = |c: Option<JobState>| c.map(JobState::name).unwrap_or("(no state yet)");
+
+        // 1. Replay the event log through the lifecycle state machine.
+        let mut cur: Option<JobState> = None;
+        let mut seed_events = 0usize;
+        for e in &j.events {
+            match e {
+                JobEvent::State(s) => {
+                    let legal = matches!(
+                        (cur, s),
+                        (None, JobState::Scheduled)
+                            | (Some(JobState::Scheduled), JobState::Running)
+                            | (Some(JobState::Running), JobState::Done)
+                            | (Some(JobState::Running), JobState::Failed)
+                    );
+                    if !legal {
+                        vs.push(err(
+                            "serve.state-transition",
+                            loc(),
+                            format!("illegal transition {} -> {}", name(cur), s.name()),
+                        ));
+                    }
+                    cur = Some(*s);
+                }
+                JobEvent::Seed { index, .. } => {
+                    if cur != Some(JobState::Running) {
+                        vs.push(err(
+                            "serve.state-transition",
+                            loc(),
+                            format!("seed event while {}", name(cur)),
+                        ));
+                    }
+                    if *index != seed_events {
+                        vs.push(err(
+                            "serve.state-transition",
+                            loc(),
+                            format!("seed event index {index}, expected {seed_events}"),
+                        ));
+                    }
+                    seed_events += 1;
+                }
+            }
+        }
+        if cur != Some(j.state) {
+            vs.push(err(
+                "serve.state-transition",
+                loc(),
+                format!("snapshot state {} but event log ends {}", j.state.name(), name(cur)),
+            ));
+        }
+
+        // 2. Terminal state vs the result it carries.
+        match j.state {
+            JobState::Done => match &j.result {
+                None => vs.push(err("serve.result-consistency", loc(), "done job has no result")),
+                Some(r) => {
+                    if r.failed_seeds != 0 {
+                        vs.push(err(
+                            "serve.result-consistency",
+                            loc(),
+                            format!("done job records {} failed seed(s)", r.failed_seeds),
+                        ));
+                    }
+                    if seed_events != j.n_seeds {
+                        vs.push(err(
+                            "serve.result-consistency",
+                            loc(),
+                            format!(
+                                "done job streamed {seed_events} of {} seed event(s)",
+                                j.n_seeds
+                            ),
+                        ));
+                    }
+                }
+            },
+            JobState::Failed => match &j.result {
+                None => {
+                    vs.push(err("serve.result-consistency", loc(), "failed job has no result"))
+                }
+                Some(r) => {
+                    if r.failed_seeds == 0 && r.errors.is_empty() {
+                        vs.push(err(
+                            "serve.result-consistency",
+                            loc(),
+                            "failed job carries no failure record",
+                        ));
+                    }
+                }
+            },
+            JobState::Scheduled | JobState::Running => {
+                if j.result.is_some() {
+                    vs.push(err(
+                        "serve.result-consistency",
+                        loc(),
+                        "non-terminal job carries a result",
+                    ));
+                }
+            }
+        }
+        if seed_events > j.n_seeds {
+            vs.push(err(
+                "serve.result-consistency",
+                loc(),
+                format!("{seed_events} seed event(s) for {} seed(s)", j.n_seeds),
+            ));
+        }
+    }
+
+    // 3. Submission keys are unique across the whole history.  Sorted
+    // scan (never a hash-order iteration), reported in (key, id) order —
+    // stable for any submission interleaving.
+    let mut keys: Vec<(u64, usize)> = jobs.iter().map(|j| (j.key, j.id)).collect();
+    keys.sort_unstable();
+    for w in keys.windows(2) {
+        if w[0].0 == w[1].0 {
+            vs.push(err(
+                "serve.dedup-key",
+                format!("jobs j{} and j{}", w[0].1, w[1].1),
+                "two queue jobs share one submission key: dedup failed to coalesce them",
+            ));
+        }
+    }
+    vs
+}

@@ -41,13 +41,31 @@
 //! fixed-order [`FailureSummary`] (deterministic text for any worker
 //! count) and bumps the process-wide [`process_failures`] counter the
 //! CLI turns into a nonzero exit code.
+//!
+//! ## Resident queue
+//!
+//! [`Engine::run`] executes a *closed* plan: the grid is fixed before the
+//! first job starts.  [`PlanQueue`] is the open-ended counterpart for
+//! `dd serve` (and CLI watch-mode): a resident worker pool over the same
+//! [`ArtifactCache`] that accepts [`CellJob`]s — the (benchmark, variant)
+//! cells an [`ExperimentPlan`] decomposes into
+//! ([`ExperimentPlan::cells`]) — *while running*, dedups identical
+//! submissions by content-addressed [`CellJob::submission_key`] so
+//! concurrent identical jobs execute once, and tracks per-job
+//! [`JobState`] with an ordered [`JobEvent`] log.  Every job runs through
+//! [`run_benchmark_cached_with`] → [`crate::flow::chain_seeds`], the same
+//! single definition of a cell the batch paths use, so queue results are
+//! byte-identical to the batch CLI for the same submission.  Queue
+//! failures stay per-job data (state + structured errors) and do *not*
+//! bump [`process_failures`] — a daemon reports failures to clients, it
+//! does not own the process exit code.
 
 use std::collections::hash_map::DefaultHasher;
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::hash::{Hash, Hasher};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 use crate::arch::device::Device;
 use crate::arch::{Arch, ArchVariant};
@@ -489,15 +507,10 @@ impl FailureSummary {
             for r in row {
                 s.failed_seeds += r.failed_seeds;
                 s.escalations += r.escalations;
-                for e in &r.errors {
-                    s.lines.push(format!("[{:?}/{}] {e}", r.variant, r.name));
-                }
-                if r.escalations > 0 {
-                    s.lines.push(format!(
-                        "[{:?}/{}] {} seed(s) rescued by the escalation ladder (degraded)",
-                        r.variant, r.name, r.escalations
-                    ));
-                }
+                // Per-cell lines come from the result itself
+                // ([`FlowResult::failure_lines`]) so the daemon's per-job
+                // failure JSON and this end-of-run summary cannot drift.
+                s.lines.extend(r.failure_lines());
             }
         }
         s.quarantined = cache_violations.len();
@@ -681,6 +694,7 @@ impl Engine {
                         );
                         cache.record_cpd_prior(key, cpd_ps);
                     },
+                    |_, _| {},
                 )
             });
             // Cells are produced in (variant, bench) order; flattening
@@ -772,6 +786,21 @@ pub fn run_benchmark_cached(
     variant: ArchVariant,
     opts: &FlowOpts,
 ) -> FlowResult {
+    run_benchmark_cached_with(cache, b, variant, opts, |_, _| {})
+}
+
+/// [`run_benchmark_cached`] with a per-seed progress observer: `on_seed`
+/// fires in fixed seed order the moment each seed finishes (the tap `dd
+/// serve` streams incremental job events from).  Observation cannot alter
+/// the result — this is `chain_seeds`' observer threaded through the
+/// cached runner, so daemon results stay byte-identical to the batch CLI.
+pub fn run_benchmark_cached_with(
+    cache: &ArtifactCache,
+    b: &Benchmark,
+    variant: ArchVariant,
+    opts: &FlowOpts,
+    on_seed: impl FnMut(usize, &SeedMetrics),
+) -> FlowResult {
     let mapped = cache.mapped(b);
     let arch = arch_for_run(&Arch::coffe(variant), opts);
     let pack_opts = PackOpts { unrelated: opts.unrelated };
@@ -795,8 +824,411 @@ pub fn run_benchmark_cached(
             );
             cache.record_cpd_prior(key, cpd_ps);
         },
+        on_seed,
     );
     assemble_result(&b.name, &arch, &packing, &seeds, mapped.dedup_hits)
+}
+
+/// One (benchmark, variant) flow cell — the unit of work [`PlanQueue`]
+/// schedules and `dd serve` accepts over the wire.
+#[derive(Clone)]
+pub struct CellJob {
+    pub bench: Benchmark,
+    pub variant: ArchVariant,
+    pub flow: FlowOpts,
+}
+
+impl CellJob {
+    /// Content-addressed submission identity: two submissions with equal
+    /// keys are guaranteed to produce byte-identical results, so the
+    /// queue runs one and serves both.  Hashes the benchmark's generator
+    /// identity, the variant, and every [`FlowOpts`] field via exhaustive
+    /// destructuring (a new knob fails compilation here instead of
+    /// silently aliasing submissions) — except `route_jobs`, which is
+    /// excluded *by the determinism contract*: results are bit-identical
+    /// for any worker count, so submissions differing only in worker
+    /// count must dedup onto one execution.
+    pub fn submission_key(&self) -> u64 {
+        let mut h = DefaultHasher::new();
+        ArtifactCache::bench_key(&self.bench).hash(&mut h);
+        self.variant.hash(&mut h);
+        let FlowOpts {
+            seeds,
+            place_effort,
+            unrelated,
+            route,
+            route_jobs: _,
+            route_timing_weights,
+            sta_every,
+            crit_alpha,
+            place_crit_alpha,
+            move_mix,
+            use_kernel,
+            device,
+            channel_width,
+            check,
+            lookahead,
+            escalate,
+            route_pops_budget,
+            faults,
+        } = &self.flow;
+        seeds.hash(&mut h);
+        place_effort.to_bits().hash(&mut h);
+        (match unrelated {
+            Unrelated::Off => 0u8,
+            Unrelated::Auto => 1u8,
+            Unrelated::On => 2u8,
+        })
+        .hash(&mut h);
+        route.hash(&mut h);
+        route_timing_weights.hash(&mut h);
+        sta_every.hash(&mut h);
+        crit_alpha.to_bits().hash(&mut h);
+        place_crit_alpha.to_bits().hash(&mut h);
+        move_mix.to_bits().hash(&mut h);
+        use_kernel.hash(&mut h);
+        if let Some(d) = device {
+            d.lb_cols.hash(&mut h);
+            d.lb_rows.hash(&mut h);
+            d.io_per_tile.hash(&mut h);
+        }
+        channel_width.hash(&mut h);
+        // `check` shapes results too: a strict run fails where a warning
+        // run proceeds, so the modes must not alias.
+        (match check {
+            CheckMode::Off => 0u8,
+            CheckMode::Warn => 1u8,
+            CheckMode::Strict => 2u8,
+        })
+        .hash(&mut h);
+        lookahead.hash(&mut h);
+        escalate.hash(&mut h);
+        route_pops_budget.hash(&mut h);
+        faults.hash(&mut h);
+        h.finish()
+    }
+}
+
+impl ExperimentPlan {
+    /// Decompose the grid into its (variant, bench) cells, in the fixed
+    /// order [`Engine::run`]'s reduction walks — the unit [`PlanQueue`]
+    /// schedules, which is what makes a running plan *appendable*:
+    /// appending benches or variants is just submitting more cells.
+    pub fn cells(&self) -> Vec<CellJob> {
+        let mut out = Vec::with_capacity(self.variants.len() * self.benches.len());
+        for &variant in &self.variants {
+            for bench in &self.benches {
+                out.push(CellJob { bench: bench.clone(), variant, flow: self.flow.clone() });
+            }
+        }
+        out
+    }
+}
+
+/// Lifecycle of one queued job.  Transitions are strictly
+/// `Scheduled → Running → Done | Failed`; `Done`/`Failed` are terminal
+/// (`check::audit_serve` re-verifies this from the event log).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobState {
+    Scheduled,
+    Running,
+    Done,
+    Failed,
+}
+
+impl JobState {
+    /// Wire name (the daemon's JSON `state` field).
+    pub fn name(self) -> &'static str {
+        match self {
+            JobState::Scheduled => "scheduled",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+        }
+    }
+
+    pub fn is_terminal(self) -> bool {
+        matches!(self, JobState::Done | JobState::Failed)
+    }
+}
+
+/// One entry of a job's ordered progress log: a state transition, or a
+/// finished seed's metrics (`cpd_trace`, PathFinder iterations,
+/// `astar_pops`) — what the daemon streams as incremental chunks.
+#[derive(Clone, Debug)]
+pub enum JobEvent {
+    State(JobState),
+    Seed { index: usize, metrics: SeedMetrics },
+}
+
+/// Point-in-time copy of one queue job (id, identity, state, event log,
+/// result when terminal) — the read model for the daemon's endpoints and
+/// for `check::audit_serve`.
+#[derive(Clone)]
+pub struct JobSnapshot {
+    pub id: usize,
+    pub key: u64,
+    pub bench: String,
+    pub variant: ArchVariant,
+    pub n_seeds: usize,
+    pub state: JobState,
+    pub events: Vec<JobEvent>,
+    pub result: Option<FlowResult>,
+}
+
+struct QueueJob {
+    job: CellJob,
+    key: u64,
+    state: JobState,
+    events: Vec<JobEvent>,
+    result: Option<FlowResult>,
+}
+
+#[derive(Default)]
+struct QueueState {
+    /// Job ids awaiting a worker, in submission order.
+    pending: VecDeque<usize>,
+    /// Every job ever submitted, indexed by id (ids are dense).
+    jobs: Vec<QueueJob>,
+    /// Submission dedup index: key → job id.  Insert/lookup only — never
+    /// iterated (hash order must stay unobservable).
+    by_key: HashMap<u64, usize>,
+    /// Submissions answered by an existing job instead of a new one.
+    dedup_hits: usize,
+    shutdown: bool,
+}
+
+struct QueueShared {
+    cache: Arc<ArtifactCache>,
+    state: Mutex<QueueState>,
+    cond: Condvar,
+    /// Jobs a worker actually started executing (the CI smoke's
+    /// "identical resubmission executed nothing" counter).
+    executed: AtomicUsize,
+}
+
+/// Resident, appendable work queue over the engine's [`ArtifactCache`]:
+/// the daemon-facing counterpart of [`Engine::run`] (see the module
+/// docs).  Submissions dedup by [`CellJob::submission_key`]; each job is
+/// executed once, under the same panic isolation as engine jobs, and its
+/// state/events/result stay queryable for the queue's lifetime.
+pub struct PlanQueue {
+    shared: Arc<QueueShared>,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl PlanQueue {
+    /// Start `workers` resident worker threads over `cache`.
+    pub fn start(workers: usize, cache: Arc<ArtifactCache>) -> PlanQueue {
+        let shared = Arc::new(QueueShared {
+            cache,
+            state: Mutex::new(QueueState::default()),
+            cond: Condvar::new(),
+            executed: AtomicUsize::new(0),
+        });
+        let n = workers.max(1);
+        let mut handles = Vec::with_capacity(n);
+        for _ in 0..n {
+            let sh = Arc::clone(&shared);
+            handles.push(std::thread::spawn(move || worker_loop(&sh)));
+        }
+        PlanQueue { shared, workers: Mutex::new(handles) }
+    }
+
+    /// Submit one cell.  Returns `(job id, fresh)`: `fresh = false` means
+    /// an identical submission already exists (scheduled, running, or
+    /// finished) and this one was deduped onto it — the queue will never
+    /// execute the cell a second time.
+    pub fn submit(&self, job: CellJob) -> (usize, bool) {
+        let key = job.submission_key();
+        let mut st = self.shared.state.lock().unwrap();
+        if let Some(&id) = st.by_key.get(&key) {
+            st.dedup_hits += 1;
+            return (id, false);
+        }
+        let id = st.jobs.len();
+        st.by_key.insert(key, id);
+        st.jobs.push(QueueJob {
+            job,
+            key,
+            state: JobState::Scheduled,
+            events: vec![JobEvent::State(JobState::Scheduled)],
+            result: None,
+        });
+        st.pending.push_back(id);
+        drop(st);
+        self.shared.cond.notify_all();
+        (id, true)
+    }
+
+    /// Append every cell of `plan` to the (possibly running) queue, in
+    /// the plan's fixed (variant, bench) order.  Returns one
+    /// `(job id, fresh)` pair per cell, in that order.
+    pub fn append_plan(&self, plan: &ExperimentPlan) -> Vec<(usize, bool)> {
+        plan.cells().into_iter().map(|c| self.submit(c)).collect()
+    }
+
+    /// Snapshot one job, or `None` for an unknown id.
+    pub fn snapshot(&self, id: usize) -> Option<JobSnapshot> {
+        let st = self.shared.state.lock().unwrap();
+        st.jobs.get(id).map(|j| snap(id, j))
+    }
+
+    /// Snapshot every job, in submission (id) order.
+    pub fn snapshots(&self) -> Vec<JobSnapshot> {
+        let st = self.shared.state.lock().unwrap();
+        st.jobs.iter().enumerate().map(|(id, j)| snap(id, j)).collect()
+    }
+
+    /// Block until job `id` has events beyond the `seen` already
+    /// consumed, or is terminal.  Returns the new events (possibly empty
+    /// when terminal) and the current state — the daemon's incremental
+    /// event stream reads off this.  `None` for an unknown id.
+    pub fn wait_progress(&self, id: usize, seen: usize) -> Option<(JobState, Vec<JobEvent>)> {
+        let mut st = self.shared.state.lock().unwrap();
+        loop {
+            let j = st.jobs.get(id)?;
+            if j.events.len() > seen || j.state.is_terminal() {
+                let from = seen.min(j.events.len());
+                return Some((j.state, j.events[from..].to_vec()));
+            }
+            st = self.shared.cond.wait(st).unwrap();
+        }
+    }
+
+    /// Block until job `id` is terminal; returns its result (`None` only
+    /// for an unknown id — terminal jobs always carry a result).
+    pub fn wait_terminal(&self, id: usize) -> Option<FlowResult> {
+        let mut st = self.shared.state.lock().unwrap();
+        loop {
+            let j = st.jobs.get(id)?;
+            if j.state.is_terminal() {
+                return j.result.clone();
+            }
+            st = self.shared.cond.wait(st).unwrap();
+        }
+    }
+
+    /// Jobs a worker actually started executing (dedup'd submissions
+    /// never count).
+    pub fn executed(&self) -> usize {
+        self.shared.executed.load(Ordering::Relaxed)
+    }
+
+    /// Submissions answered by an existing job.
+    pub fn dedup_hits(&self) -> usize {
+        self.shared.state.lock().unwrap().dedup_hits
+    }
+
+    /// Total jobs ever submitted (dedup'd submissions excluded).
+    pub fn len(&self) -> usize {
+        self.shared.state.lock().unwrap().jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The artifact cache the workers run over.
+    pub fn cache(&self) -> &Arc<ArtifactCache> {
+        &self.shared.cache
+    }
+
+    /// Drain the queue and stop: workers finish every pending job (jobs
+    /// are deterministic and bounded — there are no wall-clock timeouts
+    /// to hang on), then exit; blocks until all have joined.  Jobs
+    /// submitted after this call may never run.
+    pub fn shutdown_and_join(&self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.cond.notify_all();
+        let mut ws = self.workers.lock().unwrap();
+        for w in ws.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn snap(id: usize, j: &QueueJob) -> JobSnapshot {
+    JobSnapshot {
+        id,
+        key: j.key,
+        bench: j.job.bench.name.clone(),
+        variant: j.job.variant,
+        n_seeds: j.job.flow.seeds.len(),
+        state: j.state,
+        events: j.events.clone(),
+        result: j.result.clone(),
+    }
+}
+
+fn worker_loop(shared: &Arc<QueueShared>) {
+    loop {
+        // Claim the oldest pending job; park until one exists.  Workers
+        // drain the queue before honoring shutdown, so a clean daemon
+        // stop never abandons an accepted job.
+        let (id, job) = {
+            let mut st = shared.state.lock().unwrap();
+            let id = loop {
+                if let Some(id) = st.pending.pop_front() {
+                    break id;
+                }
+                if st.shutdown {
+                    return;
+                }
+                st = shared.cond.wait(st).unwrap();
+            };
+            st.jobs[id].state = JobState::Running;
+            st.jobs[id].events.push(JobEvent::State(JobState::Running));
+            (id, st.jobs[id].job.clone())
+        };
+        shared.executed.fetch_add(1, Ordering::Relaxed);
+        shared.cond.notify_all();
+
+        // Same panic isolation as engine jobs: a panicking stage becomes
+        // a Failed job carrying the structured error, not a dead worker.
+        // The per-seed observer appends Seed events under the queue lock
+        // and wakes streamers — observation only, the chain itself runs
+        // in `chain_seeds` untouched.
+        let outcome = catch_job(|| {
+            run_benchmark_cached_with(
+                &shared.cache,
+                &job.bench,
+                job.variant,
+                &job.flow,
+                |si, m| {
+                    let mut st = shared.state.lock().unwrap();
+                    st.jobs[id].events.push(JobEvent::Seed { index: si, metrics: m.clone() });
+                    drop(st);
+                    shared.cond.notify_all();
+                },
+            )
+        });
+        let (state, result) = match outcome {
+            Ok(r) => {
+                let s = if r.failed_seeds == 0 { JobState::Done } else { JobState::Failed };
+                (s, r)
+            }
+            Err(cause) => (
+                JobState::Failed,
+                FlowResult::failed(
+                    &job.bench.name,
+                    job.variant,
+                    FlowError::job_panic(None, cause),
+                    job.flow.seeds.len(),
+                ),
+            ),
+        };
+        {
+            let mut st = shared.state.lock().unwrap();
+            st.jobs[id].state = state;
+            st.jobs[id].events.push(JobEvent::State(state));
+            st.jobs[id].result = Some(result);
+        }
+        shared.cond.notify_all();
+    }
 }
 
 #[cfg(test)]

@@ -322,6 +322,26 @@ impl FlowResult {
             errors: vec![error; n_seeds],
         }
     }
+
+    /// This cell's failure-summary lines: one per structured error (in
+    /// seed order) plus the escalation-rescue note.  The single source
+    /// for both the engine's fixed-order end-of-run
+    /// [`engine::FailureSummary`] and the daemon's per-job failure JSON
+    /// — `dd serve` owns neither the process's stderr nor its exit
+    /// code, so the summary travels through the result as data.
+    pub fn failure_lines(&self) -> Vec<String> {
+        let mut lines = Vec::with_capacity(self.errors.len());
+        for e in &self.errors {
+            lines.push(format!("[{:?}/{}] {e}", self.variant, self.name));
+        }
+        if self.escalations > 0 {
+            lines.push(format!(
+                "[{:?}/{}] {} seed(s) rescued by the escalation ladder (degraded)",
+                self.variant, self.name, self.escalations
+            ));
+        }
+        lines
+    }
 }
 
 /// Outcome of the place/route stage for one seed — the unit of work the
@@ -353,6 +373,11 @@ pub struct SeedMetrics {
     /// `None` with `routed_ok: false` is *measured* non-convergence
     /// (no ladder ran) — a result, not an error.
     pub error: Option<FlowError>,
+    /// Deterministic A* heap-pop odometer of the attempt that produced
+    /// this result (`None` when routing was skipped or the seed failed
+    /// before routing).  Streamed per-seed by `dd serve` as a
+    /// wall-clock-free progress measure.
+    pub astar_pops: Option<usize>,
 }
 
 impl SeedMetrics {
@@ -369,6 +394,7 @@ impl SeedMetrics {
             escalation: 0,
             used_prior_ps,
             error: Some(error),
+            astar_pops: None,
         }
     }
 }
@@ -667,6 +693,7 @@ fn place_route_seed_inner(
             cpd_ns: rpt.cpd_ps / 1000.0,
             routed_ok: r.success,
             route_iters: Some(r.iterations as f64),
+            astar_pops: Some(r.astar_pops),
             channel_util: r.channel_util,
             cpd_trace_ns,
             escalation,
@@ -679,6 +706,7 @@ fn place_route_seed_inner(
             cpd_ns: pl.est_cpd_ps / 1000.0,
             routed_ok: true,
             route_iters: None,
+            astar_pops: None,
             channel_util: Vec::new(),
             cpd_trace_ns: Vec::new(),
             escalation: 0,
@@ -700,7 +728,10 @@ fn place_route_seed_inner(
 /// *successfully routed* chained seed's achieved CPD (the engine writes
 /// these into its artifact cache as the provenance trail; pass a no-op
 /// elsewhere); failed, errored, and ladder-escalated (degraded) seeds
-/// neither feed the chain nor get recorded.
+/// neither feed the chain nor get recorded.  `on_seed(si, &m)` observes
+/// *every* seed's metrics, in seed order, the moment the seed finishes —
+/// the progress tap `dd serve` streams incremental per-job events from
+/// (pass a no-op elsewhere; observation cannot alter the chain).
 #[allow(clippy::too_many_arguments)]
 pub fn chain_seeds(
     nl: &Netlist,
@@ -712,6 +743,7 @@ pub fn chain_seeds(
     pidx: &PackIndex,
     la_cache: Option<&engine::ArtifactCache>,
     mut record: impl FnMut(usize, f64),
+    mut on_seed: impl FnMut(usize, &SeedMetrics),
 ) -> Vec<SeedMetrics> {
     let chained = opts.route && opts.route_timing_weights;
     let mut prior: Option<f64> = None;
@@ -729,6 +761,7 @@ pub fn chain_seeds(
             record(si, achieved);
             prior = Some(achieved);
         }
+        on_seed(si, &m);
         out.push(m);
     }
     out
@@ -851,7 +884,8 @@ pub fn run_flow_mapped(
     let packing = pack(nl, &arch, &PackOpts { unrelated: opts.unrelated });
     let idx = NetlistIndex::build(nl);
     let pidx = PackIndex::build(nl, &packing);
-    let seeds = chain_seeds(nl, &packing, &arch, opts, name, &idx, &pidx, None, |_, _| {});
+    let seeds =
+        chain_seeds(nl, &packing, &arch, opts, name, &idx, &pidx, None, |_, _| {}, |_, _| {});
     let result = assemble_result(name, &arch, &packing, &seeds, dedup_hits);
     if opts.check != CheckMode::Off {
         let chained = opts.route && opts.route_timing_weights;

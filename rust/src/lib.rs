@@ -91,6 +91,17 @@
 //! over whole benchmark suites; `--check [strict]` gates the flow on them
 //! after each stage.  The layer is a *contract*: any future stage must
 //! ship its auditor here before its artifacts feed the flow.
+//!
+//! ## Flow as a service
+//!
+//! [`serve`] is the resident daemon (`dduty serve`): a std-only HTTP/JSON
+//! server over the engine's appendable work queue
+//! ([`flow::engine::PlanQueue`]) and shared [`flow::engine::ArtifactCache`].
+//! Identical submissions dedup onto one execution
+//! ([`flow::engine::CellJob::submission_key`]), per-job progress streams
+//! as chunked events, and results are byte-identical to the batch CLI
+//! for the same options ([`report::flow_result_json`] is the single
+//! rendering both sides of that contract use).
 
 pub mod arch;
 pub mod coffe;
@@ -118,3 +129,4 @@ pub mod check;
 pub mod coordinator;
 pub mod flow;
 pub mod report;
+pub mod serve;

@@ -35,6 +35,17 @@
 //!       found.  Artifacts come from the same persistent cache the other
 //!       subcommands fill, so `dduty check` after `dduty exp` audits what
 //!       actually ran.
+//!   serve [--addr HOST:PORT] [--jobs N] [--no-disk-cache] [--cache-cap-mb N]
+//!       Run the resident flow-as-a-service daemon
+//!       ([`double_duty::serve`]): accepts flow jobs over hand-rolled
+//!       HTTP/JSON (`POST /jobs`), runs them on the engine's appendable
+//!       work queue against the shared artifact cache (identical
+//!       submissions dedup onto one execution), streams per-job progress
+//!       (`GET /jobs/<id>/events`, chunked), and serves results
+//!       byte-identical to `dduty flow` for the same options
+//!       (`GET /jobs/<id>/result`).  `POST /shutdown` drains the queue,
+//!       audits the job history (`check::audit_serve`), and exits 0 on a
+//!       clean run.
 //!   list
 //!       List available benchmarks.
 //!   coffe
@@ -70,6 +81,7 @@ use double_duty::coordinator::default_workers;
 use double_duty::flow::engine::{process_failures, ArtifactCache, Engine, ExperimentPlan};
 use double_duty::flow::FlowOpts;
 use double_duty::report::{self, ExpOpts};
+use double_duty::serve::{ServeOpts, Server};
 use double_duty::util::fault::FaultPlan;
 
 fn main() {
@@ -79,6 +91,7 @@ fn main() {
         "exp" => cmd_exp(&args[1..]),
         "flow" => cmd_flow(&args[1..]),
         "check" => cmd_check(&args[1..]),
+        "serve" => cmd_serve(&args[1..]),
         "list" => cmd_list(),
         "coffe" => {
             report::table1().print();
@@ -86,7 +99,7 @@ fn main() {
             report::table2().print();
         }
         _ => {
-            eprintln!("usage: dduty <exp|flow|check|list|coffe> ...");
+            eprintln!("usage: dduty <exp|flow|check|serve|list|coffe> ...");
             eprintln!("  dduty exp <table1|table2|table3|table4|fig5..fig9|all> [--quick] \
                        [--jobs N] [--route-jobs N] [--lookahead on|off] [--no-disk-cache] \
                        [--cache-cap-mb N] [--check [strict]] [--escalate] \
@@ -101,6 +114,8 @@ fn main() {
             eprintln!("  dduty check [<bench|suite> ...] [--variant baseline|dd5|dd6|all] \
                        [--strict] [--quick] [--no-route] [--route-jobs N] \
                        [--lookahead on|off] [--no-disk-cache] [--cache-cap-mb N]");
+            eprintln!("  dduty serve [--addr HOST:PORT] [--jobs N] [--no-disk-cache] \
+                       [--cache-cap-mb N]");
             std::process::exit(if cmd == "help" { 0 } else { 2 });
         }
     }
@@ -496,6 +511,45 @@ fn cmd_check(args: &[String]) {
         variants.len()
     );
     if strict && errors > 0 {
+        std::process::exit(1);
+    }
+}
+
+/// `dduty serve`: run the resident flow-as-a-service daemon until a
+/// `POST /shutdown` drains the queue.  Exit 0 on a clean run, 1 if the
+/// shutdown audit ([`check::audit_serve`]) finds a violation, 2 on a
+/// bind failure.  Per-job flow failures stay job data (served as JSON);
+/// they never touch the process failure count or the exit code.
+fn cmd_serve(args: &[String]) {
+    let get = |flag: &str| -> Option<String> {
+        args.iter()
+            .position(|a| a == flag)
+            .and_then(|i| args.get(i + 1).cloned())
+    };
+    let opts = ServeOpts {
+        addr: get("--addr").unwrap_or_else(|| "127.0.0.1:7878".to_string()),
+        workers: parse_jobs(args),
+        disk_cache: !args.iter().any(|a| a == "--no-disk-cache"),
+        cache_cap_mb: parse_cache_cap_mb(args),
+    };
+    let server = match Server::bind(&opts) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("dd serve: {e}");
+            std::process::exit(2);
+        }
+    };
+    println!("dd serve listening on {}", server.addr());
+    let summary = server.run();
+    println!(
+        "dd serve: {} job(s), {} executed, {} dedup hit(s), {} failed",
+        summary.jobs, summary.executed, summary.dedup_hits, summary.failed_jobs
+    );
+    if !summary.violations.is_empty() {
+        for v in &summary.violations {
+            eprintln!("  {v}");
+        }
+        eprintln!("dd serve: shutdown audit found {} violation(s)", summary.violations.len());
         std::process::exit(1);
     }
 }

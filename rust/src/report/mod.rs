@@ -18,7 +18,7 @@ use crate::bench_suites::{all_suites, koios_suite, kratos_suite, vtr_suite, Benc
 use crate::check::CheckMode;
 use crate::coordinator::default_workers;
 use crate::flow::engine::{ArtifactCache, Engine, ExperimentPlan};
-use crate::flow::{run_flow, FlowOpts, FlowResult};
+use crate::flow::{run_flow, FlowError, FlowOpts, FlowResult};
 use crate::netlist::NetlistStats;
 use crate::pack::{pack, PackOpts, Unrelated};
 use crate::synth::multiplier::AdderAlgo;
@@ -550,6 +550,101 @@ pub fn table4(opts: &ExpOpts) -> Table {
         }
     }
     t
+}
+
+// ---------------------------------------------------------------------------
+// Canonical JSON rendering (the daemon's wire format)
+// ---------------------------------------------------------------------------
+
+/// JSON string escaping: quote, backslash, and control characters.
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Canonical JSON number: shortest round-trip text for finite values,
+/// `null` for NaN/infinities (JSON has no spelling for them).
+pub fn json_f64(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:?}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// A JSON array of canonical numbers.
+pub fn json_f64_arr(xs: &[f64]) -> String {
+    let items: Vec<String> = xs.iter().map(|&x| json_f64(x)).collect();
+    format!("[{}]", items.join(", "))
+}
+
+/// One structured [`FlowError`] as JSON — the PR-8 failure taxonomy on
+/// the wire (stage, seed, cause, recovery action).
+pub fn flow_error_json(e: &FlowError) -> String {
+    let seed = match e.seed {
+        Some(s) => s.to_string(),
+        None => "null".to_string(),
+    };
+    format!(
+        "{{\"stage\": \"{}\", \"seed\": {}, \"cause\": \"{}\", \"action\": \"{}\"}}",
+        json_escape(e.stage),
+        seed,
+        json_escape(&e.cause),
+        json_escape(e.action.name())
+    )
+}
+
+/// The canonical single-line JSON rendering of a [`FlowResult`] — the
+/// byte-identity surface of the `dd serve` determinism contract.  The
+/// daemon's `/jobs/<id>/result` body is exactly this string, and
+/// `rust/tests/serve.rs` asserts it matches the batch path's rendering
+/// byte-for-byte for the same submission.  `failure_lines` threads the
+/// end-of-run failure summary through the result as data
+/// ([`FlowResult::failure_lines`]), so a daemon client sees exactly the
+/// lines the batch CLI would print to stderr.
+pub fn flow_result_json(r: &FlowResult) -> String {
+    let errors: Vec<String> = r.errors.iter().map(flow_error_json).collect();
+    let lines: Vec<String> =
+        r.failure_lines().iter().map(|l| format!("\"{}\"", json_escape(l))).collect();
+    format!(
+        "{{\"name\": \"{}\", \"variant\": \"{}\", \"luts\": {}, \"adder_bits\": {}, \
+         \"alms\": {}, \"lbs\": {}, \"concurrent_luts\": {}, \"alm_area_mwta\": {}, \
+         \"cpd_ns\": {}, \"adp\": {}, \"fmax_mhz\": {}, \"routed_ok\": {}, \
+         \"route_iters\": {}, \"channel_util\": {}, \"cpd_trace_ns\": {}, \
+         \"dedup_hits\": {}, \"failed_seeds\": {}, \"escalations\": {}, \
+         \"errors\": [{}], \"failure_lines\": [{}]}}",
+        json_escape(&r.name),
+        r.variant.name(),
+        r.luts,
+        r.adder_bits,
+        r.alms,
+        r.lbs,
+        r.concurrent_luts,
+        json_f64(r.alm_area_mwta),
+        json_f64(r.cpd_ns),
+        json_f64(r.adp),
+        json_f64(r.fmax_mhz),
+        r.routed_ok,
+        json_f64(r.route_iters),
+        json_f64_arr(&r.channel_util),
+        json_f64_arr(&r.cpd_trace_ns),
+        r.dedup_hits,
+        r.failed_seeds,
+        r.escalations,
+        errors.join(", "),
+        lines.join(", ")
+    )
 }
 
 #[cfg(test)]

@@ -1,0 +1,115 @@
+//! Hand-rolled HTTP/1.1 subset for the daemon: request parsing with hard
+//! size caps, fixed `Content-Length` responses, and chunked
+//! transfer-encoding for the incremental job-event stream.
+//!
+//! Deliberately minimal (std-only, no new deps): one request per
+//! connection (`Connection: close`), bodies only via `Content-Length`,
+//! no keep-alive, no TLS.  Every malformed input is an `Err(String)` the
+//! caller turns into a 4xx — never a panic — and every write is
+//! best-effort (a client that hung up mid-response is its own problem,
+//! not the daemon's).
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+/// Request head cap: beyond this, the peer is not speaking our protocol.
+const MAX_HEAD: usize = 16 * 1024;
+/// Body cap: job specs are small; anything bigger is abuse.
+const MAX_BODY: usize = 1024 * 1024;
+
+/// A parsed request: method, path, body.  Headers beyond
+/// `Content-Length` are read and discarded.
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub body: Vec<u8>,
+}
+
+fn head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// Read and parse one request from `stream`.
+pub fn read_request(stream: &mut TcpStream) -> Result<Request, String> {
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let mut tmp = [0u8; 1024];
+    let head_len = loop {
+        if let Some(p) = head_end(&buf) {
+            break p;
+        }
+        if buf.len() > MAX_HEAD {
+            return Err(format!("request head exceeds {MAX_HEAD} bytes"));
+        }
+        let n = stream.read(&mut tmp).map_err(|e| format!("read: {e}"))?;
+        if n == 0 {
+            return Err("connection closed mid-request".to_string());
+        }
+        buf.extend_from_slice(&tmp[..n]);
+    };
+    let head = String::from_utf8_lossy(&buf[..head_len]).into_owned();
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+    if method.is_empty() || !path.starts_with('/') {
+        return Err(format!("malformed request line {request_line:?}"));
+    }
+    let mut content_length: usize = 0;
+    for line in lines {
+        if let Some((name, value)) = line.split_once(':') {
+            if name.trim().eq_ignore_ascii_case("content-length") {
+                content_length = value
+                    .trim()
+                    .parse::<usize>()
+                    .map_err(|_| format!("bad Content-Length {:?}", value.trim()))?;
+            }
+        }
+    }
+    if content_length > MAX_BODY {
+        return Err(format!("body exceeds {MAX_BODY} bytes"));
+    }
+    let mut body: Vec<u8> = buf[head_len + 4..].to_vec();
+    while body.len() < content_length {
+        let n = stream.read(&mut tmp).map_err(|e| format!("read body: {e}"))?;
+        if n == 0 {
+            return Err("connection closed mid-body".to_string());
+        }
+        body.extend_from_slice(&tmp[..n]);
+    }
+    body.truncate(content_length);
+    Ok(Request { method, path, body })
+}
+
+/// Write a complete JSON response.  Best-effort: a peer that closed the
+/// socket loses the response, nothing else happens.
+pub fn respond(stream: &mut TcpStream, status: u16, reason: &str, body: &str) {
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    let _ = stream.write_all(head.as_bytes());
+    let _ = stream.write_all(body.as_bytes());
+    let _ = stream.flush();
+}
+
+/// Start a 200 chunked response (the job-event stream).  Returns `false`
+/// when the peer is gone.
+pub fn start_chunked(stream: &mut TcpStream) -> bool {
+    let head = "HTTP/1.1 200 OK\r\nContent-Type: application/json\r\n\
+                Transfer-Encoding: chunked\r\nConnection: close\r\n\r\n";
+    stream.write_all(head.as_bytes()).and_then(|_| stream.flush()).is_ok()
+}
+
+/// Write one chunk (one JSON event line).  Returns `false` when the peer
+/// is gone, so the streamer can stop waiting on the job.
+pub fn write_chunk(stream: &mut TcpStream, data: &str) -> bool {
+    let framed = format!("{:x}\r\n{data}\r\n", data.len());
+    stream.write_all(framed.as_bytes()).and_then(|_| stream.flush()).is_ok()
+}
+
+/// Terminate a chunked response.
+pub fn end_chunked(stream: &mut TcpStream) -> bool {
+    stream.write_all(b"0\r\n\r\n").and_then(|_| stream.flush()).is_ok()
+}

@@ -1,0 +1,513 @@
+//! `dd serve` — the resident flow-as-a-service daemon.
+//!
+//! A long-running, std-only HTTP server (hand-rolled HTTP/JSON over
+//! [`std::net::TcpListener`], no new deps) that accepts flow jobs, runs
+//! them on the engine's resident [`PlanQueue`] over the shared
+//! content-addressed [`ArtifactCache`], and dedups identical submissions
+//! — concurrent identical jobs execute exactly once
+//! ([`CellJob::submission_key`]).
+//!
+//! ## Endpoints
+//!
+//! | method | path               | purpose                                  |
+//! |--------|--------------------|------------------------------------------|
+//! | GET    | `/health`          | liveness probe                           |
+//! | POST   | `/jobs`            | submit a job spec; returns id + dedup    |
+//! | GET    | `/jobs`            | list every job (summary per job)         |
+//! | GET    | `/jobs/<id>`       | one job: state, event log, result        |
+//! | GET    | `/jobs/<id>/result`| the canonical result JSON (terminal only)|
+//! | GET    | `/jobs/<id>/events`| chunked stream of events until terminal  |
+//! | GET    | `/stats`           | submission/execution/dedup + cache stats |
+//! | POST   | `/shutdown`        | drain the queue, stop, audit, exit       |
+//!
+//! ## Determinism contract
+//!
+//! A job's `/jobs/<id>/result` body is exactly
+//! [`crate::report::flow_result_json`] of the [`FlowResult`] the batch
+//! CLI computes for the same options: the queue runs every job through
+//! [`crate::flow::engine::run_benchmark_cached_with`], the same single
+//! definition of a cell as `dduty flow` — byte-identity is by
+//! construction, and `rust/tests/serve.rs` pins it.
+//!
+//! ## Failure semantics
+//!
+//! A failing job is *data*: its state becomes `failed` and its result
+//! carries the structured PR-8 [`crate::flow::FlowError`] records plus
+//! the [`FlowResult::failure_lines`] the batch CLI would print to stderr
+//! — the daemon owns neither the process's stderr nor its exit code.
+//! On shutdown the daemon audits its own bookkeeping
+//! ([`crate::check::audit_serve`], per the check-layer contract) and
+//! reports violations in the final [`ServeSummary`].
+
+pub mod http;
+pub mod json;
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::arch::ArchVariant;
+use crate::bench_suites::{all_suites, BenchParams};
+use crate::check::{self, Violation};
+use crate::flow::engine::{
+    ArtifactCache, CellJob, JobEvent, JobSnapshot, JobState, PlanQueue,
+};
+use crate::flow::{FlowOpts, FlowResult, SeedMetrics};
+use crate::report::{flow_error_json, flow_result_json, json_escape, json_f64, json_f64_arr};
+use crate::util::error::{Error, Result};
+use json::Json;
+
+/// Daemon configuration (the `dduty serve` CLI flags).
+pub struct ServeOpts {
+    /// Bind address, e.g. `127.0.0.1:7878` (port `0` = ephemeral, for
+    /// tests).
+    pub addr: String,
+    /// Resident queue worker threads.
+    pub workers: usize,
+    /// Back the artifact cache with the persistent store.
+    pub disk_cache: bool,
+    /// Byte-size cap on the persistent store in MiB.
+    pub cache_cap_mb: Option<u64>,
+}
+
+/// End-of-life report of one daemon run, printed by the CLI after a
+/// clean shutdown.
+pub struct ServeSummary {
+    /// Distinct jobs ever submitted (dedup'd submissions excluded).
+    pub jobs: usize,
+    /// Jobs a worker actually executed.
+    pub executed: usize,
+    /// Submissions answered by an existing job.
+    pub dedup_hits: usize,
+    /// Jobs that ended `failed`.
+    pub failed_jobs: usize,
+    /// `check::audit_serve` findings over the full job history (empty on
+    /// a healthy run).
+    pub violations: Vec<Violation>,
+}
+
+/// A bound, not-yet-running daemon.
+pub struct Server {
+    listener: TcpListener,
+    addr: SocketAddr,
+    queue: Arc<PlanQueue>,
+}
+
+impl Server {
+    /// Bind the listener and start the resident worker pool.
+    pub fn bind(opts: &ServeOpts) -> Result<Server> {
+        let listener = TcpListener::bind(&opts.addr)
+            .map_err(|e| Error::msg(format!("bind {}: {e}", opts.addr)))?;
+        let addr = listener
+            .local_addr()
+            .map_err(|e| Error::msg(format!("local_addr: {e}")))?;
+        let cache = ArtifactCache::for_cli(opts.disk_cache, opts.cache_cap_mb);
+        let queue = Arc::new(PlanQueue::start(opts.workers, cache));
+        Ok(Server { listener, addr, queue })
+    }
+
+    /// The bound address (resolves port 0 for tests).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The resident queue (tests submit through it directly).
+    pub fn queue(&self) -> &Arc<PlanQueue> {
+        &self.queue
+    }
+
+    /// Accept-loop until a `POST /shutdown` arrives, then drain the
+    /// queue, join every worker, audit the job history, and return the
+    /// summary.  One thread per connection; handler threads are joined
+    /// before shutdown completes, so no response is ever cut off.
+    pub fn run(self) -> ServeSummary {
+        let stop = Arc::new(AtomicBool::new(false));
+        let submitted = Arc::new(AtomicUsize::new(0));
+        let mut handlers: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        for conn in self.listener.incoming() {
+            if stop.load(Ordering::SeqCst) {
+                break;
+            }
+            let stream = match conn {
+                Ok(s) => s,
+                Err(_) => continue,
+            };
+            let queue = Arc::clone(&self.queue);
+            let stop = Arc::clone(&stop);
+            let submitted = Arc::clone(&submitted);
+            let addr = self.addr;
+            handlers.push(std::thread::spawn(move || {
+                handle_connection(stream, &queue, &stop, &submitted, addr);
+            }));
+            // Reap finished handlers so a long-lived daemon does not
+            // accumulate join handles.
+            handlers = handlers
+                .into_iter()
+                .filter_map(|h| {
+                    if h.is_finished() {
+                        let _ = h.join();
+                        None
+                    } else {
+                        Some(h)
+                    }
+                })
+                .collect();
+        }
+        for h in handlers {
+            let _ = h.join();
+        }
+        // Drain every accepted job, then audit the daemon's own
+        // bookkeeping — the check-layer contract applies to the serve
+        // stage like any other.
+        self.queue.shutdown_and_join();
+        let snaps = self.queue.snapshots();
+        let failed_jobs = snaps.iter().filter(|s| s.state == JobState::Failed).count();
+        let violations = check::audit_serve(&snaps);
+        ServeSummary {
+            jobs: snaps.len(),
+            executed: self.queue.executed(),
+            dedup_hits: self.queue.dedup_hits(),
+            failed_jobs,
+            violations,
+        }
+    }
+}
+
+fn handle_connection(
+    mut stream: TcpStream,
+    queue: &PlanQueue,
+    stop: &AtomicBool,
+    submitted: &AtomicUsize,
+    addr: SocketAddr,
+) {
+    let req = match http::read_request(&mut stream) {
+        Ok(r) => r,
+        Err(e) => {
+            http::respond(&mut stream, 400, "Bad Request", &error_body(&e));
+            return;
+        }
+    };
+    let segments: Vec<&str> = req.path.split('/').filter(|s| !s.is_empty()).collect();
+    match (req.method.as_str(), segments.as_slice()) {
+        ("GET", ["health"]) => http::respond(&mut stream, 200, "OK", "{\"ok\": true}"),
+        ("POST", ["jobs"]) => match parse_job_spec(&req.body) {
+            Ok(job) => {
+                submitted.fetch_add(1, Ordering::Relaxed);
+                let (id, fresh) = queue.submit(job);
+                let state = match queue.snapshot(id) {
+                    Some(s) => s.state.name(),
+                    None => JobState::Scheduled.name(),
+                };
+                let body = format!(
+                    "{{\"job\": \"j{id}\", \"id\": {id}, \"state\": \"{state}\", \
+                     \"dedup\": {}}}",
+                    !fresh
+                );
+                let (status, reason) = if fresh { (201, "Created") } else { (200, "OK") };
+                http::respond(&mut stream, status, reason, &body);
+            }
+            Err((status, msg)) => {
+                let reason = if status == 404 { "Not Found" } else { "Bad Request" };
+                http::respond(&mut stream, status, reason, &error_body(&msg));
+            }
+        },
+        ("GET", ["jobs"]) => {
+            let rows: Vec<String> =
+                queue.snapshots().iter().map(job_summary_json).collect();
+            let body = format!("{{\"jobs\": [{}]}}", rows.join(", "));
+            http::respond(&mut stream, 200, "OK", &body);
+        }
+        ("GET", ["jobs", id]) => match parse_job_id(id).and_then(|i| queue.snapshot(i)) {
+            Some(s) => http::respond(&mut stream, 200, "OK", &job_detail_json(&s)),
+            None => http::respond(&mut stream, 404, "Not Found", &unknown_job(id)),
+        },
+        ("GET", ["jobs", id, "result"]) => {
+            match parse_job_id(id).and_then(|i| queue.snapshot(i)) {
+                Some(s) if s.state.is_terminal() => match &s.result {
+                    Some(r) => http::respond(&mut stream, 200, "OK", &flow_result_json(r)),
+                    None => http::respond(
+                        &mut stream,
+                        500,
+                        "Internal Server Error",
+                        &error_body("terminal job carries no result"),
+                    ),
+                },
+                Some(s) => http::respond(
+                    &mut stream,
+                    409,
+                    "Conflict",
+                    &format!(
+                        "{{\"error\": \"job not terminal\", \"state\": \"{}\"}}",
+                        s.state.name()
+                    ),
+                ),
+                None => http::respond(&mut stream, 404, "Not Found", &unknown_job(id)),
+            }
+        }
+        ("GET", ["jobs", id, "events"]) => match parse_job_id(id) {
+            Some(i) if queue.snapshot(i).is_some() => stream_events(&mut stream, queue, i),
+            _ => http::respond(&mut stream, 404, "Not Found", &unknown_job(id)),
+        },
+        ("GET", ["stats"]) => {
+            http::respond(&mut stream, 200, "OK", &stats_json(queue, submitted))
+        }
+        ("POST", ["shutdown"]) => {
+            http::respond(&mut stream, 200, "OK", "{\"ok\": true, \"draining\": true}");
+            stop.store(true, Ordering::SeqCst);
+            // Poke the accept loop so it observes the stop flag.
+            let _ = TcpStream::connect(addr);
+        }
+        (_, ["health" | "jobs" | "stats" | "shutdown", ..]) => http::respond(
+            &mut stream,
+            405,
+            "Method Not Allowed",
+            &error_body(&format!("{} not allowed on {}", req.method, req.path)),
+        ),
+        _ => http::respond(
+            &mut stream,
+            404,
+            "Not Found",
+            &error_body(&format!("no such endpoint {}", req.path)),
+        ),
+    }
+}
+
+/// Stream a job's event log as chunked JSON lines until the job is
+/// terminal (blocking on queue progress, not polling): every
+/// [`JobEvent`] — state transitions and per-seed metrics with
+/// `cpd_trace`, PathFinder iterations, and `astar_pops` — becomes one
+/// chunk the moment it lands.
+fn stream_events(stream: &mut TcpStream, queue: &PlanQueue, id: usize) {
+    if !http::start_chunked(stream) {
+        return;
+    }
+    let mut seen = 0usize;
+    loop {
+        let Some((state, events)) = queue.wait_progress(id, seen) else {
+            break;
+        };
+        seen += events.len();
+        for e in &events {
+            if !http::write_chunk(stream, &format!("{}\n", event_json(e))) {
+                return; // peer hung up; stop waiting on the job
+            }
+        }
+        if state.is_terminal() {
+            let _ = http::write_chunk(
+                stream,
+                &format!("{{\"event\": \"end\", \"state\": \"{}\"}}\n", state.name()),
+            );
+            break;
+        }
+    }
+    let _ = http::end_chunked(stream);
+}
+
+fn error_body(msg: &str) -> String {
+    format!("{{\"error\": \"{}\"}}", json_escape(msg))
+}
+
+fn unknown_job(id: &str) -> String {
+    error_body(&format!("unknown job {id:?}"))
+}
+
+/// `j3` or bare `3` → 3.
+fn parse_job_id(s: &str) -> Option<usize> {
+    s.strip_prefix('j').unwrap_or(s).parse::<usize>().ok()
+}
+
+fn job_summary_json(s: &JobSnapshot) -> String {
+    format!(
+        "{{\"job\": \"j{}\", \"bench\": \"{}\", \"variant\": \"{}\", \
+         \"state\": \"{}\", \"seeds\": {}, \"events\": {}}}",
+        s.id,
+        json_escape(&s.bench),
+        s.variant.name(),
+        s.state.name(),
+        s.n_seeds,
+        s.events.len()
+    )
+}
+
+fn job_detail_json(s: &JobSnapshot) -> String {
+    let events: Vec<String> = s.events.iter().map(event_json).collect();
+    let result = match &s.result {
+        Some(r) => flow_result_json(r),
+        None => "null".to_string(),
+    };
+    format!(
+        "{{\"job\": \"j{}\", \"bench\": \"{}\", \"variant\": \"{}\", \
+         \"state\": \"{}\", \"seeds\": {}, \"submission_key\": \"{:016x}\", \
+         \"events\": [{}], \"result\": {result}}}",
+        s.id,
+        json_escape(&s.bench),
+        s.variant.name(),
+        s.state.name(),
+        s.n_seeds,
+        s.key,
+        events.join(", ")
+    )
+}
+
+fn event_json(e: &JobEvent) -> String {
+    match e {
+        JobEvent::State(s) => {
+            format!("{{\"event\": \"state\", \"state\": \"{}\"}}", s.name())
+        }
+        JobEvent::Seed { index, metrics } => seed_event_json(*index, metrics),
+    }
+}
+
+/// One finished seed as a progress event: the per-seed metrics the
+/// daemon streams incrementally (CPD, closed-loop `cpd_trace`,
+/// PathFinder iterations, the deterministic `astar_pops` odometer, and
+/// the structured error if the seed failed).
+fn seed_event_json(index: usize, m: &SeedMetrics) -> String {
+    let route_iters = match m.route_iters {
+        Some(x) => json_f64(x),
+        None => "null".to_string(),
+    };
+    let astar_pops = match m.astar_pops {
+        Some(n) => n.to_string(),
+        None => "null".to_string(),
+    };
+    let error = match &m.error {
+        Some(e) => flow_error_json(e),
+        None => "null".to_string(),
+    };
+    format!(
+        "{{\"event\": \"seed\", \"index\": {index}, \"seed\": {}, \"cpd_ns\": {}, \
+         \"routed_ok\": {}, \"route_iters\": {route_iters}, \"astar_pops\": {astar_pops}, \
+         \"escalation\": {}, \"cpd_trace_ns\": {}, \"error\": {error}}}",
+        m.seed,
+        json_f64(m.cpd_ns),
+        m.routed_ok,
+        m.escalation,
+        json_f64_arr(&m.cpd_trace_ns)
+    )
+}
+
+fn stats_json(queue: &PlanQueue, submitted: &AtomicUsize) -> String {
+    let st = &queue.cache().stats;
+    format!(
+        "{{\"submitted\": {}, \"jobs\": {}, \"executed\": {}, \"dedup_hits\": {}, \
+         \"cache\": {{\"map_hits\": {}, \"map_misses\": {}, \"pack_hits\": {}, \
+         \"pack_misses\": {}, \"lookahead_hits\": {}, \"lookahead_misses\": {}}}}}",
+        submitted.load(Ordering::Relaxed),
+        queue.len(),
+        queue.executed(),
+        queue.dedup_hits(),
+        st.map_hits.load(Ordering::Relaxed),
+        st.map_misses.load(Ordering::Relaxed),
+        st.pack_hits.load(Ordering::Relaxed),
+        st.pack_misses.load(Ordering::Relaxed),
+        st.lookahead_hits.load(Ordering::Relaxed),
+        st.lookahead_misses.load(Ordering::Relaxed),
+    )
+}
+
+/// Parse a job-spec body into a [`CellJob`].  Strict: unknown fields,
+/// wrong types, and malformed JSON are a 400; an unknown benchmark is a
+/// 404.  Field names mirror the `dduty flow` CLI flags, and the defaults
+/// are [`FlowOpts::default`] with the CLI's default variant (baseline) —
+/// so a spec and the equivalent CLI invocation name the same cell.
+pub fn parse_job_spec(body: &[u8]) -> std::result::Result<CellJob, (u16, String)> {
+    let text = std::str::from_utf8(body)
+        .map_err(|_| (400u16, "body is not UTF-8".to_string()))?;
+    let spec = json::parse(text).map_err(|e| (400u16, format!("bad JSON: {e}")))?;
+    let obj = spec
+        .as_obj()
+        .ok_or((400u16, "job spec must be a JSON object".to_string()))?;
+
+    let mut bench_name: Option<String> = None;
+    let mut variant = ArchVariant::Baseline;
+    let mut flow = FlowOpts::default();
+    for (key, v) in obj {
+        match key.as_str() {
+            "bench" => bench_name = Some(str_field(v, key)?.to_string()),
+            "variant" => {
+                variant = match str_field(v, key)? {
+                    "baseline" => ArchVariant::Baseline,
+                    "dd5" => ArchVariant::Dd5,
+                    "dd6" => ArchVariant::Dd6,
+                    other => {
+                        return Err((
+                            400,
+                            format!("unknown variant {other:?} (baseline|dd5|dd6)"),
+                        ))
+                    }
+                }
+            }
+            "seeds" => {
+                let arr = v
+                    .as_arr()
+                    .ok_or((400u16, "\"seeds\" must be an array of integers".to_string()))?;
+                let mut seeds = Vec::with_capacity(arr.len());
+                for s in arr {
+                    seeds.push(count_field(s, "seeds")? as u64);
+                }
+                if seeds.is_empty() {
+                    return Err((400, "\"seeds\" must be non-empty".to_string()));
+                }
+                flow.seeds = seeds;
+            }
+            "place_effort" => flow.place_effort = num_field(v, key)?,
+            "route" => flow.route = bool_field(v, key)?,
+            "timing_route" => flow.route_timing_weights = bool_field(v, key)?,
+            "sta_every" => flow.sta_every = count_field(v, key)?,
+            "crit_alpha" => flow.crit_alpha = num_field(v, key)?,
+            "place_crit_alpha" => flow.place_crit_alpha = num_field(v, key)?,
+            "move_mix" => flow.move_mix = num_field(v, key)?,
+            "route_jobs" => flow.route_jobs = count_field(v, key)?.max(1),
+            "lookahead" => flow.lookahead = bool_field(v, key)?,
+            "escalate" => flow.escalate = bool_field(v, key)?,
+            "route_pops_budget" => flow.route_pops_budget = count_field(v, key)?,
+            "channel_width" => {
+                let w = count_field(v, key)?;
+                if w == 0 || w > u16::MAX as usize {
+                    return Err((400, format!("\"channel_width\" out of range: {w}")));
+                }
+                flow.channel_width = Some(w as u16);
+            }
+            other => return Err((400, format!("unknown job-spec field {other:?}"))),
+        }
+    }
+    let name = bench_name.ok_or((400u16, "job spec requires \"bench\"".to_string()))?;
+    let params = BenchParams::default();
+    let bench = all_suites(&params)
+        .into_iter()
+        .find(|b| b.name == name)
+        .ok_or((404u16, format!("unknown benchmark {name:?}; see `dduty list`")))?;
+    Ok(CellJob { bench, variant, flow })
+}
+
+fn str_field<'a>(v: &'a Json, key: &str) -> std::result::Result<&'a str, (u16, String)> {
+    v.as_str().ok_or((400, format!("{key:?} must be a string")))
+}
+
+fn bool_field(v: &Json, key: &str) -> std::result::Result<bool, (u16, String)> {
+    v.as_bool().ok_or((400, format!("{key:?} must be a boolean")))
+}
+
+fn num_field(v: &Json, key: &str) -> std::result::Result<f64, (u16, String)> {
+    match v.as_f64() {
+        Some(x) if x.is_finite() => Ok(x),
+        _ => Err((400, format!("{key:?} must be a finite number"))),
+    }
+}
+
+/// A non-negative integer field (counts, seeds, budgets).
+fn count_field(v: &Json, key: &str) -> std::result::Result<usize, (u16, String)> {
+    match v.as_f64() {
+        Some(x) if x.is_finite() && x >= 0.0 && x.fract() == 0.0 && x <= u64::MAX as f64 => {
+            Ok(x as usize)
+        }
+        _ => Err((400, format!("{key:?} must be a non-negative integer"))),
+    }
+}
+
+/// Re-exported for the byte-identity test: the daemon result body for
+/// `r` (exactly [`flow_result_json`]).
+pub fn result_body(r: &FlowResult) -> String {
+    flow_result_json(r)
+}

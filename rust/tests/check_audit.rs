@@ -16,10 +16,12 @@ use double_duty::arch::{Arch, ArchVariant, Device};
 use double_duty::bench_suites::{all_suites, BenchParams};
 use double_duty::check::{
     audit_lookahead, audit_netlist, audit_packing, audit_placement, audit_recovery,
-    audit_routing, audit_timing, check_benchmark, Severity, Stage, Violation,
+    audit_routing, audit_serve, audit_timing, check_benchmark, Severity, Stage, Violation,
 };
 use double_duty::flow::diskcache::{DiskCache, CACHE_VERSION};
-use double_duty::flow::engine::{ArtifactCache, MappedCircuit};
+use double_duty::flow::engine::{
+    ArtifactCache, JobEvent, JobSnapshot, JobState, MappedCircuit,
+};
 use double_duty::flow::{
     assemble_result, FlowError, FlowOpts, RecoveryAction, SeedMetrics, ESCALATION_LADDER,
 };
@@ -390,6 +392,7 @@ fn seed_ok(seed: u64, cpd_ns: f64, used_prior_ps: Option<f64>) -> SeedMetrics {
         cpd_ns,
         routed_ok: true,
         route_iters: Some(3.0),
+        astar_pops: Some(100),
         channel_util: Vec::new(),
         cpd_trace_ns: Vec::new(),
         escalation: 0,
@@ -535,4 +538,104 @@ fn check_benchmark_is_strict_clean_on_a_shipped_bench() {
             report.violations
         );
     }
+}
+
+// --- serve auditor ---------------------------------------------------------
+
+/// A healthy one-job daemon history: full lifecycle event log, seed
+/// events in order while running, a clean terminal result.
+fn serve_fixture() -> Vec<JobSnapshot> {
+    let (r, seeds) = recovery_fixture();
+    let mut events = vec![
+        JobEvent::State(JobState::Scheduled),
+        JobEvent::State(JobState::Running),
+    ];
+    for (i, m) in seeds.iter().enumerate() {
+        events.push(JobEvent::Seed { index: i, metrics: m.clone() });
+    }
+    events.push(JobEvent::State(JobState::Done));
+    vec![JobSnapshot {
+        id: 0,
+        key: 0x1111,
+        bench: "m".to_string(),
+        variant: ArchVariant::Dd5,
+        n_seeds: seeds.len(),
+        state: JobState::Done,
+        events,
+        result: Some(r),
+    }]
+}
+
+#[test]
+fn serve_audit_clean_on_healthy_history() {
+    let jobs = serve_fixture();
+    let vs = audit_serve(&jobs);
+    assert!(vs.is_empty(), "healthy history must audit clean: {vs:?}");
+}
+
+/// Each bookkeeping corruption trips its code — the auditor re-derives
+/// the lifecycle from the event log, so a scheduler bug cannot
+/// self-certify.
+#[test]
+fn serve_audit_catches_lifecycle_corruption() {
+    // Skipping Running: Scheduled -> Done is not a lifecycle edge.
+    let mut jobs = serve_fixture();
+    jobs[0].events.remove(1);
+    assert!(has_code(&audit_serve(&jobs), "serve.state-transition"));
+
+    // A seed event before the job ever ran.
+    let mut jobs = serve_fixture();
+    let seed = jobs[0].events.remove(2);
+    jobs[0].events.insert(0, seed);
+    assert!(has_code(&audit_serve(&jobs), "serve.state-transition"));
+
+    // Seed events out of order (indices 1, 0, ...).
+    let mut jobs = serve_fixture();
+    jobs[0].events.swap(2, 3);
+    assert!(has_code(&audit_serve(&jobs), "serve.state-transition"));
+
+    // Snapshot state disagrees with where the event log ends.
+    let mut jobs = serve_fixture();
+    jobs[0].state = JobState::Failed;
+    assert!(has_code(&audit_serve(&jobs), "serve.state-transition"));
+}
+
+#[test]
+fn serve_audit_catches_result_inconsistency() {
+    // A done job with no result to serve.
+    let mut jobs = serve_fixture();
+    jobs[0].result = None;
+    assert!(has_code(&audit_serve(&jobs), "serve.result-consistency"));
+
+    // A done job whose result records seed failures.
+    let mut jobs = serve_fixture();
+    if let Some(r) = jobs[0].result.as_mut() {
+        r.failed_seeds = 1;
+    }
+    assert!(has_code(&audit_serve(&jobs), "serve.result-consistency"));
+
+    // A still-running job already carrying a result.
+    let mut jobs = serve_fixture();
+    jobs[0].state = JobState::Running;
+    jobs[0].events.truncate(2); // Scheduled, Running
+    assert!(has_code(&audit_serve(&jobs), "serve.result-consistency"));
+    // ... and dropping the result makes the same shape clean.
+    jobs[0].result = None;
+    assert!(audit_serve(&jobs).is_empty(), "{:?}", audit_serve(&jobs));
+}
+
+/// Two jobs sharing a submission key means dedup failed to coalesce
+/// identical submissions onto one execution.
+#[test]
+fn serve_audit_catches_duplicate_submission_keys() {
+    let mut jobs = serve_fixture();
+    let mut twin = jobs[0].clone();
+    twin.id = 1;
+    jobs.push(twin);
+    let vs = audit_serve(&jobs);
+    assert!(has_code(&vs, "serve.dedup-key"), "expected serve.dedup-key in {vs:?}");
+
+    // Distinct keys are fine.
+    jobs[1].key = 0x2222;
+    assert!(audit_serve(&jobs).is_empty());
 }

@@ -18,11 +18,13 @@
 //!
 //! The second lint is panic hygiene for the fault-isolated modules:
 //! `flow` and `route` advertise that every seed failure becomes a
-//! structured [`FlowError`] record (PR 8), so a stray `panic!` /
+//! structured [`FlowError`] record (PR 8), and `serve` advertises that
+//! every malformed request becomes a 4xx, so a stray `panic!` /
 //! `.unwrap()` / `.expect(` on a production path there would be caught
 //! by the engine's job isolation and mis-reported as an internal fault
-//! instead of a typed error.  Reviewed sites (poisoned-mutex unwraps,
-//! lease invariants) live in their own allowlist.
+//! instead of a typed error (or would kill a daemon connection thread).
+//! Reviewed sites (poisoned-mutex unwraps, lease invariants) live in
+//! their own allowlist.
 //!
 //! The last test is the registration guard: `Cargo.toml` sets
 //! `autotests = false`, so a test file that is not declared as a
@@ -263,6 +265,9 @@ fn no_unreviewed_hash_iteration_in_flow_modules() {
 const PANIC_ALLOWLIST: &[(&str, &str)] = &[
     ("flow/diskcache.rs", ".lock().unwrap()"),
     ("flow/engine.rs", ".lock().unwrap()"),
+    // Condvar re-acquisition after a wait: the same poison-propagation
+    // argument as `lock()` — only a panicking peer poisons the mutex.
+    ("flow/engine.rs", "cond.wait(st).unwrap()"),
     ("route/mod.rs", ".lock().unwrap()"),
     // The scratch lease holds `Some` for its whole lifetime by
     // construction (set in `lease()`, taken only in `drop`).
@@ -276,10 +281,10 @@ const PANIC_PATTERNS: &[&str] = &["panic!(", ".unwrap()", ".expect("];
 fn no_unreviewed_panics_in_fault_isolated_modules() {
     let src_root = repo_root().join("rust/src");
     let mut files = Vec::new();
-    for module in ["flow", "route"] {
+    for module in ["flow", "route", "serve"] {
         rs_files(&src_root.join(module), &mut files);
     }
-    assert!(!files.is_empty(), "no sources under rust/src/{{flow,route}}");
+    assert!(!files.is_empty(), "no sources under rust/src/{{flow,route,serve}}");
 
     let mut offenders: Vec<String> = Vec::new();
     let mut matched = vec![false; PANIC_ALLOWLIST.len()];

@@ -1,0 +1,256 @@
+//! `dd serve` contracts, end to end:
+//!
+//! * concurrent identical submissions dedup onto ONE job and ONE
+//!   execution (the cache-dedup story the daemon exists for),
+//! * job lifecycles are deterministic — `Scheduled → Running → seed
+//!   events in order → Done` — and `check::audit_serve` finds the
+//!   history clean,
+//! * a result served over HTTP is byte-identical to what the batch CLI
+//!   computes for the same options (`report::flow_result_json` on both
+//!   sides), even with the daemon's cache warm,
+//! * malformed requests get structured 4xx errors, never a job,
+//! * `POST /shutdown` drains the queue and the run ends audit-clean.
+//!
+//! The HTTP side talks to a real `Server` bound on an ephemeral port
+//! through a raw `TcpStream` client — the same wire a `curl`-driven CI
+//! smoke uses.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+use double_duty::arch::ArchVariant;
+use double_duty::bench_suites::{all_suites, BenchParams, Benchmark};
+use double_duty::check::audit_serve;
+use double_duty::flow::engine::{
+    run_benchmark_cached, ArtifactCache, CellJob, JobEvent, JobState, PlanQueue,
+};
+use double_duty::flow::FlowOpts;
+use double_duty::report::flow_result_json;
+use double_duty::serve::{ServeOpts, ServeSummary, Server};
+
+fn bench(name: &str) -> Benchmark {
+    let params = BenchParams::default();
+    all_suites(&params)
+        .into_iter()
+        .find(|b| b.name == name)
+        .unwrap_or_else(|| panic!("no benchmark named {name}"))
+}
+
+fn small_job(bench_name: &str, route: bool) -> CellJob {
+    CellJob {
+        bench: bench(bench_name),
+        variant: ArchVariant::Dd5,
+        flow: FlowOpts {
+            seeds: vec![1],
+            place_effort: 0.05,
+            route,
+            ..Default::default()
+        },
+    }
+}
+
+/// Bind a daemon on an ephemeral port and run its accept loop on a
+/// thread; the joined handle yields the end-of-life summary.
+fn start_server() -> (SocketAddr, std::thread::JoinHandle<ServeSummary>) {
+    let server = Server::bind(&ServeOpts {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 2,
+        disk_cache: false,
+        cache_cap_mb: None,
+    })
+    .expect("bind ephemeral port");
+    let addr = server.addr();
+    (addr, std::thread::spawn(move || server.run()))
+}
+
+/// Minimal blocking HTTP client: one request, read to EOF (the daemon
+/// sends `Connection: close`), return (status, body-after-headers).
+fn http_req(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, String) {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: dd\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    s.write_all(req.as_bytes()).expect("send request");
+    let mut buf = Vec::new();
+    s.read_to_end(&mut buf).expect("read response");
+    let text = String::from_utf8(buf).expect("UTF-8 response");
+    let status: u16 = text
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("no status line in {text:?}"));
+    let body = match text.split_once("\r\n\r\n") {
+        Some((_, b)) => b.to_string(),
+        None => String::new(),
+    };
+    (status, body)
+}
+
+/// N threads racing the same submission must coalesce onto one job id
+/// with exactly one fresh submission, one execution, and N-1 dedup hits.
+#[test]
+fn concurrent_identical_submits_execute_once() {
+    let queue = PlanQueue::start(2, Arc::new(ArtifactCache::new()));
+    let job = small_job("fsm-like", false);
+    let results: Vec<(usize, bool)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let q = &queue;
+                let j = job.clone();
+                s.spawn(move || q.submit(j))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("submit thread")).collect()
+    });
+    let id = results[0].0;
+    assert!(results.iter().all(|&(i, _)| i == id), "all submissions share one job id");
+    assert_eq!(results.iter().filter(|&&(_, fresh)| fresh).count(), 1);
+    let r = queue.wait_terminal(id).expect("job exists");
+    assert_eq!(r.failed_seeds, 0);
+    assert_eq!(queue.executed(), 1, "identical submissions must execute once");
+    assert_eq!(queue.dedup_hits(), 7);
+    assert_eq!(queue.len(), 1);
+    queue.shutdown_and_join();
+}
+
+/// The event log is the deterministic lifecycle — `Scheduled`, `Running`,
+/// seed events `0..n` in order, `Done` — and the serve auditor agrees.
+#[test]
+fn job_lifecycle_is_deterministic_and_audit_clean() {
+    let queue = PlanQueue::start(1, Arc::new(ArtifactCache::new()));
+    let mut job = small_job("fsm-like", false);
+    job.flow.seeds = vec![1, 2];
+    let (id, fresh) = queue.submit(job);
+    assert!(fresh);
+    let r = queue.wait_terminal(id).expect("job exists");
+    assert_eq!(r.failed_seeds, 0);
+    queue.shutdown_and_join();
+
+    let snaps = queue.snapshots();
+    assert_eq!(snaps.len(), 1);
+    let s = &snaps[0];
+    assert_eq!(s.state, JobState::Done);
+    assert_eq!(s.n_seeds, 2);
+    let states: Vec<JobState> = s
+        .events
+        .iter()
+        .filter_map(|e| match e {
+            JobEvent::State(st) => Some(*st),
+            JobEvent::Seed { .. } => None,
+        })
+        .collect();
+    assert_eq!(states, vec![JobState::Scheduled, JobState::Running, JobState::Done]);
+    let seed_indices: Vec<usize> = s
+        .events
+        .iter()
+        .filter_map(|e| match e {
+            JobEvent::Seed { index, .. } => Some(*index),
+            JobEvent::State(_) => None,
+        })
+        .collect();
+    assert_eq!(seed_indices, vec![0, 1], "seed events stream in seed order");
+    let violations = audit_serve(&snaps);
+    assert!(violations.is_empty(), "audit found: {violations:?}");
+}
+
+/// The tentpole contract: `GET /jobs/<id>/result` is byte-for-byte what
+/// the batch CLI renders for the same options — here on the routed,
+/// closed-timing-loop path, against a *fresh* cache on the batch side
+/// while the daemon's shared cache is warm.  Also pins the CI smoke's
+/// dedup-on-resubmit wire format.
+#[test]
+fn daemon_result_is_byte_identical_to_batch_cli() {
+    let (addr, handle) = start_server();
+    let spec = "{\"bench\": \"fsm-like\", \"variant\": \"dd5\", \"seeds\": [1, 2], \
+                \"place_effort\": 0.05, \"route\": true, \"timing_route\": true}";
+    let (status, body) = http_req(addr, "POST", "/jobs", spec);
+    assert_eq!(status, 201, "fresh submission: {body}");
+    assert!(body.contains("\"id\": 0"), "{body}");
+    assert!(body.contains("\"dedup\": false"), "{body}");
+
+    // The result endpoint is 409 until the job is terminal.
+    let daemon_body = loop {
+        let (st, b) = http_req(addr, "GET", "/jobs/j0/result", "");
+        if st == 200 {
+            break b;
+        }
+        assert_eq!(st, 409, "non-terminal result fetch: {b}");
+        std::thread::sleep(Duration::from_millis(25));
+    };
+
+    let flow = FlowOpts {
+        seeds: vec![1, 2],
+        place_effort: 0.05,
+        route: true,
+        route_timing_weights: true,
+        ..Default::default()
+    };
+    let batch = run_benchmark_cached(&ArtifactCache::new(), &bench("fsm-like"), ArchVariant::Dd5, &flow);
+    assert_eq!(daemon_body, flow_result_json(&batch), "daemon/batch byte-identity");
+
+    // Identical resubmission: answered by the existing (finished) job.
+    let (st, b) = http_req(addr, "POST", "/jobs", spec);
+    assert_eq!(st, 200, "{b}");
+    assert!(b.contains("\"id\": 0"), "{b}");
+    assert!(b.contains("\"dedup\": true"), "{b}");
+    assert!(b.contains("\"state\": \"done\""), "{b}");
+
+    // The event stream of a finished job replays the whole log and ends.
+    let (st, events) = http_req(addr, "GET", "/jobs/j0/events", "");
+    assert_eq!(st, 200);
+    assert!(events.contains("\"event\": \"seed\""), "{events}");
+    assert!(events.contains("\"astar_pops\""), "{events}");
+    assert!(events.contains("\"event\": \"end\", \"state\": \"done\""), "{events}");
+
+    let (st, b) = http_req(addr, "POST", "/shutdown", "");
+    assert_eq!(st, 200);
+    assert!(b.contains("\"draining\": true"), "{b}");
+    let summary = handle.join().expect("server thread");
+    assert_eq!(summary.jobs, 1);
+    assert_eq!(summary.executed, 1, "resubmission must not re-execute");
+    assert_eq!(summary.dedup_hits, 1);
+    assert_eq!(summary.failed_jobs, 0);
+    assert!(summary.violations.is_empty(), "shutdown audit: {:?}", summary.violations);
+}
+
+/// Every malformed request is a structured 4xx — never a queued job,
+/// never a connection drop — and an empty daemon shuts down clean.
+#[test]
+fn malformed_requests_get_structured_4xx() {
+    let (addr, handle) = start_server();
+    let cases: &[(&str, &str, &str, u16)] = &[
+        ("POST", "/jobs", "{not json", 400),
+        ("POST", "/jobs", "[1, 2]", 400),
+        ("POST", "/jobs", "{\"seeds\": [1]}", 400),
+        ("POST", "/jobs", "{\"bench\": \"fsm-like\", \"bogus\": 1}", 400),
+        ("POST", "/jobs", "{\"bench\": \"fsm-like\", \"seeds\": []}", 400),
+        ("POST", "/jobs", "{\"bench\": \"fsm-like\", \"route\": \"yes\"}", 400),
+        ("POST", "/jobs", "{\"bench\": \"fsm-like\", \"variant\": \"dd9\"}", 400),
+        ("POST", "/jobs", "{\"bench\": \"fsm-like\", \"channel_width\": 0}", 400),
+        ("POST", "/jobs", "{\"bench\": \"no-such-circuit\"}", 404),
+        ("GET", "/no-such-endpoint", "", 404),
+        ("GET", "/jobs/99", "", 404),
+        ("GET", "/jobs/99/result", "", 404),
+        ("GET", "/jobs/not-a-number/events", "", 404),
+        ("DELETE", "/jobs", "", 405),
+        ("GET", "/shutdown", "", 405),
+    ];
+    for &(method, path, body, want) in cases {
+        let (st, resp) = http_req(addr, method, path, body);
+        assert_eq!(st, want, "{method} {path} {body:?} -> {resp}");
+        assert!(resp.contains("\"error\""), "{method} {path}: {resp}");
+    }
+    let (st, stats) = http_req(addr, "GET", "/stats", "");
+    assert_eq!(st, 200);
+    assert!(stats.contains("\"jobs\": 0"), "{stats}");
+    assert!(stats.contains("\"executed\": 0"), "{stats}");
+
+    let (st, _) = http_req(addr, "POST", "/shutdown", "");
+    assert_eq!(st, 200);
+    let summary = handle.join().expect("server thread");
+    assert_eq!(summary.jobs, 0);
+    assert!(summary.violations.is_empty());
+}
