@@ -1,0 +1,638 @@
+//! Miter construction: source AIG vs mapped/packed netlist, one shared
+//! AIG, one XOR output per comparison point.
+//!
+//! Both sides are rebuilt into a *single* fresh [`Aig`] whose only leaves
+//! are the sequential-cut inputs (circuit PIs, then FF q outputs).  The
+//! spec side replays the source circuit: AND nodes map one-to-one and
+//! every hard carry chain is expanded into ripple `xor3`/`maj3` logic on
+//! first use.  The impl side evaluates the netlist in combinational
+//! topological order: `Lut` masks lift back into AIG form via
+//! [`Aig::from_truth`], `AdderBit` cells become the same `xor3`/`maj3`
+//! forms, and — in the packed view — adder operands are resolved through
+//! the packing's [`OperandPath`]s, so a wrong absorption decision changes
+//! the modelled function and the miter catches it.
+//!
+//! Because both sides share one structurally-hashed graph, most of a
+//! healthy netlist *folds*: a LUT whose mask provably equals its spec
+//! cone (checked by exhaustive cofactor evaluation over the ≤ 6 cut
+//! leaves — a local proof, never an assumption) is merged onto the spec
+//! literal, carries then ripple onto identical nodes, and the XOR at
+//! each output collapses to constant false.  Cones that do not fold go
+//! to simulation and SAT in [`super`].  The mapper's `lut_n<id>` cell
+//! names are used only as merge *hints*; a lying name fails the local
+//! proof and the cone simply stays unmerged — soundness never rests on
+//! naming.
+
+use super::{Severity, Stage, Violation};
+use crate::netlist::{CellKind, Netlist, NetlistIndex};
+use crate::pack::{OperandPath, Packing};
+use crate::synth::circuit::{AdderChainMacro, Circuit};
+use crate::techmap::aig::{Aig, LeafKind, Lit, Node};
+
+/// Which netlist view the impl side models.
+pub enum EquivView<'a> {
+    /// The mapped netlist as-is (post-`techmap`).
+    Mapped,
+    /// Adder operands re-resolved through the packing's operand paths
+    /// (post-`pack`; packing must be logic-neutral).
+    Packed(&'a Packing),
+}
+
+/// One comparison point (PO or FF data input).
+pub struct MiterOutput {
+    /// `po <name>` or `ff<i>.d` — the stable scan label.
+    pub name: String,
+    pub spec: Lit,
+    pub impl_lit: Lit,
+    /// `spec XOR impl`; `Lit::FALSE` means proven equivalent by folding.
+    pub miter: Lit,
+}
+
+/// The assembled miter.
+pub struct Miter {
+    pub aig: Aig,
+    /// Input names: circuit PIs in declaration order, then `ff<i>.q`.
+    pub inputs: Vec<String>,
+    /// How many of `inputs` are PIs (the rest are FF state bits).
+    pub n_pis: usize,
+    /// Comparison points in stable scan order: POs, then FF d pins.
+    pub outputs: Vec<MiterOutput>,
+    /// LUT cells merged onto their spec cone via a local cut-point proof.
+    pub merged_luts: usize,
+    /// LUT cells lifted via `from_truth` (left for simulation/SAT).
+    pub unmerged_luts: usize,
+}
+
+fn shape(location: impl Into<String>, message: impl Into<String>) -> Violation {
+    Violation::new(Stage::Equiv, Severity::Error, "equiv.shape", location, message)
+}
+
+#[inline]
+fn spec_of(spec: &[Lit], l: Lit) -> Lit {
+    let base = spec.get(l.node() as usize).copied().unwrap_or(Lit::FALSE);
+    if l.is_compl() {
+        base.compl()
+    } else {
+        base
+    }
+}
+
+/// Ripple-expand one hard chain into the miter AIG.
+fn expand_chain(aig: &mut Aig, ch: &AdderChainMacro, spec: &[Lit]) -> (Vec<Lit>, Lit) {
+    let mut carry = spec_of(spec, ch.cin);
+    let mut sums = Vec::with_capacity(ch.ops.len());
+    for &(a, b) in &ch.ops {
+        let ma = spec_of(spec, a);
+        let mb = spec_of(spec, b);
+        sums.push(aig.xor3(ma, mb, carry));
+        carry = aig.maj3(ma, mb, carry);
+    }
+    (sums, carry)
+}
+
+/// Parse a mapper LUT cell name into its spec-AIG root hint:
+/// `lut_n<id>` / `lut_n<id>_neg` / `inv_n<id>` → (node id, complemented).
+fn parse_lut_root(name: &str) -> Option<(u32, bool)> {
+    if let Some(rest) = name.strip_prefix("lut_n") {
+        let (digits, neg) = match rest.strip_suffix("_neg") {
+            Some(d) => (d, true),
+            None => (rest, false),
+        };
+        return digits.parse::<u32>().ok().map(|n| (n, neg));
+    }
+    if let Some(digits) = name.strip_prefix("inv_n") {
+        return digits.parse::<u32>().ok().map(|n| (n, true));
+    }
+    None
+}
+
+/// Local cut-point proof: is `cand` (a miter literal) equal to
+/// `truth` over `ins` for *every* valuation of the boundary nodes?
+///
+/// The cone of `cand` is walked down to the nodes of `ins`; if it stays
+/// inside that boundary (and small), the claim is checked exhaustively
+/// over the ≤ 2^6 boundary valuations.  Proving equality over all
+/// boundary valuations is stronger than equality over the reachable ones,
+/// so a `true` answer makes merging `cand` for the LUT output *sound*;
+/// `false` only means "could not prove locally" and the caller falls back
+/// to the global machinery.
+fn local_prove(aig: &Aig, cand: Lit, truth: u64, ins: &[Lit]) -> bool {
+    const CONE_CAP: usize = 512;
+    let mut boundary: Vec<u32> = ins.iter().map(|l| l.node()).filter(|&n| n != 0).collect();
+    boundary.sort_unstable();
+    boundary.dedup();
+    if boundary.len() > 6 {
+        return false;
+    }
+    // Cone of cand bounded by the boundary nodes.
+    let mut cone: Vec<u32> = Vec::new();
+    let mut stack = vec![cand.node()];
+    while let Some(id) = stack.pop() {
+        if id == 0 || boundary.binary_search(&id).is_ok() || cone.contains(&id) {
+            continue;
+        }
+        match *aig.node(id) {
+            Node::And(a, b) => {
+                cone.push(id);
+                if cone.len() > CONE_CAP {
+                    return false;
+                }
+                stack.push(a.node());
+                stack.push(b.node());
+            }
+            // A leaf outside the boundary: the candidate depends on
+            // something the LUT cannot see — unprovable locally.
+            _ => return false,
+        }
+    }
+    cone.sort_unstable();
+
+    let mut cone_vals = vec![false; cone.len()];
+    for m in 0u32..(1u32 << boundary.len()) {
+        let node_val = |id: u32, cone_vals: &[bool]| -> Option<bool> {
+            if id == 0 {
+                return Some(false);
+            }
+            if let Ok(i) = boundary.binary_search(&id) {
+                return Some(m >> i & 1 == 1);
+            }
+            cone.binary_search(&id).ok().and_then(|i| cone_vals.get(i).copied())
+        };
+        // Ascending node id is topological: fanins resolve first.
+        for ci in 0..cone.len() {
+            let Node::And(a, b) = *aig.node(cone[ci]) else { return false };
+            let (Some(va), Some(vb)) =
+                (node_val(a.node(), &cone_vals), node_val(b.node(), &cone_vals))
+            else {
+                return false;
+            };
+            cone_vals[ci] = (va ^ a.is_compl()) && (vb ^ b.is_compl());
+        }
+        let Some(cv) = node_val(cand.node(), &cone_vals) else { return false };
+        let cand_v = cv ^ cand.is_compl();
+        let mut row = 0usize;
+        for (i, l) in ins.iter().enumerate() {
+            let Some(v) = node_val(l.node(), &cone_vals) else { return false };
+            row |= ((v ^ l.is_compl()) as usize) << i;
+        }
+        if cand_v != (truth >> row & 1 == 1) {
+            return false;
+        }
+    }
+    true
+}
+
+/// Resolve one packed adder operand through its [`OperandPath`].
+fn resolve_operand(
+    path: OperandPath,
+    net_val: Lit,
+    nl: &Netlist,
+    net_lit: &[Lit],
+) -> Lit {
+    match path {
+        // Const / route-through / Z-bypass all deliver the net's value
+        // unchanged (tie-off, LUT pass-through, dedicated bypass pin).
+        OperandPath::Const | OperandPath::RouteThrough | OperandPath::ZBypass => net_val,
+        // An absorbed feeder hardwires *that LUT's* function into the
+        // operand — model exactly that, so absorbing the wrong LUT is a
+        // functional difference the miter sees.
+        OperandPath::AbsorbedLut(l) => nl
+            .cells
+            .get(l as usize)
+            .and_then(|c| c.outs.first())
+            .and_then(|&n| net_lit.get(n as usize))
+            .copied()
+            .unwrap_or(net_val),
+    }
+}
+
+/// Build the miter between `circ` and `nl` under `view`.
+pub fn build(
+    circ: &Circuit,
+    nl: &Netlist,
+    idx: &NetlistIndex,
+    view: &EquivView<'_>,
+) -> Result<Miter, Violation> {
+    let n_pis = circ.pis.len();
+    let n_ffs = circ.ffs.len();
+
+    let mut aig = Aig::new();
+    let mut in_lits = Vec::with_capacity(n_pis + n_ffs);
+    let mut inputs = Vec::with_capacity(n_pis + n_ffs);
+    for name in &circ.pis {
+        in_lits.push(aig.pi());
+        inputs.push(name.clone());
+    }
+    for i in 0..n_ffs {
+        in_lits.push(aig.pi());
+        inputs.push(format!("ff{i}.q"));
+    }
+
+    // --- Spec side: replay the source AIG (ids are topological). --------
+    let mut spec = vec![Lit::FALSE; circ.aig.len()];
+    let mut chain_sums: Vec<Option<(Vec<Lit>, Lit)>> = vec![None; circ.chains.len()];
+    for id in 1..circ.aig.len() as u32 {
+        let lit = match *circ.aig.node(id) {
+            Node::Const0 => Lit::FALSE,
+            Node::And(a, b) => {
+                let ma = spec_of(&spec, a);
+                let mb = spec_of(&spec, b);
+                aig.and(ma, mb)
+            }
+            Node::Leaf(LeafKind::Pi(i)) => match in_lits.get(i as usize) {
+                Some(&l) if (i as usize) < n_pis => l,
+                _ => return Err(shape(format!("aig node {id}"), "PI leaf out of range")),
+            },
+            Node::Leaf(LeafKind::FfQ(i)) => match in_lits.get(n_pis + i as usize) {
+                Some(&l) => l,
+                None => return Err(shape(format!("aig node {id}"), "FF leaf out of range")),
+            },
+            Node::Leaf(LeafKind::AdderSum { chain, pos }) => {
+                let ci = chain as usize;
+                let Some(ch) = circ.chains.get(ci) else {
+                    return Err(shape(format!("aig node {id}"), "chain leaf out of range"));
+                };
+                if chain_sums[ci].is_none() {
+                    chain_sums[ci] = Some(expand_chain(&mut aig, ch, &spec));
+                }
+                match chain_sums[ci].as_ref().and_then(|(s, _)| s.get(pos as usize)) {
+                    Some(&l) => l,
+                    None => {
+                        return Err(shape(
+                            format!("chain {chain}"),
+                            format!("sum position {pos} out of range"),
+                        ))
+                    }
+                }
+            }
+            Node::Leaf(LeafKind::AdderCout { chain }) => {
+                let ci = chain as usize;
+                let Some(ch) = circ.chains.get(ci) else {
+                    return Err(shape(format!("aig node {id}"), "chain leaf out of range"));
+                };
+                if chain_sums[ci].is_none() {
+                    chain_sums[ci] = Some(expand_chain(&mut aig, ch, &spec));
+                }
+                match chain_sums[ci].as_ref() {
+                    Some(&(_, cout)) => cout,
+                    None => return Err(shape(format!("chain {chain}"), "cout unavailable")),
+                }
+            }
+        };
+        spec[id as usize] = lit;
+    }
+
+    // --- Impl side: evaluate the netlist over per-net literals. ----------
+    if nl.inputs.len() != n_pis {
+        return Err(shape(
+            "inputs",
+            format!("netlist has {} inputs, circuit has {n_pis} PIs", nl.inputs.len()),
+        ));
+    }
+    let mut net_lit = vec![Lit::FALSE; nl.nets.len()];
+    for (i, &cid) in nl.inputs.iter().enumerate() {
+        let Some(&net) = nl.cells.get(cid as usize).and_then(|c| c.outs.first()) else {
+            return Err(shape(format!("cell {cid}"), "input cell without output net"));
+        };
+        net_lit[net as usize] = in_lits[i];
+    }
+    let ff_cells: Vec<u32> = nl
+        .cells
+        .iter()
+        .enumerate()
+        .filter(|(_, c)| matches!(c.kind, CellKind::Ff))
+        .map(|(i, _)| i as u32)
+        .collect();
+    if ff_cells.len() != n_ffs {
+        return Err(shape(
+            "ffs",
+            format!("netlist has {} FFs, circuit has {n_ffs}", ff_cells.len()),
+        ));
+    }
+    for (i, &cid) in ff_cells.iter().enumerate() {
+        let Some(&net) = nl.cells.get(cid as usize).and_then(|c| c.outs.first()) else {
+            return Err(shape(format!("cell {cid}"), "FF cell without q net"));
+        };
+        net_lit[net as usize] = in_lits[n_pis + i];
+    }
+    for (cid, cell) in nl.cells.iter().enumerate() {
+        if let CellKind::Const(v) = cell.kind {
+            let Some(&net) = cell.outs.first() else {
+                return Err(shape(format!("cell {cid}"), "const cell without output net"));
+            };
+            net_lit[net as usize] = if v { Lit::TRUE } else { Lit::FALSE };
+        }
+    }
+
+    // Packed view: operand paths per adder-bit cell.
+    let mut paths: Vec<Option<[OperandPath; 2]>> = Vec::new();
+    if let EquivView::Packed(packing) = view {
+        paths = vec![None; nl.cells.len()];
+        for alm in &packing.alms {
+            for (bi, &c) in alm.adder_bits.iter().enumerate() {
+                if let (Some(slot), Some(&p)) =
+                    (paths.get_mut(c as usize), alm.operand_paths.get(bi))
+                {
+                    *slot = Some(p);
+                }
+            }
+        }
+    }
+
+    let mut merged_luts = 0usize;
+    let mut unmerged_luts = 0usize;
+    for &cid in idx.topo_order() {
+        let Some(cell) = nl.cells.get(cid as usize) else { continue };
+        match cell.kind {
+            CellKind::Lut { truth, .. } => {
+                let ins: Vec<Lit> = cell
+                    .ins
+                    .iter()
+                    .map(|&n| net_lit.get(n as usize).copied().unwrap_or(Lit::FALSE))
+                    .collect();
+                let Some(&out) = cell.outs.first() else { continue };
+                let cand = parse_lut_root(&cell.name).and_then(|(node, neg)| {
+                    spec.get(node as usize).map(|&l| if neg { l.compl() } else { l })
+                });
+                let lit = match cand {
+                    Some(c) if local_prove(&aig, c, truth, &ins) => {
+                        merged_luts += 1;
+                        c
+                    }
+                    _ => {
+                        unmerged_luts += 1;
+                        aig.from_truth(truth, &ins)
+                    }
+                };
+                if let Some(slot) = net_lit.get_mut(out as usize) {
+                    *slot = lit;
+                }
+            }
+            CellKind::AdderBit { .. } => {
+                let get_in = |pin: usize| -> Lit {
+                    cell.ins
+                        .get(pin)
+                        .and_then(|&n| net_lit.get(n as usize))
+                        .copied()
+                        .unwrap_or(Lit::FALSE)
+                };
+                let mut a = get_in(0);
+                let mut b = get_in(1);
+                let c = get_in(2);
+                if let Some(Some([pa, pb])) = paths.get(cid as usize) {
+                    a = resolve_operand(*pa, a, nl, &net_lit);
+                    b = resolve_operand(*pb, b, nl, &net_lit);
+                }
+                let sum = aig.xor3(a, b, c);
+                let cout = aig.maj3(a, b, c);
+                if let Some(&sn) = cell.outs.first() {
+                    if let Some(slot) = net_lit.get_mut(sn as usize) {
+                        *slot = sum;
+                    }
+                }
+                if let Some(&cn) = cell.outs.get(1) {
+                    if let Some(slot) = net_lit.get_mut(cn as usize) {
+                        *slot = cout;
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+
+    // --- Comparison points: POs in order, then FF d pins. ----------------
+    if nl.outputs.len() != circ.pos.len() {
+        return Err(shape(
+            "outputs",
+            format!("netlist has {} outputs, circuit has {} POs", nl.outputs.len(), circ.pos.len()),
+        ));
+    }
+    let mut outputs = Vec::with_capacity(circ.pos.len() + n_ffs);
+    for (i, (name, slit)) in circ.pos.iter().enumerate() {
+        let ocell = nl.outputs[i];
+        let Some(ocell_ref) = nl.cells.get(ocell as usize) else {
+            return Err(shape(format!("po {name}"), "output cell missing"));
+        };
+        if ocell_ref.name != *name {
+            return Err(shape(
+                format!("po {name}"),
+                format!("netlist output {i} is named '{}'", ocell_ref.name),
+            ));
+        }
+        let Some(&inet) = ocell_ref.ins.first() else {
+            return Err(shape(format!("po {name}"), "output cell without input net"));
+        };
+        let spec_l = spec_of(&spec, *slit);
+        let impl_l = net_lit.get(inet as usize).copied().unwrap_or(Lit::FALSE);
+        let miter = aig.xor(spec_l, impl_l);
+        outputs.push(MiterOutput {
+            name: format!("po {name}"),
+            spec: spec_l,
+            impl_lit: impl_l,
+            miter,
+        });
+    }
+    for (i, &cid) in ff_cells.iter().enumerate() {
+        let Some(&inet) = nl.cells.get(cid as usize).and_then(|c| c.ins.first()) else {
+            return Err(shape(format!("ff{i}.d"), "FF cell without d net"));
+        };
+        let spec_l = spec_of(&spec, circ.ffs[i].0);
+        let impl_l = net_lit.get(inet as usize).copied().unwrap_or(Lit::FALSE);
+        let miter = aig.xor(spec_l, impl_l);
+        outputs.push(MiterOutput {
+            name: format!("ff{i}.d"),
+            spec: spec_l,
+            impl_lit: impl_l,
+            miter,
+        });
+    }
+
+    Ok(Miter {
+        aig,
+        inputs,
+        n_pis,
+        outputs,
+        merged_luts,
+        unmerged_luts,
+    })
+}
+
+/// Replay one input assignment through the netlist view with plain bools —
+/// an evaluator *independent* of the miter construction, used to render
+/// (and effectively re-verify) every counterexample witness.  Returns
+/// per-net values; `None` only on malformed shapes.
+pub fn replay_netlist(
+    nl: &Netlist,
+    idx: &NetlistIndex,
+    view: &EquivView<'_>,
+    pi_vals: &[bool],
+    ff_vals: &[bool],
+) -> Option<Vec<bool>> {
+    if nl.inputs.len() != pi_vals.len() {
+        return None;
+    }
+    let mut val = vec![false; nl.nets.len()];
+    for (i, &cid) in nl.inputs.iter().enumerate() {
+        let &net = nl.cells.get(cid as usize)?.outs.first()?;
+        val[net as usize] = pi_vals[i];
+    }
+    let mut ffi = 0usize;
+    for cell in &nl.cells {
+        match cell.kind {
+            CellKind::Ff => {
+                let &net = cell.outs.first()?;
+                val[net as usize] = ff_vals.get(ffi).copied().unwrap_or(false);
+                ffi += 1;
+            }
+            CellKind::Const(v) => {
+                let &net = cell.outs.first()?;
+                val[net as usize] = v;
+            }
+            _ => {}
+        }
+    }
+    let mut paths: Vec<Option<[OperandPath; 2]>> = Vec::new();
+    if let EquivView::Packed(packing) = view {
+        paths = vec![None; nl.cells.len()];
+        for alm in &packing.alms {
+            for (bi, &c) in alm.adder_bits.iter().enumerate() {
+                if let (Some(slot), Some(&p)) =
+                    (paths.get_mut(c as usize), alm.operand_paths.get(bi))
+                {
+                    *slot = Some(p);
+                }
+            }
+        }
+    }
+    for &cid in idx.topo_order() {
+        let cell = nl.cells.get(cid as usize)?;
+        match cell.kind {
+            CellKind::Lut { truth, .. } => {
+                let mut row = 0usize;
+                for (i, &n) in cell.ins.iter().enumerate() {
+                    let v = val.get(n as usize).copied().unwrap_or(false);
+                    row |= (v as usize) << i;
+                }
+                let &out = cell.outs.first()?;
+                val[out as usize] = truth >> row & 1 == 1;
+            }
+            CellKind::AdderBit { .. } => {
+                let get_in = |pin: usize| -> bool {
+                    cell.ins
+                        .get(pin)
+                        .and_then(|&n| val.get(n as usize))
+                        .copied()
+                        .unwrap_or(false)
+                };
+                let mut a = get_in(0);
+                let mut b = get_in(1);
+                let c = get_in(2);
+                if let Some(Some([pa, pb])) = paths.get(cid as usize) {
+                    let resolve = |p: OperandPath, net_v: bool| -> bool {
+                        match p {
+                            OperandPath::Const
+                            | OperandPath::RouteThrough
+                            | OperandPath::ZBypass => net_v,
+                            OperandPath::AbsorbedLut(l) => nl
+                                .cells
+                                .get(l as usize)
+                                .and_then(|c| c.outs.first())
+                                .and_then(|&n| val.get(n as usize))
+                                .copied()
+                                .unwrap_or(net_v),
+                        }
+                    };
+                    a = resolve(*pa, a);
+                    b = resolve(*pb, b);
+                }
+                let sum = a ^ b ^ c;
+                let cout = (a & b) | (a & c) | (b & c);
+                if let Some(&sn) = cell.outs.first() {
+                    val[sn as usize] = sum;
+                }
+                if let Some(&cn) = cell.outs.get(1) {
+                    val[cn as usize] = cout;
+                }
+            }
+            _ => {}
+        }
+    }
+    Some(val)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::techmap::{map_circuit, MapOpts};
+
+    fn adder_circ() -> Circuit {
+        let mut c = Circuit::new("eqm");
+        let x = c.pi_bus("x", 4);
+        let y = c.pi_bus("y", 4);
+        let s = c.ripple_add(&x, &y);
+        c.po_bus("s", &s);
+        let m = c.aig.maj3(x[0], y[0], x[1]);
+        c.po("m", m);
+        c
+    }
+
+    #[test]
+    fn healthy_mapped_miter_folds_every_output() {
+        let c = adder_circ();
+        let nl = map_circuit(&c, &MapOpts::default());
+        let idx = NetlistIndex::build(&nl);
+        let m = build(&c, &nl, &idx, &EquivView::Mapped).expect("miter");
+        assert_eq!(m.outputs.len(), c.pos.len());
+        for o in &m.outputs {
+            assert_eq!(o.miter, Lit::FALSE, "{} did not fold", o.name);
+        }
+        assert!(m.merged_luts + m.unmerged_luts > 0 || nl.num_luts() == 0);
+    }
+
+    #[test]
+    fn corrupted_truth_mask_breaks_folding() {
+        let c = adder_circ();
+        let mut nl = map_circuit(&c, &MapOpts::default());
+        let lut = nl
+            .cells
+            .iter()
+            .position(|cl| matches!(cl.kind, CellKind::Lut { .. }))
+            .expect("a lut");
+        if let CellKind::Lut { truth, .. } = &mut nl.cells[lut].kind {
+            *truth ^= 1;
+        }
+        let idx = NetlistIndex::build(&nl);
+        let m = build(&c, &nl, &idx, &EquivView::Mapped).expect("miter");
+        // The corrupted cone must not fold to constant-equal everywhere
+        // (it may fold to constant TRUE, which is a detected mismatch).
+        assert!(
+            m.outputs.iter().any(|o| o.miter != Lit::FALSE),
+            "flipped truth bit still folded clean"
+        );
+    }
+
+    #[test]
+    fn lut_name_hints_parse() {
+        assert_eq!(parse_lut_root("lut_n42"), Some((42, false)));
+        assert_eq!(parse_lut_root("lut_n7_neg"), Some((7, true)));
+        assert_eq!(parse_lut_root("inv_n3"), Some((3, true)));
+        assert_eq!(parse_lut_root("fa_0_1"), None);
+        assert_eq!(parse_lut_root("lut_nxyz"), None);
+    }
+
+    #[test]
+    fn replay_matches_circuit_simulation() {
+        let c = adder_circ();
+        let nl = map_circuit(&c, &MapOpts::default());
+        let idx = NetlistIndex::build(&nl);
+        for pat in 0u32..64 {
+            let pis: Vec<bool> = (0..8).map(|i| pat.wrapping_mul(37) >> i & 1 == 1).collect();
+            let want = c.simulate(&pis, &[]);
+            let vals = replay_netlist(&nl, &idx, &EquivView::Mapped, &pis, &[]).expect("replay");
+            for (i, &ocell) in nl.outputs.iter().enumerate() {
+                let inet = nl.cells[ocell as usize].ins[0] as usize;
+                assert_eq!(vals[inet], want[i], "PO {i} under pattern {pat}");
+            }
+        }
+    }
+}

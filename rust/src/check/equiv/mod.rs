@@ -1,0 +1,373 @@
+//! `check::equiv` — SAT-based combinational equivalence checking for the
+//! whole synth→map→pack flow.
+//!
+//! # The logic-neutrality contract
+//!
+//! Two flow stages claim to preserve logic and this module is the
+//! enforcement mechanism for both:
+//!
+//! * **`techmap::map_circuit` (map)** — every LUT truth table, inverter,
+//!   and `AdderBit` cell of the mapped netlist must compute exactly the
+//!   function of the source AIG at the sequential cut (PIs + FF q in,
+//!   POs + FF d out).
+//! * **`pack` (pack)** — packing may *rearrange* (cluster, absorb
+//!   operand feeders, break chains, route operands through the Z
+//!   bypass) but must never change the computed function.  Every
+//!   [`crate::pack::OperandPath`] variant — `Const`, `AbsorbedLut`,
+//!   `RouteThrough`, `ZBypass` — resolves to the same boolean value the
+//!   mapped netlist delivered on that operand pin, for `chain_break`
+//!   and Z-bypass packings alike.
+//!
+//! # Pipeline
+//!
+//! For each comparison point (PO, then FF d — stable scan order):
+//!
+//! 1. **Fold** — spec and impl are rebuilt into one structurally-hashed
+//!    miter AIG ([`miter`]); equivalent cones usually collapse so the
+//!    XOR output is literally `FALSE`, which is a proof by construction.
+//! 2. **Simulate** — surviving cones get 64-way word-parallel random
+//!    simulation ([`sim`]) under a fixed seed; a non-zero miter word is
+//!    an immediate counterexample.
+//! 3. **SAT** — still-surviving cones are Tseitin-encoded ([`cnf`]) and
+//!    discharged by the in-crate CDCL solver ([`sat`]): UNSAT proves
+//!    equivalence, SAT yields an input-assignment witness, and a blown
+//!    conflict budget degrades to a `Warning`-severity
+//!    `equiv.undecided` — never a false verdict.
+//!
+//! Every witness is replayed through two *independent* evaluators — the
+//! source circuit's [`crate::synth::circuit::Circuit::try_simulate_cut`]
+//! and the plain-bool netlist interpreter
+//! [`miter::replay_netlist`] — before it is reported, so an
+//! `equiv.mismatch` violation always carries a concrete, re-checkable
+//! input assignment.
+//!
+//! # Determinism
+//!
+//! Reports are bit-identical for any `--jobs`: SAT cones fan out over
+//! [`crate::coordinator::parallel_indexed`] (index-ordered collection),
+//! the simulation seed is fixed, CNF variable numbering follows node
+//! ids, and violations are emitted in output scan order.  No wall-clock
+//! reads, no hash-map iteration.
+
+pub mod cnf;
+pub mod miter;
+pub mod sat;
+pub mod sim;
+
+use super::{Severity, Stage, Violation};
+use crate::coordinator;
+use crate::netlist::{CellKind, Netlist, NetlistIndex};
+use crate::pack::Packing;
+use crate::synth::circuit::Circuit;
+use crate::techmap::aig::{LeafKind, Lit};
+use miter::{EquivView, Miter, MiterOutput};
+use sat::SatResult;
+
+/// Tuning knobs for one equivalence run.
+#[derive(Clone, Copy, Debug)]
+pub struct EquivOpts {
+    /// Random-simulation rounds (64 vectors each) before SAT.
+    pub sim_rounds: usize,
+    /// CDCL conflict budget per cone; exhaustion → `equiv.undecided`.
+    pub max_conflicts: u64,
+    /// Worker threads for the SAT wave; 0 = [`coordinator::default_workers`].
+    pub jobs: usize,
+}
+
+impl Default for EquivOpts {
+    fn default() -> Self {
+        EquivOpts { sim_rounds: 8, max_conflicts: 100_000, jobs: 0 }
+    }
+}
+
+/// Aggregate counters for one checked view.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EquivSummary {
+    /// Comparison points scanned (POs + FF d pins).
+    pub outputs: usize,
+    /// Proven equivalent by structural folding (miter literal = FALSE).
+    pub folded: usize,
+    /// Refuted by random simulation.
+    pub sim_refuted: usize,
+    /// Proven equivalent by SAT (UNSAT miter cone).
+    pub sat_proved: usize,
+    /// Refuted by SAT (model witness).
+    pub sat_refuted: usize,
+    /// Conflict budget exhausted or unencodable cone.
+    pub undecided: usize,
+    /// LUT cells merged onto spec cones via local cut-point proofs.
+    pub merged_luts: usize,
+    /// LUT cells lifted via `from_truth` instead.
+    pub unmerged_luts: usize,
+}
+
+impl EquivSummary {
+    /// Every output proven equivalent (folded or SAT-UNSAT), none
+    /// refuted, none undecided.
+    pub fn all_proved(&self) -> bool {
+        self.folded + self.sat_proved == self.outputs
+    }
+}
+
+/// One counterexample: an input assignment under which spec and impl
+/// disagree at `output`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Mismatch {
+    /// Scan label (`po <name>` or `ff<i>.d`).
+    pub output: String,
+    pub pi_vals: Vec<bool>,
+    pub ff_vals: Vec<bool>,
+    pub spec_val: bool,
+    pub impl_val: bool,
+}
+
+/// Full result of checking one view.
+#[derive(Debug, Default)]
+pub struct EquivOutcome {
+    pub summary: EquivSummary,
+    pub violations: Vec<Violation>,
+    pub mismatches: Vec<Mismatch>,
+}
+
+impl EquivOutcome {
+    pub fn is_clean(&self) -> bool {
+        self.violations.is_empty()
+    }
+}
+
+fn bits(vals: &[bool]) -> String {
+    vals.iter().map(|&v| if v { '1' } else { '0' }).collect()
+}
+
+/// Per-output verdict, collected before rendering violations in scan
+/// order so the report is independent of how the work was scheduled.
+enum Verdict {
+    Folded,
+    SimRefuted(Vec<bool>),
+    SatProved,
+    SatRefuted(Vec<bool>),
+    Undecided(&'static str),
+}
+
+/// Replay `assignment` (miter-input order: PIs then FF q) through both
+/// independent evaluators and render the mismatch.  Falls back to the
+/// miter AIG itself if an evaluator rejects the shape (which would
+/// itself indicate a builder bug, not a spec/impl agreement).
+fn render_mismatch(
+    circ: &Circuit,
+    nl: &Netlist,
+    idx: &NetlistIndex,
+    view: &EquivView<'_>,
+    m: &Miter,
+    oi: usize,
+    out: &MiterOutput,
+    assignment: &[bool],
+) -> Mismatch {
+    let n_pis = m.n_pis;
+    let pi_vals: Vec<bool> = assignment.iter().copied().take(n_pis).collect();
+    let ff_vals: Vec<bool> = assignment.iter().copied().skip(n_pis).collect();
+
+    let miter_eval = |l: Lit| -> bool {
+        m.aig.eval(l, |k| match k {
+            LeafKind::Pi(i) => assignment.get(i as usize).copied().unwrap_or(false),
+            _ => false,
+        })
+    };
+
+    // Independent spec-side replay.
+    let spec_val = match circ.try_simulate_cut(&pi_vals, &ff_vals) {
+        Some((pos, ffd)) => {
+            if oi < pos.len() {
+                pos[oi]
+            } else {
+                ffd.get(oi - pos.len()).copied().unwrap_or_else(|| miter_eval(out.spec))
+            }
+        }
+        None => miter_eval(out.spec),
+    };
+
+    // Independent impl-side replay: find the net feeding this output.
+    let impl_net = if oi < nl.outputs.len() {
+        nl.outputs
+            .get(oi)
+            .and_then(|&c| nl.cells.get(c as usize))
+            .and_then(|c| c.ins.first())
+            .copied()
+    } else {
+        let fi = oi - nl.outputs.len();
+        nl.cells
+            .iter()
+            .filter(|c| matches!(c.kind, CellKind::Ff))
+            .nth(fi)
+            .and_then(|c| c.ins.first())
+            .copied()
+    };
+    let impl_val = match (miter::replay_netlist(nl, idx, view, &pi_vals, &ff_vals), impl_net) {
+        (Some(vals), Some(net)) => {
+            vals.get(net as usize).copied().unwrap_or_else(|| miter_eval(out.impl_lit))
+        }
+        _ => miter_eval(out.impl_lit),
+    };
+
+    Mismatch { output: out.name.clone(), pi_vals, ff_vals, spec_val, impl_val }
+}
+
+/// Check one view of `nl` against `circ`.  Never panics; malformed
+/// shapes surface as `equiv.shape` violations.
+fn check_view(
+    circ: &Circuit,
+    nl: &Netlist,
+    idx: &NetlistIndex,
+    view: &EquivView<'_>,
+    opts: &EquivOpts,
+) -> EquivOutcome {
+    let m = match miter::build(circ, nl, idx, view) {
+        Ok(m) => m,
+        Err(v) => {
+            return EquivOutcome {
+                summary: EquivSummary::default(),
+                violations: vec![v],
+                mismatches: Vec::new(),
+            }
+        }
+    };
+
+    let mut verdicts: Vec<Option<Verdict>> = Vec::with_capacity(m.outputs.len());
+    for out in &m.outputs {
+        verdicts.push(if out.miter == Lit::FALSE { Some(Verdict::Folded) } else { None });
+    }
+
+    // Simulation prefilter over the unresolved cones.
+    let open: Vec<usize> =
+        (0..m.outputs.len()).filter(|&i| verdicts[i].is_none()).collect();
+    if !open.is_empty() {
+        let lits: Vec<Lit> = open.iter().map(|&i| m.outputs[i].miter).collect();
+        let hits = sim::prefilter(&m.aig, m.inputs.len(), &lits, opts.sim_rounds);
+        for (k, hit) in hits.into_iter().enumerate() {
+            if let Some(assignment) = hit {
+                verdicts[open[k]] = Some(Verdict::SimRefuted(assignment));
+            }
+        }
+    }
+
+    // SAT wave over whatever survived, fixed order, index-ordered collection.
+    let survivors: Vec<usize> =
+        (0..m.outputs.len()).filter(|&i| verdicts[i].is_none()).collect();
+    if !survivors.is_empty() {
+        let jobs = if opts.jobs == 0 { coordinator::default_workers() } else { opts.jobs };
+        let max_conflicts = opts.max_conflicts;
+        let aig = &m.aig;
+        let outs = &m.outputs;
+        let n_inputs = m.inputs.len();
+        let sat_verdicts: Vec<Verdict> =
+            coordinator::parallel_indexed(survivors.len(), jobs, |k| {
+                let oi = survivors[k];
+                let Some(cone) = cnf::encode_cone(aig, outs[oi].miter) else {
+                    return Verdict::Undecided("cone contains a non-PI leaf");
+                };
+                let mut solver = cone.solver;
+                match solver.solve(max_conflicts) {
+                    SatResult::Unsat => Verdict::SatProved,
+                    SatResult::Sat(model) => {
+                        let mut assignment = vec![false; n_inputs];
+                        for &(i, v) in &cone.inputs {
+                            if let (Some(slot), Some(&val)) =
+                                (assignment.get_mut(i as usize), model.get(v as usize))
+                            {
+                                *slot = val;
+                            }
+                        }
+                        Verdict::SatRefuted(assignment)
+                    }
+                    SatResult::Unknown => Verdict::Undecided("conflict budget exhausted"),
+                }
+            });
+        for (k, v) in sat_verdicts.into_iter().enumerate() {
+            verdicts[survivors[k]] = Some(v);
+        }
+    }
+
+    // Render in output scan order.
+    let mut summary = EquivSummary {
+        outputs: m.outputs.len(),
+        merged_luts: m.merged_luts,
+        unmerged_luts: m.unmerged_luts,
+        ..EquivSummary::default()
+    };
+    let mut violations = Vec::new();
+    let mut mismatches = Vec::new();
+    for (oi, verdict) in verdicts.into_iter().enumerate() {
+        let out = &m.outputs[oi];
+        match verdict {
+            Some(Verdict::Folded) => summary.folded += 1,
+            Some(Verdict::SatProved) => summary.sat_proved += 1,
+            Some(v @ (Verdict::SimRefuted(_) | Verdict::SatRefuted(_))) => {
+                let a = match v {
+                    Verdict::SimRefuted(a) => {
+                        summary.sim_refuted += 1;
+                        a
+                    }
+                    Verdict::SatRefuted(a) => {
+                        summary.sat_refuted += 1;
+                        a
+                    }
+                    _ => Vec::new(),
+                };
+                let mm = render_mismatch(circ, nl, idx, view, &m, oi, out, &a);
+                violations.push(Violation::new(
+                    Stage::Equiv,
+                    Severity::Error,
+                    "equiv.mismatch",
+                    out.name.clone(),
+                    format!(
+                        "spec={} impl={} under pis={} ffq={}",
+                        mm.spec_val as u8,
+                        mm.impl_val as u8,
+                        bits(&mm.pi_vals),
+                        bits(&mm.ff_vals),
+                    ),
+                ));
+                mismatches.push(mm);
+            }
+            Some(Verdict::Undecided(why)) => {
+                summary.undecided += 1;
+                violations.push(Violation::new(
+                    Stage::Equiv,
+                    Severity::Warning,
+                    "equiv.undecided",
+                    out.name.clone(),
+                    format!("equivalence not decided: {why}"),
+                ));
+            }
+            None => {
+                summary.undecided += 1;
+                violations.push(Violation::new(
+                    Stage::Equiv,
+                    Severity::Warning,
+                    "equiv.undecided",
+                    out.name.clone(),
+                    "no verdict recorded",
+                ));
+            }
+        }
+    }
+    EquivOutcome { summary, violations, mismatches }
+}
+
+/// Check the mapped netlist against the source circuit.
+pub fn equiv_mapped(circ: &Circuit, nl: &Netlist, opts: &EquivOpts) -> EquivOutcome {
+    let idx = NetlistIndex::build(nl);
+    check_view(circ, nl, &idx, &EquivView::Mapped, opts)
+}
+
+/// Check the packed view (operand paths applied) against the source
+/// circuit.  Packing must be logic-neutral; any deviation is a mismatch.
+pub fn equiv_packed(
+    circ: &Circuit,
+    nl: &Netlist,
+    packing: &Packing,
+    opts: &EquivOpts,
+) -> EquivOutcome {
+    let idx = NetlistIndex::build(nl);
+    check_view(circ, nl, &idx, &EquivView::Packed(packing), opts)
+}

@@ -1,0 +1,536 @@
+//! A small deterministic CDCL SAT solver (the discharge engine behind
+//! [`super`]'s miter cones).
+//!
+//! Classic conflict-driven clause learning with the three ingredients the
+//! issue names and nothing speculative on top:
+//!
+//! * **two watched literals** per clause — propagation touches only the
+//!   clauses whose watch just became false;
+//! * **VSIDS-lite** branching — per-variable activity bumped on every
+//!   conflict-side variable and decayed geometrically per conflict, with
+//!   ties broken toward the *lowest* variable index so the decision
+//!   sequence is a pure function of the CNF;
+//! * **first-UIP learning** — each conflict learns the first
+//!   unique-implication-point clause and backjumps to its assertion
+//!   level.
+//!
+//! Restarts follow a fixed geometric schedule (also deterministic).  The
+//! solver never panics: a malformed query degrades to `Unsat` (empty
+//! clause) or `Unknown` (budget exhausted), and every internal lookup is
+//! bounds-guarded.  There is no wall clock anywhere — the only resource
+//! limit is the logical conflict budget, so results are bit-identical
+//! across machines and worker counts (the determinism contract every
+//! `check` auditor carries).
+
+/// Variable index (0-based).
+pub type Var = u32;
+
+/// A literal: variable with a sign bit in the LSB (`var << 1 | neg`).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct SLit(pub u32);
+
+impl SLit {
+    #[inline]
+    pub fn new(v: Var, neg: bool) -> SLit {
+        SLit(v << 1 | neg as u32)
+    }
+
+    #[inline]
+    pub fn var(self) -> Var {
+        self.0 >> 1
+    }
+
+    #[inline]
+    pub fn is_neg(self) -> bool {
+        self.0 & 1 == 1
+    }
+
+    #[inline]
+    #[must_use]
+    pub fn negate(self) -> SLit {
+        SLit(self.0 ^ 1)
+    }
+
+    #[inline]
+    fn idx(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// Outcome of [`Solver::solve`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SatResult {
+    /// Satisfiable; the model assigns every variable (`model[v]`).
+    Sat(Vec<bool>),
+    /// Proven unsatisfiable.
+    Unsat,
+    /// Conflict budget exhausted before a verdict.
+    Unknown,
+}
+
+const NO_REASON: u32 = u32::MAX;
+
+/// CDCL solver state.  Build with [`Solver::new`], add clauses, then
+/// [`Solver::solve`] once (the solver is single-shot).
+pub struct Solver {
+    n_vars: usize,
+    clauses: Vec<Vec<SLit>>,
+    /// Per literal: indices of clauses watching it.
+    watches: Vec<Vec<u32>>,
+    /// Per variable: +1 true, -1 false, 0 unassigned.
+    assigns: Vec<i8>,
+    level: Vec<u32>,
+    reason: Vec<u32>,
+    trail: Vec<SLit>,
+    trail_lim: Vec<usize>,
+    qhead: usize,
+    activity: Vec<f64>,
+    var_inc: f64,
+    seen: Vec<bool>,
+    /// An empty or root-conflicting clause was added.
+    root_unsat: bool,
+}
+
+impl Solver {
+    pub fn new(n_vars: usize) -> Solver {
+        Solver {
+            n_vars,
+            clauses: Vec::new(),
+            watches: vec![Vec::new(); n_vars * 2],
+            assigns: vec![0; n_vars],
+            level: vec![0; n_vars],
+            reason: vec![NO_REASON; n_vars],
+            trail: Vec::new(),
+            trail_lim: Vec::new(),
+            qhead: 0,
+            activity: vec![0.0; n_vars],
+            var_inc: 1.0,
+            seen: vec![false; n_vars],
+            root_unsat: false,
+        }
+    }
+
+    #[inline]
+    fn value(&self, l: SLit) -> i8 {
+        let a = self.assigns.get(l.var() as usize).copied().unwrap_or(0);
+        if l.is_neg() {
+            -a
+        } else {
+            a
+        }
+    }
+
+    #[inline]
+    fn decision_level(&self) -> usize {
+        self.trail_lim.len()
+    }
+
+    fn enqueue(&mut self, l: SLit, reason: u32) {
+        let v = l.var() as usize;
+        if v >= self.n_vars {
+            return;
+        }
+        self.assigns[v] = if l.is_neg() { -1 } else { 1 };
+        self.level[v] = self.decision_level() as u32;
+        self.reason[v] = reason;
+        self.trail.push(l);
+    }
+
+    /// Add a clause.  Literals referencing variables `>= n_vars` are
+    /// dropped (a caller bug that must degrade, not panic); an empty
+    /// clause marks the instance root-unsatisfiable.
+    pub fn add_clause(&mut self, lits: &[SLit]) {
+        if self.root_unsat {
+            return;
+        }
+        let mut cl: Vec<SLit> = lits
+            .iter()
+            .copied()
+            .filter(|l| (l.var() as usize) < self.n_vars)
+            .collect();
+        cl.dedup();
+        match cl.len() {
+            0 => self.root_unsat = true,
+            1 => match self.value(cl[0]) {
+                1 => {}
+                -1 => self.root_unsat = true,
+                _ => self.enqueue(cl[0], NO_REASON),
+            },
+            _ => {
+                let ci = self.clauses.len() as u32;
+                self.watches[cl[0].idx()].push(ci);
+                self.watches[cl[1].idx()].push(ci);
+                self.clauses.push(cl);
+            }
+        }
+    }
+
+    /// Propagate all enqueued assignments; `Some(clause)` on conflict.
+    fn propagate(&mut self) -> Option<u32> {
+        while self.qhead < self.trail.len() {
+            let p = self.trail[self.qhead];
+            self.qhead += 1;
+            // Clauses watching ¬p just lost that watch.
+            let false_lit = p.negate();
+            let ws = std::mem::take(&mut self.watches[false_lit.idx()]);
+            let mut keep: Vec<u32> = Vec::with_capacity(ws.len());
+            let mut conflict = None;
+            for (wi, &ci) in ws.iter().enumerate() {
+                let cii = ci as usize;
+                if cii >= self.clauses.len() {
+                    continue;
+                }
+                if self.clauses[cii].first().copied() == Some(false_lit) {
+                    self.clauses[cii].swap(0, 1);
+                }
+                let first = self.clauses[cii][0];
+                if self.value(first) == 1 {
+                    keep.push(ci);
+                    continue;
+                }
+                let mut moved = false;
+                for k in 2..self.clauses[cii].len() {
+                    let lk = self.clauses[cii][k];
+                    if self.value(lk) != -1 {
+                        self.clauses[cii].swap(1, k);
+                        let new_watch = self.clauses[cii][1];
+                        self.watches[new_watch.idx()].push(ci);
+                        moved = true;
+                        break;
+                    }
+                }
+                if moved {
+                    continue;
+                }
+                // Unit under the current assignment, or conflicting.
+                keep.push(ci);
+                if self.value(first) == -1 {
+                    keep.extend_from_slice(&ws[wi + 1..]);
+                    conflict = Some(ci);
+                    break;
+                }
+                self.enqueue(first, ci);
+            }
+            self.watches[false_lit.idx()] = keep;
+            if conflict.is_some() {
+                self.qhead = self.trail.len();
+                return conflict;
+            }
+        }
+        None
+    }
+
+    fn bump(&mut self, v: usize) {
+        if v >= self.activity.len() {
+            return;
+        }
+        self.activity[v] += self.var_inc;
+        if self.activity[v] > 1e100 {
+            for a in &mut self.activity {
+                *a *= 1e-100;
+            }
+            self.var_inc *= 1e-100;
+        }
+    }
+
+    /// First-UIP conflict analysis: returns (learnt clause with the
+    /// asserting literal first, backjump level), or `None` if the
+    /// implication graph is inconsistent (a caller bug; learning anything
+    /// on that path would be unsound, so the solve degrades to Unknown).
+    fn analyze(&mut self, confl: u32) -> Option<(Vec<SLit>, usize)> {
+        let mut learnt: Vec<SLit> = vec![SLit(0)]; // slot 0 = asserting lit
+        let mut counter = 0usize;
+        let mut p: Option<SLit> = None;
+        let mut ci = confl as usize;
+        let mut idx = self.trail.len();
+        let cur = self.decision_level() as u32;
+        loop {
+            if ci < self.clauses.len() {
+                for j in 0..self.clauses[ci].len() {
+                    let q = self.clauses[ci][j];
+                    if Some(q) == p {
+                        continue;
+                    }
+                    let v = q.var() as usize;
+                    if v < self.n_vars && !self.seen[v] && self.level[v] > 0 {
+                        self.seen[v] = true;
+                        self.bump(v);
+                        if self.level[v] >= cur {
+                            counter += 1;
+                        } else {
+                            learnt.push(q);
+                        }
+                    }
+                }
+            }
+            // Walk the trail backwards to the next marked literal.
+            let pl = loop {
+                if idx == 0 {
+                    break None;
+                }
+                idx -= 1;
+                let t = self.trail[idx];
+                if self.seen[t.var() as usize] {
+                    break Some(t);
+                }
+            };
+            let Some(pl) = pl else {
+                // Unreachable when the implication graph is consistent
+                // (counter tracks marked current-level literals still on
+                // the trail); bail out rather than learn a bogus clause.
+                self.seen.iter_mut().for_each(|s| *s = false);
+                return None;
+            };
+            let v = pl.var() as usize;
+            self.seen[v] = false;
+            counter = counter.saturating_sub(1);
+            if counter == 0 {
+                learnt[0] = pl.negate();
+                break;
+            }
+            if self.reason[v] == NO_REASON {
+                // Decision reached with marked literals outstanding —
+                // same inconsistency, same safe exit.
+                self.seen.iter_mut().for_each(|s| *s = false);
+                return None;
+            }
+            p = Some(pl);
+            ci = self.reason[v] as usize;
+        }
+        for l in &learnt[1..] {
+            let v = l.var() as usize;
+            if v < self.seen.len() {
+                self.seen[v] = false;
+            }
+        }
+        // Backjump to the second-highest decision level in the clause.
+        let mut bt = 0usize;
+        if learnt.len() > 1 {
+            let mut mi = 1;
+            for k in 2..learnt.len() {
+                if self.level[learnt[k].var() as usize] > self.level[learnt[mi].var() as usize] {
+                    mi = k;
+                }
+            }
+            learnt.swap(1, mi);
+            bt = self.level[learnt[1].var() as usize] as usize;
+        }
+        Some((learnt, bt))
+    }
+
+    fn backtrack(&mut self, bt: usize) {
+        while self.decision_level() > bt {
+            let Some(lim) = self.trail_lim.pop() else { break };
+            while self.trail.len() > lim {
+                if let Some(l) = self.trail.pop() {
+                    let v = l.var() as usize;
+                    if v < self.n_vars {
+                        self.assigns[v] = 0;
+                        self.reason[v] = NO_REASON;
+                    }
+                }
+            }
+        }
+        self.qhead = self.trail.len();
+    }
+
+    /// Unassigned variable of maximal activity (lowest index on ties).
+    fn pick_branch(&self) -> Option<Var> {
+        let mut best: Option<usize> = None;
+        for v in 0..self.n_vars {
+            if self.assigns[v] != 0 {
+                continue;
+            }
+            match best {
+                None => best = Some(v),
+                Some(b) => {
+                    if self.activity[v] > self.activity[b] {
+                        best = Some(v);
+                    }
+                }
+            }
+        }
+        best.map(|v| v as Var)
+    }
+
+    /// Run CDCL for at most `max_conflicts` conflicts.
+    pub fn solve(&mut self, max_conflicts: u64) -> SatResult {
+        if self.root_unsat {
+            return SatResult::Unsat;
+        }
+        if self.propagate().is_some() {
+            return SatResult::Unsat;
+        }
+        let mut conflicts = 0u64;
+        let mut next_restart = 128u64;
+        loop {
+            match self.propagate() {
+                Some(confl) => {
+                    conflicts += 1;
+                    if self.decision_level() == 0 {
+                        return SatResult::Unsat;
+                    }
+                    if conflicts > max_conflicts {
+                        return SatResult::Unknown;
+                    }
+                    let Some((learnt, bt)) = self.analyze(confl) else {
+                        return SatResult::Unknown;
+                    };
+                    self.backtrack(bt);
+                    if learnt.len() == 1 {
+                        match self.value(learnt[0]) {
+                            -1 => return SatResult::Unsat,
+                            0 => self.enqueue(learnt[0], NO_REASON),
+                            _ => {}
+                        }
+                    } else {
+                        let ci = self.clauses.len() as u32;
+                        self.watches[learnt[0].idx()].push(ci);
+                        self.watches[learnt[1].idx()].push(ci);
+                        let assert_lit = learnt[0];
+                        self.clauses.push(learnt);
+                        if self.value(assert_lit) == 0 {
+                            self.enqueue(assert_lit, ci);
+                        }
+                    }
+                    self.var_inc *= 1.0 / 0.95;
+                    if conflicts >= next_restart {
+                        next_restart += next_restart / 2 + 64;
+                        self.backtrack(0);
+                    }
+                }
+                None => match self.pick_branch() {
+                    None => {
+                        let model = self.assigns.iter().map(|&a| a == 1).collect();
+                        return SatResult::Sat(model);
+                    }
+                    Some(v) => {
+                        // Deterministic negative phase (matches the
+                        // all-zero simulation baseline).
+                        self.trail_lim.push(self.trail.len());
+                        self.enqueue(SLit::new(v, true), NO_REASON);
+                    }
+                },
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lit(v: Var) -> SLit {
+        SLit::new(v, false)
+    }
+
+    fn nlit(v: Var) -> SLit {
+        SLit::new(v, true)
+    }
+
+    #[test]
+    fn trivially_sat_and_unsat() {
+        let mut s = Solver::new(2);
+        s.add_clause(&[lit(0), lit(1)]);
+        match s.solve(1_000) {
+            SatResult::Sat(m) => assert!(m[0] || m[1]),
+            other => panic!("expected sat, got {other:?}"),
+        }
+
+        let mut s = Solver::new(1);
+        s.add_clause(&[lit(0)]);
+        s.add_clause(&[nlit(0)]);
+        assert_eq!(s.solve(1_000), SatResult::Unsat);
+
+        let mut s = Solver::new(1);
+        s.add_clause(&[]);
+        assert_eq!(s.solve(1_000), SatResult::Unsat);
+    }
+
+    /// Pigeonhole 4→3: classic small UNSAT that requires real search.
+    #[test]
+    fn pigeonhole_unsat() {
+        let (pigeons, holes) = (4u32, 3u32);
+        let var = |p: u32, h: u32| p * holes + h;
+        let mut s = Solver::new((pigeons * holes) as usize);
+        for p in 0..pigeons {
+            let cl: Vec<SLit> = (0..holes).map(|h| lit(var(p, h))).collect();
+            s.add_clause(&cl);
+        }
+        for h in 0..holes {
+            for p1 in 0..pigeons {
+                for p2 in p1 + 1..pigeons {
+                    s.add_clause(&[nlit(var(p1, h)), nlit(var(p2, h))]);
+                }
+            }
+        }
+        assert_eq!(s.solve(1_000_000), SatResult::Unsat);
+    }
+
+    /// XOR chain with consistent parity: satisfiable, and the model found
+    /// must actually satisfy every clause.
+    #[test]
+    fn xor_chain_model_satisfies() {
+        // x0 ^ x1 = 1, x1 ^ x2 = 1, x2 ^ x3 = 0, x0 = 1.
+        let mut s = Solver::new(4);
+        let xor_cl = |s: &mut Solver, a: Var, b: Var, val: bool| {
+            if val {
+                s.add_clause(&[lit(a), lit(b)]);
+                s.add_clause(&[nlit(a), nlit(b)]);
+            } else {
+                s.add_clause(&[lit(a), nlit(b)]);
+                s.add_clause(&[nlit(a), lit(b)]);
+            }
+        };
+        xor_cl(&mut s, 0, 1, true);
+        xor_cl(&mut s, 1, 2, true);
+        xor_cl(&mut s, 2, 3, false);
+        s.add_clause(&[lit(0)]);
+        match s.solve(10_000) {
+            SatResult::Sat(m) => {
+                assert!(m[0]);
+                assert_ne!(m[0], m[1]);
+                assert_ne!(m[1], m[2]);
+                assert_eq!(m[2], m[3]);
+            }
+            other => panic!("expected sat, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn budget_exhaustion_reports_unknown() {
+        // Pigeonhole 6→5 with a 1-conflict budget cannot finish.
+        let (pigeons, holes) = (6u32, 5u32);
+        let var = |p: u32, h: u32| p * holes + h;
+        let mut s = Solver::new((pigeons * holes) as usize);
+        for p in 0..pigeons {
+            let cl: Vec<SLit> = (0..holes).map(|h| lit(var(p, h))).collect();
+            s.add_clause(&cl);
+        }
+        for h in 0..holes {
+            for p1 in 0..pigeons {
+                for p2 in p1 + 1..pigeons {
+                    s.add_clause(&[nlit(var(p1, h)), nlit(var(p2, h))]);
+                }
+            }
+        }
+        assert_eq!(s.solve(1), SatResult::Unknown);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let build = || {
+            let mut s = Solver::new(6);
+            s.add_clause(&[lit(0), lit(1), lit(2)]);
+            s.add_clause(&[nlit(0), lit(3)]);
+            s.add_clause(&[nlit(1), lit(4)]);
+            s.add_clause(&[nlit(2), lit(5)]);
+            s.add_clause(&[nlit(3), nlit(4), nlit(5)]);
+            s
+        };
+        let a = build().solve(10_000);
+        let b = build().solve(10_000);
+        assert_eq!(a, b);
+        assert!(matches!(a, SatResult::Sat(_)));
+    }
+}

@@ -1,0 +1,163 @@
+//! 64-way word-parallel random simulation over the miter AIG.
+//!
+//! Before any cone goes to the SAT solver, a few rounds of random
+//! simulation evaluate the whole miter under 64 input vectors at a time
+//! (one bit lane per vector, one `u64` word per node).  Any miter output
+//! whose word is non-zero is *refuted on the spot* — the lowest set bit
+//! of the first failing round is extracted as a concrete counterexample
+//! assignment, which is much cheaper than a SAT call and catches the
+//! common corruption cases (flipped truth bits, swapped carries)
+//! immediately.  Vectors come from the crate's deterministic
+//! [`crate::util::Rng`] with a fixed seed, so the witness an output gets
+//! is a pure function of the miter — bit-identical for any worker count.
+
+use crate::techmap::aig::{Aig, LeafKind, Lit, Node};
+use crate::util::Rng;
+
+/// Fixed seed for the prefilter's input vectors (deterministic reports).
+const SIM_SEED: u64 = 0x5EED_0E0D_D0D0_0001;
+
+/// Evaluate every node of `aig` under one 64-lane input batch.
+/// `input_words[i]` carries the 64 values of miter input `i`.
+fn eval_words(aig: &Aig, input_words: &[u64]) -> Vec<u64> {
+    let mut words = vec![0u64; aig.len()];
+    for id in 0..aig.len() {
+        words[id] = match *aig.node(id as u32) {
+            Node::Const0 => 0,
+            Node::Leaf(LeafKind::Pi(i)) => input_words.get(i as usize).copied().unwrap_or(0),
+            // The miter builder only creates Pi leaves; anything else
+            // evaluates as 0 and the SAT stage (which rejects such cones
+            // explicitly) stays the arbiter.
+            Node::Leaf(_) => 0,
+            Node::And(a, b) => {
+                let wa = words[a.node() as usize] ^ if a.is_compl() { u64::MAX } else { 0 };
+                let wb = words[b.node() as usize] ^ if b.is_compl() { u64::MAX } else { 0 };
+                wa & wb
+            }
+        };
+    }
+    words
+}
+
+#[inline]
+fn word_of(words: &[u64], l: Lit) -> u64 {
+    let w = words.get(l.node() as usize).copied().unwrap_or(0);
+    if l.is_compl() {
+        !w
+    } else {
+        w
+    }
+}
+
+/// Run `rounds` simulation batches over the miter; for each output literal
+/// in `outputs` return the first counterexample input assignment found
+/// (`None` = survived simulation).  Round 0 is the structured batch
+/// (all-zeros, all-ones, and single-input walking patterns in the first
+/// lanes); later rounds are uniform random.
+pub fn prefilter(
+    aig: &Aig,
+    n_inputs: usize,
+    outputs: &[Lit],
+    rounds: usize,
+) -> Vec<Option<Vec<bool>>> {
+    let mut found: Vec<Option<Vec<bool>>> = vec![None; outputs.len()];
+    let mut rng = Rng::new(SIM_SEED);
+    let mut input_words = vec![0u64; n_inputs];
+    for round in 0..rounds.max(1) {
+        for (i, w) in input_words.iter_mut().enumerate() {
+            *w = if round == 0 {
+                // Lane 0: all inputs 0.  Lane 1: all inputs 1.  Lanes
+                // 2..64: walking one-hot over the first 62 inputs.
+                let walking = if i + 2 < 64 { 1u64 << (i + 2) } else { 0 };
+                0x2 | walking
+            } else {
+                rng.next_u64()
+            };
+        }
+        let words = eval_words(aig, &input_words);
+        let mut all_done = true;
+        for (oi, &out) in outputs.iter().enumerate() {
+            if found[oi].is_some() {
+                continue;
+            }
+            let w = word_of(&words, out);
+            if w != 0 {
+                let lane = w.trailing_zeros();
+                let assignment: Vec<bool> =
+                    input_words.iter().map(|&iw| iw >> lane & 1 == 1).collect();
+                found[oi] = Some(assignment);
+            } else {
+                all_done = false;
+            }
+        }
+        if all_done {
+            break;
+        }
+    }
+    found
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finds_and_vs_or_counterexample() {
+        let mut g = Aig::new();
+        let a = g.pi();
+        let b = g.pi();
+        let f1 = g.and(a, b);
+        let f2 = g.or(a, b);
+        let m = g.xor(f1, f2);
+        let hits = prefilter(&g, 2, &[m], 4);
+        let cex = hits[0].as_ref().expect("sim must refute and-vs-or");
+        // Replay: the assignment must make the two sides disagree.
+        let eval = |l: Lit, pis: &[bool]| {
+            g.eval(l, |k| match k {
+                LeafKind::Pi(i) => pis[i as usize],
+                _ => unreachable!(),
+            })
+        };
+        assert_ne!(eval(f1, cex), eval(f2, cex));
+    }
+
+    #[test]
+    fn equivalent_pair_survives() {
+        let mut g = Aig::new();
+        let a = g.pi();
+        let b = g.pi();
+        let f1 = g.and(a, b);
+        let na_or_nb = g.or(a.compl(), b.compl());
+        let m = g.xor(f1, na_or_nb.compl());
+        let hits = prefilter(&g, 2, &[m], 8);
+        assert!(hits[0].is_none(), "equivalent cone must survive simulation");
+    }
+
+    #[test]
+    fn deterministic_witnesses() {
+        let mut g = Aig::new();
+        let a = g.pi();
+        let b = g.pi();
+        let c = g.pi();
+        let f1 = g.maj3(a, b, c);
+        let f2 = g.xor3(a, b, c);
+        let m = g.xor(f1, f2);
+        let h1 = prefilter(&g, 3, &[m], 4);
+        let h2 = prefilter(&g, 3, &[m], 4);
+        assert_eq!(h1, h2);
+        assert!(h1[0].is_some());
+    }
+
+    #[test]
+    fn constant_true_miter_caught_in_round_zero() {
+        let g = {
+            let mut g = Aig::new();
+            let _ = g.pi();
+            g
+        };
+        // Miter literal TRUE: differs everywhere; lane 0 (all zeros) hits.
+        let hits = prefilter(&g, 1, &[Lit::TRUE], 1);
+        let cex = hits[0].as_ref().expect("constant-true miter");
+        assert!(cex.iter().all(|&v| !v), "lane 0 is the all-zero vector");
+    }
+}

@@ -44,7 +44,13 @@
 //! * [`serve::audit_serve`] — the `dd serve` daemon's job bookkeeping:
 //!   lifecycle transitions replayed from each job's event log,
 //!   submission-key dedup uniqueness, terminal states consistent with
-//!   the results they carry.
+//!   the results they carry;
+//! * [`equiv`] — *semantic* (not structural) verification: SAT-based
+//!   combinational equivalence of the mapped and packed netlists against
+//!   the source AIG at the sequential cut, enforcing the map/pack
+//!   logic-neutrality contract with per-output miters, random-simulation
+//!   prefiltering, and an in-crate CDCL solver; inequivalence reports as
+//!   `equiv.mismatch` with a replayable input-assignment witness.
 //!
 //! Every auditor returns a structured [`Violation`] list in a stable,
 //! artifact-defined scan order (cells/nets/ALMs/LBs ascending) instead of
@@ -56,6 +62,7 @@
 //! future stages (capacity-scale packing, service mode) must ship an
 //! auditor here before their artifacts feed the flow.
 
+pub mod equiv;
 pub mod lookahead;
 pub mod netlist;
 pub mod pack;
@@ -65,6 +72,7 @@ pub mod route;
 pub mod serve;
 pub mod timing;
 
+pub use equiv::{equiv_mapped, equiv_packed, EquivOpts, EquivOutcome, EquivSummary};
 pub use lookahead::audit_lookahead;
 pub use netlist::audit_netlist;
 pub use pack::audit_packing;
@@ -113,6 +121,11 @@ pub enum Stage {
     /// submission-key dedup, terminal-state/result agreement
     /// ([`serve::audit_serve`]).
     Serve,
+    /// Semantic equivalence of mapped/packed netlists against the source
+    /// AIG ([`equiv`]): `equiv.mismatch` carries a counterexample input
+    /// assignment, `equiv.shape` a malformed comparison frame,
+    /// `equiv.undecided` an exhausted SAT budget.
+    Equiv,
 }
 
 impl Stage {
@@ -126,6 +139,7 @@ impl Stage {
             Stage::Timing => "timing",
             Stage::Recovery => "recovery",
             Stage::Serve => "serve",
+            Stage::Equiv => "equiv",
         }
     }
 }
@@ -339,6 +353,49 @@ pub fn check_benchmark(
         report.violations.extend(audit_timing(nl, &arenas.idx, &rpt));
     }
     report
+}
+
+/// Outcomes of [`check_equiv_benchmark`]: the mapped netlist checked
+/// against the source AIG, and the packed view checked on top of it.
+pub struct EquivBenchReport {
+    pub mapped: EquivOutcome,
+    pub packed: EquivOutcome,
+}
+
+impl EquivBenchReport {
+    pub fn is_clean(&self) -> bool {
+        self.mapped.is_clean() && self.packed.is_clean()
+    }
+
+    pub fn has_errors(&self) -> bool {
+        self.mapped
+            .violations
+            .iter()
+            .chain(self.packed.violations.iter())
+            .any(|v| v.severity == Severity::Error)
+    }
+}
+
+/// Run semantic equivalence on one benchmark through the artifact cache:
+/// regenerate the source circuit, check the cached mapped netlist against
+/// it, then re-pack (cached) and check the packed view.  This is what
+/// `dduty check --equiv` runs per (benchmark, variant) pair.
+pub fn check_equiv_benchmark(
+    cache: &ArtifactCache,
+    b: &Benchmark,
+    variant: ArchVariant,
+    opts: &FlowOpts,
+    eopts: &EquivOpts,
+) -> EquivBenchReport {
+    let circ = b.generate();
+    let mapped = cache.mapped(b);
+    let arch = arch_for_run(&Arch::coffe(variant), opts);
+    let pack_opts = PackOpts { unrelated: opts.unrelated };
+    let packing = cache.packed(&mapped, &arch, &pack_opts);
+    EquivBenchReport {
+        mapped: equiv_mapped(&circ, &mapped.nl, eopts),
+        packed: equiv_packed(&circ, &mapped.nl, &packing, eopts),
+    }
 }
 
 #[cfg(test)]

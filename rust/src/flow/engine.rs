@@ -589,7 +589,17 @@ impl Engine {
             parallel_indexed(nb, self.jobs, |bi| {
                 catch_job(|| {
                     opts.faults.fire_panic("map", &benches[bi].name, None);
-                    cache.mapped_with(&benches[bi], map_inner)
+                    let m = cache.mapped_with(&benches[bi], map_inner);
+                    // Semantic gate on the mapper's logic-neutrality
+                    // contract; strict mode panics here and the job
+                    // isolation converts it into this cell's FlowError.
+                    if opts.check != CheckMode::Off {
+                        let circ = benches[bi].generate();
+                        let eq =
+                            check::equiv_mapped(&circ, &m.nl, &check::EquivOpts::default());
+                        check::enforce(opts.check, "equiv-map", &eq.violations);
+                    }
+                    m
                 })
                 .map_err(|cause| {
                     FlowError::stage_failure("map", None, cause, RecoveryAction::SkipCell)
@@ -610,12 +620,25 @@ impl Engine {
                 let m = mapped[bi].as_ref().map_err(|e| e.clone())?;
                 catch_job(|| {
                     opts.faults.fire_panic("pack", &benches[bi].name, None);
-                    cache.packed_with(
+                    let p = cache.packed_with(
                         m,
                         &archs[vi],
                         &PackOpts { unrelated: opts.unrelated },
                         pack_inner,
-                    )
+                    );
+                    // Packing must be logic-neutral: re-check the packed
+                    // view (operand paths applied) against the source AIG.
+                    if opts.check != CheckMode::Off {
+                        let circ = benches[bi].generate();
+                        let eq = check::equiv_packed(
+                            &circ,
+                            &m.nl,
+                            &p,
+                            &check::EquivOpts::default(),
+                        );
+                        check::enforce(opts.check, "equiv-pack", &eq.violations);
+                    }
+                    p
                 })
                 .map_err(|cause| {
                     FlowError::stage_failure("pack", None, cause, RecoveryAction::SkipCell)

@@ -865,8 +865,23 @@ pub fn assemble_result(
 }
 
 /// Run the mapped portion once (deterministic), then place/route per seed.
+///
+/// With `opts.check != Off`, semantic equivalence
+/// ([`crate::check::equiv`]) gates both logic-neutral stages: the mapped
+/// netlist is checked against the source AIG, and the packed view is
+/// checked again on top of it (`equiv-map` / `equiv-pack`; strict mode
+/// fails the run on any mismatch).
 pub fn run_flow(circ: &Circuit, arch: &Arch, opts: &FlowOpts) -> FlowResult {
     let nl = map_circuit(circ, &MapOpts::default());
+    if opts.check != CheckMode::Off {
+        let eopts = crate::check::EquivOpts::default();
+        let em = crate::check::equiv_mapped(circ, &nl, &eopts);
+        crate::check::enforce(opts.check, "equiv-map", &em.violations);
+        let arch_run = arch_for_run(arch, opts);
+        let packing = pack(&nl, &arch_run, &PackOpts { unrelated: opts.unrelated });
+        let ep = crate::check::equiv_packed(circ, &nl, &packing, &eopts);
+        crate::check::enforce(opts.check, "equiv-pack", &ep.violations);
+    }
     run_flow_mapped(&circ.name, &nl, arch, opts, circ.dedup_hits)
 }
 

@@ -26,7 +26,7 @@
 //!       builds).
 //!   check [<bench|suite> ...] [--variant baseline|dd5|dd6|all] [--strict]
 //!         [--quick] [--no-route] [--route-jobs N] [--lookahead on|off]
-//!         [--no-disk-cache] [--cache-cap-mb N]
+//!         [--no-disk-cache] [--cache-cap-mb N] [--equiv] [--jobs N]
 //!       Run the stage auditors ([`double_duty::check`]) over the named
 //!       benchmarks/suites (default: every shipped suite) on each listed
 //!       architecture variant, re-deriving netlist, packing, placement,
@@ -34,7 +34,12 @@
 //!       nonzero under `--strict` if any Error-severity violation is
 //!       found.  Artifacts come from the same persistent cache the other
 //!       subcommands fill, so `dduty check` after `dduty exp` audits what
-//!       actually ran.
+//!       actually ran.  `--equiv` switches to *semantic* verification
+//!       ([`double_duty::check::equiv`]): SAT-based combinational
+//!       equivalence of the mapped and packed netlists against the
+//!       source AIG, reporting any `equiv.mismatch` with a replayable
+//!       counterexample input assignment (`--jobs N` parallelizes the
+//!       SAT cones; output is bit-identical for any N).
 //!   serve [--addr HOST:PORT] [--jobs N] [--no-disk-cache] [--cache-cap-mb N]
 //!       Run the resident flow-as-a-service daemon
 //!       ([`double_duty::serve`]): accepts flow jobs over hand-rolled
@@ -53,7 +58,10 @@
 //!
 //! `exp` and `flow` also accept `--check [strict]`: the flow then runs
 //! the same auditors on every artifact as it is produced — warn mode
-//! prints violations and continues, strict mode fails the run.
+//! prints violations and continues, strict mode fails the run.  Checked
+//! flows additionally gate the two logic-neutral stages semantically:
+//! the mapped netlist and the packed view are each proven equivalent to
+//! the source AIG (`equiv-map` / `equiv-pack`) before place and route.
 //!
 //! Failure semantics: `exp` and `flow` never die on a failing job.  A
 //! panicking seed, a device misfit, or an unroutable seed becomes a
@@ -111,7 +119,7 @@ fn main() {
                        [--crit-alpha A] [--place-crit-alpha A] [--move-mix F] \
                        [--check [strict]] [--escalate] [--route-pops-budget N] \
                        [--inject-faults <spec>]");
-            eprintln!("  dduty check [<bench|suite> ...] [--variant baseline|dd5|dd6|all] \
+            eprintln!("  dduty check [--equiv] [<bench|suite> ...] [--variant baseline|dd5|dd6|all] \
                        [--strict] [--quick] [--no-route] [--route-jobs N] \
                        [--lookahead on|off] [--no-disk-cache] [--cache-cap-mb N]");
             eprintln!("  dduty serve [--addr HOST:PORT] [--jobs N] [--no-disk-cache] \
@@ -486,6 +494,45 @@ fn cmd_check(args: &[String]) {
         ..Default::default()
     };
     let cache = ArtifactCache::for_cli(disk_cache, cache_cap_mb);
+
+    // `--equiv`: semantic equivalence (map + pack logic neutrality)
+    // instead of the structural stage audits.
+    if args.iter().any(|a| a == "--equiv") {
+        let eopts = check::EquivOpts { jobs: parse_jobs(args), ..Default::default() };
+        let mut rows: Vec<report::EquivRow> = Vec::new();
+        let (mut errors, mut warnings) = (0usize, 0usize);
+        for b in &benches {
+            for &variant in &variants {
+                let rep = check::check_equiv_benchmark(&cache, b, variant, &opts, &eopts);
+                for (view, oc) in [("map", &rep.mapped), ("pack", &rep.packed)] {
+                    for v in &oc.violations {
+                        println!("equiv {:20} [{:8}] {view}: {v}", b.name, variant.name());
+                        match v.severity {
+                            Severity::Error => errors += 1,
+                            Severity::Warning => warnings += 1,
+                        }
+                    }
+                    rows.push(report::EquivRow {
+                        bench: b.name.clone(),
+                        variant,
+                        view,
+                        summary: oc.summary,
+                    });
+                }
+            }
+        }
+        report::equiv_table(&rows).print();
+        println!(
+            "equiv: {} benchmark(s) x {} variant(s): {errors} error(s), {warnings} warning(s)",
+            benches.len(),
+            variants.len()
+        );
+        if strict && errors > 0 {
+            std::process::exit(1);
+        }
+        return;
+    }
+
     let (mut errors, mut warnings) = (0usize, 0usize);
     for b in &benches {
         for &variant in &variants {

@@ -15,7 +15,7 @@ use crate::arch::device::Device;
 use crate::arch::{Arch, ArchVariant};
 use crate::bench_suites::{all_suites, koios_suite, kratos_suite, vtr_suite, BenchParams,
                           Benchmark, Suite};
-use crate::check::CheckMode;
+use crate::check::{CheckMode, EquivSummary};
 use crate::coordinator::default_workers;
 use crate::flow::engine::{ArtifactCache, Engine, ExperimentPlan};
 use crate::flow::{run_flow, FlowError, FlowOpts, FlowResult};
@@ -103,6 +103,50 @@ impl ExpOpts {
     fn engine(&self) -> Engine {
         Engine::with_cache(self.jobs, ArtifactCache::for_cli(self.disk_cache, self.cache_cap_mb))
     }
+}
+
+/// One row of the semantic-equivalence report: one (benchmark, variant,
+/// view) triple, where `view` is `"map"` or `"pack"`.
+pub struct EquivRow {
+    pub bench: String,
+    pub variant: ArchVariant,
+    pub view: &'static str,
+    pub summary: EquivSummary,
+}
+
+/// Render equivalence rows as a table in the caller's scan order
+/// (`dduty check --equiv` iterates benchmarks × variants × views, so the
+/// output is bit-identical for any `--jobs`).
+pub fn equiv_table(rows: &[EquivRow]) -> Table {
+    let mut t = Table::new(
+        "Semantic equivalence: source AIG vs mapped/packed netlist",
+        &["Benchmark", "Variant", "View", "Outputs", "Folded", "Sim cex",
+          "SAT unsat", "SAT cex", "Undecided", "LUT merges", "Status"],
+    );
+    for r in rows {
+        let s = &r.summary;
+        let status = if s.all_proved() {
+            "equivalent"
+        } else if s.sim_refuted + s.sat_refuted > 0 {
+            "MISMATCH"
+        } else {
+            "undecided"
+        };
+        t.row(&[
+            r.bench.clone(),
+            r.variant.name().to_string(),
+            r.view.to_string(),
+            s.outputs.to_string(),
+            s.folded.to_string(),
+            s.sim_refuted.to_string(),
+            s.sat_proved.to_string(),
+            s.sat_refuted.to_string(),
+            s.undecided.to_string(),
+            format!("{}/{}", s.merged_luts, s.merged_luts + s.unmerged_luts),
+            status.to_string(),
+        ]);
+    }
+    t
 }
 
 /// Table I (delegates to the COFFE engine).

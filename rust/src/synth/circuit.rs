@@ -335,6 +335,79 @@ impl Circuit {
             .collect()
     }
 
+    /// Non-panicking sequential-cut replay: evaluate every PO *and* every
+    /// FF data input under one input assignment (`pi_vals` + `ff_state`
+    /// for the FF q leaves).  Returns `(po_vals, ff_d_vals)`, or `None`
+    /// if shapes mismatch or a chain never resolves — never panics, so
+    /// it is safe as the witness-replay oracle in `check::equiv`.
+    pub fn try_simulate_cut(
+        &self,
+        pi_vals: &[bool],
+        ff_state: &[bool],
+    ) -> Option<(Vec<bool>, Vec<bool>)> {
+        if pi_vals.len() != self.pis.len() {
+            return None;
+        }
+        let mut chain_sums: Vec<Option<(Vec<bool>, bool)>> = vec![None; self.chains.len()];
+        loop {
+            let mut progress = false;
+            for (ci, ch) in self.chains.iter().enumerate() {
+                if chain_sums[ci].is_some() {
+                    continue;
+                }
+                let leaf = |k: LeafKind| -> Option<bool> {
+                    match k {
+                        LeafKind::Pi(i) => pi_vals.get(i as usize).copied(),
+                        LeafKind::FfQ(i) => Some(ff_state.get(i as usize).copied().unwrap_or(false)),
+                        LeafKind::AdderSum { chain, pos } => chain_sums
+                            .get(chain as usize)?
+                            .as_ref()
+                            .and_then(|(s, _)| s.get(pos as usize).copied()),
+                        LeafKind::AdderCout { chain } => {
+                            chain_sums.get(chain as usize)?.as_ref().map(|&(_, c)| c)
+                        }
+                    }
+                };
+                let cin = self.try_eval(ch.cin, &leaf);
+                let ops: Option<Vec<(bool, bool)>> = ch
+                    .ops
+                    .iter()
+                    .map(|&(a, b)| Some((self.try_eval(a, &leaf)?, self.try_eval(b, &leaf)?)))
+                    .collect();
+                if let (Some(mut carry), Some(ops)) = (cin, ops) {
+                    let mut sums = Vec::with_capacity(ops.len());
+                    for (a, b) in ops {
+                        sums.push(a ^ b ^ carry);
+                        carry = (a & b) | (a & carry) | (b & carry);
+                    }
+                    chain_sums[ci] = Some((sums, carry));
+                    progress = true;
+                }
+            }
+            if !progress {
+                break;
+            }
+        }
+        let leaf = |k: LeafKind| -> Option<bool> {
+            match k {
+                LeafKind::Pi(i) => pi_vals.get(i as usize).copied(),
+                LeafKind::FfQ(i) => Some(ff_state.get(i as usize).copied().unwrap_or(false)),
+                LeafKind::AdderSum { chain, pos } => chain_sums
+                    .get(chain as usize)?
+                    .as_ref()
+                    .and_then(|(s, _)| s.get(pos as usize).copied()),
+                LeafKind::AdderCout { chain } => {
+                    chain_sums.get(chain as usize)?.as_ref().map(|&(_, c)| c)
+                }
+            }
+        };
+        let pos: Option<Vec<bool>> =
+            self.pos.iter().map(|&(_, l)| self.try_eval(l, &leaf)).collect();
+        let ffd: Option<Vec<bool>> =
+            self.ffs.iter().map(|&(d, _)| self.try_eval(d, &leaf)).collect();
+        Some((pos?, ffd?))
+    }
+
     /// Evaluate a literal, returning None if any required leaf is unknown.
     fn try_eval<F: Fn(LeafKind) -> Option<bool>>(&self, lit: Lit, leaf: &F) -> Option<bool> {
         use crate::techmap::aig::Node;

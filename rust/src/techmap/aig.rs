@@ -191,6 +191,36 @@ impl Aig {
         self.or(st, se)
     }
 
+    /// Build the function of a K-input truth table (K ≤ 6, LSB-first row
+    /// indexing exactly as [`crate::netlist::CellKind::Lut`] stores it:
+    /// `ins[0]` is bit 0 of the row index) over the literals `ins` by
+    /// recursive Shannon cofactoring on the highest variable.  Constant
+    /// cofactors fold immediately and structural hashing dedups shared
+    /// subfunctions, so simple masks (AND/OR/inverter rows) reduce to the
+    /// canonical AIG shapes.  The inverse of the mapper's `cone_truth`;
+    /// `check::equiv` uses it to lift mapped LUT masks back into AIG form.
+    pub fn from_truth(&mut self, truth: u64, ins: &[Lit]) -> Lit {
+        let k = ins.len().min(6);
+        let rows = 1usize << k;
+        let mask = if rows >= 64 { u64::MAX } else { (1u64 << rows) - 1 };
+        let t = truth & mask;
+        if t == 0 {
+            return Lit::FALSE;
+        }
+        if t == mask {
+            return Lit::TRUE;
+        }
+        // k >= 1 here (a 0-input table is constant and returned above).
+        let h = k - 1;
+        let half_rows = 1usize << h;
+        let half_mask = if half_rows >= 64 { u64::MAX } else { (1u64 << half_rows) - 1 };
+        let t0 = t & half_mask; // ins[h] = 0 cofactor
+        let t1 = (t >> half_rows) & half_mask; // ins[h] = 1 cofactor
+        let f0 = self.from_truth(t0, &ins[..h]);
+        let f1 = self.from_truth(t1, &ins[..h]);
+        self.mux(ins[h], f1, f0)
+    }
+
     pub fn node(&self, id: NodeId) -> &Node {
         &self.nodes[id as usize]
     }
@@ -377,6 +407,42 @@ mod tests {
             });
             assert_eq!(got, v[0] ^ v[1] ^ v[2]);
         }
+    }
+
+    #[test]
+    fn from_truth_matches_table() {
+        for k in 0..=4usize {
+            let rows = 1usize << k;
+            let mask: u64 = if rows >= 64 { u64::MAX } else { (1u64 << rows) - 1 };
+            // A handful of masks incl. the corners, exhaustively checked.
+            for seed in [0u64, mask, 0xA5A5_A5A5_A5A5_A5A5 & mask, 0x6 & mask, 0x17 & mask] {
+                let mut g = Aig::new();
+                let ins: Vec<Lit> = (0..k).map(|_| g.pi()).collect();
+                let f = g.from_truth(seed, &ins);
+                for row in 0..rows {
+                    let got = g.eval(f, |kind| match kind {
+                        LeafKind::Pi(i) => row >> i & 1 == 1,
+                        _ => unreachable!(),
+                    });
+                    assert_eq!(got, seed >> row & 1 == 1, "k={k} truth={seed:#x} row={row}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn from_truth_folds_simple_masks() {
+        let mut g = Aig::new();
+        let a = g.pi();
+        let b = g.pi();
+        // AND mask folds to the canonical strash node; inverter folds to
+        // a complement literal with no new nodes.
+        let f_and = g.from_truth(0b1000, &[a, b]);
+        assert_eq!(f_and, g.and(a, b));
+        let before = g.len();
+        let f_inv = g.from_truth(0b01, &[a]);
+        assert_eq!(f_inv, a.compl());
+        assert_eq!(g.len(), before);
     }
 
     #[test]

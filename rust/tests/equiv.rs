@@ -1,0 +1,223 @@
+//! Semantic equivalence checking (`check::equiv`): mutation tests that
+//! prove the checker *fires* (with a replaying counterexample witness)
+//! on each corruption class of the map/pack logic-neutrality contract,
+//! the suite-wide clean proof over every shipped benchmark, and the
+//! `--jobs` bit-identical-report invariant.
+//!
+//! Mutations edit the mapped netlist directly, keeping `Net::sinks`
+//! consistent with `Cell::ins` (the index builder debug-asserts acyclic
+//! consistency), so the only thing wrong with the artifact is its
+//! *logic* — exactly what the structural auditors cannot see and
+//! `equiv.mismatch` must.
+
+use double_duty::arch::{Arch, ArchVariant};
+use double_duty::bench_suites::{all_suites, BenchParams};
+use double_duty::check::equiv::{equiv_mapped, equiv_packed, EquivOpts, EquivOutcome};
+use double_duty::netlist::{CellId, CellKind, NetId, Netlist};
+use double_duty::pack::{pack, PackOpts};
+use double_duty::synth::Circuit;
+use double_duty::techmap::{map_circuit, MapOpts};
+
+/// A small circuit with a real carry chain plus LUT logic: 4+4 ripple
+/// adder, a majority cone, and an XOR cone over the PIs.
+fn chain_circ() -> Circuit {
+    let mut c = Circuit::new("equiv_mut");
+    let x = c.pi_bus("x", 4);
+    let y = c.pi_bus("y", 4);
+    let s = c.ripple_add(&x, &y);
+    c.po_bus("s", &s);
+    let m = c.aig.maj3(x[0], y[1], x[2]);
+    let t = c.aig.xor3(x[3], y[0], m);
+    c.po("m", m);
+    c.po("t", t);
+    c
+}
+
+/// Re-point input `pin` of `cell` to `new_net`, keeping sink lists
+/// consistent so the netlist stays structurally well-formed.
+fn repoint(nl: &mut Netlist, cell: CellId, pin: usize, new_net: NetId) {
+    let old = nl.cells[cell as usize].ins[pin];
+    nl.cells[cell as usize].ins[pin] = new_net;
+    nl.nets[old as usize]
+        .sinks
+        .retain(|&(c, p)| !(c == cell && p as usize == pin));
+    nl.nets[new_net as usize].sinks.push((cell, pin as u8));
+}
+
+/// The mutation must produce `equiv.mismatch` findings — nothing else —
+/// and every witness must replay to a real spec/impl disagreement
+/// through the two independent evaluators.
+fn assert_fires_mismatch(outcome: &EquivOutcome, what: &str) {
+    assert!(
+        !outcome.violations.is_empty(),
+        "{what}: corrupted netlist reported clean"
+    );
+    for v in &outcome.violations {
+        assert_eq!(v.code, "equiv.mismatch", "{what}: unexpected finding {v}");
+    }
+    assert_eq!(
+        outcome.violations.len(),
+        outcome.mismatches.len(),
+        "{what}: every violation carries a witness"
+    );
+    for mm in &outcome.mismatches {
+        assert_ne!(
+            mm.spec_val, mm.impl_val,
+            "{what}: witness for {} does not replay to a disagreement",
+            mm.output
+        );
+    }
+    assert_eq!(outcome.summary.undecided, 0, "{what}: left cones undecided");
+}
+
+#[test]
+fn healthy_mapped_netlist_is_equivalent() {
+    let c = chain_circ();
+    let nl = map_circuit(&c, &MapOpts::default());
+    let out = equiv_mapped(&c, &nl, &EquivOpts::default());
+    assert!(out.is_clean(), "violations: {:?}", out.violations);
+    assert!(out.summary.all_proved());
+    assert_eq!(out.summary.outputs, c.pos.len());
+}
+
+#[test]
+fn flipped_lut_truth_bit_fires_mismatch_with_witness() {
+    let c = chain_circ();
+    let base = map_circuit(&c, &MapOpts::default());
+    // Restrict to LUTs fed directly (and only) by PI nets: their input
+    // rows are all reachable and independent, so *every* single-bit
+    // corruption of the table is observable and must be caught.
+    let luts: Vec<usize> = base
+        .cells
+        .iter()
+        .enumerate()
+        .filter(|(_, cl)| {
+            matches!(cl.kind, CellKind::Lut { .. })
+                && cl.ins.iter().all(|&n| {
+                    base.nets[n as usize].driver.map_or(false, |(c, _)| {
+                        matches!(base.cells[c as usize].kind, CellKind::Input)
+                    })
+                })
+        })
+        .map(|(i, _)| i)
+        .collect();
+    assert!(!luts.is_empty(), "circuit must map at least one PI-fed LUT");
+    for &li in &luts {
+        let CellKind::Lut { k, .. } = base.cells[li].kind else { unreachable!() };
+        for bit in 0..(1u32 << k.min(4)) {
+            let mut nl = base.clone();
+            let CellKind::Lut { truth, .. } = &mut nl.cells[li].kind else { unreachable!() };
+            *truth ^= 1u64 << bit;
+            let out = equiv_mapped(&c, &nl, &EquivOpts::default());
+            assert_fires_mismatch(&out, &format!("lut {li} bit {bit}"));
+        }
+    }
+}
+
+#[test]
+fn repointed_carry_in_fires_mismatch_with_witness() {
+    let c = chain_circ();
+    let mut nl = map_circuit(&c, &MapOpts::default());
+    let chain = nl.chain_cells(0);
+    assert!(chain.len() >= 3, "need a real chain, got {} bits", chain.len());
+    // Feed bit 2's carry-in from bit 1's *sum* instead of its cout.
+    // (Swapping a/b/cin pins would be invisible: xor3/maj3 are
+    // symmetric.  Re-pointing the net changes the function.)
+    let wrong = nl.cells[chain[1] as usize].outs[0];
+    repoint(&mut nl, chain[2], 2, wrong);
+    let out = equiv_mapped(&c, &nl, &EquivOpts::default());
+    assert_fires_mismatch(&out, "carry-in repoint");
+}
+
+#[test]
+fn dropped_chain_link_fires_mismatch_with_witness() {
+    let c = chain_circ();
+    let mut nl = map_circuit(&c, &MapOpts::default());
+    let chain = nl.chain_cells(0);
+    assert!(chain.len() >= 3);
+    // Skip link 1: bit 2 takes its carry from bit 0's cout directly.
+    let cout0 = nl.cells[chain[0] as usize].outs[1];
+    repoint(&mut nl, chain[2], 2, cout0);
+    let out = equiv_mapped(&c, &nl, &EquivOpts::default());
+    assert_fires_mismatch(&out, "dropped chain link");
+}
+
+#[test]
+fn packed_view_of_healthy_netlist_is_equivalent_per_variant() {
+    let c = chain_circ();
+    let nl = map_circuit(&c, &MapOpts::default());
+    for variant in [ArchVariant::Baseline, ArchVariant::Dd5, ArchVariant::Dd6] {
+        let arch = Arch::coffe(variant);
+        let packing = pack(&nl, &arch, &PackOpts::default());
+        let out = equiv_packed(&c, &nl, &packing, &EquivOpts::default());
+        assert!(
+            out.is_clean(),
+            "[{}] violations: {:?}",
+            variant.name(),
+            out.violations
+        );
+        assert!(out.summary.all_proved(), "[{}]", variant.name());
+    }
+}
+
+/// The acceptance gate: every shipped benchmark proves equivalent after
+/// map and after pack, on every architecture variant — zero `equiv.*`
+/// findings anywhere.
+#[test]
+fn all_shipped_suites_prove_clean_post_map_and_post_pack() {
+    let params = BenchParams::default();
+    let opts = EquivOpts::default();
+    for b in all_suites(&params) {
+        let circ = b.generate();
+        let nl = map_circuit(&circ, &MapOpts::default());
+        let out = equiv_mapped(&circ, &nl, &opts);
+        assert!(
+            out.is_clean() && out.summary.all_proved(),
+            "{} post-map: {:?}",
+            b.name,
+            out.violations
+        );
+        for variant in [ArchVariant::Baseline, ArchVariant::Dd5, ArchVariant::Dd6] {
+            let arch = Arch::coffe(variant);
+            let packing = pack(&nl, &arch, &PackOpts::default());
+            let out = equiv_packed(&circ, &nl, &packing, &opts);
+            assert!(
+                out.is_clean() && out.summary.all_proved(),
+                "{} post-pack [{}]: {:?}",
+                b.name,
+                variant.name(),
+                out.violations
+            );
+        }
+    }
+}
+
+/// Reports are bit-identical for any `--jobs`: same violations (rendered
+/// text included), same witnesses, same summary counters.
+#[test]
+fn reports_are_bit_identical_for_any_jobs() {
+    let c = chain_circ();
+    let mut nl = map_circuit(&c, &MapOpts::default());
+    // Corrupt two cones so the SAT wave has real work to schedule.
+    let luts: Vec<usize> = nl
+        .cells
+        .iter()
+        .enumerate()
+        .filter(|(_, cl)| matches!(cl.kind, CellKind::Lut { .. }))
+        .map(|(i, _)| i)
+        .collect();
+    for &li in luts.iter().take(2) {
+        let CellKind::Lut { truth, .. } = &mut nl.cells[li].kind else { unreachable!() };
+        *truth ^= 1;
+    }
+    let render = |o: &EquivOutcome| -> Vec<String> {
+        o.violations.iter().map(|v| v.to_string()).collect()
+    };
+    let base = equiv_mapped(&c, &nl, &EquivOpts { jobs: 1, ..Default::default() });
+    for jobs in [2usize, 4, 7] {
+        let out = equiv_mapped(&c, &nl, &EquivOpts { jobs, ..Default::default() });
+        assert_eq!(render(&base), render(&out), "jobs={jobs}");
+        assert_eq!(base.mismatches, out.mismatches, "jobs={jobs}");
+        assert_eq!(base.summary, out.summary, "jobs={jobs}");
+    }
+}

@@ -16,15 +16,26 @@
 //! has been reviewed as order-independent (sorted right after, reduced
 //! with `.any()`/`.count()`, or accumulated into another set).
 //!
-//! The second lint is panic hygiene for the fault-isolated modules:
-//! `flow` and `route` advertise that every seed failure becomes a
-//! structured [`FlowError`] record (PR 8), and `serve` advertises that
-//! every malformed request becomes a 4xx, so a stray `panic!` /
-//! `.unwrap()` / `.expect(` on a production path there would be caught
-//! by the engine's job isolation and mis-reported as an internal fault
-//! instead of a typed error (or would kill a daemon connection thread).
-//! Reviewed sites (poisoned-mutex unwraps, lease invariants) live in
-//! their own allowlist.
+//! The second lint is panic hygiene, and since PR 10 it covers **all**
+//! production modules under `rust/src` (it started with the
+//! fault-isolated trio `flow`/`route`/`serve` in PR 8): `flow` and
+//! `route` advertise that every seed failure becomes a structured
+//! [`FlowError`] record, `serve` that every malformed request becomes a
+//! 4xx, and `check` (including `check::equiv`) that auditors report
+//! [`Violation`]s rather than dying — so a stray `panic!` / `.unwrap()`
+//! / `.expect(` on any production path is either mis-reported as an
+//! internal fault by the job isolation or kills a caller that was
+//! promised a structured answer.  Reviewed sites (poisoned-mutex
+//! unwraps, loop-invariant pops, the strict-mode `enforce` contract,
+//! deliberate fault injection) live in their own allowlist; every entry
+//! must still match a line, so the list cannot rot.
+//!
+//! The third lint is wall-clock hygiene for the deterministic pipeline
+//! stages (`flow`, `route`, `place`, `rrg`): a `Instant::now()` /
+//! `SystemTime::now()` read that steers any decision there would make
+//! results machine-load-dependent.  Timing belongs to the bench
+//! harnesses (`rust/benches`) and the serve daemon, which are outside
+//! the scanned directories by design.
 //!
 //! The last test is the registration guard: `Cargo.toml` sets
 //! `autotests = false`, so a test file that is not declared as a
@@ -256,35 +267,83 @@ fn no_unreviewed_hash_iteration_in_flow_modules() {
     );
 }
 
-/// Reviewed panic sites in `flow`/`route` production code: (path
-/// suffix, line substring).  Same staleness contract as [`ALLOWLIST`].
+/// Reviewed panic sites in `rust/src` production code: (path suffix,
+/// line substring).  Same staleness contract as [`ALLOWLIST`].
 ///
 /// A `Mutex::lock().unwrap()` only panics when another thread already
 /// panicked while holding the lock — propagating that poison is the
 /// correct response, not a recovery gap.
 const PANIC_ALLOWLIST: &[(&str, &str)] = &[
+    // OnceLock'd COFFE sizing cache: lock-poison propagation (the
+    // `.unwrap()` sits on its own line of the builder chain).
+    ("arch/mod.rs", ".unwrap();"),
+    // Wallace-tree reduction worklist: the surrounding `while` guard
+    // proves `cur` non-empty at the pop.
+    ("bench_suites/koios.rs", "cur.pop().unwrap()"),
+    // `y` is a freshly built non-empty bus (length fixed above).
+    ("bench_suites/kratos.rs", "y.last().unwrap()"),
+    // The documented CheckMode::Strict contract: enforce() panics so
+    // the engine's job isolation converts it into a FlowError.
+    ("check/mod.rs", "panic!(\"strict check failed"),
+    // Worker-pool result slots: lock-poison propagation.
+    ("coordinator/mod.rs", ".lock().unwrap()"),
+    // A worker that died mid-job already carries the panic being
+    // re-propagated here; the into_inner on a joined pool cannot race.
+    ("coordinator/mod.rs", "into_inner().unwrap()"),
     ("flow/diskcache.rs", ".lock().unwrap()"),
     ("flow/engine.rs", ".lock().unwrap()"),
     // Condvar re-acquisition after a wait: the same poison-propagation
     // argument as `lock()` — only a panicking peer poisons the mutex.
     ("flow/engine.rs", "cond.wait(st).unwrap()"),
+    // CLI single-cell grid: the plan was built with exactly one bench
+    // and one variant two lines above.
+    ("main.rs", ".expect(\"one grid cell\")"),
+    // Experiment harness grids are built with the popped rows present;
+    // a missing row is a harness bug worth dying loudly over.
+    ("report/mod.rs", ".expect(\"one variant row\")"),
+    ("report/mod.rs", ".expect(\"dd5 row\")"),
+    ("report/mod.rs", ".expect(\"baseline row\")"),
+    // Kratos table: the looked-up bench name comes from the suite's own
+    // name list on the previous line.
+    ("report/mod.rs", ".unwrap();"),
     ("route/mod.rs", ".lock().unwrap()"),
     // The scratch lease holds `Some` for its whole lifetime by
     // construction (set in `lease()`, taken only in `drop`).
     ("route/mod.rs", ".expect(\"scratch held for lease lifetime\")"),
+    // Lookahead memo-map: lock-poison propagation.
+    ("rrg/lookahead.rs", ".lock().unwrap()"),
+    // Synthesis-frontend invariants: violating any of these means the
+    // circuit builder itself is broken (construction-order contracts),
+    // not that an input was malformed — documented panics, pre-flow.
+    ("synth/circuit.rs", ".expect(\"not an FF q literal\")"),
+    ("synth/circuit.rs", ".expect(\"forward reference in absorb\")"),
+    ("synth/circuit.rs", "chain_map[chain as usize].unwrap()"),
+    ("synth/circuit.rs", ".expect(\"combinational loop or unresolved chain\")"),
+    // Multiplier compressor trees: pops guarded by the length checks of
+    // the surrounding reduction loops; `best` is set on iteration 0.
+    ("synth/multiplier.rs", "rows.pop().unwrap()"),
+    ("synth/multiplier.rs", "best.unwrap()"),
+    ("synth/multiplier.rs", "seq.last().unwrap()"),
+    ("synth/multiplier.rs", "bits.pop().unwrap()"),
+    // Mapper wave invariants: fanin cuts exist because waves are
+    // levelized; the cone walk cannot escape enumerated cut leaves.
+    ("techmap/mapper.rs", ".expect(\"fanin cuts from lower wave\")"),
+    ("techmap/mapper.rs", ".partial_cmp(&y.area_flow).unwrap()"),
+    ("techmap/mapper.rs", ".expect(\"every node enumerated\")"),
+    ("techmap/mapper.rs", "panic!(\"cone escapes its cut leaves\")"),
+    // Deliberate fault injection: panicking is this module's purpose.
+    ("util/fault.rs", "panic!("),
 ];
 
 /// Constructs that turn a recoverable condition into a process panic.
 const PANIC_PATTERNS: &[&str] = &["panic!(", ".unwrap()", ".expect("];
 
 #[test]
-fn no_unreviewed_panics_in_fault_isolated_modules() {
+fn no_unreviewed_panics_in_production_modules() {
     let src_root = repo_root().join("rust/src");
     let mut files = Vec::new();
-    for module in ["flow", "route", "serve"] {
-        rs_files(&src_root.join(module), &mut files);
-    }
-    assert!(!files.is_empty(), "no sources under rust/src/{{flow,route,serve}}");
+    rs_files(&src_root, &mut files);
+    assert!(!files.is_empty(), "no sources under {}", src_root.display());
 
     let mut offenders: Vec<String> = Vec::new();
     let mut matched = vec![false; PANIC_ALLOWLIST.len()];
@@ -323,9 +382,9 @@ fn no_unreviewed_panics_in_fault_isolated_modules() {
     }
     assert!(
         offenders.is_empty(),
-        "panic-prone construct on a fault-isolated production path \
-         (return a FlowError / util::error::Error instead, or review + \
-         allowlist in {}):\n  {}",
+        "panic-prone construct on a production path \
+         (return a FlowError / util::error::Error / check::Violation \
+         instead, or review + allowlist in {}):\n  {}",
         file!(),
         offenders.join("\n  ")
     );
@@ -340,6 +399,105 @@ fn no_unreviewed_panics_in_fault_isolated_modules() {
         "stale panic-allowlist entries (the code they excused is gone — delete them):\n  {}",
         stale.join("\n  ")
     );
+}
+
+/// Wall-clock reads that would make a deterministic stage's behavior
+/// depend on machine load.
+const CLOCK_PATTERNS: &[&str] = &["Instant::now", "SystemTime::now"];
+
+/// Reviewed wall-clock reads in the deterministic stages: (path suffix,
+/// line substring).  Currently empty — no pipeline stage reads a clock;
+/// timing lives in `rust/benches` and `serve`, which are outside the
+/// scanned directories.  Same staleness contract as [`ALLOWLIST`].
+const CLOCK_ALLOWLIST: &[(&str, &str)] = &[];
+
+/// 1-based line numbers of un-commented wall-clock reads.
+fn clock_hits(body: &str) -> Vec<(usize, String)> {
+    let mut out = Vec::new();
+    for (ln, line) in body.lines().enumerate() {
+        let text = line.trim();
+        if text.starts_with("//") {
+            continue;
+        }
+        if CLOCK_PATTERNS.iter().any(|p| text.contains(p)) {
+            out.push((ln + 1, text.to_string()));
+        }
+    }
+    out
+}
+
+#[test]
+fn no_wall_clock_in_deterministic_stages() {
+    let src_root = repo_root().join("rust/src");
+    let mut files = Vec::new();
+    for module in ["flow", "route", "place", "rrg"] {
+        rs_files(&src_root.join(module), &mut files);
+    }
+    assert!(!files.is_empty(), "no sources under rust/src/{{flow,route,place,rrg}}");
+
+    let mut offenders: Vec<String> = Vec::new();
+    let mut matched = vec![false; CLOCK_ALLOWLIST.len()];
+    for path in &files {
+        let src = fs::read_to_string(path)
+            .unwrap_or_else(|e| panic!("read {}: {e}", path.display()));
+        let body = match src.find("#[cfg(test)]") {
+            Some(p) => &src[..p],
+            None => &src[..],
+        };
+        let rel = path
+            .strip_prefix(&src_root)
+            .expect("source under src root")
+            .to_string_lossy()
+            .replace('\\', "/");
+        for (ln, text) in clock_hits(body) {
+            let allowed = CLOCK_ALLOWLIST.iter().enumerate().any(|(i, (suffix, pat))| {
+                let ok = rel.ends_with(suffix) && text.contains(pat);
+                if ok {
+                    matched[i] = true;
+                }
+                ok
+            });
+            if !allowed {
+                offenders.push(format!("rust/src/{rel}:{ln}: {text}"));
+            }
+        }
+    }
+    assert!(
+        offenders.is_empty(),
+        "wall-clock read in a deterministic pipeline stage (derive the \
+         decision from the artifact, move timing to rust/benches, or \
+         review + allowlist in {}):\n  {}",
+        file!(),
+        offenders.join("\n  ")
+    );
+    let stale: Vec<String> = CLOCK_ALLOWLIST
+        .iter()
+        .zip(&matched)
+        .filter(|(_, &m)| !m)
+        .map(|((suffix, pat), _)| format!("({suffix:?}, {pat:?})"))
+        .collect();
+    assert!(
+        stale.is_empty(),
+        "stale clock-allowlist entries (the code they excused is gone — delete them):\n  {}",
+        stale.join("\n  ")
+    );
+}
+
+/// The clock allowlist is empty, so the stale-entry guard alone cannot
+/// prove the detector works — this synthetic probe does.
+#[test]
+fn wall_clock_detector_fires_on_synthetic_input() {
+    let body = "\
+fn f() {
+    // let t = Instant::now(); (comment — must not fire)
+    let t0 = std::time::Instant::now();
+    let wall = SystemTime::now();
+    let ok = mtime_of(path);
+}
+";
+    let hits = clock_hits(body);
+    let lines: Vec<usize> = hits.iter().map(|(ln, _)| *ln).collect();
+    assert_eq!(lines, vec![3, 4], "detector must flag exactly the two real reads");
 }
 
 #[test]
